@@ -1,0 +1,52 @@
+//! The screening service end to end: start the TCP server, drive it with a
+//! client session, print the dialogue.
+//!
+//! ```sh
+//! cargo run --release --example screening_service
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+
+use sasvi::server::Server;
+
+fn main() {
+    let server = Server::bind("127.0.0.1:0", 2).expect("bind");
+    let addr = server.local_addr().expect("addr");
+    let stop = server.stop_handle();
+    let handle = std::thread::spawn(move || server.serve().expect("serve"));
+    println!("service on {addr}\n");
+
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    let mut send = |cmd: &str| -> String {
+        println!(">> {cmd}");
+        writeln!(stream, "{cmd}").expect("write");
+        let mut line = String::new();
+        reader.read_line(&mut line).expect("read");
+        let line = line.trim().to_string();
+        println!("<< {line}\n");
+        line
+    };
+
+    send("PING");
+    // generate a small synthetic dataset server-side
+    send("GEN synthetic100 7 0.02");
+    // run two paths concurrently: Sasvi and DPP
+    send("PATH 1 sasvi 40 0.05");
+    send("PATH 1 dpp 40 0.05");
+    send("STATUS 1");
+    let sasvi = send("RESULT 1");
+    let dpp = send("RESULT 2");
+    send("SUREREMOVAL 1 0.8 3");
+    send("QUIT");
+
+    stop.store(true, Ordering::Relaxed);
+    handle.join().expect("join");
+
+    // sanity: both results carry rejection curves
+    assert!(sasvi.contains("rejection"));
+    assert!(dpp.contains("rejection"));
+    println!("service session complete");
+}

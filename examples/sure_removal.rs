@@ -1,0 +1,117 @@
+//! Theorem 4 in action: monotone properties of the Sasvi bounds and the
+//! per-feature sure-removal parameter (paper §4, Fig. 4).
+//!
+//! Prints, for a solved state at lambda_1:
+//!  * the f / g auxiliary functions (increasing / decreasing),
+//!  * u^+ / u^- curves vs 1/lambda_2 for features exemplifying the three
+//!    Theorem-4 cases,
+//!  * the distribution of sure-removal parameters across features.
+//!
+//! ```sh
+//! cargo run --release --example sure_removal
+//! ```
+
+use sasvi::data::synthetic::SyntheticSpec;
+use sasvi::metrics::Table;
+use sasvi::screening::sure_removal::SureRemovalAnalysis;
+use sasvi::screening::ScreenContext;
+use sasvi::solver::cd::{solve_cd, CdOptions};
+use sasvi::solver::DualState;
+
+fn main() {
+    let ds = SyntheticSpec { n: 100, p: 1000, nnz: 50, ..Default::default() }
+        .generate(21);
+    let pre = ds.precompute();
+    let lam1 = 0.6 * pre.lambda_max;
+    println!("dataset: {} | lam1 = 0.6 lambda_max", ds.name);
+
+    // solve at lambda_1 for the dual state
+    let active: Vec<usize> = (0..ds.p()).collect();
+    let mut beta = vec![0.0; ds.p()];
+    let mut resid = ds.y.clone();
+    solve_cd(&ds.x, &ds.y, lam1, &active, &pre.col_norms_sq, &mut beta, &mut resid,
+             &CdOptions::default());
+    let st = DualState::from_residual(&ds.x, &resid, lam1);
+    let ctx = ScreenContext::new(&ds.x, &ds.y, &pre);
+    let a = SureRemovalAnalysis::new(&ctx, &st);
+
+    // ---- f and g monotonicity (first plot of Fig. 4) ---------------------
+    println!("\nf(lam) strictly increasing, g(lam) strictly decreasing:");
+    let mut t = Table::new(&["lam/lam1", "f(lam)", "g(lam)"]);
+    for k in 1..=10 {
+        let lam = lam1 * k as f64 / 10.0;
+        t.row(vec![
+            format!("{:.1}", k as f64 / 10.0),
+            format!("{:.4}", a.f(lam)),
+            format!("{:.4}", a.g(lam)),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // ---- per-case u+/u- curves (last three plots of Fig. 4) --------------
+    let lam_min = 0.05 * pre.lambda_max;
+    let mut case_feature: [Option<usize>; 3] = [None, None, None];
+    for j in 0..ds.p() {
+        let rep = a.analyze(&ctx, &st, j, lam_min);
+        let idx = (rep.case as usize).min(3) - 1;
+        if case_feature[idx].is_none() {
+            case_feature[idx] = Some(j);
+        }
+    }
+    for (ci, jopt) in case_feature.iter().enumerate() {
+        let Some(j) = *jopt else { continue };
+        let rep = a.analyze(&ctx, &st, j, lam_min);
+        println!(
+            "case {} feature {j}: lam_2a/lmax={:.3} lam_2y/lmax={:.3} lam_s/lmax={:.3}",
+            ci + 1,
+            rep.lam_2a / pre.lambda_max,
+            rep.lam_2y / pre.lambda_max,
+            rep.lam_s / pre.lambda_max
+        );
+        let mut t = Table::new(&["1/lam2 (x lam1)", "u+", "u-", "screened"]);
+        for k in 0..=10 {
+            // x-axis is 1/lam2 as in Fig. 4
+            let inv = 1.0 / lam1 + (1.0 / lam_min - 1.0 / lam1) * k as f64 / 10.0;
+            let lam2 = 1.0 / inv;
+            let (up, um) = a.bounds_at(lam2, st.xt_theta[j], pre.xty[j],
+                                       pre.col_norms_sq[j]);
+            t.row(vec![
+                format!("{:.2}", inv * lam1),
+                format!("{:.4}", up),
+                format!("{:.4}", um),
+                if up < 1.0 && um < 1.0 { "yes" } else { "no" }.into(),
+            ]);
+        }
+        println!("{}", t.render());
+    }
+
+    // ---- sure-removal distribution ---------------------------------------
+    let mut removable = 0usize;
+    let mut never = 0usize;
+    let mut hist = [0usize; 10];
+    for j in 0..ds.p() {
+        let rep = a.analyze(&ctx, &st, j, lam_min);
+        if rep.lam_s >= lam1 * 0.999 {
+            never += 1;
+        } else {
+            removable += 1;
+            let frac = (rep.lam_s / lam1).clamp(0.0, 0.9999);
+            hist[(frac * 10.0) as usize] += 1;
+        }
+    }
+    println!(
+        "\nsure-removal: {removable}/{} features removable somewhere in ({:.2}, {:.2}) lambda_max; {never} never",
+        ds.p(),
+        lam_min / pre.lambda_max,
+        lam1 / pre.lambda_max,
+    );
+    println!("histogram of lam_s/lam1 (removable features):");
+    for (b, cnt) in hist.iter().enumerate() {
+        println!(
+            "  [{:.1},{:.1}): {}",
+            b as f64 / 10.0,
+            (b + 1) as f64 / 10.0,
+            "#".repeat((cnt * 60 / ds.p().max(1)).max(usize::from(*cnt > 0)))
+        );
+    }
+}

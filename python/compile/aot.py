@@ -1,0 +1,125 @@
+"""AOT compile path: lower every L2 graph to HLO *text* artifacts.
+
+Run once by `make artifacts`; Python never appears on the request path. The
+interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 (what the
+published `xla` 0.1.6 crate links) rejects (`proto.id() <= INT_MAX`). The HLO
+text parser reassigns ids, so text round-trips cleanly.
+
+Outputs into --out-dir:
+  <name>.hlo.txt      one per (graph, shape) pair
+  manifest.txt        machine-readable index the Rust runtime parses
+
+Usage: python -m compile.aot --out-dir ../artifacts [--shapes n:p,n:p,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+F32 = jnp.float32
+
+# (n, p) pairs the Rust runtime may ask for. Kept modest: the end-to-end
+# examples and integration tests run on the demo + synthetic shapes; the
+# heavyweight Table-1 runs use the pure-Rust screening path (bit-identical,
+# cross-checked in rust/tests/runtime_parity.rs).
+DEFAULT_SHAPES = [(64, 256), (250, 1000)]
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(tuple(shape), F32)
+
+
+def graph_specs(name, n, p):
+    """Example-argument specs for each graph at design-matrix shape (n, p)."""
+    x, y, th = spec(n, p), spec(n), spec(n)
+    if name.endswith("_screen"):
+        return (x, y, th, spec(2))
+    if name == "fista_epoch":
+        return (x, y, spec(p), spec(p), spec(1), spec(2), spec(p))
+    if name == "lasso_stats":
+        return (x, y, spec(p), spec(1))
+    if name == "power_iteration":
+        return (x, spec(p))
+    raise KeyError(name)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def fmt_shape(s) -> str:
+    return ",".join(str(d) for d in s.shape) if s.shape else "scalar"
+
+
+def lower_one(name, n, p):
+    fn = model.GRAPHS[name]
+    specs = graph_specs(name, n, p)
+    lowered = jax.jit(fn).lower(*specs)
+    return lowered, specs
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--shapes",
+        default=",".join(f"{n}:{p}" for n, p in DEFAULT_SHAPES),
+        help="comma-separated n:p pairs",
+    )
+    ap.add_argument("--graphs", default=",".join(model.GRAPHS))
+    args = ap.parse_args()
+
+    shapes = []
+    for tok in args.shapes.split(","):
+        n, p = tok.split(":")
+        shapes.append((int(n), int(p)))
+    names = [g for g in args.graphs.split(",") if g]
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_lines = ["# sasvi artifact manifest v1"]
+    for n, p in shapes:
+        for name in names:
+            art = f"{name}_n{n}_p{p}"
+            lowered, specs = lower_one(name, n, p)
+            text = to_hlo_text(lowered)
+            fname = f"{art}.hlo.txt"
+            with open(os.path.join(args.out_dir, fname), "w") as f:
+                f.write(text)
+            manifest_lines.append(f"artifact {art}")
+            manifest_lines.append(f"graph {name}")
+            manifest_lines.append(f"file {fname}")
+            manifest_lines.append(f"n {n}")
+            manifest_lines.append(f"p {p}")
+            for s in specs:
+                manifest_lines.append(f"in f32 {fmt_shape(s)}")
+            try:
+                for info in jax.tree_util.tree_leaves(lowered.out_info):
+                    manifest_lines.append(
+                        f"out f32 {','.join(str(d) for d in info.shape) or 'scalar'}"
+                    )
+            except Exception:
+                pass
+            manifest_lines.append("end")
+            print(f"wrote {fname} ({len(text)} chars)", file=sys.stderr)
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"manifest: {len(names)} graphs x {len(shapes)} shapes", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,175 @@
+"""Pure-jnp oracles for the L1 Pallas kernel and the L2 screening graphs.
+
+Everything in this file is straight-line textbook math, kept deliberately
+naive: these are the correctness references the Pallas kernel and the fused
+screening graphs are tested against (pytest + hypothesis), and the brute-force
+maximizer used to validate Theorem 3's closed forms.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-12
+
+
+def screen_stats_ref(x, theta1, y):
+    """Per-feature statistics for screening.
+
+    Args:
+      x:      (n, p) design matrix, columns are features.
+      theta1: (n,) dual optimal at lambda_1.
+      y:      (n,) response.
+
+    Returns:
+      xt_theta1: (p,) X^T theta1
+      xty:       (p,) X^T y
+      xnorm2:    (p,) squared column norms
+    """
+    xt_theta1 = x.T @ theta1
+    xty = x.T @ y
+    xnorm2 = jnp.sum(x * x, axis=0)
+    return xt_theta1, xty, xnorm2
+
+
+def sasvi_bounds_ref(xt_theta1, xty, xnorm2, y, theta1, lam1, lam2):
+    """Theorem 3 closed-form upper bounds u_j^+ and u_j^-, vectorized.
+
+    Implements all four geometric cases of the theorem:
+      a     = y/lam1 - theta1        (scaled prediction X beta_1^* / lam1)
+      b     = y/lam2 - theta1 = a + d*y,  d = 1/lam2 - 1/lam1
+      case 1: a != 0 and <b,a>/||b|| >  |<x_j,a>|/||x_j||  -> Eq. 26/27
+      case 2: <x_j,a> > 0 and <b,a>/||b|| <= <x_j,a>/||x_j|| -> u+ Eq.26, u- Eq.28
+      case 3: <x_j,a> < 0 and <b,a>/||b|| <= -<x_j,a>/||x_j|| -> u+ Eq.29, u- Eq.27
+      case 4: a == 0 -> Eq. 28 and Eq. 29
+    """
+    d = 1.0 / lam2 - 1.0 / lam1
+    a = y / lam1 - theta1
+    anorm2 = jnp.dot(a, a)
+    ay = jnp.dot(a, y)
+    ynorm2 = jnp.dot(y, y)
+
+    xja = xty / lam1 - xt_theta1              # <x_j, a>
+    xjb = xja + d * xty                       # <x_j, b>
+    bnorm2 = anorm2 + 2.0 * d * ay + d * d * ynorm2
+    ba = anorm2 + d * ay                      # <b, a>
+    bnorm = jnp.sqrt(jnp.maximum(bnorm2, 0.0))
+    xnorm = jnp.sqrt(jnp.maximum(xnorm2, 0.0))
+
+    a_is_zero = anorm2 <= EPS
+
+    # Projections onto the null space of a (guard a=0; the branch that uses
+    # these is only selected when a != 0).
+    safe_anorm2 = jnp.where(a_is_zero, 1.0, anorm2)
+    xperp2 = jnp.maximum(xnorm2 - xja * xja / safe_anorm2, 0.0)
+    yperp2 = jnp.maximum(ynorm2 - ay * ay / safe_anorm2, 0.0)
+    xperp_yperp = xty - ay * xja / safe_anorm2
+    cross = jnp.sqrt(xperp2 * yperp2)
+
+    u_plus_26 = xt_theta1 + 0.5 * d * (cross + xperp_yperp)
+    u_minus_27 = -xt_theta1 + 0.5 * d * (cross - xperp_yperp)
+    u_plus_29 = xt_theta1 + 0.5 * (xnorm * bnorm + xjb)
+    u_minus_28 = -xt_theta1 + 0.5 * (xnorm * bnorm - xjb)
+
+    # Case selection. "<b,a>/||b|| <= s*<x_j,a>/||x_j||" multiplied through by
+    # the (nonnegative) norms to avoid dividing.
+    plus_tail = jnp.logical_and(xja < 0.0, ba * xnorm <= -xja * bnorm)
+    minus_tail = jnp.logical_and(xja > 0.0, ba * xnorm <= xja * bnorm)
+    use_29 = jnp.logical_or(a_is_zero, plus_tail)
+    use_28 = jnp.logical_or(a_is_zero, minus_tail)
+
+    u_plus = jnp.where(use_29, u_plus_29, u_plus_26)
+    u_minus = jnp.where(use_28, u_minus_28, u_minus_27)
+    return u_plus, u_minus
+
+
+def safe_bounds_ref(xty, xnorm2, y, theta1, lam2):
+    """SAFE rule (El Ghaoui et al.), sequential form of Eq. (32)-(33)."""
+    tnorm2 = jnp.dot(theta1, theta1)
+    ty = jnp.dot(theta1, y)
+    s = jnp.clip(ty / (lam2 * jnp.maximum(tnorm2, EPS)), -1.0, 1.0)
+    center_diff = s * theta1 - y / lam2
+    radius = jnp.sqrt(jnp.maximum(jnp.dot(center_diff, center_diff), 0.0))
+    xnorm = jnp.sqrt(jnp.maximum(xnorm2, 0.0))
+    bound = jnp.abs(xty) / lam2 + xnorm * radius
+    return bound
+
+
+def dpp_bounds_ref(xt_theta1, xnorm2, y, lam1, lam2):
+    """DPP rule (Wang et al.): ball centered at theta1 with radius ||y||(1/l2-1/l1)."""
+    ynorm = jnp.sqrt(jnp.maximum(jnp.dot(y, y), 0.0))
+    radius = ynorm * (1.0 / lam2 - 1.0 / lam1)
+    xnorm = jnp.sqrt(jnp.maximum(xnorm2, 0.0))
+    return jnp.abs(xt_theta1) + xnorm * radius
+
+
+def strong_bounds_ref(xt_theta1, lam1, lam2):
+    """Strong rule (Tibshirani et al.), Eq. (31). Heuristic, not safe."""
+    ratio = lam1 / lam2
+    return ratio * jnp.abs(xt_theta1) + (ratio - 1.0)
+
+
+def soft_threshold(z, t):
+    return jnp.sign(z) * jnp.maximum(jnp.abs(z) - t, 0.0)
+
+
+def fista_ref(x, y, lam, mask, n_steps, lipschitz):
+    """Reference masked FISTA for Lasso; identical math to model.fista_epoch."""
+    p = x.shape[1]
+    beta = jnp.zeros((p,), x.dtype)
+    z = beta
+    t = jnp.asarray(1.0, x.dtype)
+
+    def step(carry, _):
+        beta, z, t = carry
+        grad = x.T @ (x @ z - y)
+        nxt = soft_threshold(z - grad / lipschitz, lam / lipschitz) * mask
+        t_next = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+        z_next = nxt + ((t - 1.0) / t_next) * (nxt - beta)
+        return (nxt, z_next, t_next), None
+
+    (beta, z, t), _ = jax.lax.scan(step, (beta, z, t), None, length=n_steps)
+    return beta
+
+
+def brute_force_bound(xj, y, theta1, lam1, lam2, n_grid=2_000_001, seed=0):
+    """Exactly maximize <x_j, theta> over Omega (Eq. 15), independently of
+    Theorem 2/3's Lagrangian derivation. Used only in tests.
+
+    Omega = {theta : <theta1 - y/lam1, theta - theta1> >= 0,
+                     <theta - y/lam2, theta1 - theta> >= 0}
+    i.e. the half-space {<a, theta - theta1> <= 0} (a = y/lam1 - theta1)
+    intersected with the ball of center c = (theta1 + y/lam2)/2 and radius
+    R = ||y/lam2 - theta1||/2.
+
+    Geometry: for a linear objective over ball-cap, the maximizer lives in
+    span{a, x_j} around c. Pick the orthonormal basis e1 = a/||a||,
+    e2 = (x_j - <x_j,e1>e1)/||.|| with <x_j, e2> >= 0. Writing
+    theta = c + u e1 + v e2, the half-space constraint is
+    u <= u_max = -<a, c - theta1>/||a||, and for fixed u the optimal
+    v = +sqrt(R^2 - u^2). A fine 1-D grid over u is exact to O(R/n_grid)
+    and always *feasible* (an inner approximation), so it can never exceed
+    the true maximum.
+    """
+    import numpy as np
+
+    xj = np.asarray(xj, np.float64)
+    y = np.asarray(y, np.float64)
+    theta1 = np.asarray(theta1, np.float64)
+    a = y / lam1 - theta1
+    c = 0.5 * (theta1 + y / lam2)
+    rad = 0.5 * np.linalg.norm(y / lam2 - theta1)
+    anorm = np.linalg.norm(a)
+    if anorm < 1e-14:
+        # ball only: closed ball maximum (still independent of Thm 3's cases)
+        return float(xj @ c + rad * np.linalg.norm(xj))
+    e1 = a / anorm
+    x_par = xj @ e1
+    x_perp_vec = xj - x_par * e1
+    x_perp = np.linalg.norm(x_perp_vec)
+    u_max = min(rad, -(a @ (c - theta1)) / anorm)
+    u = np.linspace(-rad, u_max, n_grid)
+    v = np.sqrt(np.maximum(rad * rad - u * u, 0.0))
+    vals = xj @ c + u * x_par + v * x_perp
+    return float(vals.max())

@@ -1,0 +1,117 @@
+"""L1 Pallas kernel: fused per-feature screening statistics.
+
+The screening hot-spot of every rule in the paper is the same per-feature
+statistics pass over the design matrix X (n x p):
+
+    xt_theta1[j] = <x_j, theta1>        (one column of X^T @ [theta1, y])
+    xty[j]       = <x_j, y>
+    xnorm2[j]    = ||x_j||^2
+
+On TPU this is a tall-skinny matmul X^T @ [theta1, y] — an MXU-friendly
+(p x n)(n x 2) contraction — fused with an elementwise square-reduce, tiled so
+each feature block of X makes exactly one HBM->VMEM trip (BlockSpec below).
+The paper's hardware was CPU-era MATLAB; DESIGN.md §Hardware-Adaptation
+records the mapping. We lower with interpret=True (CPU PJRT cannot execute
+Mosaic custom-calls); the BlockSpec schedule is still the real one.
+
+VMEM budget per grid step (f32): n*BF for the X block + 2n resident vectors
++ BF*2 + BF outputs. With n <= 1024 and BF = 256 that is ~1.05 MiB, far under
+the ~16 MiB VMEM of a TPU core; BF could grow to 2048 before pressure.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_F = 256
+
+
+def _stats_kernel(x_ref, tv_ref, out_ref, norm_ref):
+    """One feature block: x_ref (n, BF), tv_ref (n, 2) = [theta1 | y]."""
+    xb = x_ref[...]
+    tv = tv_ref[...]
+    # (BF, 2) contraction — the MXU matmul on real hardware.
+    out_ref[...] = jnp.dot(xb.T, tv, preferred_element_type=out_ref.dtype)
+    norm_ref[...] = jnp.sum(xb * xb, axis=0).astype(norm_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_f", "interpret"))
+def screen_stats(x, theta1, y, *, block_f=DEFAULT_BLOCK_F, interpret=True):
+    """Fused per-feature statistics via a Pallas kernel.
+
+    Args:
+      x: (n, p) design matrix.
+      theta1: (n,) dual point.
+      y: (n,) response.
+      block_f: feature-block width (grid tile).
+      interpret: must stay True off-TPU.
+
+    Returns:
+      (xt_theta1, xty, xnorm2), each (p,).
+    """
+    n, p = x.shape
+    bf = min(block_f, max(p, 1))
+    p_pad = -(-p // bf) * bf
+    if p_pad != p:
+        x = jnp.pad(x, ((0, 0), (0, p_pad - p)))
+    tv = jnp.stack([theta1, y], axis=1)  # (n, 2)
+
+    grid = (p_pad // bf,)
+    out, norm2 = pl.pallas_call(
+        _stats_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, bf), lambda i: (0, i)),
+            pl.BlockSpec((n, 2), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bf, 2), lambda i: (i, 0)),
+            pl.BlockSpec((bf,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p_pad, 2), x.dtype),
+            jax.ShapeDtypeStruct((p_pad,), x.dtype),
+        ],
+        interpret=interpret,
+    )(x, tv)
+    return out[:p, 0], out[:p, 1], norm2[:p]
+
+
+def _gram_diag_kernel(x_ref, r_ref, out_ref):
+    """Fused X^T r for the solver path: one feature block against residual."""
+    out_ref[...] = jnp.dot(
+        x_ref[...].T, r_ref[...], preferred_element_type=out_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_f", "interpret"))
+def xt_matvec(x, r, *, block_f=DEFAULT_BLOCK_F, interpret=True):
+    """X^T @ r with the same feature-block HBM->VMEM schedule as screen_stats.
+
+    Used by the L2 FISTA graph so the gradient's dominant contraction carries
+    the explicit tiling (the forward X @ z is a short-fat matvec XLA already
+    fuses well).
+    """
+    n, p = x.shape
+    bf = min(block_f, max(p, 1))
+    p_pad = -(-p // bf) * bf
+    if p_pad != p:
+        x = jnp.pad(x, ((0, 0), (0, p_pad - p)))
+    r2 = r.reshape(n, 1)
+    grid = (p_pad // bf,)
+    out = pl.pallas_call(
+        _gram_diag_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, bf), lambda i: (0, i)),
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bf, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((p_pad, 1), x.dtype),
+        interpret=interpret,
+    )(x, r2)
+    return out[:p, 0]

@@ -1,0 +1,140 @@
+"""L2: JAX compute graphs for Sasvi Lasso screening and the masked solver.
+
+These are the build-time definitions that `aot.py` lowers to HLO text for the
+Rust runtime. Every graph calls the L1 Pallas kernel (`kernels.screen`) for
+the per-feature statistics pass, then evaluates the rule's closed form.
+
+All graphs take and return plain f32 arrays with static shapes so the Rust
+side can execute them with PJRT literals. Screening decisions are returned as
+f32 0/1 masks (PJRT literal marshalling stays dtype-uniform).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels import screen as kscreen
+
+EPS = 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Screening graphs. Signature (shared): (x, y, theta1, lams) where
+# lams = [lam1, lam2] packed as a (2,) vector so the artifact has a single
+# scalar-block input. Returns (u_plus, u_minus, keep_mask).
+# ---------------------------------------------------------------------------
+
+def sasvi_screen(x, y, theta1, lams):
+    """Sasvi (Theorem 3) bounds + keep mask. keep=1 means 'cannot discard'."""
+    lam1, lam2 = lams[0], lams[1]
+    xt_theta1, xty, xnorm2 = kscreen.screen_stats(x, theta1, y)
+    u_plus, u_minus = ref.sasvi_bounds_ref(
+        xt_theta1, xty, xnorm2, y, theta1, lam1, lam2
+    )
+    keep = jnp.logical_or(u_plus >= 1.0, u_minus >= 1.0)
+    return u_plus, u_minus, keep.astype(x.dtype)
+
+
+def safe_screen(x, y, theta1, lams):
+    """Sequential SAFE bounds + keep mask (same interface as sasvi_screen)."""
+    lam2 = lams[1]
+    _, xty, xnorm2 = kscreen.screen_stats(x, theta1, y)
+    bound = ref.safe_bounds_ref(xty, xnorm2, y, theta1, lam2)
+    keep = bound >= 1.0
+    return bound, bound, keep.astype(x.dtype)
+
+
+def dpp_screen(x, y, theta1, lams):
+    """Sequential DPP bounds + keep mask."""
+    lam1, lam2 = lams[0], lams[1]
+    xt_theta1, _, xnorm2 = kscreen.screen_stats(x, theta1, y)
+    bound = ref.dpp_bounds_ref(xt_theta1, xnorm2, y, lam1, lam2)
+    keep = bound >= 1.0
+    return bound, bound, keep.astype(x.dtype)
+
+
+def strong_screen(x, y, theta1, lams):
+    """Strong-rule bounds + keep mask (heuristic; Rust side re-checks KKT)."""
+    lam1, lam2 = lams[0], lams[1]
+    xt_theta1, _, _ = kscreen.screen_stats(x, theta1, y)
+    bound = ref.strong_bounds_ref(xt_theta1, lam1, lam2)
+    keep = bound >= 1.0
+    return bound, bound, keep.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Solver graphs.
+# ---------------------------------------------------------------------------
+
+def fista_epoch(x, y, beta, z, tmom, lam_l, mask, n_steps=16):
+    """n_steps masked FISTA iterations (one 'epoch'); static unroll via scan.
+
+    Args:
+      x: (n, p); y: (n,); beta, z: (p,) current iterate + momentum point;
+      tmom: (1,) momentum scalar; lam_l: (2,) = [lambda, lipschitz];
+      mask: (p,) 0/1 keep mask from screening.
+    Returns (beta', z', tmom', theta') where theta' = (y - X beta')/lambda is
+    the scaled dual point the next screening step needs.
+    """
+    lam, lipschitz = lam_l[0], lam_l[1]
+    t = tmom[0]
+
+    def step(carry, _):
+        beta_c, z_c, t_c = carry
+        resid = x @ z_c - y
+        grad = kscreen.xt_matvec(x, resid)
+        nxt = ref.soft_threshold(z_c - grad / lipschitz, lam / lipschitz) * mask
+        t_next = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t_c * t_c))
+        z_next = nxt + ((t_c - 1.0) / t_next) * (nxt - beta_c)
+        return (nxt, z_next, t_next), None
+
+    (beta_o, z_o, t_o), _ = jax.lax.scan(step, (beta, z, t), None, length=n_steps)
+    theta = (y - x @ beta_o) / lam
+    return beta_o, z_o, t_o.reshape(1), theta
+
+
+def lasso_stats(x, y, beta, lam_v):
+    """Objective, duality gap and infeasibility for a candidate beta.
+
+    Returns a (4,) vector: [primal, dual, gap, max|X^T theta|] where theta is
+    the residual scaled into the dual-feasible set.
+    """
+    lam = lam_v[0]
+    resid = x @ beta - y
+    primal = 0.5 * jnp.dot(resid, resid) + lam * jnp.sum(jnp.abs(beta))
+    theta_raw = -resid / lam
+    xt = kscreen.xt_matvec(x, theta_raw)
+    infeas = jnp.max(jnp.abs(xt))
+    scale = jnp.minimum(1.0, 1.0 / jnp.maximum(infeas, EPS))
+    theta = theta_raw * scale
+    dual = 0.5 * jnp.dot(y, y) - 0.5 * lam * lam * jnp.dot(
+        theta - y / lam, theta - y / lam
+    )
+    gap = primal - dual
+    return jnp.stack([primal, dual, gap, infeas])
+
+
+def power_iteration(x, v0, n_steps=64):
+    """Estimate the Lipschitz constant L = ||X||_2^2 by power iteration."""
+
+    def step(v, _):
+        w = x.T @ (x @ v)
+        nrm = jnp.linalg.norm(w)
+        return w / jnp.maximum(nrm, EPS), nrm
+
+    v, nrms = jax.lax.scan(step, v0 / jnp.maximum(jnp.linalg.norm(v0), EPS),
+                           None, length=n_steps)
+    return nrms[-1].reshape(1)
+
+
+GRAPHS = {
+    "sasvi_screen": sasvi_screen,
+    "safe_screen": safe_screen,
+    "dpp_screen": dpp_screen,
+    "strong_screen": strong_screen,
+    "fista_epoch": fista_epoch,
+    "lasso_stats": lasso_stats,
+    "power_iteration": power_iteration,
+}

@@ -1,0 +1,84 @@
+"""L1 Pallas kernel vs pure-jnp oracle — the core correctness signal.
+
+Hypothesis sweeps shapes/seeds/block sizes; assert_allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref
+from compile.kernels import screen as kscreen
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_problem(n, p, seed, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((n, p)), dtype)
+    y = jnp.asarray(rng.standard_normal((n,)), dtype)
+    theta = jnp.asarray(rng.standard_normal((n,)), dtype)
+    return x, y, theta
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=96),
+    p=st.integers(min_value=1, max_value=300),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    block_f=st.sampled_from([7, 32, 64, 256]),
+)
+def test_screen_stats_matches_ref(n, p, seed, block_f):
+    x, y, theta = make_problem(n, p, seed)
+    got = kscreen.screen_stats(x, theta, y, block_f=block_f)
+    want = ref.screen_stats_ref(x, theta, y)
+    for g, w in zip(got, want):
+        assert_allclose(np.asarray(g), np.asarray(w), rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=64),
+    p=st.integers(min_value=1, max_value=200),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    block_f=st.sampled_from([16, 64, 256]),
+)
+def test_xt_matvec_matches_ref(n, p, seed, block_f):
+    x, y, _ = make_problem(n, p, seed)
+    got = kscreen.xt_matvec(x, y, block_f=block_f)
+    assert_allclose(np.asarray(got), np.asarray(x.T @ y), rtol=2e-4, atol=2e-4)
+
+
+def test_screen_stats_f64():
+    x, y, theta = make_problem(33, 77, 3, dtype=jnp.float32)
+    with jax.enable_x64(True):
+        x64 = x.astype(jnp.float64)
+        y64 = y.astype(jnp.float64)
+        t64 = theta.astype(jnp.float64)
+        got = kscreen.screen_stats(x64, t64, y64, block_f=32)
+        want = ref.screen_stats_ref(x64, t64, y64)
+        for g, w in zip(got, want):
+            assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-12)
+
+
+def test_block_padding_edge():
+    # p smaller than the block, p exactly one block, p one over the block
+    for p in (1, 256, 257):
+        x, y, theta = make_problem(16, p, p)
+        got = kscreen.screen_stats(x, theta, y, block_f=256)
+        want = ref.screen_stats_ref(x, theta, y)
+        for g, w in zip(got, want):
+            assert_allclose(np.asarray(g), np.asarray(w), rtol=2e-4, atol=2e-4)
+
+
+def test_zero_matrix():
+    x = jnp.zeros((8, 12), jnp.float32)
+    y = jnp.ones((8,), jnp.float32)
+    t = jnp.ones((8,), jnp.float32)
+    xt, xty, n2 = kscreen.screen_stats(x, t, y)
+    assert float(jnp.abs(xt).max()) == 0.0
+    assert float(jnp.abs(xty).max()) == 0.0
+    assert float(n2.max()) == 0.0

@@ -1,0 +1,97 @@
+"""L2 solver graphs: FISTA epoch vs reference, stats graph, power iteration."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make(n, p, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((n, p)) / np.sqrt(n), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((n,)), jnp.float32)
+    return x, y
+
+
+def test_fista_epoch_matches_ref():
+    n, p, steps = 24, 16, 16
+    x, y = make(n, p, 0)
+    lam = 0.1 * float(jnp.abs(x.T @ y).max())
+    lip = float(model.power_iteration(x, jnp.ones((p,), jnp.float32))[0]) * 1.01
+    mask = jnp.ones((p,), jnp.float32)
+    beta0 = jnp.zeros((p,), jnp.float32)
+    b, z, t, theta = model.fista_epoch(
+        x, y, beta0, beta0, jnp.ones((1,), jnp.float32),
+        jnp.asarray([lam, lip], jnp.float32), mask, n_steps=steps,
+    )
+    want = ref.fista_ref(x, y, lam, mask, steps, lip)
+    assert_allclose(np.asarray(b), np.asarray(want), rtol=1e-4, atol=1e-5)
+    assert_allclose(np.asarray(theta), np.asarray((y - x @ want) / lam),
+                    rtol=1e-3, atol=1e-4)
+
+
+def test_fista_respects_mask():
+    n, p = 20, 12
+    x, y = make(n, p, 1)
+    lam = 0.05 * float(jnp.abs(x.T @ y).max())
+    lip = float(model.power_iteration(x, jnp.ones((p,), jnp.float32))[0]) * 1.01
+    mask = jnp.asarray([1.0] * 6 + [0.0] * 6, jnp.float32)
+    beta0 = jnp.zeros((p,), jnp.float32)
+    b, *_ = model.fista_epoch(
+        x, y, beta0, beta0, jnp.ones((1,), jnp.float32),
+        jnp.asarray([lam, lip], jnp.float32), mask, n_steps=32,
+    )
+    assert np.all(np.asarray(b)[6:] == 0.0)
+
+
+def test_fista_converges_orthogonal():
+    """On orthonormal X the Lasso solution is the soft-thresholded LS fit."""
+    n = 32
+    rng = np.random.default_rng(4)
+    q, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    x = jnp.asarray(q[:, :16], jnp.float32)
+    y = jnp.asarray(rng.standard_normal((n,)), jnp.float32)
+    lam = 0.3
+    mask = jnp.ones((16,), jnp.float32)
+    beta = jnp.zeros((16,), jnp.float32)
+    z, t = beta, jnp.ones((1,), jnp.float32)
+    for _ in range(20):
+        beta, z, t, theta = model.fista_epoch(
+            x, y, beta, z, t, jnp.asarray([lam, 1.01], jnp.float32), mask,
+            n_steps=16,
+        )
+    closed = ref.soft_threshold(x.T @ y, lam)
+    assert_allclose(np.asarray(beta), np.asarray(closed), atol=1e-4)
+
+
+def test_lasso_stats_gap_nonnegative_and_small_at_opt():
+    n, p = 24, 16
+    x, y = make(n, p, 2)
+    lam = 0.4 * float(jnp.abs(x.T @ y).max())
+    lip = float(model.power_iteration(x, jnp.ones((p,), jnp.float32))[0]) * 1.01
+    mask = jnp.ones((p,), jnp.float32)
+    beta = jnp.zeros((p,), jnp.float32)
+    z, t = beta, jnp.ones((1,), jnp.float32)
+    for _ in range(40):
+        beta, z, t, _ = model.fista_epoch(
+            x, y, beta, z, t, jnp.asarray([lam, lip], jnp.float32), mask,
+            n_steps=16,
+        )
+    stats = model.lasso_stats(x, y, beta, jnp.asarray([lam], jnp.float32))
+    primal, dual, gap, infeas = [float(v) for v in stats]
+    assert gap >= -1e-3
+    assert gap < 1e-2 * max(1.0, primal)
+    assert infeas <= 1.0 + 1e-2
+
+
+def test_power_iteration_matches_svd():
+    x, _ = make(30, 20, 3)
+    lip = float(model.power_iteration(x, jnp.ones((20,), jnp.float32))[0])
+    want = float(np.linalg.norm(np.asarray(x), 2) ** 2)
+    assert abs(lip - want) / want < 1e-2

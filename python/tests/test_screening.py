@@ -1,0 +1,183 @@
+"""L2 screening graphs: Theorem 3 closed forms vs brute-force maximization
+over the feasible set Omega, plus rule-dominance and safety properties.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def lasso_cd(x, y, lam, iters=4000, tol=1e-12):
+    """High-precision numpy coordinate descent, the ground-truth solver."""
+    x = np.asarray(x, np.float64)
+    y = np.asarray(y, np.float64)
+    n, p = x.shape
+    beta = np.zeros(p)
+    resid = y.copy()
+    norms = (x * x).sum(axis=0)
+    for _ in range(iters):
+        delta = 0.0
+        for j in range(p):
+            if norms[j] <= 0.0:
+                continue
+            old = beta[j]
+            rho = x[:, j] @ resid + norms[j] * old
+            new = np.sign(rho) * max(abs(rho) - lam, 0.0) / norms[j]
+            if new != old:
+                resid -= (new - old) * x[:, j]
+                delta = max(delta, abs(new - old))
+            beta[j] = new
+        if delta < tol:
+            break
+    return beta, resid
+
+
+def dual_point(resid, x, lam):
+    theta = resid / lam
+    infeas = np.abs(x.T @ theta).max()
+    if infeas > 1.0:
+        theta /= infeas
+    return theta
+
+
+def make_instance(n, p, seed, frac=0.6):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, p))
+    x /= np.linalg.norm(x, axis=0, keepdims=True) + 1e-12
+    beta = np.zeros(p)
+    k = max(1, int(0.2 * p))
+    beta[rng.choice(p, k, replace=False)] = rng.uniform(-1, 1, k)
+    y = x @ beta + 0.05 * rng.standard_normal(n)
+    lam_max = np.abs(x.T @ y).max()
+    lam1 = frac * lam_max
+    return x, y, lam_max, lam1
+
+
+def screen_inputs(x, y, lam1):
+    beta1, resid1 = lasso_cd(x, y, lam1)
+    theta1 = dual_point(resid1, x, lam1)
+    return beta1, theta1
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("ratio", [0.95, 0.7, 0.4])
+def test_theorem3_vs_bruteforce(seed, ratio):
+    """u_j^+ from Theorem 3 must match max_{theta in Omega} <x_j, theta>."""
+    n, p = 12, 8
+    x, y, lam_max, lam1 = make_instance(n, p, seed)
+    _, theta1 = screen_inputs(x, y, lam1)
+    lam2 = ratio * lam1
+    xj = jnp.asarray(x, jnp.float32)
+    yj = jnp.asarray(y, jnp.float32)
+    tj = jnp.asarray(theta1, jnp.float32)
+    lams = jnp.asarray([lam1, lam2], jnp.float32)
+    u_plus, u_minus, _ = model.sasvi_screen(xj, yj, tj, lams)
+    for j in range(p):
+        # The geometric maximizer is exact (up to grid resolution + f32 vs
+        # f64); Theorem 3's closed form must agree tightly in both directions.
+        bf = float(ref.brute_force_bound(x[:, j], y, theta1, lam1, lam2))
+        tol = 2e-3 * max(1.0, abs(bf))
+        assert abs(bf - float(u_plus[j])) <= tol, (j, bf, float(u_plus[j]))
+        bf_neg = float(ref.brute_force_bound(-x[:, j], y, theta1, lam1, lam2))
+        assert abs(bf_neg - float(u_minus[j])) <= tol, (j, bf_neg, float(u_minus[j]))
+
+
+@pytest.mark.parametrize("seed", [0, 3, 7, 11])
+def test_sasvi_safety(seed):
+    """Features screened by Sasvi must be zero in a high-precision solution."""
+    n, p = 20, 40
+    x, y, lam_max, lam1 = make_instance(n, p, seed)
+    _, theta1 = screen_inputs(x, y, lam1)
+    lam2 = 0.7 * lam1
+    beta2, _ = lasso_cd(x, y, lam2)
+    u_plus, u_minus, keep = model.sasvi_screen(
+        jnp.asarray(x, jnp.float32),
+        jnp.asarray(y, jnp.float32),
+        jnp.asarray(theta1, jnp.float32),
+        jnp.asarray([lam1, lam2], jnp.float32),
+    )
+    screened = np.asarray(keep) < 0.5
+    assert np.all(np.abs(beta2[screened]) < 1e-8)
+
+
+@pytest.mark.parametrize("seed", [0, 5])
+def test_rule_dominance(seed):
+    """Sasvi bound <= SAFE and DPP bounds (relaxations of the same VIs)."""
+    n, p = 16, 32
+    x, y, lam_max, lam1 = make_instance(n, p, seed)
+    _, theta1 = screen_inputs(x, y, lam1)
+    lam2 = 0.6 * lam1
+    xj = jnp.asarray(x, jnp.float32)
+    yj = jnp.asarray(y, jnp.float32)
+    tj = jnp.asarray(theta1, jnp.float32)
+    lams = jnp.asarray([lam1, lam2], jnp.float32)
+    up, um, _ = model.sasvi_screen(xj, yj, tj, lams)
+    sasvi = np.maximum(np.asarray(up), np.asarray(um))
+    safe_b, _, _ = model.safe_screen(xj, yj, tj, lams)
+    dpp_b, _, _ = model.dpp_screen(xj, yj, tj, lams)
+    assert np.all(sasvi <= np.asarray(safe_b) + 1e-3)
+    assert np.all(sasvi <= np.asarray(dpp_b) + 1e-3)
+
+
+def test_lambda2_to_lambda1_limit():
+    """lim_{lam2->lam1} u_j^+ = <x_j, theta1>, u_j^- = -<x_j, theta1>."""
+    n, p = 16, 24
+    x, y, lam_max, lam1 = make_instance(n, p, 9)
+    _, theta1 = screen_inputs(x, y, lam1)
+    lam2 = lam1 * (1.0 - 1e-6)
+    xj = jnp.asarray(x, jnp.float32)
+    tj = jnp.asarray(theta1, jnp.float32)
+    up, um, _ = model.sasvi_screen(
+        xj, jnp.asarray(y, jnp.float32), tj,
+        jnp.asarray([lam1, lam2], jnp.float32),
+    )
+    xt = np.asarray(x.T @ theta1)
+    assert_allclose(np.asarray(up), xt, atol=2e-3)
+    assert_allclose(np.asarray(um), -xt, atol=2e-3)
+
+
+def test_lambda_max_start_case4():
+    """At lam1 = lam_max (a=0), Theorem 3 case 4 must apply and stay safe."""
+    n, p = 20, 30
+    x, y, lam_max, _ = make_instance(n, p, 13)
+    theta1 = y / lam_max
+    lam2 = 0.8 * lam_max
+    beta2, _ = lasso_cd(x, y, lam2)
+    up, um, keep = model.sasvi_screen(
+        jnp.asarray(x, jnp.float32),
+        jnp.asarray(y, jnp.float32),
+        jnp.asarray(theta1, jnp.float32),
+        jnp.asarray([lam_max, lam2], jnp.float32),
+    )
+    screened = np.asarray(keep) < 0.5
+    assert screened.sum() > 0  # should reject something at this gap
+    assert np.all(np.abs(beta2[screened]) < 1e-8)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    ratio=st.floats(min_value=0.3, max_value=0.98),
+)
+def test_monotone_uplus_hypothesis(seed, ratio):
+    """Theorem 4 part 1: u_j^+ decreases as lam2 increases."""
+    n, p = 14, 10
+    x, y, lam_max, lam1 = make_instance(n, p, seed)
+    _, theta1 = screen_inputs(x, y, lam1)
+    xj = jnp.asarray(x, jnp.float32)
+    yj = jnp.asarray(y, jnp.float32)
+    tj = jnp.asarray(theta1, jnp.float32)
+    lo = ratio * lam1
+    hi = min(lam1 * 0.999, lo * 1.2)
+    up_lo, _, _ = model.sasvi_screen(xj, yj, tj, jnp.asarray([lam1, lo], jnp.float32))
+    up_hi, _, _ = model.sasvi_screen(xj, yj, tj, jnp.asarray([lam1, hi], jnp.float32))
+    # u+ at the larger lam2 (hi) must be <= u+ at the smaller lam2 (lo)
+    assert np.all(np.asarray(up_hi) <= np.asarray(up_lo) + 1e-4)

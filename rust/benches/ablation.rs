@@ -1,0 +1,179 @@
+//! Ablation benches for the design claims in §2–§3 of the paper:
+//!
+//!  A. **Bound tightness** (Figs. 2–3 quantified): per-feature upper bound
+//!     vs the *true* |<x_j, theta_2^*>| — mean looseness per rule. Sasvi's
+//!     feasible set is the VI intersection; SAFE/DPP are relaxations, so
+//!     their looseness must be >= Sasvi's everywhere.
+//!  B. **Grid-density sensitivity**: rejection ratio vs the gap between
+//!     consecutive lambdas (Sasvi degrades gracefully; DPP collapses).
+//!  C. **Warm start & working set ablation** on the CD solver.
+//!  D. **Statistics-pass amortization**: cost of screening relative to one
+//!     solver epoch (the "overhead" argument for why Sasvi ~ Strong).
+
+use std::time::Instant;
+
+use sasvi::coordinator::{run_path, PathOptions, PathPlan};
+use sasvi::data::synthetic::SyntheticSpec;
+use sasvi::metrics::Table;
+use sasvi::screening::{RuleKind, ScreenContext};
+use sasvi::solver::cd::{solve_cd, CdOptions};
+use sasvi::solver::DualState;
+
+fn solve_state(
+    ds: &sasvi::data::Dataset,
+    lam: f64,
+) -> (Vec<f64>, Vec<f64>, DualState) {
+    let p = ds.p();
+    let active: Vec<usize> = (0..p).collect();
+    let norms = ds.x.col_norms_sq();
+    let mut beta = vec![0.0; p];
+    let mut resid = ds.y.clone();
+    solve_cd(&ds.x, &ds.y, lam, &active, &norms, &mut beta, &mut resid,
+             &CdOptions::default());
+    let st = DualState::from_residual(&ds.x, &resid, lam);
+    (beta, resid, st)
+}
+
+fn ablation_tightness() {
+    println!("== A. bound tightness: mean (bound - |<x_j, theta2*>|) ==");
+    let ds = SyntheticSpec { n: 100, p: 2000, nnz: 100, ..Default::default() }
+        .generate(7);
+    let pre = ds.precompute();
+    let ctx = ScreenContext::new(&ds.x, &ds.y, &pre);
+    let lam1 = 0.7 * pre.lambda_max;
+    let (_, _, st1) = solve_state(&ds, lam1);
+    let mut t = Table::new(&["lam2/lam1", "SAFE", "DPP", "Strong", "Sasvi"]);
+    for f in [0.95, 0.85, 0.7, 0.5] {
+        let lam2 = f * lam1;
+        let (_, _, st2) = solve_state(&ds, lam2);
+        let mut row = vec![format!("{f:.2}")];
+        for rule in [RuleKind::Safe, RuleKind::Dpp, RuleKind::Strong, RuleKind::Sasvi] {
+            let mut bounds = vec![0.0; ds.p()];
+            rule.build().bounds(&ctx, &st1, lam2, &mut bounds);
+            let loose: f64 = bounds
+                .iter()
+                .zip(st2.xt_theta.iter())
+                .map(|(b, x)| b - x.abs())
+                .sum::<f64>()
+                / ds.p() as f64;
+            row.push(format!("{loose:.4}"));
+        }
+        t.row(row);
+    }
+    println!("{}", t.render());
+    println!("(smaller = tighter; Sasvi must be the tightest safe rule)\n");
+}
+
+fn ablation_grid_density() {
+    println!("== B. grid-density sensitivity: mean rejection vs grid size ==");
+    let ds = SyntheticSpec { n: 100, p: 2000, nnz: 100, ..Default::default() }
+        .generate(11);
+    let mut t = Table::new(&["grid", "SAFE", "DPP", "Sasvi"]);
+    for grid in [10usize, 25, 50, 100, 200] {
+        let plan = PathPlan::linear_spaced(&ds, grid, 0.05);
+        let mut row = vec![grid.to_string()];
+        for rule in [RuleKind::Safe, RuleKind::Dpp, RuleKind::Sasvi] {
+            let res = run_path(&ds, &plan, rule, PathOptions::default());
+            let mean: f64 = res
+                .steps
+                .iter()
+                .map(|s| s.rejection_ratio())
+                .sum::<f64>()
+                / res.steps.len() as f64;
+            row.push(format!("{mean:.3}"));
+        }
+        t.row(row);
+    }
+    println!("{}", t.render());
+    println!("(coarser grids = larger lambda gaps; relaxed feasible sets degrade faster)\n");
+}
+
+fn ablation_solver() {
+    println!("== C. solver ablation: warm start + working set ==");
+    let ds = SyntheticSpec { n: 150, p: 3000, nnz: 150, ..Default::default() }
+        .generate(3);
+    let plan = PathPlan::linear_spaced(&ds, 50, 0.05);
+    let pre = ds.precompute();
+
+    // full path with warm starts (standard)
+    let t0 = Instant::now();
+    let warm = run_path(&ds, &plan, RuleKind::Sasvi, PathOptions::default());
+    let warm_time = t0.elapsed();
+
+    // cold starts: re-zero beta at every grid point
+    let t1 = Instant::now();
+    let active_all: Vec<usize> = (0..ds.p()).collect();
+    let mut cold_updates = 0u64;
+    for &lam in &plan.lambdas {
+        let mut beta = vec![0.0; ds.p()];
+        let mut resid = ds.y.clone();
+        let stats = solve_cd(&ds.x, &ds.y, lam, &active_all, &pre.col_norms_sq,
+                             &mut beta, &mut resid, &CdOptions::default());
+        cold_updates += stats.coord_updates;
+    }
+    let cold_time = t1.elapsed();
+
+    let warm_updates: u64 = warm.steps.iter().map(|s| s.coord_updates).sum();
+    let mut t = Table::new(&["variant", "time(s)", "coord-updates"]);
+    t.row(vec![
+        "warm+screen".into(),
+        format!("{:.3}", warm_time.as_secs_f64()),
+        warm_updates.to_string(),
+    ]);
+    t.row(vec![
+        "cold, no screen".into(),
+        format!("{:.3}", cold_time.as_secs_f64()),
+        cold_updates.to_string(),
+    ]);
+    println!("{}", t.render());
+    println!();
+}
+
+fn ablation_overhead() {
+    println!("== D. screening overhead vs one solver epoch ==");
+    let ds = SyntheticSpec { n: 250, p: 10_000, nnz: 100, ..Default::default() }
+        .generate(5);
+    let pre = ds.precompute();
+    let ctx = ScreenContext::new(&ds.x, &ds.y, &pre);
+    let lam1 = 0.6 * pre.lambda_max;
+    let (_, resid, st) = solve_state(&ds, lam1);
+    let lam2 = 0.55 * pre.lambda_max;
+
+    // one full-stats pass (X^T r) — the shared per-step cost
+    let t0 = Instant::now();
+    let mut xt_r = vec![0.0; ds.p()];
+    for _ in 0..5 {
+        ds.x.t_matvec(&resid, &mut xt_r);
+    }
+    let stats_pass = t0.elapsed().as_secs_f64() / 5.0;
+
+    let mut t = Table::new(&["rule", "screen-only (ms)", "x stats-pass"]);
+    for rule in [RuleKind::Safe, RuleKind::Dpp, RuleKind::Strong, RuleKind::Sasvi] {
+        let r = rule.build();
+        let mut keep = vec![false; ds.p()];
+        let t1 = Instant::now();
+        let iters = 20;
+        for _ in 0..iters {
+            r.screen(&ctx, &st, lam2, &mut keep);
+        }
+        let per = t1.elapsed().as_secs_f64() / iters as f64;
+        t.row(vec![
+            rule.name().into(),
+            format!("{:.3}", per * 1e3),
+            format!("{:.3}", per / stats_pass),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "stats pass (X^T r over p={} features): {:.3} ms — screening is O(p) on top\n",
+        ds.p(),
+        stats_pass * 1e3
+    );
+}
+
+fn main() {
+    ablation_tightness();
+    ablation_grid_density();
+    ablation_solver();
+    ablation_overhead();
+}

@@ -1,0 +1,174 @@
+//! Hot-path microbenchmarks — the inputs to the performance pass
+//! (EXPERIMENTS.md §Perf).
+//!
+//!  * level-1 kernels: dot / axpy throughput (GB/s, GFLOP/s)
+//!  * the statistics pass `X^T r` (the per-step full-matrix cost)
+//!  * Sasvi per-feature bound evaluation (ns/feature)
+//!  * one CD epoch over an active set
+//!  * PJRT screen-graph execution (when artifacts are present)
+
+use std::time::Instant;
+
+use sasvi::data::synthetic::SyntheticSpec;
+use sasvi::linalg::ops;
+use sasvi::metrics::Table;
+use sasvi::screening::{Geometry, RuleKind, ScreenContext};
+use sasvi::solver::cd::{solve_cd, CdOptions};
+use sasvi::solver::DualState;
+
+fn bench<F: FnMut()>(mut f: F, min_secs: f64) -> (f64, u64) {
+    // warmup
+    f();
+    let mut iters = 1u64;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        if dt >= min_secs {
+            return (dt / iters as f64, iters);
+        }
+        iters = (iters * 2).max((iters as f64 * min_secs / dt.max(1e-9)) as u64 + 1);
+    }
+}
+
+fn main() {
+    let mut table = Table::new(&["benchmark", "per-op", "throughput"]);
+
+    // ---- level-1 kernels ---------------------------------------------------
+    let n = 4096;
+    let a: Vec<f64> = (0..n).map(|i| (i as f64).sin()).collect();
+    let b: Vec<f64> = (0..n).map(|i| (i as f64).cos()).collect();
+    let mut acc = 0.0f64;
+    let (t, _) = bench(
+        || {
+            acc += ops::dot(std::hint::black_box(&a), std::hint::black_box(&b));
+        },
+        0.2,
+    );
+    table.row(vec![
+        format!("dot n={n}"),
+        format!("{:.1} ns", t * 1e9),
+        format!("{:.2} GFLOP/s", 2.0 * n as f64 / t / 1e9),
+    ]);
+
+    let mut y = b.clone();
+    let (t, _) = bench(
+        || ops::axpy(1.000001, std::hint::black_box(&a), std::hint::black_box(&mut y)),
+        0.2,
+    );
+    table.row(vec![
+        format!("axpy n={n}"),
+        format!("{:.1} ns", t * 1e9),
+        format!("{:.2} GFLOP/s", 2.0 * n as f64 / t / 1e9),
+    ]);
+
+    // ---- the statistics pass -------------------------------------------------
+    let ds = SyntheticSpec { n: 250, p: 10_000, nnz: 100, ..Default::default() }
+        .generate(7);
+    let mut xt_r = vec![0.0; ds.p()];
+    let (t, _) = bench(|| ds.x.t_matvec(std::hint::black_box(&ds.y), &mut xt_r), 0.5);
+    let bytes = (ds.n() * ds.p() * 8) as f64;
+    table.row(vec![
+        format!("X^T r (250x10000)"),
+        format!("{:.2} ms", t * 1e3),
+        format!("{:.2} GB/s", bytes / t / 1e9),
+    ]);
+
+    // ---- Sasvi bound evaluation -----------------------------------------------
+    let pre = ds.precompute();
+    let ctx = ScreenContext::new(&ds.x, &ds.y, &pre);
+    let lam1 = 0.7 * pre.lambda_max;
+    let active: Vec<usize> = (0..ds.p()).collect();
+    let mut beta = vec![0.0; ds.p()];
+    let mut resid = ds.y.clone();
+    solve_cd(&ds.x, &ds.y, lam1, &active, &pre.col_norms_sq, &mut beta, &mut resid,
+             &CdOptions::default());
+    let st = DualState::from_residual(&ds.x, &resid, lam1);
+    let lam2 = 0.6 * pre.lambda_max;
+    let rule = RuleKind::Sasvi.build();
+    let mut keep = vec![false; ds.p()];
+    let (t, _) = bench(|| {
+        rule.screen(&ctx, std::hint::black_box(&st), lam2, &mut keep);
+    }, 0.5);
+    table.row(vec![
+        "sasvi screen p=10000".into(),
+        format!("{:.3} ms", t * 1e3),
+        format!("{:.1} ns/feature", t / ds.p() as f64 * 1e9),
+    ]);
+
+    // geometry setup alone (O(n) per invocation)
+    let (t, _) = bench(|| {
+        std::hint::black_box(Geometry::compute(&ctx, &st, lam2));
+    }, 0.2);
+    table.row(vec![
+        "geometry setup (O(n))".into(),
+        format!("{:.2} us", t * 1e6),
+        "-".into(),
+    ]);
+
+    // ---- one CD epoch -----------------------------------------------------------
+    let nnz_active: Vec<usize> = (0..ds.p()).step_by(10).collect(); // 1000 features
+    let mut beta2 = vec![0.0; ds.p()];
+    let mut resid2 = ds.y.clone();
+    let opts = CdOptions { max_epochs: 1, gap_check_every: 0, ..Default::default() };
+    let (t, _) = bench(|| {
+        solve_cd(&ds.x, &ds.y, lam2, &nnz_active, &pre.col_norms_sq, &mut beta2,
+                 &mut resid2, &opts);
+    }, 0.5);
+    table.row(vec![
+        format!("CD epoch |A|={}", nnz_active.len()),
+        format!("{:.2} ms", t * 1e3),
+        format!(
+            "{:.2} GB/s",
+            (nnz_active.len() * ds.n() * 8) as f64 / t / 1e9
+        ),
+    ]);
+
+    // ---- PJRT screen execution ------------------------------------------------
+    if std::path::Path::new("artifacts/manifest.txt").exists() {
+        use sasvi::runtime::executor::to_rowmajor;
+        let rt = sasvi::runtime::Runtime::open("artifacts").unwrap();
+        let (n2, p2) = (250, 1000);
+        let ds2 = SyntheticSpec { n: n2, p: p2, nnz: 50, ..Default::default() }
+            .generate(3);
+        let x_rm = to_rowmajor(&ds2.x);
+        let pre2 = ds2.precompute();
+        let theta = ds2.y.iter().map(|v| v / pre2.lambda_max).collect::<Vec<_>>();
+        // warm the compile cache before timing
+        rt.execute_screen("sasvi_screen", &x_rm, n2, p2, &ds2.y, &theta,
+                          pre2.lambda_max, 0.8 * pre2.lambda_max)
+            .unwrap();
+        let (t, _) = bench(|| {
+            rt.execute_screen("sasvi_screen", &x_rm, n2, p2, &ds2.y, &theta,
+                              pre2.lambda_max, 0.8 * pre2.lambda_max)
+                .unwrap();
+        }, 0.5);
+        table.row(vec![
+            "PJRT sasvi_screen (250x1000)".into(),
+            format!("{:.2} ms", t * 1e3),
+            format!("{:.1} ns/feature", t / p2 as f64 * 1e9),
+        ]);
+
+        // buffer-cached session: X/y resident on device (the perf fix)
+        let sess = sasvi::runtime::executor::ScreenSession::new(
+            &rt, "sasvi_screen", &x_rm, n2, p2, &ds2.y,
+        )
+        .unwrap();
+        let (t, _) = bench(|| {
+            sess.screen(&theta, pre2.lambda_max, 0.8 * pre2.lambda_max)
+                .unwrap();
+        }, 0.5);
+        table.row(vec![
+            "PJRT screen, X resident".into(),
+            format!("{:.2} ms", t * 1e3),
+            format!("{:.1} ns/feature", t / p2 as f64 * 1e9),
+        ]);
+    } else {
+        eprintln!("NOTE: artifacts/ missing — PJRT micro skipped");
+    }
+
+    println!("{}", table.render());
+    std::hint::black_box(acc);
+}

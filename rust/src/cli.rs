@@ -1,0 +1,429 @@
+//! Command-line interface (hand-rolled parser — no clap offline).
+//!
+//! ```text
+//! sasvi gen-data --preset synthetic100 --seed 7 --scale 0.1 --out ds.bin
+//! sasvi solve-path --preset synthetic100 --rule sasvi --grid 100 --min-frac 0.05
+//! sasvi table1 --scale 0.05 --trials 3 [--grid 100]
+//! sasvi fig5 --scale 0.05 [--grid 100] [--csv out/]
+//! sasvi sure-removal --preset synthetic100 --lam1-frac 0.8 --top 10
+//! sasvi serve --addr 127.0.0.1:7878 --workers 2
+//! sasvi runtime-info --artifacts artifacts
+//! sasvi run --config examples/config/quick.toml
+//! ```
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{Config, ExperimentConfig};
+use crate::coordinator::{run_path, PathOptions, PathPlan};
+use crate::data::{io as dataio, Preset};
+use crate::metrics::{fmt_secs, Table};
+use crate::screening::sure_removal::SureRemovalAnalysis;
+use crate::screening::{RuleKind, ScreenContext};
+use crate::solver::DualState;
+
+/// Parsed `--key value` flags.
+pub struct Flags {
+    map: HashMap<String, String>,
+}
+
+impl Flags {
+    pub fn parse(args: &[String]) -> Result<Self> {
+        let mut map = HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                    map.insert(key.to_string(), args[i + 1].clone());
+                    i += 2;
+                } else {
+                    map.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                bail!("unexpected argument: {a}");
+            }
+        }
+        Ok(Self { map })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} {v}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} {v}")),
+            None => Ok(default),
+        }
+    }
+}
+
+const HELP: &str = "\
+sasvi — Safe Screening with Variational Inequalities for Lasso (ICML 2014)
+
+USAGE: sasvi <command> [--flags]
+
+COMMANDS:
+  gen-data      generate a dataset to a file (--preset --seed --scale --out)
+  solve-path    run one path (--preset|--data, --rule, --grid, --min-frac, --scale)
+  table1        regenerate Table 1 (--scale --trials --grid)
+  fig5          regenerate Fig 5 rejection curves (--scale --grid [--csv dir])
+  sure-removal  Theorem-4 report (--preset --lam1-frac --top)
+  serve         screening service (--addr --workers)
+  runtime-info  list + warm PJRT artifacts (--artifacts DIR)
+  run           run an experiment config (--config FILE)
+  help          this message
+";
+
+/// Entry point. Returns the process exit code.
+pub fn run(args: &[String]) -> Result<i32> {
+    let Some((cmd, rest)) = args.split_first() else {
+        print!("{HELP}");
+        return Ok(2);
+    };
+    let flags = Flags::parse(rest)?;
+    match cmd.as_str() {
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(0)
+        }
+        "gen-data" => cmd_gen_data(&flags),
+        "solve-path" => cmd_solve_path(&flags),
+        "table1" => cmd_table1(&flags),
+        "fig5" => cmd_fig5(&flags),
+        "sure-removal" => cmd_sure_removal(&flags),
+        "serve" => cmd_serve(&flags),
+        "runtime-info" => cmd_runtime_info(&flags),
+        "run" => cmd_run_config(&flags),
+        other => {
+            eprintln!("unknown command: {other}\n{HELP}");
+            Ok(2)
+        }
+    }
+}
+
+fn load_dataset(flags: &Flags) -> Result<crate::data::Dataset> {
+    if let Some(path) = flags.get("data") {
+        return dataio::load(path);
+    }
+    let preset_name = flags.get_or("preset", "synthetic100");
+    let preset = Preset::parse(&preset_name)
+        .with_context(|| format!("unknown preset {preset_name}"))?;
+    let seed = flags.usize_or("seed", 7)? as u64;
+    let scale = flags.f64_or("scale", 0.05)?;
+    preset.generate(seed, scale)
+}
+
+fn cmd_gen_data(flags: &Flags) -> Result<i32> {
+    let ds = load_dataset(flags)?;
+    println!("generated {}: {}", ds.name, ds.summary());
+    if let Some(out) = flags.get("out") {
+        dataio::save(&ds, out)?;
+        println!("saved to {out}");
+    }
+    Ok(0)
+}
+
+fn cmd_solve_path(flags: &Flags) -> Result<i32> {
+    let ds = load_dataset(flags)?;
+    let rule_name = flags.get_or("rule", "sasvi");
+    let rule = RuleKind::parse(&rule_name)
+        .with_context(|| format!("unknown rule {rule_name}"))?;
+    let grid = flags.usize_or("grid", 100)?;
+    let min_frac = flags.f64_or("min-frac", 0.05)?;
+    let plan = PathPlan::linear_spaced(&ds, grid, min_frac);
+    println!("dataset {}: {}", ds.name, ds.summary());
+    let res = run_path(&ds, &plan, rule, PathOptions::default());
+    let mut t = Table::new(&[
+        "lam/lmax", "kept", "screened", "nnz", "epochs", "kkt-fix", "solve(s)", "screen(s)",
+    ]);
+    for s in res.steps.iter() {
+        t.row(vec![
+            format!("{:.3}", s.frac),
+            s.kept.to_string(),
+            s.screened.to_string(),
+            s.nnz.to_string(),
+            s.epochs.to_string(),
+            s.kkt_violations.to_string(),
+            fmt_secs(s.solve_time),
+            fmt_secs(s.screen_time),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "total: {} (solve {}, screen {}, kkt corrections {})",
+        fmt_secs(res.total_time),
+        fmt_secs(res.total_solve_time()),
+        fmt_secs(res.total_screen_time()),
+        res.total_kkt_violations()
+    );
+    Ok(0)
+}
+
+/// The Table-1 experiment over all presets x rules at a given scale.
+pub fn table1(scale: f64, trials: usize, grid: usize, seed0: u64) -> Table {
+    let mut table = Table::new(&[
+        "Method", "synth-100", "synth-1000", "synth-5000", "MNIST-like", "PIE-like",
+    ]);
+    let presets = Preset::all();
+    let rules = RuleKind::all();
+    // accumulate mean seconds per (rule, preset)
+    let mut cells = vec![vec![0.0f64; presets.len()]; rules.len()];
+    for (pi, preset) in presets.iter().enumerate() {
+        for trial in 0..trials {
+            let ds = Arc::new(
+                preset
+                    .generate(seed0 + trial as u64, scale)
+                    .expect("dataset generation"),
+            );
+            let plan = PathPlan::linear_spaced(&ds, grid, 0.05);
+            for (ri, rule) in rules.iter().enumerate() {
+                let res = run_path(&ds, &plan, *rule, PathOptions::default());
+                cells[ri][pi] += res.total_time.as_secs_f64() / trials as f64;
+            }
+        }
+    }
+    for (ri, rule) in rules.iter().enumerate() {
+        let mut row = vec![rule.name().to_string()];
+        for pi in 0..presets.len() {
+            row.push(format!("{:.3}", cells[ri][pi]));
+        }
+        table.row(row);
+    }
+    table
+}
+
+fn cmd_table1(flags: &Flags) -> Result<i32> {
+    let scale = flags.f64_or("scale", 0.05)?;
+    let trials = flags.usize_or("trials", 1)?.max(1);
+    let grid = flags.usize_or("grid", 100)?;
+    println!(
+        "Table 1 (running time in seconds; scale={scale}, trials={trials}, grid={grid})"
+    );
+    let t = table1(scale, trials, grid, 7);
+    println!("{}", t.render());
+    Ok(0)
+}
+
+/// Fig-5 rejection-ratio curves for one dataset.
+pub fn fig5_curves(
+    ds: &crate::data::Dataset,
+    grid: usize,
+) -> (Vec<f64>, HashMap<RuleKind, Vec<f64>>) {
+    let plan = PathPlan::linear_spaced(ds, grid, 0.05);
+    let fracs = plan.fractions();
+    let mut curves = HashMap::new();
+    for rule in [RuleKind::Safe, RuleKind::Dpp, RuleKind::Strong, RuleKind::Sasvi] {
+        let res = run_path(ds, &plan, rule, PathOptions::default());
+        curves.insert(
+            rule,
+            res.steps.iter().map(|s| s.rejection_ratio()).collect(),
+        );
+    }
+    (fracs, curves)
+}
+
+fn cmd_fig5(flags: &Flags) -> Result<i32> {
+    let scale = flags.f64_or("scale", 0.05)?;
+    let grid = flags.usize_or("grid", 100)?;
+    let csv_dir = flags.get("csv").map(str::to_string);
+    for preset in Preset::all() {
+        let ds = preset.generate(7, scale)?;
+        println!("== {} ({}) ==", preset.name(), ds.name);
+        let (fracs, curves) = fig5_curves(&ds, grid);
+        let mut t = Table::new(&["lam/lmax", "SAFE", "DPP", "Strong", "Sasvi"]);
+        let step = (fracs.len() / 20).max(1);
+        for i in (0..fracs.len()).step_by(step) {
+            t.row(vec![
+                format!("{:.3}", fracs[i]),
+                format!("{:.3}", curves[&RuleKind::Safe][i]),
+                format!("{:.3}", curves[&RuleKind::Dpp][i]),
+                format!("{:.3}", curves[&RuleKind::Strong][i]),
+                format!("{:.3}", curves[&RuleKind::Sasvi][i]),
+            ]);
+        }
+        println!("{}", t.render());
+        if let Some(dir) = &csv_dir {
+            std::fs::create_dir_all(dir)?;
+            let path = format!("{dir}/fig5_{}.csv", preset.name());
+            let csv = crate::metrics::to_csv(
+                &["frac", "safe", "dpp", "strong", "sasvi"],
+                &[
+                    &fracs,
+                    &curves[&RuleKind::Safe],
+                    &curves[&RuleKind::Dpp],
+                    &curves[&RuleKind::Strong],
+                    &curves[&RuleKind::Sasvi],
+                ],
+            );
+            std::fs::write(&path, csv)?;
+            println!("wrote {path}");
+        }
+    }
+    Ok(0)
+}
+
+fn cmd_sure_removal(flags: &Flags) -> Result<i32> {
+    let ds = load_dataset(flags)?;
+    let lam1_frac = flags.f64_or("lam1-frac", 0.8)?;
+    let top = flags.usize_or("top", 10)?;
+    let pre = ds.precompute();
+    let lam1 = lam1_frac * pre.lambda_max;
+    let active: Vec<usize> = (0..ds.p()).collect();
+    let mut beta = vec![0.0; ds.p()];
+    let mut resid = ds.y.clone();
+    crate::solver::cd::solve_cd(
+        &ds.x, &ds.y, lam1, &active, &pre.col_norms_sq, &mut beta, &mut resid,
+        &crate::solver::cd::CdOptions::default(),
+    );
+    let st = DualState::from_residual(&ds.x, &resid, lam1);
+    let ctx = ScreenContext::new(&ds.x, &ds.y, &pre);
+    let analysis = SureRemovalAnalysis::new(&ctx, &st);
+    let mut reports: Vec<(usize, crate::screening::sure_removal::FeatureRemoval)> =
+        (0..ds.p())
+            .map(|j| (j, analysis.analyze(&ctx, &st, j, 0.01 * pre.lambda_max)))
+            .collect();
+    reports.sort_by(|a, b| a.1.lam_s.total_cmp(&b.1.lam_s));
+    let mut t = Table::new(&["feature", "lam_s/lmax", "lam_2a/lmax", "lam_2y/lmax", "case"]);
+    for (j, r) in reports.iter().take(top) {
+        t.row(vec![
+            j.to_string(),
+            format!("{:.4}", r.lam_s / pre.lambda_max),
+            format!("{:.4}", r.lam_2a / pre.lambda_max),
+            format!("{:.4}", r.lam_2y / pre.lambda_max),
+            r.case.to_string(),
+        ]);
+    }
+    println!(
+        "sure-removal analysis at lam1 = {:.4} lambda_max ({} features, showing {top} most removable)",
+        lam1_frac,
+        ds.p()
+    );
+    println!("{}", t.render());
+    Ok(0)
+}
+
+fn cmd_serve(flags: &Flags) -> Result<i32> {
+    let addr = flags.get_or("addr", "127.0.0.1:7878");
+    let workers = flags.usize_or("workers", 2)?.max(1);
+    let server = crate::server::Server::bind(&addr, workers)?;
+    println!("sasvi screening service on {}", server.local_addr()?);
+    server.serve()?;
+    Ok(0)
+}
+
+fn cmd_runtime_info(flags: &Flags) -> Result<i32> {
+    let dir = flags.get_or("artifacts", "artifacts");
+    let rt = crate::runtime::Runtime::open(&dir)?;
+    println!("PJRT platform: {}", rt.platform());
+    let mut t = Table::new(&["artifact", "graph", "n", "p", "inputs", "outputs"]);
+    for a in &rt.manifest().artifacts {
+        t.row(vec![
+            a.name.clone(),
+            a.graph.clone(),
+            a.n.to_string(),
+            a.p.to_string(),
+            a.inputs.len().to_string(),
+            a.outputs.len().to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    let warmed = rt.warmup("sasvi_screen")?;
+    println!("warmed {warmed} sasvi_screen executable(s)");
+    Ok(0)
+}
+
+fn cmd_run_config(flags: &Flags) -> Result<i32> {
+    let path = flags
+        .get("config")
+        .context("--config FILE is required")?;
+    let cfg = Config::load(path)?;
+    let exp = ExperimentConfig::from_config(&cfg);
+    println!("experiment: {exp:?}");
+    let preset = Preset::parse(&exp.dataset)
+        .with_context(|| format!("unknown preset {}", exp.dataset))?;
+    let mut table = Table::new(&["rule", "mean-secs", "screened-total"]);
+    for rule_name in &exp.rules {
+        let rule = RuleKind::parse(rule_name)
+            .with_context(|| format!("unknown rule {rule_name}"))?;
+        let mut secs = 0.0;
+        let mut screened = 0usize;
+        for trial in 0..exp.trials.max(1) {
+            let ds = preset.generate(exp.seed + trial as u64, exp.scale)?;
+            let plan = PathPlan::linear_spaced(&ds, exp.grid_points, exp.min_frac);
+            let res = run_path(&ds, &plan, rule, PathOptions::default());
+            secs += res.total_time.as_secs_f64() / exp.trials.max(1) as f64;
+            screened += res.steps.iter().map(|s| s.screened).sum::<usize>();
+        }
+        table.row(vec![
+            rule.name().to_string(),
+            format!("{secs:.3}"),
+            screened.to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn flags_parse_pairs_and_bools() {
+        let f = Flags::parse(&s(&["--rule", "sasvi", "--verbose", "--grid", "10"])).unwrap();
+        assert_eq!(f.get("rule"), Some("sasvi"));
+        assert_eq!(f.get("verbose"), Some("true"));
+        assert_eq!(f.usize_or("grid", 0).unwrap(), 10);
+        assert_eq!(f.f64_or("missing", 1.5).unwrap(), 1.5);
+    }
+
+    #[test]
+    fn flags_reject_positional() {
+        assert!(Flags::parse(&s(&["oops"])).is_err());
+    }
+
+    #[test]
+    fn help_returns_ok() {
+        assert_eq!(run(&s(&["help"])).unwrap(), 0);
+        assert_eq!(run(&[]).unwrap(), 2);
+        assert_eq!(run(&s(&["nonsense"])).unwrap(), 2);
+    }
+
+    #[test]
+    fn solve_path_smoke() {
+        let code = run(&s(&[
+            "solve-path", "--preset", "synthetic100", "--scale", "0.01",
+            "--grid", "5", "--rule", "sasvi",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn table1_smoke_tiny() {
+        let t = table1(0.005, 1, 4, 3);
+        let rendered = t.render();
+        assert!(rendered.contains("Sasvi"));
+        assert!(rendered.contains("solver"));
+    }
+}

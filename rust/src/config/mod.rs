@@ -1,0 +1,279 @@
+//! Experiment configuration: a hand-rolled TOML-subset parser (offline — no
+//! serde/toml crates) plus the typed experiment config the CLI consumes.
+//!
+//! Supported TOML subset: `[section]` headers, `key = value` with strings,
+//! integers, floats, booleans, and flat arrays of those. Comments with `#`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// `section.key -> value` map ("" = top-level section).
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, Value>,
+}
+
+fn parse_scalar(tok: &str) -> Result<Value> {
+    let t = tok.trim();
+    if t.starts_with('"') && t.ends_with('"') && t.len() >= 2 {
+        return Ok(Value::Str(t[1..t.len() - 1].to_string()));
+    }
+    match t {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = t.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = t.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value: {t}")
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = match raw.find('#') {
+                // naive comment strip is fine: our strings don't contain '#'
+                Some(i) if !raw[..i].contains('"') || raw[..i].matches('"').count() % 2 == 0 => &raw[..i],
+                _ => raw,
+            }
+            .trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') && line.ends_with(']') {
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim();
+            let val = val.trim();
+            let full_key = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            let value = if val.starts_with('[') && val.ends_with(']') {
+                let inner = &val[1..val.len() - 1];
+                let items = inner
+                    .split(',')
+                    .map(str::trim)
+                    .filter(|s| !s.is_empty())
+                    .map(parse_scalar)
+                    .collect::<Result<Vec<_>>>()
+                    .with_context(|| format!("line {}", lineno + 1))?;
+                Value::Array(items)
+            } else {
+                parse_scalar(val).with_context(|| format!("line {}", lineno + 1))?
+            };
+            values.insert(full_key, value);
+        }
+        Ok(Self { values })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("read {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.get(key)
+            .and_then(Value::as_str)
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .and_then(Value::as_i64)
+            .map(|v| v.max(0) as usize)
+            .unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.values.keys()
+    }
+}
+
+/// Typed experiment configuration (what `sasvi run --config exp.toml` uses).
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub dataset: String,
+    pub scale: f64,
+    pub seed: u64,
+    pub grid_points: usize,
+    pub min_frac: f64,
+    pub rules: Vec<String>,
+    pub trials: usize,
+    pub out_dir: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            dataset: "synthetic100".into(),
+            scale: 0.1,
+            seed: 7,
+            grid_points: 100,
+            min_frac: 0.05,
+            rules: vec![
+                "solver".into(),
+                "safe".into(),
+                "dpp".into(),
+                "strong".into(),
+                "sasvi".into(),
+            ],
+            trials: 1,
+            out_dir: "results".into(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn from_config(c: &Config) -> Self {
+        let d = Self::default();
+        let rules = match c.get("experiment.rules") {
+            Some(Value::Array(items)) => items
+                .iter()
+                .filter_map(Value::as_str)
+                .map(str::to_string)
+                .collect(),
+            _ => d.rules.clone(),
+        };
+        Self {
+            dataset: c.get_str("experiment.dataset", &d.dataset),
+            scale: c.get_f64("experiment.scale", d.scale),
+            seed: c.get_usize("experiment.seed", d.seed as usize) as u64,
+            grid_points: c.get_usize("experiment.grid_points", d.grid_points),
+            min_frac: c.get_f64("experiment.min_frac", d.min_frac),
+            rules,
+            trials: c.get_usize("experiment.trials", d.trials),
+            out_dir: c.get_str("experiment.out_dir", &d.out_dir),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment definition
+[experiment]
+dataset = "synthetic1000"
+scale = 0.25
+seed = 42
+grid_points = 100
+min_frac = 0.05
+rules = ["sasvi", "dpp"]
+trials = 3
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get_str("experiment.dataset", ""), "synthetic1000");
+        assert_eq!(c.get_f64("experiment.scale", 0.0), 0.25);
+        assert_eq!(c.get_usize("experiment.seed", 0), 42);
+        match c.get("experiment.rules") {
+            Some(Value::Array(a)) => assert_eq!(a.len(), 2),
+            other => panic!("expected array, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn experiment_config_typed() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let e = ExperimentConfig::from_config(&c);
+        assert_eq!(e.dataset, "synthetic1000");
+        assert_eq!(e.trials, 3);
+        assert_eq!(e.rules, vec!["sasvi", "dpp"]);
+        assert_eq!(e.grid_points, 100);
+    }
+
+    #[test]
+    fn defaults_apply_when_missing() {
+        let c = Config::parse("[experiment]\ndataset = \"pie\"\n").unwrap();
+        let e = ExperimentConfig::from_config(&c);
+        assert_eq!(e.dataset, "pie");
+        assert_eq!(e.grid_points, 100);
+        assert_eq!(e.rules.len(), 5);
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Config::parse("not a kv line").is_err());
+        assert!(Config::parse("x = @bogus").is_err());
+    }
+
+    #[test]
+    fn bools_and_negatives() {
+        let c = Config::parse("a = true\nb = -3\nc = -0.5\n").unwrap();
+        assert_eq!(c.get_bool("a", false), true);
+        assert_eq!(c.get("b").unwrap().as_i64(), Some(-3));
+        assert_eq!(c.get_f64("c", 0.0), -0.5);
+    }
+}

@@ -1,0 +1,17 @@
+//! The L3 coordinator: pathwise orchestration of solve + screen.
+//!
+//! * [`planner`] — regularization grids (the paper's protocol: 100 values
+//!   equally spaced on the `lambda/lambda_max` scale from 0.05 to 1);
+//! * [`path`] — the sequential path runner: screen → restrict → warm-start
+//!   solve → (KKT-correct if the rule is unsafe) → next dual state;
+//! * [`pool`] — a worker pool running many path jobs concurrently with
+//!   bounded queues and per-job result channels (the screening service and
+//!   the benches sit on top of it).
+
+pub mod path;
+pub mod planner;
+pub mod pool;
+
+pub use path::{run_path, run_path_keep_betas, PathOptions, PathResult, SolverKind, StepRecord};
+pub use planner::PathPlan;
+pub use pool::{JobPool, JobSpec, JobStatus};

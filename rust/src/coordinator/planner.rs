@@ -1,0 +1,112 @@
+//! Regularization-path planning.
+
+use crate::data::Dataset;
+
+/// A descending grid of regularization parameters.
+#[derive(Clone, Debug)]
+pub struct PathPlan {
+    /// strictly descending lambda values
+    pub lambdas: Vec<f64>,
+    pub lambda_max: f64,
+}
+
+impl PathPlan {
+    /// The paper's §5 protocol: `k` values equally spaced on the
+    /// `lambda/lambda_max` scale from `min_frac` (0.05 in the paper) to 1.
+    pub fn linear_spaced(ds: &Dataset, k: usize, min_frac: f64) -> Self {
+        let lambda_max = ds.lambda_max();
+        Self::linear_from_lambda_max(lambda_max, k, min_frac)
+    }
+
+    /// Same, given a precomputed `lambda_max`.
+    pub fn linear_from_lambda_max(lambda_max: f64, k: usize, min_frac: f64) -> Self {
+        assert!(k >= 2, "need at least 2 grid points");
+        assert!((0.0..1.0).contains(&min_frac));
+        let lambdas = (0..k)
+            .map(|i| {
+                let frac = 1.0 - (1.0 - min_frac) * i as f64 / (k - 1) as f64;
+                frac * lambda_max
+            })
+            .collect();
+        Self { lambdas, lambda_max }
+    }
+
+    /// Geometric (log-spaced) grid — common in glmnet-style software.
+    pub fn log_spaced(ds: &Dataset, k: usize, min_frac: f64) -> Self {
+        let lambda_max = ds.lambda_max();
+        assert!(k >= 2);
+        assert!(min_frac > 0.0 && min_frac < 1.0);
+        let ratio = min_frac.powf(1.0 / (k - 1) as f64);
+        let mut lam = lambda_max;
+        let lambdas = (0..k)
+            .map(|_| {
+                let v = lam;
+                lam *= ratio;
+                v
+            })
+            .collect();
+        Self { lambdas, lambda_max }
+    }
+
+    /// A custom descending grid.
+    pub fn custom(lambdas: Vec<f64>, lambda_max: f64) -> Self {
+        assert!(!lambdas.is_empty());
+        for w in lambdas.windows(2) {
+            assert!(w[0] > w[1], "grid must be strictly descending");
+        }
+        Self { lambdas, lambda_max }
+    }
+
+    pub fn len(&self) -> usize {
+        self.lambdas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lambdas.is_empty()
+    }
+
+    /// Fractions `lambda/lambda_max` (the x-axis of Fig. 5).
+    pub fn fractions(&self) -> Vec<f64> {
+        self.lambdas.iter().map(|l| l / self.lambda_max).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticSpec;
+
+    #[test]
+    fn linear_grid_matches_paper_protocol() {
+        let ds = SyntheticSpec { n: 20, p: 30, nnz: 3, ..Default::default() }
+            .generate(1);
+        let plan = PathPlan::linear_spaced(&ds, 100, 0.05);
+        assert_eq!(plan.len(), 100);
+        let fr = plan.fractions();
+        assert!((fr[0] - 1.0).abs() < 1e-12);
+        assert!((fr[99] - 0.05).abs() < 1e-12);
+        // equal spacing
+        let step = fr[0] - fr[1];
+        for w in fr.windows(2) {
+            assert!((w[0] - w[1] - step).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn log_grid_descends_geometrically() {
+        let ds = SyntheticSpec { n: 10, p: 20, nnz: 2, ..Default::default() }
+            .generate(2);
+        let plan = PathPlan::log_spaced(&ds, 10, 0.1);
+        let r0 = plan.lambdas[1] / plan.lambdas[0];
+        for w in plan.lambdas.windows(2) {
+            assert!((w[1] / w[0] - r0).abs() < 1e-9);
+        }
+        assert!((plan.lambdas[9] / plan.lambda_max - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn custom_rejects_non_descending() {
+        PathPlan::custom(vec![1.0, 1.5], 2.0);
+    }
+}

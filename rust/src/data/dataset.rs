@@ -1,0 +1,125 @@
+//! The `Dataset` container and the path-level precomputations every
+//! screening rule shares.
+
+use crate::linalg::{ops, DenseMatrix};
+
+/// A regression problem `y ~ X beta` plus metadata. Columns of `x` are
+/// features; generators normalize them to unit norm (standard practice for
+//  Lasso screening, and what the paper's experiments do).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub x: DenseMatrix,
+    pub y: Vec<f64>,
+    /// Ground-truth coefficients when the data is synthetic (for diagnostics
+    /// like support recovery; never used by solvers or rules).
+    pub beta_true: Option<Vec<f64>>,
+    pub seed: u64,
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        self.x.nrows()
+    }
+
+    pub fn p(&self) -> usize {
+        self.x.ncols()
+    }
+
+    /// `lambda_max = ||X^T y||_inf` — above this the Lasso solution is 0.
+    pub fn lambda_max(&self) -> f64 {
+        let mut xty = vec![0.0; self.p()];
+        self.x.t_matvec(&self.y, &mut xty);
+        ops::inf_norm(&xty)
+    }
+
+    /// Precompute the per-path constants shared by all rules and the solver.
+    pub fn precompute(&self) -> PathPrecompute {
+        let mut xty = vec![0.0; self.p()];
+        self.x.t_matvec(&self.y, &mut xty);
+        let col_norms_sq = self.x.col_norms_sq();
+        let y_norm_sq = ops::nrm2sq(&self.y);
+        let lambda_max = ops::inf_norm(&xty);
+        PathPrecompute { xty, col_norms_sq, y_norm_sq, lambda_max }
+    }
+
+    /// Summary statistics used by tests and the CLI `gen-data` report.
+    pub fn summary(&self) -> DatasetSummary {
+        let p = self.p();
+        let norms = self.x.col_norms_sq();
+        let mean_norm = norms.iter().sum::<f64>() / p.max(1) as f64;
+        // average |corr| between adjacent columns — a cheap proxy for the
+        // coherence that drives screening behaviour.
+        let mut adj = 0.0;
+        for j in 1..p {
+            let c = ops::dot(self.x.col(j - 1), self.x.col(j));
+            let d = (norms[j - 1] * norms[j]).sqrt();
+            if d > 0.0 {
+                adj += (c / d).abs();
+            }
+        }
+        DatasetSummary {
+            n: self.n(),
+            p,
+            mean_col_norm_sq: mean_norm,
+            mean_adjacent_abs_corr: if p > 1 { adj / (p - 1) as f64 } else { 0.0 },
+            lambda_max: self.lambda_max(),
+        }
+    }
+}
+
+/// Quantities computed once per dataset and reused across the entire
+/// regularization path (and by every screening rule):
+/// `X^T y`, the squared column norms, `||y||^2`, and `lambda_max`.
+#[derive(Clone, Debug)]
+pub struct PathPrecompute {
+    pub xty: Vec<f64>,
+    pub col_norms_sq: Vec<f64>,
+    pub y_norm_sq: f64,
+    pub lambda_max: f64,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct DatasetSummary {
+    pub n: usize,
+    pub p: usize,
+    pub mean_col_norm_sq: f64,
+    pub mean_adjacent_abs_corr: f64,
+    pub lambda_max: f64,
+}
+
+impl std::fmt::Display for DatasetSummary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "n={} p={} mean||x_j||^2={:.4} mean|corr_adj|={:.4} lambda_max={:.4}",
+            self.n, self.p, self.mean_col_norm_sq, self.mean_adjacent_abs_corr,
+            self.lambda_max
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::data::synthetic::SyntheticSpec;
+
+    #[test]
+    fn lambda_max_consistent_with_precompute() {
+        let ds = SyntheticSpec { n: 20, p: 50, nnz: 5, ..Default::default() }
+            .generate(3);
+        let pre = ds.precompute();
+        assert!((pre.lambda_max - ds.lambda_max()).abs() < 1e-12);
+        assert_eq!(pre.xty.len(), 50);
+        assert_eq!(pre.col_norms_sq.len(), 50);
+        assert!(pre.y_norm_sq > 0.0);
+    }
+
+    #[test]
+    fn summary_reports_unit_norms() {
+        let ds = SyntheticSpec { n: 30, p: 40, nnz: 4, ..Default::default() }
+            .generate(5);
+        let s = ds.summary();
+        assert!((s.mean_col_norm_sq - 1.0).abs() < 1e-9);
+        assert!(s.mean_adjacent_abs_corr > 0.2, "AR(1) should correlate");
+    }
+}

@@ -1,0 +1,154 @@
+//! Binary dataset serialization.
+//!
+//! Simple little-endian format so generated datasets can be cached on disk
+//! and shared between the CLI, benches, and the screening service:
+//!
+//! ```text
+//! magic  "SASVIDS1"                    8 bytes
+//! n, p   u64 le                        16 bytes
+//! flags  u64 le (bit0: has beta_true)  8 bytes
+//! seed   u64 le                        8 bytes
+//! name   u64 le length + utf-8 bytes
+//! x      n*p f64 le (column-major)
+//! y      n   f64 le
+//! beta   p   f64 le (if flag bit0)
+//! ```
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::Dataset;
+use crate::linalg::DenseMatrix;
+
+const MAGIC: &[u8; 8] = b"SASVIDS1";
+
+fn write_u64(w: &mut impl Write, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn write_f64s(w: &mut impl Write, xs: &[f64]) -> Result<()> {
+    // chunked to amortize the syscall overhead through BufWriter
+    for x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_f64s(r: &mut impl Read, n: usize) -> Result<Vec<f64>> {
+    let mut bytes = vec![0u8; n * 8];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+/// Serialize a dataset to the given path.
+pub fn save(ds: &Dataset, path: impl AsRef<Path>) -> Result<()> {
+    let f = File::create(path.as_ref())
+        .with_context(|| format!("create {}", path.as_ref().display()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    write_u64(&mut w, ds.n() as u64)?;
+    write_u64(&mut w, ds.p() as u64)?;
+    write_u64(&mut w, ds.beta_true.is_some() as u64)?;
+    write_u64(&mut w, ds.seed)?;
+    write_u64(&mut w, ds.name.len() as u64)?;
+    w.write_all(ds.name.as_bytes())?;
+    write_f64s(&mut w, ds.x.as_slice())?;
+    write_f64s(&mut w, &ds.y)?;
+    if let Some(beta) = &ds.beta_true {
+        write_f64s(&mut w, beta)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a dataset from the given path.
+pub fn load(path: impl AsRef<Path>) -> Result<Dataset> {
+    let f = File::open(path.as_ref())
+        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not a sasvi dataset file (bad magic)");
+    }
+    let n = read_u64(&mut r)? as usize;
+    let p = read_u64(&mut r)? as usize;
+    if n == 0 || p == 0 || n.saturating_mul(p) > (1 << 34) {
+        bail!("implausible dataset dims n={n} p={p}");
+    }
+    let flags = read_u64(&mut r)?;
+    let seed = read_u64(&mut r)?;
+    let name_len = read_u64(&mut r)? as usize;
+    if name_len > 4096 {
+        bail!("implausible name length {name_len}");
+    }
+    let mut name_bytes = vec![0u8; name_len];
+    r.read_exact(&mut name_bytes)?;
+    let name = String::from_utf8(name_bytes).context("dataset name not utf-8")?;
+    let x = DenseMatrix::from_vec(n, p, read_f64s(&mut r, n * p)?);
+    let y = read_f64s(&mut r, n)?;
+    let beta_true = if flags & 1 != 0 {
+        Some(read_f64s(&mut r, p)?)
+    } else {
+        None
+    };
+    Ok(Dataset { name, x, y, beta_true, seed })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticSpec;
+
+    #[test]
+    fn roundtrip() {
+        let ds = SyntheticSpec { n: 17, p: 23, nnz: 5, ..Default::default() }
+            .generate(77);
+        let dir = std::env::temp_dir().join("sasvi_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ds.bin");
+        save(&ds, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.name, ds.name);
+        assert_eq!(back.seed, ds.seed);
+        assert_eq!(back.x, ds.x);
+        assert_eq!(back.y, ds.y);
+        assert_eq!(back.beta_true, ds.beta_true);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("sasvi_io_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("garbage.bin");
+        std::fs::write(&path, b"not a dataset").unwrap();
+        assert!(load(&path).is_err());
+    }
+
+    #[test]
+    fn roundtrip_without_beta() {
+        let mut ds = SyntheticSpec { n: 5, p: 7, nnz: 2, ..Default::default() }
+            .generate(1);
+        ds.beta_true = None;
+        let dir = std::env::temp_dir().join("sasvi_io_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ds.bin");
+        save(&ds, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert!(back.beta_true.is_none());
+        assert_eq!(back.y, ds.y);
+    }
+}

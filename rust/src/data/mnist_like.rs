@@ -1,0 +1,186 @@
+//! MNIST-like simulated dataset.
+//!
+//! The paper regresses one held-out MNIST digit image (784 pixels) on a
+//! dictionary of 50,000 digit images. We cannot ship MNIST offline, so this
+//! generator reproduces the *screening-relevant* structure of that
+//! dictionary (DESIGN.md §2): non-negative columns, strong intra-class
+//! correlation (5000 near-duplicates per class), spatial smoothness on the
+//! 28x28 grid, and a response drawn from the same process as the columns.
+//!
+//! Each class c has a prototype built from a few Gaussian "pen strokes";
+//! a column of class c is prototype + per-image stroke jitter + pixel noise,
+//! clamped to be non-negative — mimicking grey-scale digit images.
+
+use crate::data::Dataset;
+use crate::linalg::DenseMatrix;
+use crate::rng::Xoshiro256;
+
+#[derive(Clone, Copy, Debug)]
+pub struct MnistLikeSpec {
+    /// image side (paper: 28 -> n = 784 pixels)
+    pub side: usize,
+    /// dictionary columns (paper: 50,000)
+    pub p: usize,
+    /// number of digit classes
+    pub classes: usize,
+    /// per-image jitter of stroke positions (pixels)
+    pub jitter: f64,
+    /// additive pixel noise
+    pub noise: f64,
+}
+
+impl Default for MnistLikeSpec {
+    fn default() -> Self {
+        Self { side: 28, p: 50_000, classes: 10, jitter: 1.5, noise: 0.08 }
+    }
+}
+
+impl MnistLikeSpec {
+    /// Scaled-down variant (scale in (0,1]; 1.0 = paper size).
+    pub fn scaled(scale: f64) -> Self {
+        let s = scale.clamp(1e-3, 1.0);
+        Self {
+            side: ((28.0 * s.sqrt()) as usize).max(8),
+            p: ((50_000.0 * s) as usize).max(64),
+            ..Default::default()
+        }
+    }
+
+    fn render_strokes(
+        &self,
+        strokes: &[(f64, f64, f64, f64)],
+        out: &mut [f64],
+    ) {
+        let side = self.side;
+        out.fill(0.0);
+        for &(cx, cy, sd, amp) in strokes {
+            let inv = 1.0 / (2.0 * sd * sd);
+            // only rasterize a 3-sigma window around the stroke centre
+            let r = (3.0 * sd).ceil() as i64;
+            let (icx, icy) = (cx.round() as i64, cy.round() as i64);
+            for yy in (icy - r).max(0)..=(icy + r).min(side as i64 - 1) {
+                for xx in (icx - r).max(0)..=(icx + r).min(side as i64 - 1) {
+                    let dx = xx as f64 - cx;
+                    let dy = yy as f64 - cy;
+                    out[(yy as usize) * side + xx as usize] +=
+                        amp * (-(dx * dx + dy * dy) * inv).exp();
+                }
+            }
+        }
+    }
+
+    pub fn generate(&self, seed: u64) -> Dataset {
+        let mut rng = Xoshiro256::new(seed ^ 0x11A7_55E5);
+        let side = self.side;
+        let n = side * side;
+        let p = self.p;
+
+        // Class prototypes: 4-7 strokes each along a rough path.
+        let mut protos: Vec<Vec<(f64, f64, f64, f64)>> = Vec::new();
+        for _ in 0..self.classes {
+            let k = 4 + rng.below(4);
+            let mut strokes = Vec::with_capacity(k);
+            let mut cx = rng.uniform_in(0.3, 0.7) * side as f64;
+            let mut cy = rng.uniform_in(0.2, 0.4) * side as f64;
+            for _ in 0..k {
+                let sd = rng.uniform_in(0.05, 0.12) * side as f64;
+                strokes.push((cx, cy, sd, rng.uniform_in(0.6, 1.0)));
+                cx = (cx + rng.uniform_in(-0.25, 0.25) * side as f64)
+                    .clamp(0.15 * side as f64, 0.85 * side as f64);
+                cy = (cy + rng.uniform_in(0.05, 0.3) * side as f64)
+                    .clamp(0.1 * side as f64, 0.9 * side as f64);
+            }
+            protos.push(strokes);
+        }
+
+        let mut x = DenseMatrix::zeros(n, p);
+        let mut buf = vec![0.0; n];
+        for j in 0..p {
+            let class = j % self.classes;
+            let mut strokes = protos[class].clone();
+            for s in strokes.iter_mut() {
+                s.0 += rng.normal() * self.jitter;
+                s.1 += rng.normal() * self.jitter;
+                s.3 *= 1.0 + 0.15 * rng.normal();
+            }
+            self.render_strokes(&strokes, &mut buf);
+            let col = x.col_mut(j);
+            for (c, &b) in col.iter_mut().zip(buf.iter()) {
+                *c = (b + self.noise * rng.normal()).max(0.0);
+            }
+        }
+
+        // Response: an unseen image from a random class (like regressing a
+        // held-out test digit on the training dictionary).
+        let class = rng.below(self.classes);
+        let mut strokes = protos[class].clone();
+        for s in strokes.iter_mut() {
+            s.0 += rng.normal() * self.jitter;
+            s.1 += rng.normal() * self.jitter;
+        }
+        self.render_strokes(&strokes, &mut buf);
+        let y: Vec<f64> = buf
+            .iter()
+            .map(|&b| (b + self.noise * rng.normal()).max(0.0))
+            .collect();
+
+        x.normalize_columns();
+        Dataset {
+            name: format!("mnist-like(n={n},p={p})"),
+            x,
+            y,
+            beta_true: None,
+            seed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::ops;
+
+    #[test]
+    fn columns_nonnegative_and_unit_norm() {
+        let ds = MnistLikeSpec::scaled(0.01).generate(3);
+        for j in 0..ds.p() {
+            let col = ds.x.col(j);
+            assert!(col.iter().all(|&v| v >= 0.0), "col {j} has negatives");
+            let nrm = ops::nrm2(col);
+            assert!((nrm - 1.0).abs() < 1e-9, "col {j} norm {nrm}");
+        }
+    }
+
+    #[test]
+    fn intra_class_correlation_exceeds_inter_class() {
+        let spec = MnistLikeSpec { side: 16, p: 200, ..Default::default() };
+        let ds = spec.generate(5);
+        let classes = spec.classes;
+        let mut intra = (0.0, 0usize);
+        let mut inter = (0.0, 0usize);
+        for a in 0..60 {
+            for b in (a + 1)..60 {
+                let c = ops::dot(ds.x.col(a), ds.x.col(b));
+                if a % classes == b % classes {
+                    intra.0 += c;
+                    intra.1 += 1;
+                } else {
+                    inter.0 += c;
+                    inter.1 += 1;
+                }
+            }
+        }
+        let mi = intra.0 / intra.1 as f64;
+        let me = inter.0 / inter.1 as f64;
+        assert!(
+            mi > me + 0.1,
+            "intra-class corr {mi} should exceed inter-class {me}"
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let s = MnistLikeSpec::scaled(0.005);
+        assert_eq!(s.generate(1).y, s.generate(1).y);
+    }
+}

@@ -1,0 +1,103 @@
+//! Datasets: the paper's synthetic benchmark plus simulated stand-ins for
+//! the MNIST and PIE image regressions (see DESIGN.md §2 for why the
+//! substitutions preserve the screening-relevant structure), binary
+//! serialization, and a name-based registry used by the CLI and benches.
+
+pub mod dataset;
+pub mod elastic_net;
+pub mod io;
+pub mod mnist_like;
+pub mod pie_like;
+pub mod synthetic;
+
+pub use dataset::Dataset;
+
+use crate::Result;
+
+/// Named dataset presets used throughout the benches/examples. `scale` in
+/// (0, 1] shrinks n and p proportionally so smoke tests stay fast.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Preset {
+    /// Paper §5 synthetic, X ~ 250 x 10000, corr 0.5^|i-j|, pbar nonzeros.
+    Synthetic { pbar: usize },
+    /// MNIST-like regression: digit-blob dictionary, 784 x 50000.
+    MnistLike,
+    /// PIE-like regression: low-rank face dictionary, 1024 x 11553.
+    PieLike,
+}
+
+impl Preset {
+    pub fn parse(name: &str) -> Option<Preset> {
+        match name {
+            "synthetic100" => Some(Preset::Synthetic { pbar: 100 }),
+            "synthetic1000" => Some(Preset::Synthetic { pbar: 1000 }),
+            "synthetic5000" => Some(Preset::Synthetic { pbar: 5000 }),
+            "mnist" | "mnist-like" => Some(Preset::MnistLike),
+            "pie" | "pie-like" => Some(Preset::PieLike),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Preset::Synthetic { pbar } => format!("synthetic{pbar}"),
+            Preset::MnistLike => "mnist-like".into(),
+            Preset::PieLike => "pie-like".into(),
+        }
+    }
+
+    /// Generate the dataset at a given scale (1.0 = paper size).
+    pub fn generate(&self, seed: u64, scale: f64) -> Result<Dataset> {
+        let s = scale.clamp(1e-3, 1.0);
+        let ds = match *self {
+            Preset::Synthetic { pbar } => {
+                let spec = synthetic::SyntheticSpec {
+                    n: ((250.0 * s) as usize).max(8),
+                    p: ((10_000.0 * s) as usize).max(16),
+                    nnz: ((pbar as f64 * s) as usize).max(1),
+                    ..Default::default()
+                };
+                spec.generate(seed)
+            }
+            Preset::MnistLike => mnist_like::MnistLikeSpec::scaled(s).generate(seed),
+            Preset::PieLike => pie_like::PieLikeSpec::scaled(s).generate(seed),
+        };
+        Ok(ds)
+    }
+
+    pub fn all() -> Vec<Preset> {
+        vec![
+            Preset::Synthetic { pbar: 100 },
+            Preset::Synthetic { pbar: 1000 },
+            Preset::Synthetic { pbar: 5000 },
+            Preset::MnistLike,
+            Preset::PieLike,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preset_roundtrip_names() {
+        for p in Preset::all() {
+            let name = p.name();
+            let name = if name == "mnist-like" { "mnist" } else { &name };
+            let name = if name == "pie-like" { "pie" } else { name };
+            assert_eq!(Preset::parse(name), Some(p));
+        }
+        assert_eq!(Preset::parse("nope"), None);
+    }
+
+    #[test]
+    fn scaled_generation_has_expected_shape() {
+        let ds = Preset::Synthetic { pbar: 100 }
+            .generate(1, 0.02)
+            .unwrap();
+        assert!(ds.x.nrows() >= 8);
+        assert!(ds.x.ncols() >= 16);
+        assert_eq!(ds.y.len(), ds.x.nrows());
+    }
+}

@@ -1,0 +1,53 @@
+//! # Sasvi — Safe Screening with Variational Inequalities for Lasso
+//!
+//! A production-shaped reproduction of *Liu, Zhao, Wang, Ye — "Safe Screening
+//! with Variational Inequalities and Its Application to Lasso"* (ICML 2014),
+//! built as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the pathwise Lasso coordinator: datasets, solvers,
+//!   all four screening rules (Sasvi, SAFE, DPP, Strong), the sure-removal
+//!   analysis of Theorem 4, a worker-pool path orchestrator, a TCP screening
+//!   service, and the PJRT runtime that executes AOT-compiled XLA artifacts.
+//! * **L2 (python/compile/model.py)** — JAX graphs of the screening rules and
+//!   a masked FISTA solver, lowered once to HLO text by `make artifacts`.
+//! * **L1 (python/compile/kernels/screen.py)** — the fused per-feature
+//!   statistics pass as a Pallas kernel (the screening hot-spot).
+//!
+//! Python never runs at request time; the `sasvi` binary is self-contained
+//! once `artifacts/` is built.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use sasvi::data::synthetic::SyntheticSpec;
+//! use sasvi::screening::RuleKind;
+//! use sasvi::coordinator::{PathPlan, run_path};
+//!
+//! let ds = SyntheticSpec { n: 250, p: 2000, nnz: 100, ..Default::default() }
+//!     .generate(7);
+//! let plan = PathPlan::log_spaced(&ds, 100, 0.05);
+//! let result = run_path(&ds, &plan, RuleKind::Sasvi, Default::default());
+//! println!("total solve time: {:?}", result.total_time);
+//! ```
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod logistic;
+pub mod metrics;
+pub mod rng;
+pub mod runtime;
+pub mod screening;
+pub mod server;
+pub mod solver;
+pub mod testutil;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Numeric tolerance used when comparing against the dual-feasibility
+/// boundary `|<x_j, theta>| = 1`. Kept conservative: a rule only discards a
+/// feature when its bound is strictly below `1 - SCREEN_EPS`.
+pub const SCREEN_EPS: f64 = 1e-9;

@@ -1,0 +1,122 @@
+//! Cholesky factorization of small SPD matrices.
+//!
+//! Used by the data generators to sample Gaussians with an arbitrary feature
+//! covariance (the AR(1) covariance of the paper's synthetic benchmark has a
+//! faster recursive sampler, but the ablation datasets use block covariance
+//! structures that need the general path).
+
+use anyhow::{bail, Result};
+
+/// Lower-triangular Cholesky factor `L` with `A = L L^T`, stored row-major
+/// packed (row i holds i+1 entries).
+#[derive(Clone, Debug)]
+pub struct Cholesky {
+    dim: usize,
+    /// packed lower triangle: row i starts at i*(i+1)/2
+    l: Vec<f64>,
+}
+
+impl Cholesky {
+    /// Factor a dense SPD matrix given row-major (dim x dim). Fails if the
+    /// matrix is not positive definite (within `1e-12` pivots).
+    pub fn factor(a: &[f64], dim: usize) -> Result<Self> {
+        if a.len() != dim * dim {
+            bail!("expected {dim}x{dim} matrix, got {} entries", a.len());
+        }
+        let mut l = vec![0.0; dim * (dim + 1) / 2];
+        for i in 0..dim {
+            for j in 0..=i {
+                let mut sum = a[i * dim + j];
+                for k in 0..j {
+                    sum -= l[i * (i + 1) / 2 + k] * l[j * (j + 1) / 2 + k];
+                }
+                if i == j {
+                    if sum <= 1e-12 {
+                        bail!("matrix not positive definite at pivot {i} ({sum})");
+                    }
+                    l[i * (i + 1) / 2 + j] = sum.sqrt();
+                } else {
+                    l[i * (i + 1) / 2 + j] = sum / l[j * (j + 1) / 2 + j];
+                }
+            }
+        }
+        Ok(Self { dim, l })
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// `out = L z` — maps iid standard normals `z` to covariance-`A` normals.
+    pub fn apply(&self, z: &[f64], out: &mut [f64]) {
+        assert_eq!(z.len(), self.dim);
+        assert_eq!(out.len(), self.dim);
+        for i in 0..self.dim {
+            let row = &self.l[i * (i + 1) / 2..i * (i + 1) / 2 + i + 1];
+            let mut s = 0.0;
+            for (k, &lv) in row.iter().enumerate() {
+                s += lv * z[k];
+            }
+            out[i] = s;
+        }
+    }
+
+    /// Reconstruct `A[i][j]` (for tests).
+    pub fn reconstruct(&self, i: usize, j: usize) -> f64 {
+        let (i, j) = if i >= j { (i, j) } else { (j, i) };
+        let mut s = 0.0;
+        for k in 0..=j {
+            s += self.l[i * (i + 1) / 2 + k] * self.l[j * (j + 1) / 2 + k];
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factor_identity() {
+        let a = vec![1.0, 0.0, 0.0, 1.0];
+        let c = Cholesky::factor(&a, 2).unwrap();
+        assert!((c.reconstruct(0, 0) - 1.0).abs() < 1e-12);
+        assert!((c.reconstruct(1, 0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn factor_reconstructs_ar1() {
+        let rho: f64 = 0.5;
+        let dim = 8;
+        let mut a = vec![0.0; dim * dim];
+        for i in 0..dim {
+            for j in 0..dim {
+                a[i * dim + j] = rho.powi((i as i32 - j as i32).abs());
+            }
+        }
+        let c = Cholesky::factor(&a, dim).unwrap();
+        for i in 0..dim {
+            for j in 0..dim {
+                let got = c.reconstruct(i, j);
+                assert!((got - a[i * dim + j]).abs() < 1e-10, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = vec![1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
+        assert!(Cholesky::factor(&a, 2).is_err());
+    }
+
+    #[test]
+    fn apply_has_right_covariance_shape() {
+        // L of [[4, 2], [2, 2]] is [[2, 0], [1, 1]]
+        let a = vec![4.0, 2.0, 2.0, 2.0];
+        let c = Cholesky::factor(&a, 2).unwrap();
+        let mut out = vec![0.0; 2];
+        c.apply(&[1.0, 0.0], &mut out);
+        assert!((out[0] - 2.0).abs() < 1e-12);
+        assert!((out[1] - 1.0).abs() < 1e-12);
+    }
+}

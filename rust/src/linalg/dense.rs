@@ -1,0 +1,238 @@
+//! Column-major dense matrix.
+
+use crate::linalg::ops;
+
+/// A dense `n x p` matrix stored column-major: column `j` is the contiguous
+/// slice `data[j*n .. (j+1)*n]`. Features of a design matrix are columns, so
+/// every hot loop in the solver/screening path walks contiguous memory.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseMatrix {
+    n: usize,
+    p: usize,
+    data: Vec<f64>,
+}
+
+impl DenseMatrix {
+    /// All-zeros matrix.
+    pub fn zeros(n: usize, p: usize) -> Self {
+        Self { n, p, data: vec![0.0; n * p] }
+    }
+
+    /// Build from a closure `f(row, col)`.
+    pub fn from_fn(n: usize, p: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut m = Self::zeros(n, p);
+        for j in 0..p {
+            let col = m.col_mut(j);
+            for (i, v) in col.iter_mut().enumerate() {
+                *v = f(i, j);
+            }
+        }
+        m
+    }
+
+    /// Wrap an existing column-major buffer.
+    pub fn from_vec(n: usize, p: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), n * p, "buffer length must be n*p");
+        Self { n, p, data }
+    }
+
+    #[inline]
+    pub fn nrows(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn ncols(&self) -> usize {
+        self.p
+    }
+
+    /// Column `j` as a contiguous slice.
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f64] {
+        &self.data[j * self.n..(j + 1) * self.n]
+    }
+
+    /// Mutable column `j`.
+    #[inline]
+    pub fn col_mut(&mut self, j: usize) -> &mut [f64] {
+        &mut self.data[j * self.n..(j + 1) * self.n]
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[j * self.n + i]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[j * self.n + i] = v;
+    }
+
+    /// Raw column-major buffer.
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// `y = X * beta` (dense matvec over all columns).
+    pub fn matvec(&self, beta: &[f64], out: &mut [f64]) {
+        assert_eq!(beta.len(), self.p);
+        assert_eq!(out.len(), self.n);
+        out.fill(0.0);
+        for j in 0..self.p {
+            let b = beta[j];
+            if b != 0.0 {
+                ops::axpy(b, self.col(j), out);
+            }
+        }
+    }
+
+    /// `out[j] = <x_j, v>` for every column (the screening stats pass).
+    pub fn t_matvec(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), self.n);
+        assert_eq!(out.len(), self.p);
+        for j in 0..self.p {
+            out[j] = ops::dot(self.col(j), v);
+        }
+    }
+
+    /// `out[j] = <x_j, v>` only for the given column indices; other entries
+    /// are left untouched. The active-set variant of `t_matvec`.
+    pub fn t_matvec_subset(&self, v: &[f64], idx: &[usize], out: &mut [f64]) {
+        for &j in idx {
+            out[j] = ops::dot(self.col(j), v);
+        }
+    }
+
+    /// Squared norms of every column.
+    pub fn col_norms_sq(&self) -> Vec<f64> {
+        (0..self.p).map(|j| ops::nrm2sq(self.col(j))).collect()
+    }
+
+    /// Standardize columns in place to unit Euclidean norm; returns the
+    /// original norms. Zero columns are left as-is (returned norm 0).
+    pub fn normalize_columns(&mut self) -> Vec<f64> {
+        let mut norms = Vec::with_capacity(self.p);
+        for j in 0..self.p {
+            let col = self.col_mut(j);
+            let nrm = ops::nrm2(col);
+            if nrm > 0.0 {
+                let inv = 1.0 / nrm;
+                for v in col.iter_mut() {
+                    *v *= inv;
+                }
+            }
+            norms.push(nrm);
+        }
+        norms
+    }
+
+    /// Frobenius-norm squared — used by tests and the power-iteration seed.
+    pub fn fro_norm_sq(&self) -> f64 {
+        ops::nrm2sq(&self.data)
+    }
+
+    /// Estimate the squared spectral norm `||X||_2^2` (Lipschitz constant of
+    /// the Lasso gradient) by power iteration on `X^T X`.
+    pub fn spectral_norm_sq(&self, iters: usize) -> f64 {
+        let mut v = vec![1.0 / (self.p as f64).sqrt(); self.p];
+        let mut xv = vec![0.0; self.n];
+        let mut w = vec![0.0; self.p];
+        let mut lam = 0.0;
+        for _ in 0..iters {
+            self.matvec(&v, &mut xv);
+            self.t_matvec(&xv, &mut w);
+            lam = ops::nrm2(&w);
+            if lam <= f64::MIN_POSITIVE {
+                return 0.0;
+            }
+            let inv = 1.0 / lam;
+            for (vi, wi) in v.iter_mut().zip(w.iter()) {
+                *vi = wi * inv;
+            }
+        }
+        lam
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> DenseMatrix {
+        // [[1, 4], [2, 5], [3, 6]]
+        DenseMatrix::from_vec(3, 2, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0])
+    }
+
+    #[test]
+    fn layout_is_column_major() {
+        let m = small();
+        assert_eq!(m.col(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(m.col(1), &[4.0, 5.0, 6.0]);
+        assert_eq!(m.get(1, 1), 5.0);
+    }
+
+    #[test]
+    fn matvec_matches_manual() {
+        let m = small();
+        let mut out = vec![0.0; 3];
+        m.matvec(&[2.0, -1.0], &mut out);
+        assert_eq!(out, vec![2.0 - 4.0, 4.0 - 5.0, 6.0 - 6.0]);
+    }
+
+    #[test]
+    fn t_matvec_matches_manual() {
+        let m = small();
+        let mut out = vec![0.0; 2];
+        m.t_matvec(&[1.0, 1.0, 1.0], &mut out);
+        assert_eq!(out, vec![6.0, 15.0]);
+    }
+
+    #[test]
+    fn t_matvec_subset_only_touches_subset() {
+        let m = small();
+        let mut out = vec![-1.0, -1.0];
+        m.t_matvec_subset(&[1.0, 1.0, 1.0], &[1], &mut out);
+        assert_eq!(out, vec![-1.0, 15.0]);
+    }
+
+    #[test]
+    fn normalize_columns_unit_norm() {
+        let mut m = small();
+        let norms = m.normalize_columns();
+        assert!((norms[0] - 14f64.sqrt()).abs() < 1e-12);
+        for j in 0..2 {
+            let n = ops::nrm2(m.col(j));
+            assert!((n - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn spectral_norm_matches_gram_eig() {
+        // For this 3x2 matrix compute the largest eigenvalue of X^T X exactly.
+        let m = small();
+        let g = [
+            ops::dot(m.col(0), m.col(0)),
+            ops::dot(m.col(0), m.col(1)),
+            ops::dot(m.col(1), m.col(1)),
+        ];
+        let tr = g[0] + g[2];
+        let det = g[0] * g[2] - g[1] * g[1];
+        let eig = 0.5 * (tr + (tr * tr - 4.0 * det).sqrt());
+        let est = m.spectral_norm_sq(200);
+        assert!((est - eig).abs() / eig < 1e-8, "est={est} eig={eig}");
+    }
+
+    #[test]
+    fn from_fn_indexing() {
+        let m = DenseMatrix::from_fn(2, 3, |i, j| (10 * i + j) as f64);
+        assert_eq!(m.get(0, 2), 2.0);
+        assert_eq!(m.get(1, 0), 10.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_rejects_bad_len() {
+        DenseMatrix::from_vec(2, 2, vec![0.0; 3]);
+    }
+}

@@ -1,0 +1,17 @@
+//! Dense linear algebra substrate.
+//!
+//! Everything the solvers and screening rules need, implemented directly (no
+//! BLAS available offline): a column-major dense matrix type, level-1 ops
+//! with manual unrolling, blocked `X^T v` / `X v` products, and a small
+//! Cholesky for general covariance sampling.
+//!
+//! Column-major is the only sane layout here: Lasso solvers and screening
+//! rules touch *columns* (features) of the design matrix, never rows.
+
+pub mod chol;
+pub mod dense;
+pub mod ops;
+
+pub use chol::Cholesky;
+pub use dense::DenseMatrix;
+pub use ops::{axpy, dot, gemv, gemv_t, nrm2, nrm2sq, scal};

@@ -1,0 +1,196 @@
+//! Metrics & reporting: timers, aggregation across trials, and the
+//! text renderers that regenerate the paper's Table 1 and Figure 5.
+
+use std::time::{Duration, Instant};
+
+/// A simple scoped stopwatch.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Streaming mean/min/max/stddev accumulator.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Accumulator {
+    pub n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Accumulator {
+    pub fn push(&mut self, v: f64) {
+        if self.n == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.n += 1;
+        let delta = v - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (v - self.mean);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Fixed-width text table renderer (Table 1 style).
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row.iter()) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths.iter()) {
+                line.push_str(&format!(" {:>w$} |", c, w = w));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&"-".repeat(w + 2));
+            sep.push('|');
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        let _ = ncols;
+        out
+    }
+}
+
+/// Dump (x, series...) columns as CSV — used for the Fig. 5 curves.
+pub fn to_csv(headers: &[&str], columns: &[&[f64]]) -> String {
+    assert_eq!(headers.len(), columns.len());
+    let rows = columns.first().map(|c| c.len()).unwrap_or(0);
+    for c in columns {
+        assert_eq!(c.len(), rows, "column length mismatch");
+    }
+    let mut out = headers.join(",");
+    out.push('\n');
+    for i in 0..rows {
+        let line: Vec<String> = columns.iter().map(|c| format!("{:.6}", c[i])).collect();
+        out.push_str(&line.join(","));
+        out.push('\n');
+    }
+    out
+}
+
+/// Render seconds compactly.
+pub fn fmt_secs(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 100.0 {
+        format!("{s:.1}")
+    } else if s >= 1.0 {
+        format!("{s:.2}")
+    } else {
+        format!("{s:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulator_stats() {
+        let mut a = Accumulator::default();
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            a.push(v);
+        }
+        assert_eq!(a.n, 4);
+        assert!((a.mean() - 2.5).abs() < 1e-12);
+        assert!((a.std() - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert_eq!(a.min(), 1.0);
+        assert_eq!(a.max(), 4.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["Method", "Time"]);
+        t.row(vec!["Sasvi".into(), "2.49".into()]);
+        t.row(vec!["solver".into(), "88.55".into()]);
+        let s = t.render();
+        assert!(s.contains("Sasvi"));
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+    }
+
+    #[test]
+    fn csv_output() {
+        let x = [1.0, 2.0];
+        let y = [0.5, 0.25];
+        let s = to_csv(&["frac", "rej"], &[&x, &y]);
+        assert!(s.starts_with("frac,rej\n"));
+        assert_eq!(s.lines().count(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["x".into()]);
+    }
+}

@@ -1,0 +1,227 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The registry has no `rand` crate offline, so this module implements
+//! xoshiro256++ (Blackman & Vigna) plus the distributions the data
+//! generators need: uniforms, Gaussians (Box–Muller with caching), and
+//! Fisher–Yates sampling. Everything is seedable and reproducible across
+//! runs/platforms, which the experiment harness relies on.
+
+/// xoshiro256++ PRNG. Fast, 256-bit state, passes BigCrush.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+    /// cached second Box–Muller normal
+    spare: Option<f64>,
+}
+
+#[inline]
+fn rotl(x: u64, k: u32) -> u64 {
+    x.rotate_left(k)
+}
+
+/// splitmix64: seeds the xoshiro state from a single u64.
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Xoshiro256 {
+    /// Create a generator from a 64-bit seed (expanded via splitmix64).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Self { s, spare: None }
+    }
+
+    /// Next raw 64 random bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = rotl(s[0].wrapping_add(s[3]), 23).wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = rotl(s[3], 45);
+        result
+    }
+
+    /// Uniform in [0, 1) with 53-bit resolution.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n). Uses Lemire's rejection-free-ish method.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // 128-bit multiply keeps bias below 2^-64 — fine for experiments.
+        let m = (self.next_u64() as u128).wrapping_mul(n as u128);
+        (m >> 64) as usize
+    }
+
+    /// Standard normal via Box–Muller (caches the spare draw).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(v) = self.spare.take() {
+            return v;
+        }
+        loop {
+            let u1 = self.uniform();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.uniform();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+            self.spare = Some(r * s);
+            return r * c;
+        }
+    }
+
+    /// Fill a slice with standard normals.
+    pub fn fill_normal(&mut self, out: &mut [f64]) {
+        for v in out.iter_mut() {
+            *v = self.normal();
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (partial Fisher–Yates).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "cannot sample {k} from {n}");
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Derive an independent child generator (for per-worker streams).
+    pub fn fork(&mut self) -> Self {
+        Self::new(self.next_u64() ^ 0xA5A5_5A5A_DEAD_BEEF)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Xoshiro256::new(42);
+        let mut b = Xoshiro256::new(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Xoshiro256::new(1);
+        let mut b = Xoshiro256::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn uniform_bounds_and_mean() {
+        let mut r = Xoshiro256::new(7);
+        let n = 200_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 5e-3, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Xoshiro256::new(11);
+        let n = 400_000;
+        let (mut m1, mut m2, mut m4) = (0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let z = r.normal();
+            m1 += z;
+            m2 += z * z;
+            m4 += z * z * z * z;
+        }
+        let nf = n as f64;
+        assert!((m1 / nf).abs() < 1e-2);
+        assert!((m2 / nf - 1.0).abs() < 2e-2);
+        assert!((m4 / nf - 3.0).abs() < 1e-1, "kurtosis {}", m4 / nf);
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Xoshiro256::new(3);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.below(10);
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Xoshiro256::new(5);
+        let k = 50;
+        let s = r.sample_indices(100, k);
+        assert_eq!(s.len(), k);
+        let mut sorted = s.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), k);
+    }
+
+    #[test]
+    fn fork_streams_are_independent() {
+        let mut r = Xoshiro256::new(9);
+        let mut c1 = r.fork();
+        let mut c2 = r.fork();
+        let same = (0..64).filter(|_| c1.next_u64() == c2.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Xoshiro256::new(13);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,297 @@
+//! PJRT executor: compile-once, execute-many over the artifact set.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::manifest::{ArtifactInfo, Manifest};
+
+/// Handle to the PJRT CPU client plus the compiled-executable cache.
+///
+/// Compilation happens lazily on the first execution of each artifact and
+/// is cached for the lifetime of the runtime (one compiled executable per
+/// model variant, per the AOT design).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (expects `manifest.txt` inside).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.txt"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self { client, manifest, dir, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Artifact lookup by graph name + shape.
+    pub fn find(&self, graph: &str, n: usize, p: usize) -> Option<&ArtifactInfo> {
+        self.manifest.find(graph, n, p)
+    }
+
+    fn executable(&self, art: &ArtifactInfo) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(&art.name) {
+            return Ok(Arc::clone(exe));
+        }
+        let path = self.dir.join(&art.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parse HLO {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {}: {e:?}", art.name))?;
+        let exe = Arc::new(exe);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(art.name.clone(), Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Pre-compile every artifact of a graph (warm the cache).
+    pub fn warmup(&self, graph: &str) -> Result<usize> {
+        let arts: Vec<ArtifactInfo> = self
+            .manifest
+            .artifacts
+            .iter()
+            .filter(|a| a.graph == graph)
+            .cloned()
+            .collect();
+        for a in &arts {
+            self.executable(a)?;
+        }
+        Ok(arts.len())
+    }
+
+    /// Execute an artifact with f64 inputs (converted to f32 literals, as
+    /// all artifacts are lowered at f32). Inputs are flattened row-major
+    /// per the manifest specs; outputs come back as f64 vectors.
+    pub fn execute(&self, art: &ArtifactInfo, inputs: &[&[f64]]) -> Result<Vec<Vec<f64>>> {
+        if inputs.len() != art.inputs.len() {
+            bail!(
+                "artifact {} expects {} inputs, got {}",
+                art.name,
+                art.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (spec, data) in art.inputs.iter().zip(inputs.iter()) {
+            if spec.element_count() != data.len() {
+                bail!(
+                    "artifact {}: input expects {} elements, got {}",
+                    art.name,
+                    spec.element_count(),
+                    data.len()
+                );
+            }
+            let f32s: Vec<f32> = data.iter().map(|&v| v as f32).collect();
+            let lit = xla::Literal::vec1(&f32s);
+            let lit = if spec.dims.len() > 1 || (spec.dims.len() == 1) {
+                let dims: Vec<i64> = spec.dims.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims)
+                    .map_err(|e| anyhow::anyhow!("reshape input: {e:?}"))?
+            } else {
+                lit
+            };
+            literals.push(lit);
+        }
+        let exe = self.executable(art)?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", art.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unpack the tuple.
+        let parts = out
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+        if parts.len() != art.outputs.len() && !art.outputs.is_empty() {
+            bail!(
+                "artifact {}: manifest says {} outputs, runtime returned {}",
+                art.name,
+                art.outputs.len(),
+                parts.len()
+            );
+        }
+        parts
+            .into_iter()
+            .map(|lit| {
+                let v: Vec<f32> = lit
+                    .to_vec()
+                    .map_err(|e| anyhow::anyhow!("literal to_vec: {e:?}"))?;
+                Ok(v.into_iter().map(|x| x as f64).collect())
+            })
+            .collect()
+    }
+
+    /// Upload a tensor to the device once, for reuse across many
+    /// executions (`execute_buffers`). The key perf lever on the screen
+    /// path: the design matrix X dominates transfer time but never changes
+    /// along the path (EXPERIMENTS.md §Perf: ~9x on the per-call latency).
+    pub fn upload(&self, data: &[f64], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        let f32s: Vec<f32> = data.iter().map(|&v| v as f32).collect();
+        self.client
+            .buffer_from_host_buffer(&f32s, dims, None)
+            .map_err(|e| anyhow::anyhow!("upload buffer: {e:?}"))
+    }
+
+    /// Execute with pre-uploaded device buffers (zero host->device copies
+    /// beyond what the caller has already done).
+    pub fn execute_buffers(
+        &self,
+        art: &ArtifactInfo,
+        inputs: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<Vec<f64>>> {
+        if inputs.len() != art.inputs.len() {
+            bail!(
+                "artifact {} expects {} inputs, got {}",
+                art.name,
+                art.inputs.len(),
+                inputs.len()
+            );
+        }
+        let exe = self.executable(art)?;
+        let result = exe
+            .execute_b::<&xla::PjRtBuffer>(inputs)
+            .map_err(|e| anyhow::anyhow!("execute_b {}: {e:?}", art.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e:?}"))?;
+        let parts = out
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+        parts
+            .into_iter()
+            .map(|lit| {
+                let v: Vec<f32> = lit
+                    .to_vec()
+                    .map_err(|e| anyhow::anyhow!("literal to_vec: {e:?}"))?;
+                Ok(v.into_iter().map(|x| x as f64).collect())
+            })
+            .collect()
+    }
+
+    /// Convenience: execute a screening graph (x, y, theta1, [lam1, lam2])
+    /// -> (bound_plus, bound_minus, keep mask as f64 0/1).
+    pub fn execute_screen(
+        &self,
+        graph: &str,
+        x_colmajor_as_rowmajor: &[f64],
+        n: usize,
+        p: usize,
+        y: &[f64],
+        theta1: &[f64],
+        lam1: f64,
+        lam2: f64,
+    ) -> Result<(Vec<f64>, Vec<f64>, Vec<f64>)> {
+        let art = self
+            .find(graph, n, p)
+            .with_context(|| format!("no artifact for {graph} at n={n} p={p}"))?
+            .clone();
+        let lams = [lam1, lam2];
+        let mut out = self.execute(&art, &[x_colmajor_as_rowmajor, y, theta1, &lams])?;
+        if out.len() != 3 {
+            bail!("screen graph returned {} outputs", out.len());
+        }
+        let keep = out.pop().unwrap();
+        let um = out.pop().unwrap();
+        let up = out.pop().unwrap();
+        Ok((up, um, keep))
+    }
+}
+
+/// A screening session: X and y live on the device for the whole path;
+/// per-call transfer is just theta1 (n floats) + the two lambdas.
+pub struct ScreenSession<'rt> {
+    rt: &'rt Runtime,
+    art: ArtifactInfo,
+    x_buf: xla::PjRtBuffer,
+    y_buf: xla::PjRtBuffer,
+    n: usize,
+}
+
+impl<'rt> ScreenSession<'rt> {
+    /// Upload X (row-major) and y once for `graph` at shape (n, p).
+    pub fn new(
+        rt: &'rt Runtime,
+        graph: &str,
+        x_rowmajor: &[f64],
+        n: usize,
+        p: usize,
+        y: &[f64],
+    ) -> Result<Self> {
+        let art = rt
+            .find(graph, n, p)
+            .with_context(|| format!("no artifact for {graph} at n={n} p={p}"))?
+            .clone();
+        let x_buf = rt.upload(x_rowmajor, &[n, p])?;
+        let y_buf = rt.upload(y, &[n])?;
+        Ok(Self { rt, art, x_buf, y_buf, n })
+    }
+
+    /// One screen: returns (u_plus, u_minus, keep as f64 0/1).
+    pub fn screen(
+        &self,
+        theta1: &[f64],
+        lam1: f64,
+        lam2: f64,
+    ) -> Result<(Vec<f64>, Vec<f64>, Vec<f64>)> {
+        let theta_buf = self.rt.upload(theta1, &[self.n])?;
+        let lam_buf = self.rt.upload(&[lam1, lam2], &[2])?;
+        let mut out = self.rt.execute_buffers(
+            &self.art,
+            &[&self.x_buf, &self.y_buf, &theta_buf, &lam_buf],
+        )?;
+        if out.len() != 3 {
+            bail!("screen graph returned {} outputs", out.len());
+        }
+        let keep = out.pop().unwrap();
+        let um = out.pop().unwrap();
+        let up = out.pop().unwrap();
+        Ok((up, um, keep))
+    }
+}
+
+/// Flatten a column-major `DenseMatrix` into the row-major layout the
+/// artifacts expect for `x: (n, p)`.
+pub fn to_rowmajor(x: &crate::linalg::DenseMatrix) -> Vec<f64> {
+    let n = x.nrows();
+    let p = x.ncols();
+    let mut out = vec![0.0; n * p];
+    for j in 0..p {
+        let col = x.col(j);
+        for i in 0..n {
+            out[i * p + j] = col[i];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn to_rowmajor_transposes() {
+        let m = crate::linalg::DenseMatrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        // cols: [1,2], [3,4], [5,6]; row-major (n=2, p=3): 1 3 5 / 2 4 6
+        assert_eq!(to_rowmajor(&m), vec![1., 3., 5., 2., 4., 6.]);
+    }
+}

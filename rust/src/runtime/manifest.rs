@@ -1,0 +1,214 @@
+//! Parser for `artifacts/manifest.txt` (written by `python/compile/aot.py`).
+//!
+//! Format (line-oriented, `#` comments):
+//!
+//! ```text
+//! artifact sasvi_screen_n250_p1000
+//! graph sasvi_screen
+//! file sasvi_screen_n250_p1000.hlo.txt
+//! n 250
+//! p 1000
+//! in f32 250,1000
+//! in f32 250
+//! ...
+//! out f32 1000
+//! end
+//! ```
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Shape + dtype of one artifact input/output.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: String,
+    /// empty = scalar
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    fn parse(dtype: &str, dims: &str) -> Result<Self> {
+        let dims = if dims == "scalar" {
+            vec![]
+        } else {
+            dims.split(',')
+                .map(|d| d.trim().parse::<usize>().context("bad dim"))
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(Self { dtype: dtype.to_string(), dims })
+    }
+}
+
+/// One compiled graph instance.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub graph: String,
+    pub file: String,
+    pub n: usize,
+    pub p: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The full artifact index.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactInfo>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut artifacts = Vec::new();
+        let mut cur: Option<ArtifactInfo> = None;
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.splitn(2, ' ');
+            let key = it.next().unwrap_or("");
+            let rest = it.next().unwrap_or("").trim();
+            let ctx_err = || format!("manifest line {}: {raw}", lineno + 1);
+            match key {
+                "artifact" => {
+                    if cur.is_some() {
+                        bail!("{}: artifact before previous 'end'", ctx_err());
+                    }
+                    cur = Some(ArtifactInfo {
+                        name: rest.to_string(),
+                        graph: String::new(),
+                        file: String::new(),
+                        n: 0,
+                        p: 0,
+                        inputs: vec![],
+                        outputs: vec![],
+                    });
+                }
+                "graph" | "file" | "n" | "p" | "in" | "out" => {
+                    let art = cur.as_mut().with_context(ctx_err)?;
+                    match key {
+                        "graph" => art.graph = rest.to_string(),
+                        "file" => art.file = rest.to_string(),
+                        "n" => art.n = rest.parse().with_context(ctx_err)?,
+                        "p" => art.p = rest.parse().with_context(ctx_err)?,
+                        "in" | "out" => {
+                            let mut parts = rest.splitn(2, ' ');
+                            let dtype = parts.next().unwrap_or("");
+                            let dims = parts.next().unwrap_or("scalar");
+                            let spec = TensorSpec::parse(dtype, dims)
+                                .with_context(ctx_err)?;
+                            if key == "in" {
+                                art.inputs.push(spec);
+                            } else {
+                                art.outputs.push(spec);
+                            }
+                        }
+                        _ => unreachable!(),
+                    }
+                }
+                "end" => {
+                    let art = cur.take().with_context(ctx_err)?;
+                    if art.file.is_empty() || art.graph.is_empty() {
+                        bail!("{}: incomplete artifact {}", ctx_err(), art.name);
+                    }
+                    artifacts.push(art);
+                }
+                other => bail!("{}: unknown key '{other}'", ctx_err()),
+            }
+        }
+        if cur.is_some() {
+            bail!("manifest truncated: missing final 'end'");
+        }
+        Ok(Self { artifacts })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("read {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    /// Find the artifact for `graph` at shape (n, p).
+    pub fn find(&self, graph: &str, n: usize, p: usize) -> Option<&ArtifactInfo> {
+        self.artifacts
+            .iter()
+            .find(|a| a.graph == graph && a.n == n && a.p == p)
+    }
+
+    /// All shapes available for a graph.
+    pub fn shapes(&self, graph: &str) -> Vec<(usize, usize)> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.graph == graph)
+            .map(|a| (a.n, a.p))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# sasvi artifact manifest v1
+artifact sasvi_screen_n64_p256
+graph sasvi_screen
+file sasvi_screen_n64_p256.hlo.txt
+n 64
+p 256
+in f32 64,256
+in f32 64
+in f32 64
+in f32 2
+out f32 256
+out f32 256
+out f32 256
+end
+artifact power_iteration_n64_p256
+graph power_iteration
+file power_iteration_n64_p256.hlo.txt
+n 64
+p 256
+in f32 64,256
+in f32 256
+out f32 1
+end
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.find("sasvi_screen", 64, 256).unwrap();
+        assert_eq!(a.inputs.len(), 4);
+        assert_eq!(a.inputs[0].dims, vec![64, 256]);
+        assert_eq!(a.outputs.len(), 3);
+        assert_eq!(a.outputs[0].element_count(), 256);
+        assert!(m.find("sasvi_screen", 64, 999).is_none());
+        assert_eq!(m.shapes("power_iteration"), vec![(64, 256)]);
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let bad = "artifact x\ngraph g\nfile f\n";
+        assert!(Manifest::parse(bad).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_keys() {
+        assert!(Manifest::parse("bogus line\n").is_err());
+    }
+
+    #[test]
+    fn scalar_spec() {
+        let s = TensorSpec::parse("f32", "scalar").unwrap();
+        assert!(s.dims.is_empty());
+        assert_eq!(s.element_count(), 1);
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime: load and execute the AOT-compiled XLA artifacts.
+//!
+//! `make artifacts` (the only Python invocation in the whole system) lowers
+//! the L2 JAX graphs — which embed the L1 Pallas kernel — to HLO *text*;
+//! this module parses the manifest, compiles each artifact on the PJRT CPU
+//! client on first use (caching the executable), and marshals f64 slices
+//! through f32 literals.
+//!
+//! HLO text (not serialized protos) is the interchange format: jax >= 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids.
+
+pub mod executor;
+pub mod manifest;
+
+pub use executor::Runtime;
+pub use manifest::{ArtifactInfo, Manifest};

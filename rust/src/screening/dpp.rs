@@ -1,0 +1,103 @@
+//! DPP (Wang, Lin, Gong, Wonka, Ye), sequential form — §3.3 of the paper.
+//!
+//! The rule bounds `|<x_j, theta_2^*>|` over the ball centered at `theta1`
+//! with radius `||y/lam2 - y/lam1|| = ||y|| (1/lam2 - 1/lam1)` (Eq. 38),
+//! obtained from adding the two variational inequalities and relaxing via
+//! Cauchy–Schwarz. The bound is
+//! `|<x_j, theta1>| + ||x_j|| * ||y|| (1/lam2 - 1/lam1)`.
+
+use crate::screening::{Rule, RuleKind, ScreenContext};
+use crate::solver::DualState;
+
+pub struct DppRule;
+
+impl Rule for DppRule {
+    fn kind(&self) -> RuleKind {
+        RuleKind::Dpp
+    }
+
+    fn bounds(&self, ctx: &ScreenContext, state: &DualState, lam2: f64, out: &mut [f64]) {
+        let radius = ctx.pre.y_norm_sq.sqrt() * (1.0 / lam2 - 1.0 / state.lambda);
+        for j in 0..ctx.p() {
+            out[j] = state.xt_theta[j].abs()
+                + ctx.pre.col_norms_sq[j].sqrt() * radius;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticSpec;
+    use crate::solver::cd::{solve_cd, CdOptions};
+
+    fn solved_state(ds: &crate::data::Dataset, lam1: f64) -> DualState {
+        let active: Vec<usize> = (0..ds.p()).collect();
+        let norms = ds.x.col_norms_sq();
+        let mut beta = vec![0.0; ds.p()];
+        let mut resid = ds.y.clone();
+        solve_cd(&ds.x, &ds.y, lam1, &active, &norms, &mut beta, &mut resid,
+                 &CdOptions::default());
+        DualState::from_residual(&ds.x, &resid, lam1)
+    }
+
+    #[test]
+    fn safety() {
+        let ds = SyntheticSpec { n: 30, p: 100, nnz: 10, ..Default::default() }
+            .generate(23);
+        let pre = ds.precompute();
+        let ctx = ScreenContext::new(&ds.x, &ds.y, &pre);
+        let lam1 = 0.9 * pre.lambda_max;
+        let lam2 = 0.8 * pre.lambda_max;
+        let st = solved_state(&ds, lam1);
+        let mut keep = vec![false; ds.p()];
+        let o = DppRule.screen(&ctx, &st, lam2, &mut keep);
+        assert!(o.screened > 0);
+        let active: Vec<usize> = (0..ds.p()).collect();
+        let norms = ds.x.col_norms_sq();
+        let mut beta2 = vec![0.0; ds.p()];
+        let mut resid2 = ds.y.clone();
+        let opts = CdOptions { gap_tol: 1e-12, tol: 1e-12, ..Default::default() };
+        solve_cd(&ds.x, &ds.y, lam2, &active, &norms, &mut beta2, &mut resid2, &opts);
+        for j in 0..ds.p() {
+            if !keep[j] {
+                assert!(beta2[j].abs() < 1e-9, "screened {j} has beta {}", beta2[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn ball_actually_contains_theta2() {
+        // ||theta2 - theta1|| <= ||y||(1/lam2 - 1/lam1) (Eq. 38)
+        let ds = SyntheticSpec { n: 20, p: 50, nnz: 5, ..Default::default() }
+            .generate(6);
+        let pre = ds.precompute();
+        let lam1 = 0.6 * pre.lambda_max;
+        let lam2 = 0.4 * pre.lambda_max;
+        let st1 = solved_state(&ds, lam1);
+        let st2 = solved_state(&ds, lam2);
+        let mut diff = 0.0;
+        for (a, b) in st2.theta.iter().zip(st1.theta.iter()) {
+            diff += (a - b) * (a - b);
+        }
+        let radius = pre.y_norm_sq.sqrt() * (1.0 / lam2 - 1.0 / lam1);
+        assert!(diff.sqrt() <= radius + 1e-7, "{} vs {}", diff.sqrt(), radius);
+    }
+
+    #[test]
+    fn bound_shrinks_as_lam2_approaches_lam1() {
+        let ds = SyntheticSpec { n: 20, p: 30, nnz: 3, ..Default::default() }
+            .generate(9);
+        let pre = ds.precompute();
+        let ctx = ScreenContext::new(&ds.x, &ds.y, &pre);
+        let lam1 = 0.5 * pre.lambda_max;
+        let st = solved_state(&ds, lam1);
+        let mut near = vec![0.0; ds.p()];
+        let mut far = vec![0.0; ds.p()];
+        DppRule.bounds(&ctx, &st, 0.95 * lam1, &mut near);
+        DppRule.bounds(&ctx, &st, 0.5 * lam1, &mut far);
+        for j in 0..ds.p() {
+            assert!(near[j] <= far[j] + 1e-12);
+        }
+    }
+}

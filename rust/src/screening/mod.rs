@@ -1,0 +1,307 @@
+//! Screening rules for the pathwise Lasso.
+//!
+//! Each rule answers, for every feature `j`, whether `beta_j = 0` is
+//! *guaranteed* at the next grid point `lambda_2` given the solved state at
+//! `lambda_1` (dual point `theta_1^*`). The test is Eq. (4) of the paper:
+//! `|<x_j, theta_2^*>| < 1 => beta_j^* = 0`, with each rule bounding the
+//! unknown `<x_j, theta_2^*>` over its own feasible set:
+//!
+//! * [`sasvi`] — the paper's contribution: half-space ∩ ball from the two
+//!   variational inequalities (Theorem 3);
+//! * [`safe`] — El Ghaoui et al.'s ball (a relaxation of one VI, §3.2);
+//! * [`dpp`] — Wang et al.'s ball (a relaxation of both VIs, §3.3);
+//! * [`strong`] — Tibshirani et al.'s heuristic (unsafe; needs KKT
+//!   correction, which the coordinator performs);
+//! * [`RuleKind::None`] — no screening (the plain-solver baseline).
+
+pub mod dpp;
+pub mod safe;
+pub mod sasvi;
+pub mod strong;
+pub mod sure_removal;
+
+use crate::data::dataset::PathPrecompute;
+use crate::linalg::DenseMatrix;
+use crate::solver::DualState;
+use crate::SCREEN_EPS;
+
+/// Everything a rule may read that is constant along the whole path.
+pub struct ScreenContext<'a> {
+    pub x: &'a DenseMatrix,
+    pub y: &'a [f64],
+    pub pre: &'a PathPrecompute,
+}
+
+impl<'a> ScreenContext<'a> {
+    pub fn new(x: &'a DenseMatrix, y: &'a [f64], pre: &'a PathPrecompute) -> Self {
+        Self { x, y, pre }
+    }
+
+    pub fn p(&self) -> usize {
+        self.x.ncols()
+    }
+}
+
+/// Outcome counts of one screening invocation.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ScreenOutcome {
+    pub kept: usize,
+    pub screened: usize,
+}
+
+impl ScreenOutcome {
+    pub fn from_mask(keep: &[bool]) -> Self {
+        let kept = keep.iter().filter(|&&k| k).count();
+        Self { kept, screened: keep.len() - kept }
+    }
+
+    /// The paper's Fig. 5 quantity.
+    pub fn rejection_ratio(&self) -> f64 {
+        let total = self.kept + self.screened;
+        if total == 0 {
+            0.0
+        } else {
+            self.screened as f64 / total as f64
+        }
+    }
+}
+
+/// A screening rule. Implementations must be pure functions of their inputs
+/// (the coordinator calls them from worker threads).
+pub trait Rule: Send + Sync {
+    fn kind(&self) -> RuleKind;
+
+    /// Safe rules guarantee screened features are zero in the true solution;
+    /// unsafe rules (strong) require post-hoc KKT correction.
+    fn is_safe(&self) -> bool {
+        true
+    }
+
+    /// Write the per-feature upper bounds on `|<x_j, theta_2^*>|` into
+    /// `out`. For rules with asymmetric bounds (Sasvi) this is
+    /// `max(u_j^+, u_j^-)`.
+    fn bounds(&self, ctx: &ScreenContext, state: &DualState, lam2: f64, out: &mut [f64]);
+
+    /// Fill `keep[j] = bound_j >= 1 - SCREEN_EPS`. The default implements
+    /// this via [`Rule::bounds`]; rules may override with a fused loop.
+    fn screen(
+        &self,
+        ctx: &ScreenContext,
+        state: &DualState,
+        lam2: f64,
+        keep: &mut [bool],
+    ) -> ScreenOutcome {
+        let mut bounds = vec![0.0; ctx.p()];
+        self.bounds(ctx, state, lam2, &mut bounds);
+        for (k, &b) in keep.iter_mut().zip(bounds.iter()) {
+            *k = b >= 1.0 - SCREEN_EPS;
+        }
+        ScreenOutcome::from_mask(keep)
+    }
+}
+
+/// Enumeration of the available rules (CLI / config / bench selector).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RuleKind {
+    /// no screening: keep everything
+    None,
+    Safe,
+    Dpp,
+    Strong,
+    Sasvi,
+}
+
+impl RuleKind {
+    pub fn parse(s: &str) -> Option<RuleKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" | "solver" => Some(RuleKind::None),
+            "safe" => Some(RuleKind::Safe),
+            "dpp" => Some(RuleKind::Dpp),
+            "strong" => Some(RuleKind::Strong),
+            "sasvi" => Some(RuleKind::Sasvi),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RuleKind::None => "solver",
+            RuleKind::Safe => "SAFE",
+            RuleKind::Dpp => "DPP",
+            RuleKind::Strong => "Strong",
+            RuleKind::Sasvi => "Sasvi",
+        }
+    }
+
+    pub fn build(&self) -> Box<dyn Rule> {
+        match self {
+            RuleKind::None => Box::new(NoRule),
+            RuleKind::Safe => Box::new(safe::SafeRule),
+            RuleKind::Dpp => Box::new(dpp::DppRule),
+            RuleKind::Strong => Box::new(strong::StrongRule),
+            RuleKind::Sasvi => Box::new(sasvi::SasviRule),
+        }
+    }
+
+    pub fn all() -> [RuleKind; 5] {
+        [RuleKind::None, RuleKind::Safe, RuleKind::Dpp, RuleKind::Strong, RuleKind::Sasvi]
+    }
+}
+
+/// The no-op rule: keeps every feature (baseline "solver" row of Table 1).
+pub struct NoRule;
+
+impl Rule for NoRule {
+    fn kind(&self) -> RuleKind {
+        RuleKind::None
+    }
+
+    fn bounds(&self, _ctx: &ScreenContext, _state: &DualState, _lam2: f64, out: &mut [f64]) {
+        out.fill(f64::INFINITY);
+    }
+
+    fn screen(
+        &self,
+        _ctx: &ScreenContext,
+        _state: &DualState,
+        _lam2: f64,
+        keep: &mut [bool],
+    ) -> ScreenOutcome {
+        keep.fill(true);
+        ScreenOutcome { kept: keep.len(), screened: 0 }
+    }
+}
+
+/// Shared per-invocation geometry: the quantities every VI-based rule needs,
+/// derived once per (state, lam2) pair in O(n).
+///
+///   a = y/lam1 - theta1         (scaled prediction, Eq. 17)
+///   b = y/lam2 - theta1 = a + d*y,   d = 1/lam2 - 1/lam1
+#[derive(Clone, Copy, Debug)]
+pub struct Geometry {
+    pub lam1: f64,
+    pub lam2: f64,
+    pub d: f64,
+    pub anorm2: f64,
+    pub ay: f64,
+    pub ynorm2: f64,
+    pub bnorm2: f64,
+    pub ba: f64,
+    /// ||y_perp||^2 = ||y||^2 - <a,y>^2/||a||^2 (0 when a = 0)
+    pub yperp2: f64,
+    pub a_is_zero: bool,
+}
+
+impl Geometry {
+    pub fn compute(ctx: &ScreenContext, state: &DualState, lam2: f64) -> Self {
+        use crate::linalg::ops;
+        let lam1 = state.lambda;
+        let ynorm2 = ctx.pre.y_norm_sq;
+        let ty = ops::dot(&state.theta, ctx.y);
+        let tnorm2 = ops::nrm2sq(&state.theta);
+        // a = y/lam1 - theta1
+        let anorm2 = (ynorm2 / (lam1 * lam1) - 2.0 * ty / lam1 + tnorm2).max(0.0);
+        let ay = ynorm2 / lam1 - ty;
+        Self::from_scalars(lam1, lam2, anorm2, ay, ynorm2)
+    }
+
+    /// Build from the three `a`/`y` scalars — O(1); used by the
+    /// sure-removal scans that evaluate many `lam2` values per state.
+    pub fn from_scalars(lam1: f64, lam2: f64, anorm2: f64, ay: f64, ynorm2: f64) -> Self {
+        let d = 1.0 / lam2 - 1.0 / lam1;
+        let bnorm2 = (anorm2 + 2.0 * d * ay + d * d * ynorm2).max(0.0);
+        let ba = anorm2 + d * ay;
+        let a_is_zero = anorm2 <= 1e-20 * ynorm2.max(1.0);
+        let yperp2 = if a_is_zero {
+            0.0
+        } else {
+            (ynorm2 - ay * ay / anorm2).max(0.0)
+        };
+        Geometry {
+            lam1,
+            lam2,
+            d,
+            anorm2,
+            ay,
+            ynorm2,
+            bnorm2,
+            ba,
+            yperp2,
+            a_is_zero,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticSpec;
+
+    #[test]
+    fn rulekind_parse_and_names() {
+        for k in RuleKind::all() {
+            let name = k.name().to_ascii_lowercase();
+            assert_eq!(RuleKind::parse(&name), Some(k));
+        }
+        assert_eq!(RuleKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn outcome_counts() {
+        let keep = vec![true, false, false, true];
+        let o = ScreenOutcome::from_mask(&keep);
+        assert_eq!(o, ScreenOutcome { kept: 2, screened: 2 });
+        assert!((o.rejection_ratio() - 0.5).abs() < 1e-15);
+    }
+
+    #[test]
+    fn geometry_at_lambda_max_has_zero_a() {
+        let ds = SyntheticSpec { n: 20, p: 40, nnz: 4, ..Default::default() }
+            .generate(3);
+        let pre = ds.precompute();
+        let st = DualState::at_lambda_max(&ds.x, &ds.y, pre.lambda_max, &pre.xty);
+        let ctx = ScreenContext::new(&ds.x, &ds.y, &pre);
+        let g = Geometry::compute(&ctx, &st, 0.8 * pre.lambda_max);
+        assert!(g.a_is_zero, "anorm2={}", g.anorm2);
+        // b = d*y
+        assert!((g.bnorm2 - g.d * g.d * g.ynorm2).abs() < 1e-9 * g.ynorm2);
+    }
+
+    #[test]
+    fn geometry_ba_nonnegative_theorem1() {
+        // Theorem 1: <b, a> >= 0 for any valid dual state
+        let ds = SyntheticSpec { n: 25, p: 50, nnz: 5, ..Default::default() }
+            .generate(7);
+        let pre = ds.precompute();
+        let ctx = ScreenContext::new(&ds.x, &ds.y, &pre);
+        // solve at lam1 to get a real dual point
+        let lam1 = 0.6 * pre.lambda_max;
+        let active: Vec<usize> = (0..ds.p()).collect();
+        let norms = ds.x.col_norms_sq();
+        let mut beta = vec![0.0; ds.p()];
+        let mut resid = ds.y.clone();
+        crate::solver::cd::solve_cd(
+            &ds.x, &ds.y, lam1, &active, &norms, &mut beta, &mut resid,
+            &crate::solver::cd::CdOptions::default(),
+        );
+        let st = DualState::from_residual(&ds.x, &resid, lam1);
+        for f in [0.9, 0.5, 0.2] {
+            let g = Geometry::compute(&ctx, &st, f * lam1);
+            assert!(g.ba >= -1e-9, "ba = {}", g.ba);
+            assert!(g.bnorm2 > 0.0);
+        }
+    }
+
+    #[test]
+    fn no_rule_keeps_everything() {
+        let ds = SyntheticSpec { n: 10, p: 20, nnz: 2, ..Default::default() }
+            .generate(1);
+        let pre = ds.precompute();
+        let ctx = ScreenContext::new(&ds.x, &ds.y, &pre);
+        let st = DualState::at_lambda_max(&ds.x, &ds.y, pre.lambda_max, &pre.xty);
+        let mut keep = vec![false; ds.p()];
+        let o = NoRule.screen(&ctx, &st, 0.5 * pre.lambda_max, &mut keep);
+        assert_eq!(o.kept, ds.p());
+        assert!(keep.iter().all(|&k| k));
+    }
+}

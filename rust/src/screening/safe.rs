@@ -1,0 +1,115 @@
+//! SAFE (El Ghaoui, Viallon, Rabbani), sequential form — §3.2 of the paper.
+//!
+//! The rule bounds `|<x_j, theta_2^*>|` over the ball
+//! `||theta - y/lam2|| <= ||s* theta1 - y/lam2||` where
+//! `s* = clip(<theta1, y> / (lam2 ||theta1||^2), -1, 1)` is the optimal dual
+//! scaling (Eq. 32). The bound (Eq. 33) is
+//! `|<x_j, y>|/lam2 + ||x_j|| * ||s* theta1 - y/lam2||`.
+
+use crate::linalg::ops;
+use crate::screening::{Rule, RuleKind, ScreenContext};
+use crate::solver::DualState;
+
+pub struct SafeRule;
+
+/// Shared per-invocation scalars for the SAFE bound.
+pub struct SafeGeometry {
+    pub lam2: f64,
+    pub radius: f64,
+}
+
+impl SafeGeometry {
+    pub fn compute(ctx: &ScreenContext, state: &DualState, lam2: f64) -> Self {
+        let tnorm2 = ops::nrm2sq(&state.theta);
+        let ty = ops::dot(&state.theta, ctx.y);
+        let s = if tnorm2 > 0.0 {
+            (ty / (lam2 * tnorm2)).clamp(-1.0, 1.0)
+        } else {
+            0.0
+        };
+        // ||s theta1 - y/lam2||^2 expanded via precomputed scalars
+        let r2 = s * s * tnorm2 - 2.0 * s * ty / lam2
+            + ctx.pre.y_norm_sq / (lam2 * lam2);
+        SafeGeometry { lam2, radius: r2.max(0.0).sqrt() }
+    }
+}
+
+impl Rule for SafeRule {
+    fn kind(&self) -> RuleKind {
+        RuleKind::Safe
+    }
+
+    fn bounds(&self, ctx: &ScreenContext, state: &DualState, lam2: f64, out: &mut [f64]) {
+        let g = SafeGeometry::compute(ctx, state, lam2);
+        for j in 0..ctx.p() {
+            let xnorm = ctx.pre.col_norms_sq[j].sqrt();
+            out[j] = ctx.pre.xty[j].abs() / g.lam2 + xnorm * g.radius;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticSpec;
+    use crate::solver::cd::{solve_cd, CdOptions};
+
+    fn solved_state(ds: &crate::data::Dataset, lam1: f64) -> DualState {
+        let active: Vec<usize> = (0..ds.p()).collect();
+        let norms = ds.x.col_norms_sq();
+        let mut beta = vec![0.0; ds.p()];
+        let mut resid = ds.y.clone();
+        solve_cd(&ds.x, &ds.y, lam1, &active, &norms, &mut beta, &mut resid,
+                 &CdOptions::default());
+        DualState::from_residual(&ds.x, &resid, lam1)
+    }
+
+    #[test]
+    fn safety() {
+        let ds = SyntheticSpec { n: 30, p: 100, nnz: 10, ..Default::default() }
+            .generate(14);
+        let pre = ds.precompute();
+        let ctx = ScreenContext::new(&ds.x, &ds.y, &pre);
+        let lam1 = 0.9 * pre.lambda_max;
+        let lam2 = 0.8 * pre.lambda_max;
+        let st = solved_state(&ds, lam1);
+        let mut keep = vec![false; ds.p()];
+        let o = SafeRule.screen(&ctx, &st, lam2, &mut keep);
+        // solve exactly at lam2
+        let active: Vec<usize> = (0..ds.p()).collect();
+        let norms = ds.x.col_norms_sq();
+        let mut beta2 = vec![0.0; ds.p()];
+        let mut resid2 = ds.y.clone();
+        let opts = CdOptions { gap_tol: 1e-12, tol: 1e-12, ..Default::default() };
+        solve_cd(&ds.x, &ds.y, lam2, &active, &norms, &mut beta2, &mut resid2, &opts);
+        for j in 0..ds.p() {
+            if !keep[j] {
+                assert!(beta2[j].abs() < 1e-9, "screened {j} has beta {}", beta2[j]);
+            }
+        }
+        // SAFE does screen close to lambda_max
+        assert!(o.screened > 0);
+    }
+
+    #[test]
+    fn bound_contains_true_dual_product() {
+        let ds = SyntheticSpec { n: 25, p: 60, nnz: 6, ..Default::default() }
+            .generate(3);
+        let pre = ds.precompute();
+        let ctx = ScreenContext::new(&ds.x, &ds.y, &pre);
+        let lam1 = 0.7 * pre.lambda_max;
+        let lam2 = 0.55 * pre.lambda_max;
+        let st1 = solved_state(&ds, lam1);
+        let st2 = solved_state(&ds, lam2);
+        let mut bounds = vec![0.0; ds.p()];
+        SafeRule.bounds(&ctx, &st1, lam2, &mut bounds);
+        for j in 0..ds.p() {
+            assert!(
+                st2.xt_theta[j].abs() <= bounds[j] + 1e-7,
+                "j={j}: |<x_j,theta2>|={} > bound {}",
+                st2.xt_theta[j].abs(),
+                bounds[j]
+            );
+        }
+    }
+}

@@ -1,0 +1,253 @@
+//! Sasvi — the paper's screening rule (Theorem 3).
+//!
+//! The feasible set for the unknown dual optimum `theta_2^*` is built from
+//! the two variational inequalities (Eqs. 13–14):
+//!
+//!   Omega = { theta : <theta1 - y/lam1, theta - theta1> >= 0,
+//!                     <theta - y/lam2, theta1 - theta>  >= 0 }
+//!
+//! a half-space through `theta1` with inward normal `-a` intersected with
+//! the ball of diameter `[theta1, y/lam2]`. Theorem 3 gives the closed-form
+//! maxima `u_j^+ = max <x_j, theta>` and `u_j^- = max <-x_j, theta>` over
+//! Omega in four geometric cases; feature j is discarded iff both are < 1.
+//!
+//! Per-feature work is O(1) on top of the shared statistics
+//! (`<x_j, theta1>` from the dual state, `<x_j, y>` and `||x_j||^2` from the
+//! path precompute), so a full screen is O(p) after the O(n·p) stats pass
+//! the path already performs.
+
+use crate::screening::{Geometry, Rule, RuleKind, ScreenContext, ScreenOutcome};
+use crate::solver::DualState;
+use crate::SCREEN_EPS;
+
+pub struct SasviRule;
+
+/// The two Theorem-3 bounds for one feature, given shared geometry.
+///
+/// Inputs: `xt1 = <x_j, theta1>`, `xty = <x_j, y>`, `xn2 = ||x_j||^2`.
+#[inline]
+pub fn feature_bounds(g: &Geometry, xt1: f64, xty: f64, xn2: f64) -> (f64, f64) {
+    let xja = xty / g.lam1 - xt1; // <x_j, a>
+    let xjb = xja + g.d * xty; // <x_j, b>
+    let bnorm = g.bnorm2.sqrt();
+    let xnorm = xn2.sqrt();
+
+    // Ball-only closed form (Eq. 28/29): used in case 4 (a = 0) and in the
+    // "tail" subcases 2/3 where the optimizer hits only the ball.
+    let u_plus_ball = xt1 + 0.5 * (xnorm * bnorm + xjb);
+    let u_minus_ball = -xt1 + 0.5 * (xnorm * bnorm - xjb);
+
+    if g.a_is_zero {
+        return (u_plus_ball, u_minus_ball);
+    }
+
+    // Projections onto the null space of a (Eqs. 21–23 via inner products).
+    let xperp2 = (xn2 - xja * xja / g.anorm2).max(0.0);
+    let xperp_yperp = xty - g.ay * xja / g.anorm2;
+    let cross = (xperp2 * g.yperp2).sqrt();
+
+    // Half-space-active closed form (Eq. 26/27).
+    let u_plus_cap = xt1 + 0.5 * g.d * (cross + xperp_yperp);
+    let u_minus_cap = -xt1 + 0.5 * g.d * (cross - xperp_yperp);
+
+    // Case split: "<b,a>/||b|| <= s <x_j,a>/||x_j||" with s = ∓1 decides
+    // whether the ±x_j maximizer sees the half-space. Multiplied through by
+    // the nonnegative norms to avoid division.
+    let plus_tail = xja < 0.0 && g.ba * xnorm <= -xja * bnorm;
+    let minus_tail = xja > 0.0 && g.ba * xnorm <= xja * bnorm;
+
+    (
+        if plus_tail { u_plus_ball } else { u_plus_cap },
+        if minus_tail { u_minus_ball } else { u_minus_cap },
+    )
+}
+
+impl Rule for SasviRule {
+    fn kind(&self) -> RuleKind {
+        RuleKind::Sasvi
+    }
+
+    fn bounds(&self, ctx: &ScreenContext, state: &DualState, lam2: f64, out: &mut [f64]) {
+        let g = Geometry::compute(ctx, state, lam2);
+        for j in 0..ctx.p() {
+            let (up, um) = feature_bounds(
+                &g,
+                state.xt_theta[j],
+                ctx.pre.xty[j],
+                ctx.pre.col_norms_sq[j],
+            );
+            out[j] = up.max(um);
+        }
+    }
+
+    fn screen(
+        &self,
+        ctx: &ScreenContext,
+        state: &DualState,
+        lam2: f64,
+        keep: &mut [bool],
+    ) -> ScreenOutcome {
+        let g = Geometry::compute(ctx, state, lam2);
+        let xt = &state.xt_theta;
+        let xty = &ctx.pre.xty;
+        let xn2 = &ctx.pre.col_norms_sq;
+        let thr = 1.0 - SCREEN_EPS;
+        let mut kept = 0usize;
+        for j in 0..ctx.p() {
+            let (up, um) = feature_bounds(&g, xt[j], xty[j], xn2[j]);
+            let k = up >= thr || um >= thr;
+            keep[j] = k;
+            kept += k as usize;
+        }
+        ScreenOutcome { kept, screened: ctx.p() - kept }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticSpec;
+    use crate::solver::cd::{solve_cd, CdOptions};
+    use crate::solver::DualState;
+
+    fn solved_state(
+        ds: &crate::data::Dataset,
+        lam1: f64,
+    ) -> (DualState, Vec<f64>) {
+        let active: Vec<usize> = (0..ds.p()).collect();
+        let norms = ds.x.col_norms_sq();
+        let mut beta = vec![0.0; ds.p()];
+        let mut resid = ds.y.clone();
+        solve_cd(&ds.x, &ds.y, lam1, &active, &norms, &mut beta, &mut resid,
+                 &CdOptions::default());
+        (DualState::from_residual(&ds.x, &resid, lam1), beta)
+    }
+
+    fn exact_beta(ds: &crate::data::Dataset, lam: f64) -> Vec<f64> {
+        let active: Vec<usize> = (0..ds.p()).collect();
+        let norms = ds.x.col_norms_sq();
+        let mut beta = vec![0.0; ds.p()];
+        let mut resid = ds.y.clone();
+        let opts = CdOptions { gap_tol: 1e-12, tol: 1e-12, max_epochs: 20_000, ..Default::default() };
+        solve_cd(&ds.x, &ds.y, lam, &active, &norms, &mut beta, &mut resid, &opts);
+        beta
+    }
+
+    #[test]
+    fn safety_screened_features_are_zero() {
+        for seed in [1u64, 5, 9, 33] {
+            let ds = SyntheticSpec { n: 30, p: 120, nnz: 12, ..Default::default() }
+                .generate(seed);
+            let pre = ds.precompute();
+            let ctx = ScreenContext::new(&ds.x, &ds.y, &pre);
+            let lam1 = 0.7 * pre.lambda_max;
+            let lam2 = 0.5 * pre.lambda_max;
+            let (st, _) = solved_state(&ds, lam1);
+            let mut keep = vec![false; ds.p()];
+            let o = SasviRule.screen(&ctx, &st, lam2, &mut keep);
+            assert!(o.screened > 0, "should screen something (seed {seed})");
+            let beta2 = exact_beta(&ds, lam2);
+            for j in 0..ds.p() {
+                if !keep[j] {
+                    assert!(
+                        beta2[j].abs() < 1e-9,
+                        "seed {seed}: screened feature {j} has beta {}",
+                        beta2[j]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn safety_from_lambda_max() {
+        let ds = SyntheticSpec { n: 25, p: 80, nnz: 8, ..Default::default() }
+            .generate(2);
+        let pre = ds.precompute();
+        let ctx = ScreenContext::new(&ds.x, &ds.y, &pre);
+        let st = DualState::at_lambda_max(&ds.x, &ds.y, pre.lambda_max, &pre.xty);
+        let lam2 = 0.85 * pre.lambda_max;
+        let mut keep = vec![false; ds.p()];
+        let o = SasviRule.screen(&ctx, &st, lam2, &mut keep);
+        assert!(o.screened > 0);
+        let beta2 = exact_beta(&ds, lam2);
+        for j in 0..ds.p() {
+            if !keep[j] {
+                assert!(beta2[j].abs() < 1e-9, "feature {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn limit_lambda2_to_lambda1() {
+        // As lam2 -> lam1 the bounds collapse to +-<x_j, theta1>.
+        let ds = SyntheticSpec { n: 20, p: 40, nnz: 5, ..Default::default() }
+            .generate(11);
+        let pre = ds.precompute();
+        let ctx = ScreenContext::new(&ds.x, &ds.y, &pre);
+        let lam1 = 0.6 * pre.lambda_max;
+        let (st, _) = solved_state(&ds, lam1);
+        let g = Geometry::compute(&ctx, &st, lam1 * (1.0 - 1e-9));
+        for j in 0..ds.p() {
+            let (up, um) = feature_bounds(&g, st.xt_theta[j], pre.xty[j],
+                                          pre.col_norms_sq[j]);
+            assert!((up - st.xt_theta[j]).abs() < 1e-5, "j={j}");
+            assert!((um + st.xt_theta[j]).abs() < 1e-5, "j={j}");
+        }
+    }
+
+    #[test]
+    fn bounds_always_at_least_xt_theta1() {
+        // theta1 is in Omega, so u+ >= <x_j,theta1> and u- >= -<x_j,theta1>.
+        let ds = SyntheticSpec { n: 25, p: 60, nnz: 6, ..Default::default() }
+            .generate(4);
+        let pre = ds.precompute();
+        let ctx = ScreenContext::new(&ds.x, &ds.y, &pre);
+        let lam1 = 0.5 * pre.lambda_max;
+        let (st, _) = solved_state(&ds, lam1);
+        for f in [0.9, 0.6, 0.3] {
+            let g = Geometry::compute(&ctx, &st, f * lam1);
+            for j in 0..ds.p() {
+                let (up, um) = feature_bounds(&g, st.xt_theta[j], pre.xty[j],
+                                              pre.col_norms_sq[j]);
+                assert!(up >= st.xt_theta[j] - 1e-9);
+                assert!(um >= -st.xt_theta[j] - 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_more_than_dpp_and_safe() {
+        // §3: Sasvi's feasible set is contained in both relaxations, so its
+        // kept set must be a subset of each.
+        use crate::screening::{dpp::DppRule, safe::SafeRule};
+        let ds = SyntheticSpec { n: 40, p: 200, nnz: 20, ..Default::default() }
+            .generate(8);
+        let pre = ds.precompute();
+        let ctx = ScreenContext::new(&ds.x, &ds.y, &pre);
+        let lam1 = 0.8 * pre.lambda_max;
+        let (st, _) = solved_state(&ds, lam1);
+        for f in [0.95, 0.8, 0.5] {
+            let lam2 = f * lam1;
+            let mut k_sasvi = vec![false; ds.p()];
+            let mut k_dpp = vec![false; ds.p()];
+            let mut k_safe = vec![false; ds.p()];
+            let o_sasvi = SasviRule.screen(&ctx, &st, lam2, &mut k_sasvi);
+            let o_dpp = DppRule.screen(&ctx, &st, lam2, &mut k_dpp);
+            let o_safe = SafeRule.screen(&ctx, &st, lam2, &mut k_safe);
+            // Per-feature dominance vs DPP is provable (Omega is contained
+            // in the DPP ball: add the two VIs + Cauchy-Schwarz). For SAFE
+            // the constructions instantiate the VI at different points, so
+            // only the aggregate comparison is asserted (it holds with large
+            // margin on every dataset in the paper and here).
+            for j in 0..ds.p() {
+                if k_sasvi[j] {
+                    assert!(k_dpp[j], "Sasvi kept {j} but DPP screened it?!");
+                }
+            }
+            let _ = &k_safe;
+            assert!(o_sasvi.screened >= o_dpp.screened);
+            assert!(o_sasvi.screened >= o_safe.screened);
+        }
+    }
+}

@@ -1,0 +1,87 @@
+//! The (sequential) strong rule — Tibshirani et al., Eq. (31) of the paper.
+//!
+//! Heuristic: assumes the unit-slope bound
+//! `|lam2 <x_j, theta2> - lam1 <x_j, theta1>| <= lam1 - lam2`, giving
+//! `|<x_j, theta2>| <= (lam1/lam2) |<x_j, theta1>| + (lam1/lam2 - 1)`.
+//! The assumption can fail, so discarded features must be re-checked
+//! against the KKT conditions after the solve; the coordinator performs
+//! that correction loop (`is_safe() == false` signals it).
+
+use crate::screening::{Rule, RuleKind, ScreenContext};
+use crate::solver::DualState;
+
+pub struct StrongRule;
+
+impl Rule for StrongRule {
+    fn kind(&self) -> RuleKind {
+        RuleKind::Strong
+    }
+
+    fn is_safe(&self) -> bool {
+        false
+    }
+
+    fn bounds(&self, ctx: &ScreenContext, state: &DualState, lam2: f64, out: &mut [f64]) {
+        let ratio = state.lambda / lam2;
+        let slack = ratio - 1.0;
+        for j in 0..ctx.p() {
+            out[j] = ratio * state.xt_theta[j].abs() + slack;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticSpec;
+    use crate::solver::cd::{solve_cd, CdOptions};
+
+    #[test]
+    fn screens_aggressively() {
+        // The strong rule should discard at least as many features as DPP
+        // on a typical instance (it is *much* tighter, at the cost of
+        // safety).
+        use crate::screening::dpp::DppRule;
+        let ds = SyntheticSpec { n: 30, p: 150, nnz: 15, ..Default::default() }
+            .generate(31);
+        let pre = ds.precompute();
+        let ctx = ScreenContext::new(&ds.x, &ds.y, &pre);
+        let lam1 = 0.7 * pre.lambda_max;
+        let active: Vec<usize> = (0..ds.p()).collect();
+        let norms = ds.x.col_norms_sq();
+        let mut beta = vec![0.0; ds.p()];
+        let mut resid = ds.y.clone();
+        solve_cd(&ds.x, &ds.y, lam1, &active, &norms, &mut beta, &mut resid,
+                 &CdOptions::default());
+        let st = DualState::from_residual(&ds.x, &resid, lam1);
+        let lam2 = 0.5 * pre.lambda_max;
+        let mut k_strong = vec![false; ds.p()];
+        let mut k_dpp = vec![false; ds.p()];
+        let o_strong = StrongRule.screen(&ctx, &st, lam2, &mut k_strong);
+        let o_dpp = DppRule.screen(&ctx, &st, lam2, &mut k_dpp);
+        assert!(o_strong.screened >= o_dpp.screened);
+    }
+
+    #[test]
+    fn is_flagged_unsafe() {
+        assert!(!StrongRule.is_safe());
+        assert!(crate::screening::sasvi::SasviRule.is_safe());
+    }
+
+    #[test]
+    fn bound_formula_spotcheck() {
+        // hand-check Eq. 31 at a point: ratio * |xt| + ratio - 1
+        let ds = SyntheticSpec { n: 10, p: 5, nnz: 1, ..Default::default() }
+            .generate(1);
+        let pre = ds.precompute();
+        let ctx = ScreenContext::new(&ds.x, &ds.y, &pre);
+        let st = DualState::at_lambda_max(&ds.x, &ds.y, pre.lambda_max, &pre.xty);
+        let lam2 = 0.5 * pre.lambda_max;
+        let mut bounds = vec![0.0; 5];
+        StrongRule.bounds(&ctx, &st, lam2, &mut bounds);
+        for j in 0..5 {
+            let want = 2.0 * st.xt_theta[j].abs() + 1.0;
+            assert!((bounds[j] - want).abs() < 1e-12);
+        }
+    }
+}

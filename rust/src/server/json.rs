@@ -1,0 +1,118 @@
+//! Minimal JSON writer (no serde offline). Only what the service protocol
+//! needs: flat objects with string/number/array-of-number fields.
+
+/// Incremental JSON object writer.
+pub struct JsonWriter {
+    buf: String,
+    first: bool,
+}
+
+fn escape_into(buf: &mut String, s: &str) {
+    for c in s.chars() {
+        match c {
+            '"' => buf.push_str("\\\""),
+            '\\' => buf.push_str("\\\\"),
+            '\n' => buf.push_str("\\n"),
+            '\r' => buf.push_str("\\r"),
+            '\t' => buf.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                buf.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => buf.push(c),
+        }
+    }
+}
+
+fn fmt_f64(v: f64) -> String {
+    if v.is_nan() {
+        "null".to_string()
+    } else if v.is_infinite() {
+        if v > 0.0 { "1e999".into() } else { "-1e999".into() }
+    } else if v == v.trunc() && v.abs() < 1e15 {
+        format!("{:.1}", v)
+    } else {
+        format!("{v}")
+    }
+}
+
+impl JsonWriter {
+    pub fn object() -> Self {
+        Self { buf: String::from("{"), first: true }
+    }
+
+    fn key(&mut self, k: &str) {
+        if !self.first {
+            self.buf.push_str(", ");
+        }
+        self.first = false;
+        self.buf.push('"');
+        escape_into(&mut self.buf, k);
+        self.buf.push_str("\": ");
+    }
+
+    pub fn field_str(&mut self, k: &str, v: &str) {
+        self.key(k);
+        self.buf.push('"');
+        escape_into(&mut self.buf, v);
+        self.buf.push('"');
+    }
+
+    pub fn field_u64(&mut self, k: &str, v: u64) {
+        self.key(k);
+        self.buf.push_str(&v.to_string());
+    }
+
+    pub fn field_f64(&mut self, k: &str, v: f64) {
+        self.key(k);
+        self.buf.push_str(&fmt_f64(v));
+    }
+
+    pub fn field_f64_array(&mut self, k: &str, vs: &[f64]) {
+        self.key(k);
+        self.buf.push('[');
+        for (i, v) in vs.iter().enumerate() {
+            if i > 0 {
+                self.buf.push_str(", ");
+            }
+            self.buf.push_str(&fmt_f64(*v));
+        }
+        self.buf.push(']');
+    }
+
+    pub fn finish(mut self) -> String {
+        self.buf.push('}');
+        self.buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_flat_object() {
+        let mut w = JsonWriter::object();
+        w.field_str("name", "sasvi");
+        w.field_u64("n", 3);
+        w.field_f64("t", 1.5);
+        w.field_f64_array("xs", &[1.0, 0.25]);
+        assert_eq!(
+            w.finish(),
+            r#"{"name": "sasvi", "n": 3, "t": 1.5, "xs": [1.0, 0.25]}"#
+        );
+    }
+
+    #[test]
+    fn escapes_strings() {
+        let mut w = JsonWriter::object();
+        w.field_str("s", "a\"b\\c\nd");
+        assert_eq!(w.finish(), r#"{"s": "a\"b\\c\nd"}"#);
+    }
+
+    #[test]
+    fn nan_becomes_null() {
+        let mut w = JsonWriter::object();
+        w.field_f64("x", f64::NAN);
+        assert_eq!(w.finish(), r#"{"x": null}"#);
+    }
+}

@@ -1,0 +1,353 @@
+//! Screening-as-a-service: a TCP line protocol on top of the job pool.
+//!
+//! Each request is one line; each response is one line of minimal JSON
+//! (hand-rolled — no serde offline). Commands:
+//!
+//! ```text
+//! PING
+//! GEN <preset> <seed> <scale>            -> {"dataset": id, ...}
+//! PATH <dataset-id> <rule> <k> <min_frac> -> {"job": id}
+//! STATUS <job-id>                         -> {"status": "..."}
+//! RESULT <job-id>                         -> {"steps": [...], ...} (blocks)
+//! SUREREMOVAL <dataset-id> <lam1-frac> <j> -> {"lam_s": ...}
+//! QUIT
+//! ```
+
+pub mod json;
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::coordinator::{JobPool, JobSpec, JobStatus, PathOptions, PathPlan};
+use crate::data::{Dataset, Preset};
+use crate::screening::sure_removal::SureRemovalAnalysis;
+use crate::screening::{RuleKind, ScreenContext};
+use crate::server::json::JsonWriter;
+use crate::solver::DualState;
+
+struct ServerState {
+    datasets: Mutex<HashMap<u64, Arc<Dataset>>>,
+    next_dataset: AtomicU64,
+    pool: JobPool,
+    jobs: Mutex<HashMap<u64, crate::coordinator::pool::JobId>>,
+    next_job: AtomicU64,
+}
+
+/// The screening service. Binds a listener and serves until `stop()`.
+pub struct Server {
+    listener: TcpListener,
+    state: Arc<ServerState>,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Bind on an address like "127.0.0.1:0" (port 0 = ephemeral).
+    pub fn bind(addr: &str, workers: usize) -> Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        Ok(Self {
+            listener,
+            state: Arc::new(ServerState {
+                datasets: Mutex::new(HashMap::new()),
+                next_dataset: AtomicU64::new(1),
+                pool: JobPool::new(workers, 16),
+                jobs: Mutex::new(HashMap::new()),
+                next_job: AtomicU64::new(1),
+            }),
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// A handle that can stop the serve loop from another thread.
+    pub fn stop_handle(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.stop)
+    }
+
+    /// Accept loop; one thread per connection. Returns when stopped.
+    pub fn serve(&self) -> Result<()> {
+        let mut handles = Vec::new();
+        while !self.stop.load(Ordering::Relaxed) {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    let state = Arc::clone(&self.state);
+                    handles.push(std::thread::spawn(move || {
+                        let _ = handle_conn(stream, state);
+                    }));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+}
+
+fn handle_conn(stream: TcpStream, state: Arc<ServerState>) -> Result<()> {
+    stream.set_nodelay(true)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut out = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // connection closed
+        }
+        let parts: Vec<&str> = line.trim().split_whitespace().collect();
+        let reply = match parts.as_slice() {
+            [] => continue,
+            ["QUIT"] => {
+                writeln!(out, "{}", ok_msg("bye"))?;
+                return Ok(());
+            }
+            ["PING"] => ok_msg("pong"),
+            ["GEN", preset, seed, scale] => cmd_gen(&state, preset, seed, scale),
+            ["PATH", ds, rule, k, min_frac] => cmd_path(&state, ds, rule, k, min_frac),
+            ["STATUS", job] => cmd_status(&state, job),
+            ["RESULT", job] => cmd_result(&state, job),
+            ["SUREREMOVAL", ds, frac, j] => cmd_sure_removal(&state, ds, frac, j),
+            other => err_msg(&format!("unknown command: {other:?}")),
+        };
+        writeln!(out, "{reply}")?;
+    }
+}
+
+fn ok_msg(msg: &str) -> String {
+    let mut w = JsonWriter::object();
+    w.field_str("ok", msg);
+    w.finish()
+}
+
+fn err_msg(msg: &str) -> String {
+    let mut w = JsonWriter::object();
+    w.field_str("error", msg);
+    w.finish()
+}
+
+fn cmd_gen(state: &ServerState, preset: &str, seed: &str, scale: &str) -> String {
+    let preset = match Preset::parse(preset) {
+        Some(p) => p,
+        None => return err_msg(&format!("unknown preset {preset}")),
+    };
+    let seed: u64 = seed.parse().unwrap_or(1);
+    let scale: f64 = scale.parse().unwrap_or(0.05);
+    match preset.generate(seed, scale) {
+        Ok(ds) => {
+            let id = state.next_dataset.fetch_add(1, Ordering::Relaxed);
+            let (n, p, name) = (ds.n(), ds.p(), ds.name.clone());
+            state.datasets.lock().unwrap().insert(id, Arc::new(ds));
+            let mut w = JsonWriter::object();
+            w.field_u64("dataset", id);
+            w.field_str("name", &name);
+            w.field_u64("n", n as u64);
+            w.field_u64("p", p as u64);
+            w.finish()
+        }
+        Err(e) => err_msg(&format!("generate failed: {e}")),
+    }
+}
+
+fn cmd_path(state: &ServerState, ds: &str, rule: &str, k: &str, min_frac: &str) -> String {
+    let ds_id: u64 = match ds.parse() {
+        Ok(v) => v,
+        Err(_) => return err_msg("bad dataset id"),
+    };
+    let dataset = match state.datasets.lock().unwrap().get(&ds_id) {
+        Some(d) => Arc::clone(d),
+        None => return err_msg(&format!("no dataset {ds_id}")),
+    };
+    let rule = match RuleKind::parse(rule) {
+        Some(r) => r,
+        None => return err_msg(&format!("unknown rule {rule}")),
+    };
+    let k: usize = k.parse().unwrap_or(100);
+    let min_frac: f64 = min_frac.parse().unwrap_or(0.05);
+    let plan = PathPlan::linear_spaced(&dataset, k.max(2), min_frac.clamp(0.001, 0.99));
+    let job_id = state.pool.submit(JobSpec {
+        dataset,
+        plan,
+        rule,
+        opts: PathOptions::default(),
+        tag: format!("svc-{rule:?}"),
+    });
+    let id = state.next_job.fetch_add(1, Ordering::Relaxed);
+    state.jobs.lock().unwrap().insert(id, job_id);
+    let mut w = JsonWriter::object();
+    w.field_u64("job", id);
+    w.finish()
+}
+
+fn cmd_status(state: &ServerState, job: &str) -> String {
+    let id: u64 = match job.parse() {
+        Ok(v) => v,
+        Err(_) => return err_msg("bad job id"),
+    };
+    let jid = match state.jobs.lock().unwrap().get(&id) {
+        Some(j) => *j,
+        None => return err_msg(&format!("no job {id}")),
+    };
+    let status = match state.pool.status(jid) {
+        Some(JobStatus::Queued) => "queued",
+        Some(JobStatus::Running) => "running",
+        Some(JobStatus::Done) => "done",
+        Some(JobStatus::Failed(_)) => "failed",
+        None => "unknown",
+    };
+    let mut w = JsonWriter::object();
+    w.field_str("status", status);
+    w.finish()
+}
+
+fn cmd_result(state: &ServerState, job: &str) -> String {
+    let id: u64 = match job.parse() {
+        Ok(v) => v,
+        Err(_) => return err_msg("bad job id"),
+    };
+    let jid = match state.jobs.lock().unwrap().get(&id) {
+        Some(j) => *j,
+        None => return err_msg(&format!("no job {id}")),
+    };
+    match state.pool.wait(jid) {
+        Some(res) => {
+            let mut w = JsonWriter::object();
+            w.field_str("rule", res.rule.name());
+            w.field_f64("total_secs", res.total_time.as_secs_f64());
+            w.field_u64("steps", res.steps.len() as u64);
+            let rej: Vec<f64> = res.steps.iter().map(|s| s.rejection_ratio()).collect();
+            w.field_f64_array("rejection", &rej);
+            let fr: Vec<f64> = res.steps.iter().map(|s| s.frac).collect();
+            w.field_f64_array("frac", &fr);
+            w.finish()
+        }
+        None => err_msg("job failed or already consumed"),
+    }
+}
+
+fn cmd_sure_removal(state: &ServerState, ds: &str, frac: &str, j: &str) -> String {
+    let ds_id: u64 = match ds.parse() {
+        Ok(v) => v,
+        Err(_) => return err_msg("bad dataset id"),
+    };
+    let dataset = match state.datasets.lock().unwrap().get(&ds_id) {
+        Some(d) => Arc::clone(d),
+        None => return err_msg(&format!("no dataset {ds_id}")),
+    };
+    let frac: f64 = frac.parse().unwrap_or(0.8);
+    let j: usize = match j.parse::<usize>() {
+        Ok(v) if v < dataset.p() => v,
+        _ => return err_msg("bad feature index"),
+    };
+    let pre = dataset.precompute();
+    let lam1 = frac.clamp(0.01, 1.0) * pre.lambda_max;
+    // solve at lam1 for the dual state
+    let active: Vec<usize> = (0..dataset.p()).collect();
+    let mut beta = vec![0.0; dataset.p()];
+    let mut resid = dataset.y.clone();
+    crate::solver::cd::solve_cd(
+        &dataset.x,
+        &dataset.y,
+        lam1,
+        &active,
+        &pre.col_norms_sq,
+        &mut beta,
+        &mut resid,
+        &crate::solver::cd::CdOptions::default(),
+    );
+    let st = DualState::from_residual(&dataset.x, &resid, lam1);
+    let ctx = ScreenContext::new(&dataset.x, &dataset.y, &pre);
+    let analysis = SureRemovalAnalysis::new(&ctx, &st);
+    let rep = analysis.analyze(&ctx, &st, j, 0.01 * pre.lambda_max);
+    let mut w = JsonWriter::object();
+    w.field_f64("lam1", lam1);
+    w.field_f64("lam_s", rep.lam_s);
+    w.field_f64("lam_2a", rep.lam_2a);
+    w.field_f64("lam_2y", rep.lam_2y);
+    w.field_u64("case", rep.case as u64);
+    w.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{BufRead, BufReader, Write};
+
+    fn send(addr: std::net::SocketAddr, cmds: &[&str]) -> Vec<String> {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut out = Vec::new();
+        for c in cmds {
+            writeln!(s, "{c}").unwrap();
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            out.push(line.trim().to_string());
+        }
+        out
+    }
+
+    #[test]
+    fn end_to_end_protocol() {
+        let server = Server::bind("127.0.0.1:0", 1).unwrap();
+        let addr = server.local_addr().unwrap();
+        let stop = server.stop_handle();
+        let h = std::thread::spawn(move || server.serve().unwrap());
+
+        let replies = send(
+            addr,
+            &[
+                "PING",
+                "GEN synthetic100 3 0.01",
+                "PATH 1 sasvi 6 0.1",
+                "RESULT 1",
+                "SUREREMOVAL 1 0.8 0",
+                "BOGUS",
+                "QUIT",
+            ],
+        );
+        assert!(replies[0].contains("pong"));
+        assert!(replies[1].contains("\"dataset\": 1"), "{}", replies[1]);
+        assert!(replies[2].contains("\"job\": 1"), "{}", replies[2]);
+        assert!(replies[3].contains("rejection"), "{}", replies[3]);
+        assert!(replies[4].contains("lam_s"), "{}", replies[4]);
+        assert!(replies[5].contains("error"), "{}", replies[5]);
+        assert!(replies[6].contains("bye"));
+
+        stop.store(true, Ordering::Relaxed);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn bad_requests_get_errors_not_crashes() {
+        let server = Server::bind("127.0.0.1:0", 1).unwrap();
+        let addr = server.local_addr().unwrap();
+        let stop = server.stop_handle();
+        let h = std::thread::spawn(move || server.serve().unwrap());
+        let replies = send(
+            addr,
+            &[
+                "GEN nope 1 0.1",
+                "PATH 99 sasvi 5 0.1",
+                "STATUS 42",
+                "RESULT notanumber",
+                "QUIT",
+            ],
+        );
+        for r in &replies[..4] {
+            assert!(r.contains("error"), "{r}");
+        }
+        stop.store(true, Ordering::Relaxed);
+        h.join().unwrap();
+    }
+}

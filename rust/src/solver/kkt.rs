@@ -1,0 +1,125 @@
+//! KKT optimality checking for the Lasso.
+//!
+//! Used (a) as the correction step for the (unsafe) strong rule — features
+//! the rule discarded are re-checked and re-admitted on violation, exactly
+//! as Tibshirani et al. prescribe and the paper's §5 describes — and (b) in
+//! tests, as the ground-truth optimality certificate.
+//!
+//! Conditions at optimum (with r = y - X beta):
+//!   |<x_j, r>| <= lambda            for beta_j = 0
+//!   <x_j, r> = lambda * sign(beta_j) for beta_j != 0
+
+use crate::linalg::{ops, DenseMatrix};
+
+#[derive(Clone, Debug, Default)]
+pub struct KktReport {
+    /// indices violating their condition, with the violation magnitude
+    pub violations: Vec<(usize, f64)>,
+    /// largest violation seen (0 if none)
+    pub max_violation: f64,
+    pub checked: usize,
+}
+
+impl KktReport {
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// Check KKT over all features. `tol` is absolute on the dual scale
+/// (|<x_j,r>| is compared against `lambda * (1 + tol) + tol`).
+pub fn check_kkt(
+    x: &DenseMatrix,
+    resid: &[f64],
+    beta: &[f64],
+    lambda: f64,
+    tol: f64,
+) -> KktReport {
+    check_kkt_subset(x, resid, beta, lambda, tol, None)
+}
+
+/// Check KKT over `subset` (or all features when `None`). Only the
+/// inactive-coordinate condition can be violated by screening, so the
+/// strong-rule correction passes the discarded set here.
+pub fn check_kkt_subset(
+    x: &DenseMatrix,
+    resid: &[f64],
+    beta: &[f64],
+    lambda: f64,
+    tol: f64,
+    subset: Option<&[usize]>,
+) -> KktReport {
+    let mut report = KktReport::default();
+    let slack = lambda * tol + tol;
+    let mut check = |j: usize| {
+        let g = ops::dot(x.col(j), resid);
+        let viol = if beta[j] == 0.0 {
+            (g.abs() - lambda).max(0.0)
+        } else {
+            (g - lambda * beta[j].signum()).abs()
+        };
+        report.checked += 1;
+        if viol > slack {
+            report.violations.push((j, viol));
+        }
+        if viol > report.max_violation {
+            report.max_violation = viol;
+        }
+    };
+    match subset {
+        Some(idx) => idx.iter().copied().for_each(&mut check),
+        None => (0..x.ncols()).for_each(&mut check),
+    }
+    report.violations.sort_by(|a, b| b.1.total_cmp(&a.1));
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticSpec;
+    use crate::solver::cd::{solve_cd, CdOptions};
+
+    #[test]
+    fn optimum_passes_zero_fails() {
+        let ds = SyntheticSpec { n: 25, p: 40, nnz: 5, ..Default::default() }
+            .generate(17);
+        let lam = 0.25 * ds.lambda_max();
+        let active: Vec<usize> = (0..ds.p()).collect();
+        let norms = ds.x.col_norms_sq();
+        let mut beta = vec![0.0; ds.p()];
+        let mut resid = ds.y.clone();
+
+        // beta = 0 is NOT optimal at this lambda
+        let r0 = check_kkt(&ds.x, &ds.y, &beta, lam, 1e-6);
+        assert!(!r0.ok());
+
+        solve_cd(&ds.x, &ds.y, lam, &active, &norms, &mut beta, &mut resid,
+                 &CdOptions::default());
+        let r1 = check_kkt(&ds.x, &resid, &beta, lam, 1e-6);
+        assert!(r1.ok(), "max violation {}", r1.max_violation);
+    }
+
+    #[test]
+    fn subset_checks_only_subset() {
+        let ds = SyntheticSpec { n: 15, p: 20, nnz: 3, ..Default::default() }
+            .generate(2);
+        let lam = 0.3 * ds.lambda_max();
+        let beta = vec![0.0; ds.p()];
+        let r = check_kkt_subset(&ds.x, &ds.y, &beta, lam, 1e-9, Some(&[0, 1]));
+        assert_eq!(r.checked, 2);
+    }
+
+    #[test]
+    fn violations_sorted_descending() {
+        let ds = SyntheticSpec { n: 15, p: 30, nnz: 5, ..Default::default() }
+            .generate(4);
+        let lam = 0.1 * ds.lambda_max();
+        let beta = vec![0.0; ds.p()];
+        let r = check_kkt(&ds.x, &ds.y, &beta, lam, 1e-9);
+        assert!(r.violations.len() >= 2);
+        for w in r.violations.windows(2) {
+            assert!(w[0].1 >= w[1].1);
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! Hand-rolled property-testing harness (no proptest crate offline).
+//!
+//! [`forall`] drives a property over `iters` random cases drawn from a
+//! generator; on failure it retries progressively "smaller" cases produced
+//! by the generator's `shrink_hint`, then panics with the smallest failing
+//! seed so the case is reproducible.
+
+use crate::rng::Xoshiro256;
+
+/// Parameters for a random Lasso instance used in property tests.
+#[derive(Clone, Copy, Debug)]
+pub struct CaseParams {
+    pub seed: u64,
+    pub n: usize,
+    pub p: usize,
+    pub nnz: usize,
+    /// lam1 = frac1 * lambda_max, lam2 = frac2 * lam1
+    pub frac1: f64,
+    pub frac2: f64,
+}
+
+impl std::fmt::Display for CaseParams {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "CaseParams {{ seed: {}, n: {}, p: {}, nnz: {}, frac1: {:.4}, frac2: {:.4} }}",
+            self.seed, self.n, self.p, self.nnz, self.frac1, self.frac2
+        )
+    }
+}
+
+/// Draw a random case within the given size budget.
+pub fn gen_case(rng: &mut Xoshiro256, max_n: usize, max_p: usize) -> CaseParams {
+    let n = 5 + rng.below(max_n.saturating_sub(5).max(1));
+    let p = 5 + rng.below(max_p.saturating_sub(5).max(1));
+    let nnz = 1 + rng.below((p / 2).max(1));
+    let frac1 = rng.uniform_in(0.2, 0.99);
+    let frac2 = rng.uniform_in(0.3, 0.995);
+    CaseParams { seed: rng.next_u64(), n, p, nnz, frac1, frac2 }
+}
+
+/// Halve the dimensions of a failing case (shrinking heuristic).
+pub fn shrink(case: &CaseParams) -> Option<CaseParams> {
+    if case.n <= 6 && case.p <= 6 {
+        return None;
+    }
+    Some(CaseParams {
+        n: (case.n / 2).max(5),
+        p: (case.p / 2).max(5),
+        nnz: (case.nnz / 2).max(1),
+        ..*case
+    })
+}
+
+/// Run `prop` over `iters` random cases; panic (with the case) on failure
+/// after shrinking.
+pub fn forall(
+    seed: u64,
+    iters: usize,
+    max_n: usize,
+    max_p: usize,
+    prop: impl Fn(&CaseParams) -> Result<(), String>,
+) {
+    let mut rng = Xoshiro256::new(seed);
+    for i in 0..iters {
+        let case = gen_case(&mut rng, max_n, max_p);
+        if let Err(msg) = prop(&case) {
+            // try to shrink
+            let mut smallest = case;
+            let mut last_msg = msg;
+            let mut cur = case;
+            while let Some(next) = shrink(&cur) {
+                match prop(&next) {
+                    Err(m) => {
+                        smallest = next;
+                        last_msg = m;
+                        cur = next;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property failed on iteration {i}\n  smallest failing case: {smallest}\n  error: {last_msg}"
+            );
+        }
+    }
+}
+
+/// Build the standard test instance from case params.
+pub fn build_instance(case: &CaseParams) -> crate::data::Dataset {
+    crate::data::synthetic::SyntheticSpec {
+        n: case.n,
+        p: case.p,
+        nnz: case.nnz.min(case.p),
+        ..Default::default()
+    }
+    .generate(case.seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(1, 20, 20, 30, |c| {
+            if c.n > 0 { Ok(()) } else { Err("n == 0".into()) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure() {
+        forall(2, 10, 20, 30, |c| {
+            if c.p < 10 { Ok(()) } else { Err(format!("p = {}", c.p)) }
+        });
+    }
+
+    #[test]
+    fn shrink_reduces_dims() {
+        let c = CaseParams { seed: 1, n: 40, p: 60, nnz: 10, frac1: 0.5, frac2: 0.5 };
+        let s = shrink(&c).unwrap();
+        assert!(s.n < c.n && s.p < c.p);
+        let mut cur = c;
+        let mut steps = 0;
+        while let Some(n) = shrink(&cur) {
+            cur = n;
+            steps += 1;
+            assert!(steps < 32, "shrink must terminate");
+        }
+    }
+}

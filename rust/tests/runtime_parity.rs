@@ -1,0 +1,177 @@
+//! Three-layer composition test: the AOT-compiled XLA artifacts (L1 Pallas
+//! kernel inside the L2 JAX graphs) must reproduce the native Rust rules.
+//!
+//! Requires `make artifacts`. Tests no-op (with a note) when the artifact
+//! directory is missing so `cargo test` works before the Python step.
+
+use sasvi::data::synthetic::SyntheticSpec;
+use sasvi::runtime::executor::to_rowmajor;
+use sasvi::runtime::Runtime;
+use sasvi::screening::{RuleKind, ScreenContext};
+use sasvi::solver::cd::{solve_cd, CdOptions};
+use sasvi::solver::DualState;
+
+fn open_runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("NOTE: artifacts/ missing — run `make artifacts`; skipping");
+        return None;
+    }
+    Some(Runtime::open("artifacts").expect("open artifacts"))
+}
+
+fn setup(n: usize, p: usize) -> (sasvi::data::Dataset, DualState, f64) {
+    let ds = SyntheticSpec { n, p, nnz: p / 10, ..Default::default() }.generate(42);
+    let pre = ds.precompute();
+    let lam1 = 0.7 * pre.lambda_max;
+    let active: Vec<usize> = (0..p).collect();
+    let mut beta = vec![0.0; p];
+    let mut resid = ds.y.clone();
+    solve_cd(&ds.x, &ds.y, lam1, &active, &pre.col_norms_sq, &mut beta, &mut resid,
+             &CdOptions::default());
+    let st = DualState::from_residual(&ds.x, &resid, lam1);
+    (ds, st, lam1)
+}
+
+#[test]
+fn screen_graphs_match_native_rules() {
+    let Some(rt) = open_runtime() else { return };
+    let (n, p) = (64, 256);
+    let (ds, st, lam1) = setup(n, p);
+    let pre = ds.precompute();
+    let ctx = ScreenContext::new(&ds.x, &ds.y, &pre);
+    let x_rm = to_rowmajor(&ds.x);
+    let lam2 = 0.5 * pre.lambda_max;
+
+    for (graph, rule) in [
+        ("sasvi_screen", RuleKind::Sasvi),
+        ("safe_screen", RuleKind::Safe),
+        ("dpp_screen", RuleKind::Dpp),
+        ("strong_screen", RuleKind::Strong),
+    ] {
+        let (up, um, keep_xla) = rt
+            .execute_screen(graph, &x_rm, n, p, &ds.y, &st.theta, lam1, lam2)
+            .expect(graph);
+        let mut bounds = vec![0.0; p];
+        let rule_obj = rule.build();
+        rule_obj.bounds(&ctx, &st, lam2, &mut bounds);
+        let mut keep_native = vec![false; p];
+        rule_obj.screen(&ctx, &st, lam2, &mut keep_native);
+
+        let mut mismatches = 0;
+        for j in 0..p {
+            // XLA path runs in f32: compare with a loose tolerance and
+            // count decision flips only outside a small indecision band.
+            let native = bounds[j];
+            let xla = if graph == "sasvi_screen" { up[j].max(um[j]) } else { up[j].max(um[j]) };
+            let tol = 2e-3 * native.abs().max(1.0);
+            assert!(
+                (native - xla).abs() < tol.max(5e-3),
+                "{graph} feature {j}: native bound {native} vs xla {xla}"
+            );
+            let keep_x = keep_xla[j] > 0.5;
+            if keep_x != keep_native[j] && (native - 1.0).abs() > 1e-3 {
+                mismatches += 1;
+            }
+        }
+        assert_eq!(mismatches, 0, "{graph}: decision flips outside the f32 band");
+    }
+}
+
+#[test]
+fn fista_epoch_graph_solves_lasso() {
+    let Some(rt) = open_runtime() else { return };
+    let (n, p) = (64, 256);
+    let ds = SyntheticSpec { n, p, nnz: 20, ..Default::default() }.generate(9);
+    let pre = ds.precompute();
+    let lam = 0.4 * pre.lambda_max;
+    let lip = ds.x.spectral_norm_sq(100) * 1.01;
+    let art = rt.find("fista_epoch", n, p).expect("fista artifact").clone();
+    let x_rm = to_rowmajor(&ds.x);
+
+    let mut beta = vec![0.0; p];
+    let mut z = vec![0.0; p];
+    let mut t = vec![1.0];
+    let lam_l = [lam, lip];
+    let mask = vec![1.0; p];
+    let mut theta = vec![0.0; n];
+    for _ in 0..30 {
+        let out = rt
+            .execute(&art, &[&x_rm, &ds.y, &beta, &z, &t, &lam_l, &mask])
+            .expect("fista epoch");
+        beta = out[0].clone();
+        z = out[1].clone();
+        t = out[2].clone();
+        theta = out[3].clone();
+    }
+    // cross-check against the native CD solver
+    let active: Vec<usize> = (0..p).collect();
+    let mut beta_cd = vec![0.0; p];
+    let mut resid = ds.y.clone();
+    solve_cd(&ds.x, &ds.y, lam, &active, &pre.col_norms_sq, &mut beta_cd, &mut resid,
+             &CdOptions::default());
+    let mut max_err = 0.0f64;
+    for j in 0..p {
+        max_err = max_err.max((beta[j] - beta_cd[j]).abs());
+    }
+    assert!(max_err < 5e-3, "FISTA-in-XLA vs CD max err {max_err}");
+    // theta returned by the graph should be near the scaled residual
+    let mut max_terr = 0.0f64;
+    for i in 0..n {
+        max_terr = max_terr.max((theta[i] - resid[i] / lam).abs());
+    }
+    assert!(max_terr < 5e-3, "dual point mismatch {max_terr}");
+}
+
+#[test]
+fn lasso_stats_graph_reports_gap() {
+    let Some(rt) = open_runtime() else { return };
+    let (n, p) = (64, 256);
+    let ds = SyntheticSpec { n, p, nnz: 15, ..Default::default() }.generate(4);
+    let pre = ds.precompute();
+    let lam = 0.5 * pre.lambda_max;
+    let active: Vec<usize> = (0..p).collect();
+    let mut beta = vec![0.0; p];
+    let mut resid = ds.y.clone();
+    solve_cd(&ds.x, &ds.y, lam, &active, &pre.col_norms_sq, &mut beta, &mut resid,
+             &CdOptions::default());
+    let art = rt.find("lasso_stats", n, p).expect("stats artifact").clone();
+    let x_rm = to_rowmajor(&ds.x);
+    let out = rt.execute(&art, &[&x_rm, &ds.y, &beta, &[lam]]).expect("stats");
+    let stats = &out[0];
+    assert_eq!(stats.len(), 4);
+    let (primal, dual, gap, infeas) = (stats[0], stats[1], stats[2], stats[3]);
+    assert!(gap >= -1e-2, "gap {gap}");
+    assert!(gap < 1e-2 * primal.max(1.0), "gap {gap} primal {primal}");
+    assert!(infeas <= 1.0 + 1e-2, "infeas {infeas}");
+    assert!(dual <= primal + 1e-3);
+}
+
+#[test]
+fn power_iteration_graph_matches_native() {
+    let Some(rt) = open_runtime() else { return };
+    let (n, p) = (64, 256);
+    let ds = SyntheticSpec { n, p, nnz: 10, ..Default::default() }.generate(2);
+    let art = rt.find("power_iteration", n, p).expect("power artifact").clone();
+    let x_rm = to_rowmajor(&ds.x);
+    let v0 = vec![1.0; p];
+    let out = rt.execute(&art, &[&x_rm, &v0]).expect("power iteration");
+    let xla = out[0][0];
+    let native = ds.x.spectral_norm_sq(200);
+    assert!(
+        (xla - native).abs() / native < 1e-2,
+        "xla {xla} vs native {native}"
+    );
+}
+
+#[test]
+fn manifest_covers_all_graphs_and_shapes() {
+    let Some(rt) = open_runtime() else { return };
+    for graph in [
+        "sasvi_screen", "safe_screen", "dpp_screen", "strong_screen",
+        "fista_epoch", "lasso_stats", "power_iteration",
+    ] {
+        let shapes = rt.manifest().shapes(graph);
+        assert!(!shapes.is_empty(), "graph {graph} missing from manifest");
+        assert!(shapes.contains(&(64, 256)), "graph {graph} missing demo shape");
+    }
+}
