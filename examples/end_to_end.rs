@@ -22,7 +22,6 @@ use std::time::Instant;
 
 use sasvi::coordinator::{run_path, PathOptions, PathPlan};
 use sasvi::data::synthetic::SyntheticSpec;
-use sasvi::linalg::ops;
 use sasvi::metrics::fmt_secs;
 use sasvi::runtime::executor::to_rowmajor;
 use sasvi::runtime::Runtime;
@@ -96,7 +95,7 @@ fn main() {
             if keep[j] {
                 active.push(j);
             } else if beta[j] != 0.0 {
-                ops::axpy(beta[j], ds.x.col(j), &mut resid);
+                ds.x.axpy_col(beta[j], j, &mut resid);
                 beta[j] = 0.0;
             }
         }

@@ -1,0 +1,128 @@
+//! Bench: dense vs sparse design-matrix backends on the screening hot path.
+//!
+//! The screening statistics pass `X^T r` is the per-grid-point cost every
+//! rule pays (one dot product per feature per lambda). This bench generates
+//! the paper-scale synthetic design (250 x 10000) at a given density, times
+//! the pass on the CSC backend against its densified twin, and then times a
+//! full Sasvi-screened path on both backends — so the sparse speedup is
+//! measured, not asserted from flop counts.
+//!
+//! Env: SASVI_DENSITY (default 0.05), SASVI_GRID (default 30).
+//!
+//! At density <= 0.05 the stats pass must beat dense by >= 5x (the
+//! acceptance bar for the sparse subsystem); the bench exits nonzero if it
+//! does not.
+
+use std::time::Instant;
+
+use sasvi::coordinator::{run_path, PathOptions, PathPlan};
+use sasvi::data::synthetic::SyntheticSpec;
+use sasvi::linalg::DesignMatrix;
+use sasvi::metrics::Table;
+use sasvi::screening::RuleKind;
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Time `f` adaptively until it has run for at least `min_secs`.
+fn bench<F: FnMut()>(mut f: F, min_secs: f64) -> f64 {
+    f(); // warmup
+    let mut iters = 1u64;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        if dt >= min_secs {
+            return dt / iters as f64;
+        }
+        iters = (iters * 2).max((iters as f64 * min_secs / dt.max(1e-9)) as u64 + 1);
+    }
+}
+
+fn main() {
+    // clamp below 1.0: at density 1.0 the generator emits a dense design
+    // and there would be no sparse backend to compare
+    let density = env_f64("SASVI_DENSITY", 0.05).clamp(1e-4, 0.99);
+    let grid = env_usize("SASVI_GRID", 30);
+    let (n, p) = (250usize, 10_000usize);
+    println!("== sparse vs dense backends (n={n}, p={p}, density={density}) ==\n");
+
+    let spec = SyntheticSpec { n, p, nnz: 100, density, ..Default::default() };
+    let sparse_ds = spec.generate(7);
+    assert!(sparse_ds.x.is_sparse(), "bench requires a CSC design");
+    let mut dense_ds = sparse_ds.clone();
+    dense_ds.x = sparse_ds.x.to_dense().into();
+    println!(
+        "dataset: {} | nnz = {} ({:.2}% stored)",
+        sparse_ds.name,
+        sparse_ds.x.nnz(),
+        100.0 * sparse_ds.x.density()
+    );
+
+    let mut table = Table::new(&["benchmark", "dense", "sparse (csc)", "speedup"]);
+
+    // ---- the screening statistics pass X^T r --------------------------------
+    fn time_stats(x: &DesignMatrix, v: &[f64], out: &mut [f64]) -> f64 {
+        bench(
+            || {
+                x.t_matvec(std::hint::black_box(v), out);
+            },
+            0.5,
+        )
+    }
+    let mut out = vec![0.0; p];
+    let t_dense = time_stats(&dense_ds.x, &sparse_ds.y, &mut out);
+    let acc_dense = out[0];
+    let t_sparse = time_stats(&sparse_ds.x, &sparse_ds.y, &mut out);
+    let stats_speedup = t_dense / t_sparse;
+    assert!(
+        (acc_dense - out[0]).abs() < 1e-9 * acc_dense.abs().max(1.0),
+        "backends disagree on X^T r"
+    );
+    table.row(vec![
+        "stats pass X^T r".into(),
+        format!("{:.3} ms", t_dense * 1e3),
+        format!("{:.3} ms", t_sparse * 1e3),
+        format!("{stats_speedup:.1}x"),
+    ]);
+
+    // ---- one full-path run with Sasvi screening ------------------------------
+    let plan = PathPlan::linear_spaced(&sparse_ds, grid, 0.05);
+    let rd = run_path(&dense_ds, &plan, RuleKind::Sasvi, PathOptions::default());
+    let rs = run_path(&sparse_ds, &plan, RuleKind::Sasvi, PathOptions::default());
+    let (pd, ps) = (rd.total_time.as_secs_f64(), rs.total_time.as_secs_f64());
+    table.row(vec![
+        format!("Sasvi path ({grid} pts)"),
+        format!("{pd:.3} s"),
+        format!("{ps:.3} s"),
+        format!("{:.1}x", pd / ps.max(1e-12)),
+    ]);
+    // identical results regardless of backend
+    let max_diff = rd
+        .beta_final
+        .iter()
+        .zip(rs.beta_final.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    println!("{}", table.render());
+    println!("max |beta_dense - beta_sparse| at the last grid point: {max_diff:.2e}");
+    assert!(max_diff < 1e-6, "backends must produce the same path");
+
+    if density <= 0.05 {
+        assert!(
+            stats_speedup >= 5.0,
+            "sparse stats pass must beat dense by >= 5x at density {density} \
+             (measured {stats_speedup:.1}x)"
+        );
+        println!("\nacceptance: stats-pass speedup {stats_speedup:.1}x >= 5x at density {density} — OK");
+    } else {
+        println!("\n(no speedup bar enforced at density {density} > 0.05)");
+    }
+}

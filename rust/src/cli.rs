@@ -2,6 +2,8 @@
 //!
 //! ```text
 //! sasvi gen-data --preset synthetic100 --seed 7 --scale 0.1 --out ds.bin
+//! sasvi gen-data --preset sparse5 --seed 7 --scale 0.1 --out sparse.bin
+//! sasvi solve-path --libsvm data.txt --rule sasvi --grid 100
 //! sasvi solve-path --preset synthetic100 --rule sasvi --grid 100 --min-frac 0.05
 //! sasvi table1 --scale 0.05 --trials 3 [--grid 100]
 //! sasvi fig5 --scale 0.05 [--grid 100] [--csv out/]
@@ -80,7 +82,8 @@ USAGE: sasvi <command> [--flags]
 
 COMMANDS:
   gen-data      generate a dataset to a file (--preset --seed --scale --out)
-  solve-path    run one path (--preset|--data, --rule, --grid, --min-frac, --scale)
+  solve-path    run one path (--preset|--data|--libsvm, --rule, --grid,
+                --min-frac, --scale)
   table1        regenerate Table 1 (--scale --trials --grid)
   fig5          regenerate Fig 5 rejection curves (--scale --grid [--csv dir])
   sure-removal  Theorem-4 report (--preset --lam1-frac --top)
@@ -88,6 +91,11 @@ COMMANDS:
   runtime-info  list + warm PJRT artifacts (--artifacts DIR)
   run           run an experiment config (--config FILE)
   help          this message
+
+PRESETS: synthetic100/1000/5000 (dense), sparseP for P% density CSC
+         (e.g. sparse5), mnist-like, pie-like. Datasets can also be loaded
+         from the binary cache (--data FILE) or libsvm text (--libsvm FILE);
+         every command runs on dense or sparse storage transparently.
 ";
 
 /// Entry point. Returns the process exit code.
@@ -118,6 +126,10 @@ pub fn run(args: &[String]) -> Result<i32> {
 }
 
 fn load_dataset(flags: &Flags) -> Result<crate::data::Dataset> {
+    if let Some(path) = flags.get("libsvm") {
+        let min_features = flags.usize_or("min-features", 0)?;
+        return dataio::load_libsvm(path, min_features);
+    }
     if let Some(path) = flags.get("data") {
         return dataio::load(path);
     }
@@ -414,6 +426,34 @@ mod tests {
         let code = run(&s(&[
             "solve-path", "--preset", "synthetic100", "--scale", "0.01",
             "--grid", "5", "--rule", "sasvi",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn solve_path_sparse_preset_smoke() {
+        let code = run(&s(&[
+            "solve-path", "--preset", "sparse5", "--scale", "0.01",
+            "--grid", "5", "--rule", "sasvi",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn solve_path_libsvm_smoke() {
+        let dir = std::env::temp_dir().join("sasvi_cli_libsvm");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("toy.txt");
+        std::fs::write(
+            &path,
+            "1.0 1:0.8 2:0.1\n-1.0 2:0.9 3:0.2\n0.5 1:0.3 3:0.7\n2.0 1:0.5 4:1.0\n",
+        )
+        .unwrap();
+        let code = run(&s(&[
+            "solve-path", "--libsvm", path.to_str().unwrap(), "--grid", "4",
+            "--rule", "sasvi",
         ]))
         .unwrap();
         assert_eq!(code, 0);

@@ -1,15 +1,17 @@
 //! The `Dataset` container and the path-level precomputations every
 //! screening rule shares.
 
-use crate::linalg::{ops, DenseMatrix};
+use crate::linalg::{ops, DesignMatrix};
 
 /// A regression problem `y ~ X beta` plus metadata. Columns of `x` are
 /// features; generators normalize them to unit norm (standard practice for
-//  Lasso screening, and what the paper's experiments do).
+/// Lasso screening, and what the paper's experiments do). The design matrix
+/// may be dense or sparse ([`DesignMatrix`]) — solvers, screening rules and
+/// the coordinator accept either backend transparently.
 #[derive(Clone, Debug)]
 pub struct Dataset {
     pub name: String,
-    pub x: DenseMatrix,
+    pub x: DesignMatrix,
     pub y: Vec<f64>,
     /// Ground-truth coefficients when the data is synthetic (for diagnostics
     /// like support recovery; never used by solvers or rules).
@@ -52,7 +54,7 @@ impl Dataset {
         // coherence that drives screening behaviour.
         let mut adj = 0.0;
         for j in 1..p {
-            let c = ops::dot(self.x.col(j - 1), self.x.col(j));
+            let c = self.x.dot_cols(j - 1, j);
             let d = (norms[j - 1] * norms[j]).sqrt();
             if d > 0.0 {
                 adj += (c / d).abs();
@@ -64,6 +66,7 @@ impl Dataset {
             mean_col_norm_sq: mean_norm,
             mean_adjacent_abs_corr: if p > 1 { adj / (p - 1) as f64 } else { 0.0 },
             lambda_max: self.lambda_max(),
+            density: self.x.density(),
         }
     }
 }
@@ -86,15 +89,17 @@ pub struct DatasetSummary {
     pub mean_col_norm_sq: f64,
     pub mean_adjacent_abs_corr: f64,
     pub lambda_max: f64,
+    /// stored-entry fraction of the design matrix (1.0 for dense storage)
+    pub density: f64,
 }
 
 impl std::fmt::Display for DatasetSummary {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "n={} p={} mean||x_j||^2={:.4} mean|corr_adj|={:.4} lambda_max={:.4}",
+            "n={} p={} mean||x_j||^2={:.4} mean|corr_adj|={:.4} lambda_max={:.4} density={:.3}",
             self.n, self.p, self.mean_col_norm_sq, self.mean_adjacent_abs_corr,
-            self.lambda_max
+            self.lambda_max, self.density
         )
     }
 }

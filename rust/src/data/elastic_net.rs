@@ -9,21 +9,47 @@
 //! the safety guarantees carry over with no new math.
 
 use crate::data::Dataset;
-use crate::linalg::DenseMatrix;
+use crate::linalg::{CscMatrix, DenseMatrix, DesignMatrix};
 
 /// Build the augmented Lasso dataset equivalent to the elastic net with
-/// ridge weight `alpha` on `ds`.
+/// ridge weight `alpha` on `ds`. The augmentation preserves the storage
+/// backend: a sparse design stays sparse (the ridge block adds exactly one
+/// entry per column), so elastic-net paths on CSC data keep the sparse
+/// speedups.
 pub fn augment(ds: &Dataset, alpha: f64) -> Dataset {
     assert!(alpha >= 0.0, "ridge weight must be nonnegative");
     let n = ds.n();
     let p = ds.p();
     let s = alpha.sqrt();
-    let mut x = DenseMatrix::zeros(n + p, p);
-    for j in 0..p {
-        let col = x.col_mut(j);
-        col[..n].copy_from_slice(ds.x.col(j));
-        col[n + j] = s;
-    }
+    let x: DesignMatrix = match &ds.x {
+        DesignMatrix::Dense(m) => {
+            let mut x = DenseMatrix::zeros(n + p, p);
+            for j in 0..p {
+                let col = x.col_mut(j);
+                col[..n].copy_from_slice(m.col(j));
+                col[n + j] = s;
+            }
+            x.into()
+        }
+        DesignMatrix::Sparse(m) => {
+            let extra = if s != 0.0 { p } else { 0 };
+            let mut indptr = Vec::with_capacity(p + 1);
+            indptr.push(0);
+            let mut indices = Vec::with_capacity(m.nnz() + extra);
+            let mut values = Vec::with_capacity(m.nnz() + extra);
+            for j in 0..p {
+                let (rows, vals) = m.col(j);
+                indices.extend_from_slice(rows);
+                values.extend_from_slice(vals);
+                if s != 0.0 {
+                    indices.push(n + j);
+                    values.push(s);
+                }
+                indptr.push(indices.len());
+            }
+            CscMatrix::from_parts(n + p, p, indptr, indices, values).into()
+        }
+    };
     let mut y = vec![0.0; n + p];
     y[..n].copy_from_slice(&ds.y);
     Dataset {
@@ -63,12 +89,10 @@ mod tests {
         let beta = &r.beta_final;
         let mut resid = ds.y.clone();
         for j in 0..ds.p() {
-            if beta[j] != 0.0 {
-                ops::axpy(-beta[j], ds.x.col(j), &mut resid);
-            }
+            ds.x.axpy_col(-beta[j], j, &mut resid);
         }
         for j in 0..ds.p() {
-            let g = ops::dot(ds.x.col(j), &resid) - alpha * beta[j];
+            let g = ds.x.col_dot(j, &resid) - alpha * beta[j];
             if beta[j] == 0.0 {
                 assert!(g.abs() <= lam * (1.0 + 1e-5) + 1e-5, "j={j} g={g}");
             } else {
@@ -116,6 +140,28 @@ mod tests {
         let n_l = ops::nrm2(&lasso.beta_final);
         let n_e = ops::nrm2(&en.beta_final);
         assert!(n_e <= n_l + 1e-9, "EN norm {n_e} vs Lasso norm {n_l}");
+    }
+
+    /// A sparse base problem keeps a sparse augmented design, identical
+    /// (after densification) to augmenting the dense twin.
+    #[test]
+    fn sparse_augmentation_stays_sparse_and_matches_dense() {
+        let ds = SyntheticSpec {
+            n: 20,
+            p: 30,
+            nnz: 5,
+            density: 0.2,
+            ..Default::default()
+        }
+        .generate(3);
+        let aug = augment(&ds, 0.7);
+        assert!(aug.x.is_sparse());
+        let mut dense_base = ds.clone();
+        dense_base.x = ds.x.to_dense().into();
+        let aug_d = augment(&dense_base, 0.7);
+        assert!(!aug_d.x.is_sparse());
+        assert_eq!(aug.x.to_dense(), aug_d.x.to_dense());
+        assert_eq!(aug.y, aug_d.y);
     }
 
     #[test]

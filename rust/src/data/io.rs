@@ -1,29 +1,49 @@
-//! Binary dataset serialization.
+//! Dataset serialization: the binary cache format (dense v1 + sparse v2)
+//! and a libsvm-format text reader.
 //!
-//! Simple little-endian format so generated datasets can be cached on disk
-//! and shared between the CLI, benches, and the screening service:
+//! ## Binary format
+//!
+//! Simple little-endian layout so generated datasets can be cached on disk
+//! and shared between the CLI, benches, and the screening service. Dense
+//! datasets are written in the original v1 layout (unchanged, so old cache
+//! files stay readable); sparse datasets use the v2 magic with a CSC body:
 //!
 //! ```text
-//! magic  "SASVIDS1"                    8 bytes
-//! n, p   u64 le                        16 bytes
-//! flags  u64 le (bit0: has beta_true)  8 bytes
-//! seed   u64 le                        8 bytes
+//! magic  "SASVIDS1" (dense) | "SASVIDS2" (sparse)   8 bytes
+//! n, p   u64 le                                     16 bytes
+//! flags  u64 le (bit0: has beta_true)               8 bytes
+//! seed   u64 le                                     8 bytes
 //! name   u64 le length + utf-8 bytes
-//! x      n*p f64 le (column-major)
+//! x      v1: n*p f64 le (column-major)
+//!        v2: nnz u64, indptr (p+1) u64, indices (nnz) u64, values (nnz) f64
 //! y      n   f64 le
 //! beta   p   f64 le (if flag bit0)
 //! ```
+//!
+//! ## libsvm text format
+//!
+//! [`load_libsvm`] reads the standard sparse text format used by the real
+//! datasets the paper's screening rules target:
+//!
+//! ```text
+//! <label> <index>:<value> <index>:<value> ...   # optional comment
+//! ```
+//!
+//! One sample per line, 1-based feature indices, arbitrary whitespace
+//! between tokens. The result is a [`Dataset`] with a CSC design matrix
+//! (rows = samples, columns = features) and `y` = the labels.
 
 use std::fs::File;
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
 use crate::data::Dataset;
-use crate::linalg::DenseMatrix;
+use crate::linalg::{CscMatrix, DenseMatrix, DesignMatrix};
 
-const MAGIC: &[u8; 8] = b"SASVIDS1";
+const MAGIC_DENSE: &[u8; 8] = b"SASVIDS1";
+const MAGIC_SPARSE: &[u8; 8] = b"SASVIDS2";
 
 fn write_u64(w: &mut impl Write, v: u64) -> Result<()> {
     w.write_all(&v.to_le_bytes())?;
@@ -44,6 +64,13 @@ fn write_f64s(w: &mut impl Write, xs: &[f64]) -> Result<()> {
     Ok(())
 }
 
+fn write_u64s(w: &mut impl Write, xs: &[usize]) -> Result<()> {
+    for &x in xs {
+        w.write_all(&(x as u64).to_le_bytes())?;
+    }
+    Ok(())
+}
+
 fn read_f64s(r: &mut impl Read, n: usize) -> Result<Vec<f64>> {
     let mut bytes = vec![0u8; n * 8];
     r.read_exact(&mut bytes)?;
@@ -53,19 +80,40 @@ fn read_f64s(r: &mut impl Read, n: usize) -> Result<Vec<f64>> {
         .collect())
 }
 
-/// Serialize a dataset to the given path.
+fn read_u64s(r: &mut impl Read, n: usize) -> Result<Vec<usize>> {
+    let mut bytes = vec![0u8; n * 8];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()) as usize)
+        .collect())
+}
+
+/// Serialize a dataset to the given path. Dense designs use the v1 layout,
+/// sparse designs the v2 CSC layout; [`load`] reads both.
 pub fn save(ds: &Dataset, path: impl AsRef<Path>) -> Result<()> {
     let f = File::create(path.as_ref())
         .with_context(|| format!("create {}", path.as_ref().display()))?;
     let mut w = BufWriter::new(f);
-    w.write_all(MAGIC)?;
+    match &ds.x {
+        DesignMatrix::Dense(_) => w.write_all(MAGIC_DENSE)?,
+        DesignMatrix::Sparse(_) => w.write_all(MAGIC_SPARSE)?,
+    }
     write_u64(&mut w, ds.n() as u64)?;
     write_u64(&mut w, ds.p() as u64)?;
     write_u64(&mut w, ds.beta_true.is_some() as u64)?;
     write_u64(&mut w, ds.seed)?;
     write_u64(&mut w, ds.name.len() as u64)?;
     w.write_all(ds.name.as_bytes())?;
-    write_f64s(&mut w, ds.x.as_slice())?;
+    match &ds.x {
+        DesignMatrix::Dense(m) => write_f64s(&mut w, m.as_slice())?,
+        DesignMatrix::Sparse(m) => {
+            write_u64(&mut w, m.nnz() as u64)?;
+            write_u64s(&mut w, m.indptr())?;
+            write_u64s(&mut w, m.indices())?;
+            write_f64s(&mut w, m.values())?;
+        }
+    }
     write_f64s(&mut w, &ds.y)?;
     if let Some(beta) = &ds.beta_true {
         write_f64s(&mut w, beta)?;
@@ -74,20 +122,30 @@ pub fn save(ds: &Dataset, path: impl AsRef<Path>) -> Result<()> {
     Ok(())
 }
 
-/// Load a dataset from the given path.
+/// Load a dataset (either format) from the given path.
 pub fn load(path: impl AsRef<Path>) -> Result<Dataset> {
     let f = File::open(path.as_ref())
         .with_context(|| format!("open {}", path.as_ref().display()))?;
     let mut r = BufReader::new(f);
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        bail!("not a sasvi dataset file (bad magic)");
-    }
+    let sparse = match &magic {
+        m if m == MAGIC_DENSE => false,
+        m if m == MAGIC_SPARSE => true,
+        _ => bail!("not a sasvi dataset file (bad magic)"),
+    };
     let n = read_u64(&mut r)? as usize;
     let p = read_u64(&mut r)? as usize;
-    if n == 0 || p == 0 || n.saturating_mul(p) > (1 << 34) {
+    if n == 0 || p == 0 {
         bail!("implausible dataset dims n={n} p={p}");
+    }
+    // the n*p bound only applies to dense storage — sparse files exist
+    // precisely so that huge n*p with small nnz stays loadable
+    if !sparse && n.saturating_mul(p) > (1 << 34) {
+        bail!("implausible dense dataset dims n={n} p={p}");
+    }
+    if sparse && (n > (1 << 40) || p > (1 << 40)) {
+        bail!("implausible sparse dataset dims n={n} p={p}");
     }
     let flags = read_u64(&mut r)?;
     let seed = read_u64(&mut r)?;
@@ -98,7 +156,21 @@ pub fn load(path: impl AsRef<Path>) -> Result<Dataset> {
     let mut name_bytes = vec![0u8; name_len];
     r.read_exact(&mut name_bytes)?;
     let name = String::from_utf8(name_bytes).context("dataset name not utf-8")?;
-    let x = DenseMatrix::from_vec(n, p, read_f64s(&mut r, n * p)?);
+    let x: DesignMatrix = if sparse {
+        let nnz = read_u64(&mut r)? as usize;
+        if nnz > n.saturating_mul(p) || nnz > (1 << 34) {
+            bail!("implausible nnz {nnz} for {n} x {p}");
+        }
+        let indptr = read_u64s(&mut r, p + 1)?;
+        let indices = read_u64s(&mut r, nnz)?;
+        let values = read_f64s(&mut r, nnz)?;
+        // untrusted input: validate instead of panicking on corrupt files
+        CscMatrix::try_from_parts(n, p, indptr, indices, values)
+            .map_err(|e| anyhow::anyhow!("corrupt CSC body: {e}"))?
+            .into()
+    } else {
+        DenseMatrix::from_vec(n, p, read_f64s(&mut r, n * p)?).into()
+    };
     let y = read_f64s(&mut r, n)?;
     let beta_true = if flags & 1 != 0 {
         Some(read_f64s(&mut r, p)?)
@@ -106,6 +178,81 @@ pub fn load(path: impl AsRef<Path>) -> Result<Dataset> {
         None
     };
     Ok(Dataset { name, x, y, beta_true, seed })
+}
+
+/// Read a libsvm-format text file (see the module docs for the layout).
+///
+/// `min_features` pads the column count (libsvm files omit trailing
+/// all-zero features); pass 0 to size by the largest index present.
+pub fn load_libsvm(path: impl AsRef<Path>, min_features: usize) -> Result<Dataset> {
+    let f = File::open(path.as_ref())
+        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    let r = BufReader::new(f);
+    let mut labels = Vec::new();
+    // entries of the current sample, collected row-wise
+    let mut rows: Vec<Vec<(usize, f64)>> = Vec::new();
+    let mut max_index = 0usize;
+    for (lineno, line) in r.lines().enumerate() {
+        let line = line?;
+        let body = line.split('#').next().unwrap_or("").trim();
+        if body.is_empty() {
+            continue;
+        }
+        let mut toks = body.split_whitespace();
+        let label: f64 = toks
+            .next()
+            .unwrap()
+            .parse()
+            .with_context(|| format!("line {}: bad label", lineno + 1))?;
+        let mut entries = Vec::new();
+        for tok in toks {
+            let (idx, val) = tok
+                .split_once(':')
+                .with_context(|| format!("line {}: expected index:value, got {tok:?}", lineno + 1))?;
+            let idx: usize = idx
+                .trim()
+                .parse()
+                .with_context(|| format!("line {}: bad index {idx:?}", lineno + 1))?;
+            if idx == 0 {
+                bail!("line {}: libsvm indices are 1-based", lineno + 1);
+            }
+            let val: f64 = val
+                .trim()
+                .parse()
+                .with_context(|| format!("line {}: bad value {val:?}", lineno + 1))?;
+            max_index = max_index.max(idx);
+            entries.push((idx - 1, val));
+        }
+        labels.push(label);
+        rows.push(entries);
+    }
+    if labels.is_empty() {
+        bail!("libsvm file {} has no samples", path.as_ref().display());
+    }
+    let n = labels.len();
+    let p = max_index.max(min_features);
+    if p == 0 {
+        bail!("libsvm file {} has no features", path.as_ref().display());
+    }
+    let mut triplets = Vec::with_capacity(rows.iter().map(Vec::len).sum::<usize>());
+    for (i, entries) in rows.iter().enumerate() {
+        for &(j, v) in entries {
+            triplets.push((i, j, v));
+        }
+    }
+    let x = CscMatrix::from_triplets(n, p, &triplets);
+    let name = path
+        .as_ref()
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "libsvm".into());
+    Ok(Dataset {
+        name: format!("libsvm:{name}"),
+        x: x.into(),
+        y: labels,
+        beta_true: None,
+        seed: 0,
+    })
 }
 
 #[cfg(test)]
@@ -130,6 +277,55 @@ mod tests {
     }
 
     #[test]
+    fn roundtrip_sparse() {
+        let ds = SyntheticSpec {
+            n: 40,
+            p: 60,
+            nnz: 6,
+            density: 0.1,
+            ..Default::default()
+        }
+        .generate(5);
+        assert!(ds.x.is_sparse());
+        let dir = std::env::temp_dir().join("sasvi_io_test_sparse");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ds.bin");
+        save(&ds, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert!(back.x.is_sparse());
+        assert_eq!(back.x, ds.x);
+        assert_eq!(back.y, ds.y);
+        assert_eq!(back.beta_true, ds.beta_true);
+        assert_eq!(back.name, ds.name);
+    }
+
+    #[test]
+    fn corrupt_sparse_body_errors_instead_of_panicking() {
+        // hand-craft a v2 file whose CSC body has an out-of-range row index
+        let dir = std::env::temp_dir().join("sasvi_io_corrupt_sparse");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        let f = File::create(&path).unwrap();
+        let mut w = BufWriter::new(f);
+        w.write_all(MAGIC_SPARSE).unwrap();
+        write_u64(&mut w, 2).unwrap(); // n
+        write_u64(&mut w, 1).unwrap(); // p
+        write_u64(&mut w, 0).unwrap(); // flags
+        write_u64(&mut w, 0).unwrap(); // seed
+        write_u64(&mut w, 1).unwrap(); // name len
+        w.write_all(b"t").unwrap();
+        write_u64(&mut w, 1).unwrap(); // nnz
+        write_u64s(&mut w, &[0, 1]).unwrap(); // indptr
+        write_u64s(&mut w, &[5]).unwrap(); // row 5 out of range for n=2
+        write_f64s(&mut w, &[1.0]).unwrap();
+        write_f64s(&mut w, &[0.0, 0.0]).unwrap(); // y
+        w.flush().unwrap();
+        drop(w);
+        let err = load(&path).unwrap_err();
+        assert!(err.to_string().contains("corrupt CSC body"), "{err}");
+    }
+
+    #[test]
     fn rejects_garbage() {
         let dir = std::env::temp_dir().join("sasvi_io_test2");
         std::fs::create_dir_all(&dir).unwrap();
@@ -149,6 +345,64 @@ mod tests {
         save(&ds, &path).unwrap();
         let back = load(&path).unwrap();
         assert!(back.beta_true.is_none());
+        assert_eq!(back.y, ds.y);
+    }
+
+    #[test]
+    fn libsvm_reader_parses_standard_lines() {
+        let dir = std::env::temp_dir().join("sasvi_io_libsvm");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("toy.txt");
+        std::fs::write(
+            &path,
+            "1.5 1:0.25 3:-2.0  # a comment\n\
+             -0.5 2:1.0\n\
+             \n\
+             2.0 1:4.0 4:0.5\n",
+        )
+        .unwrap();
+        let ds = load_libsvm(&path, 0).unwrap();
+        assert_eq!(ds.n(), 3);
+        assert_eq!(ds.p(), 4);
+        assert_eq!(ds.y, vec![1.5, -0.5, 2.0]);
+        assert!(ds.x.is_sparse());
+        assert_eq!(ds.x.nnz(), 5);
+        assert_eq!(ds.x.get(0, 0), 0.25);
+        assert_eq!(ds.x.get(0, 2), -2.0);
+        assert_eq!(ds.x.get(1, 1), 1.0);
+        assert_eq!(ds.x.get(2, 0), 4.0);
+        assert_eq!(ds.x.get(2, 3), 0.5);
+        assert_eq!(ds.x.get(1, 3), 0.0);
+    }
+
+    #[test]
+    fn libsvm_reader_pads_feature_count_and_rejects_bad_input() {
+        let dir = std::env::temp_dir().join("sasvi_io_libsvm2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("pad.txt");
+        std::fs::write(&path, "1.0 1:2.0\n").unwrap();
+        let ds = load_libsvm(&path, 10).unwrap();
+        assert_eq!(ds.p(), 10);
+
+        let bad = dir.join("bad.txt");
+        std::fs::write(&bad, "1.0 0:2.0\n").unwrap();
+        assert!(load_libsvm(&bad, 0).is_err(), "0-based index must be rejected");
+        let bad2 = dir.join("bad2.txt");
+        std::fs::write(&bad2, "1.0 x:2.0\n").unwrap();
+        assert!(load_libsvm(&bad2, 0).is_err());
+    }
+
+    #[test]
+    fn libsvm_roundtrips_through_binary_cache() {
+        let dir = std::env::temp_dir().join("sasvi_io_libsvm3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("toy.txt");
+        std::fs::write(&path, "1.0 1:1.0 2:2.0\n0.0 3:3.0\n").unwrap();
+        let ds = load_libsvm(&path, 0).unwrap();
+        let bin = dir.join("toy.bin");
+        save(&ds, &bin).unwrap();
+        let back = load(&bin).unwrap();
+        assert_eq!(back.x, ds.x);
         assert_eq!(back.y, ds.y);
     }
 }

@@ -127,7 +127,7 @@ impl MnistLikeSpec {
         x.normalize_columns();
         Dataset {
             name: format!("mnist-like(n={n},p={p})"),
-            x,
+            x: x.into(),
             y,
             beta_true: None,
             seed,
@@ -143,8 +143,9 @@ mod tests {
     #[test]
     fn columns_nonnegative_and_unit_norm() {
         let ds = MnistLikeSpec::scaled(0.01).generate(3);
+        let x = ds.x.as_dense().unwrap();
         for j in 0..ds.p() {
-            let col = ds.x.col(j);
+            let col = x.col(j);
             assert!(col.iter().all(|&v| v >= 0.0), "col {j} has negatives");
             let nrm = ops::nrm2(col);
             assert!((nrm - 1.0).abs() < 1e-9, "col {j} norm {nrm}");
@@ -160,7 +161,7 @@ mod tests {
         let mut inter = (0.0, 0usize);
         for a in 0..60 {
             for b in (a + 1)..60 {
-                let c = ops::dot(ds.x.col(a), ds.x.col(b));
+                let c = ds.x.dot_cols(a, b);
                 if a % classes == b % classes {
                     intra.0 += c;
                     intra.1 += 1;

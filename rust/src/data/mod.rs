@@ -1,7 +1,33 @@
-//! Datasets: the paper's synthetic benchmark plus simulated stand-ins for
-//! the MNIST and PIE image regressions (see DESIGN.md §2 for why the
-//! substitutions preserve the screening-relevant structure), binary
-//! serialization, and a name-based registry used by the CLI and benches.
+//! Datasets: the paper's synthetic benchmark (dense AR(1) and genuinely
+//! sparse variants), simulated stand-ins for the MNIST and PIE image
+//! regressions (see DESIGN.md §2 for why the substitutions preserve the
+//! screening-relevant structure), binary serialization, a libsvm-format
+//! text reader, and a name-based registry used by the CLI, server and
+//! benches.
+//!
+//! ## Storage backends
+//!
+//! Every generator produces a [`Dataset`] whose design matrix is a
+//! [`crate::linalg::DesignMatrix`] — dense column-major or sparse CSC.
+//! Solvers, screening rules, the coordinator, and the screening service
+//! accept either backend transparently; the choice is made here, at data
+//! level:
+//!
+//! * [`synthetic::SyntheticSpec`] with `density = 1.0` (default) emits the
+//!   paper's dense AR(1) design; `density < 1.0` emits CSC columns with
+//!   `round(density * n)` Gaussian nonzeros each.
+//! * [`io::load_libsvm`] reads the standard `label idx:val ...` sparse
+//!   text format (1-based indices, `#` comments) straight into CSC.
+//! * [`io::save`] / [`io::load`] cache either backend in a binary format
+//!   (dense v1 files from earlier builds remain readable).
+//!
+//! ## Presets
+//!
+//! Named presets cover the paper's experiments plus sparse variants:
+//! `synthetic100/1000/5000` (dense, §5), `sparseP` for `P` percent density
+//! (e.g. `sparse5` = 250 x 10000 at 5% nonzeros), and `mnist-like` /
+//! `pie-like`. `Preset::parse` also accepts the `mnist` / `pie` aliases;
+//! `parse(p.name())` is an identity for every preset.
 
 pub mod dataset;
 pub mod elastic_net;
@@ -20,6 +46,9 @@ use crate::Result;
 pub enum Preset {
     /// Paper §5 synthetic, X ~ 250 x 10000, corr 0.5^|i-j|, pbar nonzeros.
     Synthetic { pbar: usize },
+    /// Sparse synthetic, X ~ 250 x 10000 CSC with `density_pct`% nonzeros
+    /// per column (the text/image regime sparse screening targets).
+    SparseSynthetic { density_pct: usize },
     /// MNIST-like regression: digit-blob dictionary, 784 x 50000.
     MnistLike,
     /// PIE-like regression: low-rank face dictionary, 1024 x 11553.
@@ -34,13 +63,21 @@ impl Preset {
             "synthetic5000" => Some(Preset::Synthetic { pbar: 5000 }),
             "mnist" | "mnist-like" => Some(Preset::MnistLike),
             "pie" | "pie-like" => Some(Preset::PieLike),
-            _ => None,
+            _ => {
+                let pct: usize = name.strip_prefix("sparse")?.parse().ok()?;
+                if (1..100).contains(&pct) {
+                    Some(Preset::SparseSynthetic { density_pct: pct })
+                } else {
+                    None
+                }
+            }
         }
     }
 
     pub fn name(&self) -> String {
         match self {
             Preset::Synthetic { pbar } => format!("synthetic{pbar}"),
+            Preset::SparseSynthetic { density_pct } => format!("sparse{density_pct}"),
             Preset::MnistLike => "mnist-like".into(),
             Preset::PieLike => "pie-like".into(),
         }
@@ -59,12 +96,23 @@ impl Preset {
                 };
                 spec.generate(seed)
             }
+            Preset::SparseSynthetic { density_pct } => {
+                let spec = synthetic::SyntheticSpec {
+                    n: ((250.0 * s) as usize).max(8),
+                    p: ((10_000.0 * s) as usize).max(16),
+                    nnz: ((100.0 * s) as usize).max(1),
+                    density: density_pct as f64 / 100.0,
+                    ..Default::default()
+                };
+                spec.generate(seed)
+            }
             Preset::MnistLike => mnist_like::MnistLikeSpec::scaled(s).generate(seed),
             Preset::PieLike => pie_like::PieLikeSpec::scaled(s).generate(seed),
         };
         Ok(ds)
     }
 
+    /// The paper's five experiment presets (the Table-1 / Fig-5 columns).
     pub fn all() -> Vec<Preset> {
         vec![
             Preset::Synthetic { pbar: 100 },
@@ -74,6 +122,17 @@ impl Preset {
             Preset::PieLike,
         ]
     }
+
+    /// Every named preset, including the sparse registry entries.
+    pub fn all_extended() -> Vec<Preset> {
+        let mut v = Self::all();
+        v.extend([
+            Preset::SparseSynthetic { density_pct: 1 },
+            Preset::SparseSynthetic { density_pct: 5 },
+            Preset::SparseSynthetic { density_pct: 10 },
+        ]);
+        v
+    }
 }
 
 #[cfg(test)]
@@ -81,14 +140,18 @@ mod tests {
     use super::*;
 
     #[test]
-    fn preset_roundtrip_names() {
-        for p in Preset::all() {
-            let name = p.name();
-            let name = if name == "mnist-like" { "mnist" } else { &name };
-            let name = if name == "pie-like" { "pie" } else { name };
-            assert_eq!(Preset::parse(name), Some(p));
+    fn preset_name_parse_roundtrip_is_identity() {
+        // `parse(p.name())` must be an identity for every registered preset
+        // (canonical names; the `mnist` / `pie` aliases are extra inputs).
+        for p in Preset::all_extended() {
+            assert_eq!(Preset::parse(&p.name()), Some(p), "preset {}", p.name());
         }
+        assert_eq!(Preset::parse("mnist"), Some(Preset::MnistLike));
+        assert_eq!(Preset::parse("pie"), Some(Preset::PieLike));
         assert_eq!(Preset::parse("nope"), None);
+        assert_eq!(Preset::parse("sparse0"), None);
+        assert_eq!(Preset::parse("sparse100"), None);
+        assert_eq!(Preset::parse("sparsex"), None);
     }
 
     #[test]
@@ -98,6 +161,18 @@ mod tests {
             .unwrap();
         assert!(ds.x.nrows() >= 8);
         assert!(ds.x.ncols() >= 16);
+        assert_eq!(ds.y.len(), ds.x.nrows());
+    }
+
+    #[test]
+    fn sparse_preset_generates_csc() {
+        let ds = Preset::SparseSynthetic { density_pct: 5 }
+            .generate(1, 0.05)
+            .unwrap();
+        assert!(ds.x.is_sparse());
+        // at tiny scales the per-column floor of 1 nonzero dominates; just
+        // check the matrix is genuinely sparse
+        assert!(ds.x.density() < 0.2, "density {}", ds.x.density());
         assert_eq!(ds.y.len(), ds.x.nrows());
     }
 }

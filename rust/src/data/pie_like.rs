@@ -128,7 +128,7 @@ impl PieLikeSpec {
         x.normalize_columns();
         Dataset {
             name: format!("pie-like(n={n},p={p})"),
-            x,
+            x: x.into(),
             y,
             beta_true: None,
             seed,
@@ -149,7 +149,7 @@ mod tests {
         let mut cnt = 0;
         for a in 0..30 {
             for b in (a + 1)..30 {
-                acc += ops::dot(ds.x.col(a), ds.x.col(b));
+                acc += ds.x.dot_cols(a, b);
                 cnt += 1;
             }
         }
@@ -160,9 +160,10 @@ mod tests {
     #[test]
     fn columns_unit_norm_nonnegative() {
         let ds = PieLikeSpec::scaled(0.005).generate(1);
+        let x = ds.x.as_dense().unwrap();
         for j in 0..ds.p() {
-            assert!((ops::nrm2(ds.x.col(j)) - 1.0).abs() < 1e-9);
-            assert!(ds.x.col(j).iter().all(|&v| v >= 0.0));
+            assert!((ops::nrm2(x.col(j)) - 1.0).abs() < 1e-9);
+            assert!(x.col(j).iter().all(|&v| v >= 0.0));
         }
     }
 

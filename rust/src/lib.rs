@@ -16,6 +16,18 @@
 //! Python never runs at request time; the `sasvi` binary is self-contained
 //! once `artifacts/` is built.
 //!
+//! ## Storage backends
+//!
+//! The design matrix sits behind the [`linalg::DesignMatrix`] abstraction
+//! — dense column-major or sparse CSC ([`linalg::CscMatrix`]) — and every
+//! layer above it (solvers, rules, coordinator, service) is
+//! storage-agnostic. Sparse designs come from the `density` knob of
+//! [`data::synthetic::SyntheticSpec`], the libsvm reader
+//! [`data::io::load_libsvm`], or the `sparseP` presets; on the 1–10%
+//! densities real text/image data exhibits, the per-feature screening
+//! statistics pass runs an order of magnitude faster than dense (measured
+//! in `benches/sparse.rs`).
+//!
 //! ## Quickstart
 //!
 //! ```no_run

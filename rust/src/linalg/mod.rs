@@ -1,17 +1,23 @@
-//! Dense linear algebra substrate.
+//! Linear algebra substrate.
 //!
 //! Everything the solvers and screening rules need, implemented directly (no
-//! BLAS available offline): a column-major dense matrix type, level-1 ops
-//! with manual unrolling, blocked `X^T v` / `X v` products, and a small
-//! Cholesky for general covariance sampling.
+//! BLAS available offline): a column-major dense matrix type, a CSC sparse
+//! matrix, level-1 ops with manual unrolling, blocked `X^T v` / `X v`
+//! products, and a small Cholesky for general covariance sampling.
 //!
-//! Column-major is the only sane layout here: Lasso solvers and screening
-//! rules touch *columns* (features) of the design matrix, never rows.
+//! Column-oriented storage is the only sane choice here: Lasso solvers and
+//! screening rules touch *columns* (features) of the design matrix, never
+//! rows. [`DesignMatrix`] is the unified column-level API over both
+//! backends that the rest of the crate consumes — see [`design`].
 
 pub mod chol;
 pub mod dense;
+pub mod design;
 pub mod ops;
+pub mod sparse;
 
 pub use chol::Cholesky;
 pub use dense::DenseMatrix;
+pub use design::DesignMatrix;
 pub use ops::{axpy, dot, gemv, gemv_t, nrm2, nrm2sq, scal};
+pub use sparse::CscMatrix;

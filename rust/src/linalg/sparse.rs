@@ -1,0 +1,509 @@
+//! Compressed-sparse-column (CSC) matrix.
+//!
+//! The screening rules and the coordinate-descent solver touch *columns*
+//! (features) of the design matrix, so CSC is the storage that makes the
+//! per-feature dot products — the dominant cost of the whole system — scale
+//! with the number of nonzeros instead of `n`. On the text/image datasets
+//! the paper targets (densities of 1–10%), that is a 10–100x reduction in
+//! memory traffic for the statistics pass `X^T r`.
+//!
+//! Layout: column `j` occupies `indptr[j] .. indptr[j+1]` of the parallel
+//! `indices` (row ids, strictly ascending within a column) and `values`
+//! arrays. The invariants are checked once at construction; every hot loop
+//! relies on them without re-validation.
+
+use crate::linalg::DenseMatrix;
+
+/// An `n x p` sparse matrix in CSC format.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CscMatrix {
+    n: usize,
+    p: usize,
+    indptr: Vec<usize>,
+    indices: Vec<usize>,
+    values: Vec<f64>,
+}
+
+impl CscMatrix {
+    /// Build from raw CSC parts, validating the invariants (monotone
+    /// `indptr`, in-range and strictly ascending row indices per column).
+    /// Panics on invalid input; use [`CscMatrix::try_from_parts`] for
+    /// untrusted data (e.g. deserialization).
+    pub fn from_parts(
+        n: usize,
+        p: usize,
+        indptr: Vec<usize>,
+        indices: Vec<usize>,
+        values: Vec<f64>,
+    ) -> Self {
+        match Self::try_from_parts(n, p, indptr, indices, values) {
+            Ok(m) => m,
+            Err(e) => panic!("invalid CSC parts: {e}"),
+        }
+    }
+
+    /// Fallible variant of [`CscMatrix::from_parts`] — returns a
+    /// description of the first violated invariant instead of panicking.
+    pub fn try_from_parts(
+        n: usize,
+        p: usize,
+        indptr: Vec<usize>,
+        indices: Vec<usize>,
+        values: Vec<f64>,
+    ) -> Result<Self, String> {
+        if indptr.len() != p + 1 {
+            return Err(format!("indptr has {} entries, expected p+1 = {}", indptr.len(), p + 1));
+        }
+        if indptr[0] != 0 {
+            return Err("indptr must start at 0".into());
+        }
+        if *indptr.last().unwrap() != indices.len() {
+            return Err(format!(
+                "indptr end {} != nnz {}",
+                indptr.last().unwrap(),
+                indices.len()
+            ));
+        }
+        if indices.len() != values.len() {
+            return Err(format!(
+                "indices/values length mismatch: {} vs {}",
+                indices.len(),
+                values.len()
+            ));
+        }
+        for j in 0..p {
+            if indptr[j] > indptr[j + 1] {
+                return Err(format!("indptr not monotone at column {j}"));
+            }
+            let col = &indices[indptr[j]..indptr[j + 1]];
+            for w in col.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!(
+                        "row indices not strictly ascending in column {j}"
+                    ));
+                }
+            }
+            if let Some(&last) = col.last() {
+                if last >= n {
+                    return Err(format!(
+                        "row index {last} out of range (n={n}) in column {j}"
+                    ));
+                }
+            }
+        }
+        Ok(Self { n, p, indptr, indices, values })
+    }
+
+    /// Build from (row, col, value) triplets. Duplicate coordinates are
+    /// summed; explicit zeros are dropped.
+    pub fn from_triplets(n: usize, p: usize, triplets: &[(usize, usize, f64)]) -> Self {
+        for &(i, j, _) in triplets {
+            assert!(i < n && j < p, "triplet ({i}, {j}) out of range ({n} x {p})");
+        }
+        let mut t: Vec<(usize, usize, f64)> = triplets
+            .iter()
+            .filter(|&&(_, _, v)| v != 0.0)
+            .copied()
+            .collect();
+        t.sort_unstable_by(|a, b| (a.1, a.0).cmp(&(b.1, b.0)));
+        let mut indptr = Vec::with_capacity(p + 1);
+        indptr.push(0);
+        let mut indices = Vec::with_capacity(t.len());
+        let mut values = Vec::with_capacity(t.len());
+        let mut k = 0usize;
+        for j in 0..p {
+            let col_start = indices.len();
+            while k < t.len() && t[k].1 == j {
+                let (i, _, v) = t[k];
+                if indices.len() > col_start && *indices.last().unwrap() == i {
+                    *values.last_mut().unwrap() += v;
+                } else {
+                    indices.push(i);
+                    values.push(v);
+                }
+                k += 1;
+            }
+            indptr.push(indices.len());
+        }
+        Self::from_parts(n, p, indptr, indices, values)
+    }
+
+    /// Convert a dense matrix, dropping entries with `|v| <= tol`.
+    pub fn from_dense(m: &DenseMatrix, tol: f64) -> Self {
+        let (n, p) = (m.nrows(), m.ncols());
+        let mut indptr = Vec::with_capacity(p + 1);
+        indptr.push(0);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        for j in 0..p {
+            for (i, &v) in m.col(j).iter().enumerate() {
+                if v.abs() > tol {
+                    indices.push(i);
+                    values.push(v);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        Self { n, p, indptr, indices, values }
+    }
+
+    /// Expand to a dense column-major matrix.
+    pub fn to_dense(&self) -> DenseMatrix {
+        let mut m = DenseMatrix::zeros(self.n, self.p);
+        for j in 0..self.p {
+            let (rows, vals) = self.col(j);
+            let col = m.col_mut(j);
+            for (&i, &v) in rows.iter().zip(vals.iter()) {
+                col[i] = v;
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn nrows(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn ncols(&self) -> usize {
+        self.p
+    }
+
+    /// Number of stored entries.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Fraction of stored entries: `nnz / (n * p)`.
+    pub fn density(&self) -> f64 {
+        if self.n == 0 || self.p == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / (self.n as f64 * self.p as f64)
+        }
+    }
+
+    /// Column `j` as parallel (row-indices, values) slices.
+    #[inline]
+    pub fn col(&self, j: usize) -> (&[usize], &[f64]) {
+        let (lo, hi) = (self.indptr[j], self.indptr[j + 1]);
+        (&self.indices[lo..hi], &self.values[lo..hi])
+    }
+
+    /// Iterate columns in order as `(row-indices, values)` slice pairs.
+    pub fn cols<'a>(&'a self) -> impl Iterator<Item = (&'a [usize], &'a [f64])> + 'a {
+        (0..self.p).map(move |j| self.col(j))
+    }
+
+    /// Entry lookup via binary search within the column (test/debug use;
+    /// never on a hot path).
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        let (rows, vals) = self.col(j);
+        match rows.binary_search(&i) {
+            Ok(k) => vals[k],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// `<x_j, v>` over the stored entries of column `j`.
+    ///
+    /// Two independent accumulator chains keep the gather loads from
+    /// serializing behind a single FMA dependency (same trick as the dense
+    /// `ops::dot`, scaled down to typical per-column nnz).
+    #[inline]
+    pub fn col_dot(&self, j: usize, v: &[f64]) -> f64 {
+        let (rows, vals) = self.col(j);
+        let m = rows.len();
+        let chunks = m / 2;
+        let (mut s0, mut s1) = (0.0, 0.0);
+        for k in 0..chunks {
+            let i = 2 * k;
+            s0 += vals[i] * v[rows[i]];
+            s1 += vals[i + 1] * v[rows[i + 1]];
+        }
+        if m % 2 == 1 {
+            s0 += vals[m - 1] * v[rows[m - 1]];
+        }
+        s0 + s1
+    }
+
+    /// `out += alpha * x_j` (scatter over the stored entries).
+    #[inline]
+    pub fn axpy_col(&self, alpha: f64, j: usize, out: &mut [f64]) {
+        if alpha == 0.0 {
+            return;
+        }
+        let (rows, vals) = self.col(j);
+        for (&i, &x) in rows.iter().zip(vals.iter()) {
+            out[i] += alpha * x;
+        }
+    }
+
+    /// Dot product of two columns (sorted-merge over their supports).
+    pub fn dot_cols(&self, a: usize, b: usize) -> f64 {
+        let (ra, va) = self.col(a);
+        let (rb, vb) = self.col(b);
+        let (mut ia, mut ib) = (0usize, 0usize);
+        let mut acc = 0.0;
+        while ia < ra.len() && ib < rb.len() {
+            match ra[ia].cmp(&rb[ib]) {
+                std::cmp::Ordering::Less => ia += 1,
+                std::cmp::Ordering::Greater => ib += 1,
+                std::cmp::Ordering::Equal => {
+                    acc += va[ia] * vb[ib];
+                    ia += 1;
+                    ib += 1;
+                }
+            }
+        }
+        acc
+    }
+
+    /// `y = X * beta`.
+    pub fn matvec(&self, beta: &[f64], out: &mut [f64]) {
+        assert_eq!(beta.len(), self.p);
+        assert_eq!(out.len(), self.n);
+        out.fill(0.0);
+        for j in 0..self.p {
+            self.axpy_col(beta[j], j, out);
+        }
+    }
+
+    /// `out[j] = <x_j, v>` for every column (the screening stats pass).
+    pub fn t_matvec(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), self.n);
+        assert_eq!(out.len(), self.p);
+        for j in 0..self.p {
+            out[j] = self.col_dot(j, v);
+        }
+    }
+
+    /// `out[j] = <x_j, v>` only for the given columns; other entries are
+    /// left untouched.
+    pub fn t_matvec_subset(&self, v: &[f64], idx: &[usize], out: &mut [f64]) {
+        for &j in idx {
+            out[j] = self.col_dot(j, v);
+        }
+    }
+
+    /// Squared norms of every column.
+    pub fn col_norms_sq(&self) -> Vec<f64> {
+        (0..self.p)
+            .map(|j| {
+                let (_, vals) = self.col(j);
+                vals.iter().map(|&v| v * v).sum()
+            })
+            .collect()
+    }
+
+    /// Standardize columns in place to unit Euclidean norm; returns the
+    /// original norms (0 for empty columns, which are left as-is).
+    pub fn normalize_columns(&mut self) -> Vec<f64> {
+        let mut norms = Vec::with_capacity(self.p);
+        for j in 0..self.p {
+            let (lo, hi) = (self.indptr[j], self.indptr[j + 1]);
+            let vals = &mut self.values[lo..hi];
+            let nrm = vals.iter().map(|&v| v * v).sum::<f64>().sqrt();
+            if nrm > 0.0 {
+                let inv = 1.0 / nrm;
+                for v in vals.iter_mut() {
+                    *v *= inv;
+                }
+            }
+            norms.push(nrm);
+        }
+        norms
+    }
+
+    /// Frobenius-norm squared.
+    pub fn fro_norm_sq(&self) -> f64 {
+        self.values.iter().map(|&v| v * v).sum()
+    }
+
+    /// Estimate `||X||_2^2` by power iteration on `X^T X` (same scheme as
+    /// the dense implementation).
+    pub fn spectral_norm_sq(&self, iters: usize) -> f64 {
+        let mut v = vec![1.0 / (self.p as f64).sqrt(); self.p];
+        let mut xv = vec![0.0; self.n];
+        let mut w = vec![0.0; self.p];
+        let mut lam = 0.0;
+        for _ in 0..iters {
+            self.matvec(&v, &mut xv);
+            self.t_matvec(&xv, &mut w);
+            lam = w.iter().map(|&x| x * x).sum::<f64>().sqrt();
+            if lam <= f64::MIN_POSITIVE {
+                return 0.0;
+            }
+            let inv = 1.0 / lam;
+            for (vi, wi) in v.iter_mut().zip(w.iter()) {
+                *vi = wi * inv;
+            }
+        }
+        lam
+    }
+
+    /// Raw parts accessors for serialization.
+    pub fn indptr(&self) -> &[usize] {
+        &self.indptr
+    }
+
+    pub fn indices(&self) -> &[usize] {
+        &self.indices
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// [[1, 0, 2], [0, 3, 0], [4, 0, 5]] as CSC.
+    fn small() -> CscMatrix {
+        CscMatrix::from_parts(
+            3,
+            3,
+            vec![0, 2, 3, 5],
+            vec![0, 2, 1, 0, 2],
+            vec![1.0, 4.0, 3.0, 2.0, 5.0],
+        )
+    }
+
+    #[test]
+    fn roundtrip_dense() {
+        let s = small();
+        let d = s.to_dense();
+        assert_eq!(d.get(0, 0), 1.0);
+        assert_eq!(d.get(2, 0), 4.0);
+        assert_eq!(d.get(1, 1), 3.0);
+        assert_eq!(d.get(0, 2), 2.0);
+        assert_eq!(d.get(2, 2), 5.0);
+        assert_eq!(d.get(1, 0), 0.0);
+        let back = CscMatrix::from_dense(&d, 0.0);
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn from_triplets_sorts_and_sums() {
+        let t = vec![
+            (2, 2, 5.0),
+            (0, 0, 1.0),
+            (1, 1, 1.5),
+            (2, 0, 4.0),
+            (0, 2, 2.0),
+            (1, 1, 1.5), // duplicate -> summed
+            (2, 1, 0.0), // explicit zero -> dropped
+        ];
+        let s = CscMatrix::from_triplets(3, 3, &t);
+        assert_eq!(s, small());
+        assert_eq!(s.nnz(), 5);
+    }
+
+    #[test]
+    fn from_triplets_with_empty_columns() {
+        let s = CscMatrix::from_triplets(4, 5, &[(1, 1, 2.0), (3, 3, -1.0)]);
+        assert_eq!(s.nnz(), 2);
+        assert_eq!(s.col(0).0.len(), 0);
+        assert_eq!(s.col(2).0.len(), 0);
+        assert_eq!(s.col(4).0.len(), 0);
+        assert_eq!(s.get(1, 1), 2.0);
+        assert_eq!(s.get(3, 3), -1.0);
+    }
+
+    #[test]
+    fn matvec_and_t_matvec_match_dense() {
+        let s = small();
+        let d = s.to_dense();
+        let beta = [1.0, -2.0, 0.5];
+        let mut ys = vec![0.0; 3];
+        let mut yd = vec![0.0; 3];
+        s.matvec(&beta, &mut ys);
+        d.matvec(&beta, &mut yd);
+        for (a, b) in ys.iter().zip(yd.iter()) {
+            assert!((a - b).abs() < 1e-14);
+        }
+        let v = [0.5, 1.5, -1.0];
+        let mut ts = vec![0.0; 3];
+        let mut td = vec![0.0; 3];
+        s.t_matvec(&v, &mut ts);
+        d.t_matvec(&v, &mut td);
+        for (a, b) in ts.iter().zip(td.iter()) {
+            assert!((a - b).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn col_dot_and_axpy() {
+        let s = small();
+        let v = [1.0, 1.0, 1.0];
+        assert_eq!(s.col_dot(0, &v), 5.0);
+        assert_eq!(s.col_dot(1, &v), 3.0);
+        let mut out = vec![0.0; 3];
+        s.axpy_col(2.0, 2, &mut out);
+        assert_eq!(out, vec![4.0, 0.0, 10.0]);
+    }
+
+    #[test]
+    fn dot_cols_merges_supports() {
+        let s = small();
+        // col0 = [1, 0, 4], col2 = [2, 0, 5] -> 1*2 + 4*5 = 22
+        assert_eq!(s.dot_cols(0, 2), 22.0);
+        // col0 and col1 have disjoint supports
+        assert_eq!(s.dot_cols(0, 1), 0.0);
+    }
+
+    #[test]
+    fn norms_and_normalization() {
+        let mut s = small();
+        let norms = s.col_norms_sq();
+        assert_eq!(norms, vec![17.0, 9.0, 29.0]);
+        let returned = s.normalize_columns();
+        assert!((returned[0] - 17f64.sqrt()).abs() < 1e-12);
+        for j in 0..3 {
+            let n2: f64 = s.col(j).1.iter().map(|&v| v * v).sum();
+            assert!((n2 - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn cols_iterator_walks_all_columns() {
+        let s = small();
+        let collected: Vec<(usize, f64)> = s
+            .cols()
+            .map(|(rows, vals)| (rows.len(), vals.iter().sum()))
+            .collect();
+        assert_eq!(collected, vec![(2, 5.0), (1, 3.0), (2, 7.0)]);
+    }
+
+    #[test]
+    fn density_and_nnz() {
+        let s = small();
+        assert_eq!(s.nnz(), 5);
+        assert!((s.density() - 5.0 / 9.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn spectral_norm_matches_dense() {
+        let s = small();
+        let d = s.to_dense();
+        let a = s.spectral_norm_sq(200);
+        let b = d.spectral_norm_sq(200);
+        assert!((a - b).abs() < 1e-8 * b.max(1.0), "{a} vs {b}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_unsorted_rows() {
+        CscMatrix::from_parts(3, 1, vec![0, 2], vec![2, 0], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_out_of_range_rows() {
+        CscMatrix::from_parts(2, 1, vec![0, 1], vec![5], vec![1.0]);
+    }
+}

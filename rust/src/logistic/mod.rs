@@ -22,7 +22,7 @@
 //! solver re-runs on violation — the final path is exact regardless.
 
 use crate::data::Dataset;
-use crate::linalg::{ops, DenseMatrix};
+use crate::linalg::{ops, DesignMatrix};
 use crate::screening::{sasvi::feature_bounds, Geometry};
 use crate::SCREEN_EPS;
 
@@ -39,7 +39,7 @@ fn sigmoid(t: f64) -> f64 {
 /// A binary-labelled design; labels in {-1, +1}.
 #[derive(Clone, Debug)]
 pub struct LogisticProblem {
-    pub x: DenseMatrix,
+    pub x: DesignMatrix,
     pub y: Vec<f64>,
 }
 

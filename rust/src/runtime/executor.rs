@@ -269,29 +269,6 @@ impl<'rt> ScreenSession<'rt> {
     }
 }
 
-/// Flatten a column-major `DenseMatrix` into the row-major layout the
-/// artifacts expect for `x: (n, p)`.
-pub fn to_rowmajor(x: &crate::linalg::DenseMatrix) -> Vec<f64> {
-    let n = x.nrows();
-    let p = x.ncols();
-    let mut out = vec![0.0; n * p];
-    for j in 0..p {
-        let col = x.col(j);
-        for i in 0..n {
-            out[i * p + j] = col[i];
-        }
-    }
-    out
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn to_rowmajor_transposes() {
-        let m = crate::linalg::DenseMatrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
-        // cols: [1,2], [3,4], [5,6]; row-major (n=2, p=3): 1 3 5 / 2 4 6
-        assert_eq!(to_rowmajor(&m), vec![1., 3., 5., 2., 4., 6.]);
-    }
-}
+// `to_rowmajor` lives in `runtime::mod` (shared with the stub executor);
+// re-exported here so `runtime::executor::to_rowmajor` keeps working.
+pub use crate::runtime::to_rowmajor;

@@ -1,0 +1,113 @@
+//! Stub PJRT executor — compiled when the `pjrt` feature is disabled.
+//!
+//! The real executor (`executor.rs`) drives AOT-compiled XLA artifacts
+//! through the `xla` PJRT bindings, which are not available in the offline
+//! build environment. This stub mirrors the executor's public API so every
+//! caller (CLI `runtime-info`, the parity tests, the end-to-end example,
+//! the microbench) still compiles; [`Runtime::open`] returns a descriptive
+//! error, and all those callers already skip gracefully when the runtime
+//! cannot be opened or the artifact directory is missing.
+//!
+//! Build with `--features pjrt` (in an environment that provides the `xla`
+//! crate) to get the real executor.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::manifest::{ArtifactInfo, Manifest};
+
+const UNAVAILABLE: &str =
+    "PJRT runtime unavailable: sasvi was built without the `pjrt` feature \
+     (the `xla` bindings are not present in this environment)";
+
+/// Stub runtime handle. Never successfully constructed.
+pub struct Runtime {
+    manifest: Manifest,
+}
+
+impl Runtime {
+    /// Always fails in the stub build.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let _ = dir;
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable (built without `pjrt`)".into()
+    }
+
+    pub fn find(&self, graph: &str, n: usize, p: usize) -> Option<&ArtifactInfo> {
+        self.manifest.find(graph, n, p)
+    }
+
+    pub fn warmup(&self, _graph: &str) -> Result<usize> {
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn execute(&self, _art: &ArtifactInfo, _inputs: &[&[f64]]) -> Result<Vec<Vec<f64>>> {
+        bail!(UNAVAILABLE)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn execute_screen(
+        &self,
+        _graph: &str,
+        _x_rowmajor: &[f64],
+        _n: usize,
+        _p: usize,
+        _y: &[f64],
+        _theta1: &[f64],
+        _lam1: f64,
+        _lam2: f64,
+    ) -> Result<(Vec<f64>, Vec<f64>, Vec<f64>)> {
+        bail!(UNAVAILABLE)
+    }
+}
+
+/// Stub screening session (see `executor.rs` for the real one).
+pub struct ScreenSession<'rt> {
+    _rt: &'rt Runtime,
+}
+
+impl<'rt> ScreenSession<'rt> {
+    pub fn new(
+        rt: &'rt Runtime,
+        _graph: &str,
+        _x_rowmajor: &[f64],
+        _n: usize,
+        _p: usize,
+        _y: &[f64],
+    ) -> Result<Self> {
+        let _ = rt;
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn screen(
+        &self,
+        _theta1: &[f64],
+        _lam1: f64,
+        _lam2: f64,
+    ) -> Result<(Vec<f64>, Vec<f64>, Vec<f64>)> {
+        bail!(UNAVAILABLE)
+    }
+}
+
+// `to_rowmajor` lives in `runtime::mod` (shared with the real executor);
+// re-exported here so `runtime::executor::to_rowmajor` keeps working.
+pub use crate::runtime::to_rowmajor;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_reports_missing_feature() {
+        let err = Runtime::open("artifacts").unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+}

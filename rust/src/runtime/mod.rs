@@ -10,8 +10,50 @@
 //! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids.
 
+// The real executor needs the `xla` PJRT bindings, which are not present
+// in the offline build environment. The `pjrt` feature gates it; the
+// default build substitutes a stub with the same API whose `Runtime::open`
+// returns a descriptive error (callers already skip gracefully when the
+// artifact directory is missing).
+#[cfg(feature = "pjrt")]
+pub mod executor;
+#[cfg(not(feature = "pjrt"))]
+#[path = "executor_stub.rs"]
 pub mod executor;
 pub mod manifest;
 
 pub use executor::Runtime;
 pub use manifest::{ArtifactInfo, Manifest};
+
+/// Flatten a [`crate::linalg::DesignMatrix`] (densifying sparse columns)
+/// into the row-major layout the artifacts expect for `x: (n, p)`.
+pub fn to_rowmajor(x: &crate::linalg::DesignMatrix) -> Vec<f64> {
+    let n = x.nrows();
+    let p = x.ncols();
+    let mut out = vec![0.0; n * p];
+    let mut col = vec![0.0; n];
+    for j in 0..p {
+        x.col_dense_into(j, &mut col);
+        for i in 0..n {
+            out[i * p + j] = col[i];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::to_rowmajor;
+
+    #[test]
+    fn to_rowmajor_transposes_both_backends() {
+        let m: crate::linalg::DesignMatrix =
+            crate::linalg::DenseMatrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]).into();
+        // cols: [1,2], [3,4], [5,6]; row-major (n=2, p=3): 1 3 5 / 2 4 6
+        assert_eq!(to_rowmajor(&m), vec![1., 3., 5., 2., 4., 6.]);
+
+        let sp: crate::linalg::DesignMatrix =
+            crate::linalg::CscMatrix::from_triplets(2, 2, &[(0, 0, 1.0), (1, 1, 2.0)]).into();
+        assert_eq!(to_rowmajor(&sp), vec![1., 0., 0., 2.]);
+    }
+}

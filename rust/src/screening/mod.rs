@@ -21,19 +21,22 @@ pub mod strong;
 pub mod sure_removal;
 
 use crate::data::dataset::PathPrecompute;
-use crate::linalg::DenseMatrix;
+use crate::linalg::DesignMatrix;
 use crate::solver::DualState;
 use crate::SCREEN_EPS;
 
 /// Everything a rule may read that is constant along the whole path.
+/// The design matrix is behind the [`DesignMatrix`] abstraction, so rules
+/// work identically over dense and CSC storage (they mostly consume the
+/// precomputed per-feature statistics anyway).
 pub struct ScreenContext<'a> {
-    pub x: &'a DenseMatrix,
+    pub x: &'a DesignMatrix,
     pub y: &'a [f64],
     pub pre: &'a PathPrecompute,
 }
 
 impl<'a> ScreenContext<'a> {
-    pub fn new(x: &'a DenseMatrix, y: &'a [f64], pre: &'a PathPrecompute) -> Self {
+    pub fn new(x: &'a DesignMatrix, y: &'a [f64], pre: &'a PathPrecompute) -> Self {
         Self { x, y, pre }
     }
 

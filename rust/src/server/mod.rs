@@ -12,6 +12,11 @@
 //! SUREREMOVAL <dataset-id> <lam1-frac> <j> -> {"lam_s": ...}
 //! QUIT
 //! ```
+//!
+//! `GEN` accepts every registry preset — including the sparse ones
+//! (`sparse1`, `sparse5`, ...) — and reports the backend (`storage`,
+//! `density`) in its reply; `PATH` jobs run on whichever backend the
+//! dataset carries, since the whole pipeline is [`crate::linalg::DesignMatrix`]-generic.
 
 pub mod json;
 
@@ -148,12 +153,15 @@ fn cmd_gen(state: &ServerState, preset: &str, seed: &str, scale: &str) -> String
         Ok(ds) => {
             let id = state.next_dataset.fetch_add(1, Ordering::Relaxed);
             let (n, p, name) = (ds.n(), ds.p(), ds.name.clone());
+            let (storage, density) = (ds.x.storage(), ds.x.density());
             state.datasets.lock().unwrap().insert(id, Arc::new(ds));
             let mut w = JsonWriter::object();
             w.field_u64("dataset", id);
             w.field_str("name", &name);
             w.field_u64("n", n as u64);
             w.field_u64("p", p as u64);
+            w.field_str("storage", storage);
+            w.field_f64("density", density);
             w.finish()
         }
         Err(e) => err_msg(&format!("generate failed: {e}")),
@@ -324,6 +332,23 @@ mod tests {
         assert!(replies[5].contains("error"), "{}", replies[5]);
         assert!(replies[6].contains("bye"));
 
+        stop.store(true, Ordering::Relaxed);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn sparse_preset_jobs_run_transparently() {
+        let server = Server::bind("127.0.0.1:0", 1).unwrap();
+        let addr = server.local_addr().unwrap();
+        let stop = server.stop_handle();
+        let h = std::thread::spawn(move || server.serve().unwrap());
+        let replies = send(
+            addr,
+            &["GEN sparse5 3 0.02", "PATH 1 sasvi 5 0.1", "RESULT 1", "QUIT"],
+        );
+        assert!(replies[0].contains("\"storage\": \"csc\""), "{}", replies[0]);
+        assert!(replies[1].contains("\"job\": 1"), "{}", replies[1]);
+        assert!(replies[2].contains("rejection"), "{}", replies[2]);
         stop.store(true, Ordering::Relaxed);
         h.join().unwrap();
     }

@@ -10,7 +10,7 @@
 //! An inner "working set" loop (features that moved last epoch) makes the
 //! tail of the optimization cheap — a standard glmnet-style trick.
 
-use crate::linalg::{ops, DenseMatrix};
+use crate::linalg::{ops, DesignMatrix};
 
 #[derive(Clone, Copy, Debug)]
 pub struct CdOptions {
@@ -48,7 +48,7 @@ pub struct CdStats {
 /// `active` are untouched and their contribution stays in `resid`).
 /// On exit both are updated in place.
 pub fn solve_cd(
-    x: &DenseMatrix,
+    x: &DesignMatrix,
     y: &[f64],
     lambda: f64,
     active: &[usize],
@@ -76,15 +76,14 @@ pub fn solve_cd(
             if nrm <= 0.0 {
                 continue;
             }
-            let xj = x.col(j);
             let old = beta[j];
             // rho = <x_j, r> + ||x_j||^2 * beta_j  (gradient w.r.t. beta_j)
-            let rho = ops::dot(xj, resid) + nrm * old;
+            let rho = x.col_dot(j, resid) + nrm * old;
             let new = ops::soft_threshold(rho, lambda) / nrm;
             let delta = new - old;
             stats.coord_updates += 1;
             if delta != 0.0 {
-                ops::axpy(-delta, xj, resid);
+                x.axpy_col(-delta, j, resid);
                 beta[j] = new;
                 let ad = delta.abs();
                 if ad > tol {
@@ -132,7 +131,7 @@ pub fn solve_cd(
 /// optimum; during iteration it is a sound stopping criterion for the
 /// restricted solve.
 pub fn restricted_gap(
-    x: &DenseMatrix,
+    x: &DesignMatrix,
     y: &[f64],
     lambda: f64,
     active: &[usize],
@@ -142,7 +141,7 @@ pub fn restricted_gap(
     // infeasibility over the active set only
     let mut infeas = 0.0f64;
     for &j in active {
-        infeas = infeas.max(ops::dot(x.col(j), resid).abs());
+        infeas = infeas.max(x.col_dot(j, resid).abs());
     }
     let denom = lambda.max(infeas);
     let scale = if denom > 0.0 { 1.0 / denom } else { 0.0 };

@@ -4,7 +4,7 @@
 //! (`rust/tests/runtime_parity.rs`), and (b) as an alternative backend when
 //! the whole solve should run inside XLA artifacts.
 
-use crate::linalg::{ops, DenseMatrix};
+use crate::linalg::{ops, DesignMatrix};
 
 #[derive(Clone, Copy, Debug)]
 pub struct FistaOptions {
@@ -24,7 +24,7 @@ impl Default for FistaOptions {
 /// Solve Lasso with a 0/1 feature mask (masked coordinates stay 0).
 /// Returns (beta, iterations).
 pub fn solve_fista(
-    x: &DenseMatrix,
+    x: &DesignMatrix,
     y: &[f64],
     lambda: f64,
     mask: &[bool],
@@ -40,7 +40,7 @@ pub fn solve_fista(
 /// O(n * p) on the matrix it is given, so screening pays off by shrinking
 /// the matrix itself (see `coordinator::path`'s compaction).
 pub fn solve_fista_warm(
-    x: &DenseMatrix,
+    x: &DesignMatrix,
     y: &[f64],
     lambda: f64,
     mask: &[bool],
@@ -161,7 +161,9 @@ mod tests {
     fn orthogonal_design_closed_form() {
         // columns of the identity: beta_j = S(y_j, lambda)
         let n = 8;
-        let x = DenseMatrix::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 });
+        let x: DesignMatrix =
+            crate::linalg::DenseMatrix::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+                .into();
         let y: Vec<f64> = (0..n).map(|i| i as f64 - 3.5).collect();
         let lam = 1.0;
         let mask = vec![true; n];

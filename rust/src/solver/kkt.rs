@@ -9,7 +9,7 @@
 //!   |<x_j, r>| <= lambda            for beta_j = 0
 //!   <x_j, r> = lambda * sign(beta_j) for beta_j != 0
 
-use crate::linalg::{ops, DenseMatrix};
+use crate::linalg::DesignMatrix;
 
 #[derive(Clone, Debug, Default)]
 pub struct KktReport {
@@ -29,7 +29,7 @@ impl KktReport {
 /// Check KKT over all features. `tol` is absolute on the dual scale
 /// (|<x_j,r>| is compared against `lambda * (1 + tol) + tol`).
 pub fn check_kkt(
-    x: &DenseMatrix,
+    x: &DesignMatrix,
     resid: &[f64],
     beta: &[f64],
     lambda: f64,
@@ -42,7 +42,7 @@ pub fn check_kkt(
 /// inactive-coordinate condition can be violated by screening, so the
 /// strong-rule correction passes the discarded set here.
 pub fn check_kkt_subset(
-    x: &DenseMatrix,
+    x: &DesignMatrix,
     resid: &[f64],
     beta: &[f64],
     lambda: f64,
@@ -52,7 +52,7 @@ pub fn check_kkt_subset(
     let mut report = KktReport::default();
     let slack = lambda * tol + tol;
     let mut check = |j: usize| {
-        let g = ops::dot(x.col(j), resid);
+        let g = x.col_dot(j, resid);
         let viol = if beta[j] == 0.0 {
             (g.abs() - lambda).max(0.0)
         } else {

@@ -16,7 +16,7 @@ pub use cd::{solve_cd, CdOptions, CdStats};
 pub use fista::{solve_fista, solve_fista_warm, FistaOptions};
 pub use kkt::{check_kkt, KktReport};
 
-use crate::linalg::{ops, DenseMatrix};
+use crate::linalg::{ops, DesignMatrix};
 
 /// The dual state at a solved grid point, consumed by screening rules.
 ///
@@ -37,7 +37,7 @@ impl DualState {
     /// This performs the full `X^T r` pass (the screening statistics pass —
     /// see the L1 Pallas kernel for the XLA version of the same
     /// computation).
-    pub fn from_residual(x: &DenseMatrix, resid: &[f64], lambda: f64) -> Self {
+    pub fn from_residual(x: &DesignMatrix, resid: &[f64], lambda: f64) -> Self {
         let mut xt_r = vec![0.0; x.ncols()];
         x.t_matvec(resid, &mut xt_r);
         Self::from_residual_with_xtr(resid, xt_r, lambda)
@@ -57,7 +57,7 @@ impl DualState {
     }
 
     /// The analytic state at `lambda_max`: beta = 0, theta = y / lambda_max.
-    pub fn at_lambda_max(x: &DenseMatrix, y: &[f64], lambda_max: f64, xty: &[f64]) -> Self {
+    pub fn at_lambda_max(x: &DesignMatrix, y: &[f64], lambda_max: f64, xty: &[f64]) -> Self {
         let _ = x;
         let scale = 1.0 / lambda_max;
         DualState {

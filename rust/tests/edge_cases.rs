@@ -16,7 +16,7 @@ use std::sync::Arc;
 fn zero_column_is_harmless() {
     let mut ds = SyntheticSpec { n: 20, p: 30, nnz: 4, ..Default::default() }
         .generate(3);
-    ds.x.col_mut(7).fill(0.0);
+    ds.x.as_dense_mut().unwrap().col_mut(7).fill(0.0);
     let pre = ds.precompute();
     assert_eq!(pre.col_norms_sq[7], 0.0);
     let plan = PathPlan::linear_spaced(&ds, 10, 0.1);
@@ -27,14 +27,43 @@ fn zero_column_is_harmless() {
     }
 }
 
+/// A sparse dataset with an empty (all-zero) column behaves like the dense
+/// zero-column case: screened, never solved on, no NaNs.
+#[test]
+fn sparse_empty_column_is_harmless() {
+    use sasvi::linalg::CscMatrix;
+    let x = CscMatrix::from_triplets(
+        4,
+        3,
+        &[(0, 0, 1.0), (2, 0, -2.0), (1, 2, 0.5), (3, 2, 1.5)],
+    );
+    let y = vec![1.0, -0.5, 2.0, 0.25];
+    let ds = Dataset {
+        name: "sparse-zero-col".into(),
+        x: x.into(),
+        y,
+        beta_true: None,
+        seed: 0,
+    };
+    let pre = ds.precompute();
+    assert_eq!(pre.col_norms_sq[1], 0.0);
+    let plan = PathPlan::linear_spaced(&ds, 6, 0.1);
+    for rule in [RuleKind::None, RuleKind::Sasvi, RuleKind::Strong] {
+        let r = run_path(&ds, &plan, rule, PathOptions::default());
+        assert_eq!(r.beta_final[1], 0.0);
+        assert!(r.beta_final.iter().all(|b| b.is_finite()));
+    }
+}
+
 /// Duplicate columns: both get identical bounds; screening keeps or drops
 /// them together.
 #[test]
 fn duplicate_columns_treated_identically() {
     let mut ds = SyntheticSpec { n: 25, p: 40, nnz: 5, ..Default::default() }
         .generate(5);
-    let col3 = ds.x.col(3).to_vec();
-    ds.x.col_mut(21).copy_from_slice(&col3);
+    let dense = ds.x.as_dense_mut().unwrap();
+    let col3 = dense.col(3).to_vec();
+    dense.col_mut(21).copy_from_slice(&col3);
     let pre = ds.precompute();
     let ctx = ScreenContext::new(&ds.x, &ds.y, &pre);
     let st = DualState::at_lambda_max(&ds.x, &ds.y, pre.lambda_max, &pre.xty);
@@ -55,7 +84,7 @@ fn orthogonal_response_degenerate_path() {
         if i < 4 { ((i * 7 + j * 3) % 5) as f64 - 2.0 } else { 0.0 }
     });
     let y: Vec<f64> = (0..n).map(|i| if i >= 4 { 1.0 } else { 0.0 }).collect();
-    let ds = Dataset { name: "orth".into(), x, y, beta_true: None, seed: 0 };
+    let ds = Dataset { name: "orth".into(), x: x.into(), y, beta_true: None, seed: 0 };
     let lam_max = ds.lambda_max();
     assert!(lam_max.abs() < 1e-12);
     // grid needs positive lambdas; use a tiny custom grid above zero
@@ -156,7 +185,7 @@ artifact g_n8_p32\ngraph g\nfile b.hlo.txt\nn 8\np 32\nin f32 8,32\nout f32 32\n
 fn single_sample_path() {
     let x = DenseMatrix::from_fn(1, 5, |_, j| (j as f64 + 1.0) / 5.0);
     let y = vec![2.0];
-    let ds = Dataset { name: "n1".into(), x, y, beta_true: None, seed: 0 };
+    let ds = Dataset { name: "n1".into(), x: x.into(), y, beta_true: None, seed: 0 };
     let plan = PathPlan::linear_spaced(&ds, 5, 0.2);
     let r = run_path(&ds, &plan, RuleKind::Sasvi, PathOptions::default());
     assert!(r.beta_final.iter().all(|b| b.is_finite()));

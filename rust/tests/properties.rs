@@ -182,6 +182,94 @@ fn prop_sure_removal_consistent_with_screening() {
 }
 
 #[test]
+fn prop_sparse_dense_path_parity() {
+    // The DesignMatrix abstraction must be storage-transparent: for random
+    // sparse datasets, pathwise results — active sets, objective values,
+    // and rejection counts per lambda — agree between the CSC backend and
+    // its densified twin (objectives to 1e-10, set sizes exactly).
+    use sasvi::data::synthetic::SyntheticSpec;
+    use sasvi::solver::primal_objective;
+    forall(109, 8, 40, 100, |case| {
+        let spec = SyntheticSpec {
+            n: case.n.max(10),
+            p: case.p.max(20),
+            nnz: case.nnz.min(case.p),
+            density: 0.1,
+            ..Default::default()
+        };
+        let sparse_ds = spec.generate(case.seed);
+        if !sparse_ds.x.is_sparse() {
+            return Err("generator did not produce CSC".into());
+        }
+        let mut dense_ds = sparse_ds.clone();
+        dense_ds.x = sparse_ds.x.to_dense().into();
+        let plan = PathPlan::linear_spaced(&sparse_ds, 8, 0.1);
+        let opts = PathOptions {
+            cd: CdOptions {
+                max_epochs: 20_000,
+                tol: 1e-12,
+                gap_tol: 1e-12,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        for rule in [RuleKind::Sasvi, RuleKind::Dpp] {
+            let rs = run_path_keep_betas(&sparse_ds, &plan, rule, opts);
+            let rd = run_path_keep_betas(&dense_ds, &plan, rule, opts);
+            let bs = rs.betas.as_ref().unwrap();
+            let bd = rd.betas.as_ref().unwrap();
+            let mut fit = vec![0.0; sparse_ds.n()];
+            for (k, ((ss, sd), lam)) in rs
+                .steps
+                .iter()
+                .zip(rd.steps.iter())
+                .zip(plan.lambdas.iter())
+                .enumerate()
+            {
+                if ss.kept != sd.kept || ss.screened != sd.screened {
+                    return Err(format!(
+                        "{rule:?} step {k}: rejection counts diverged \
+                         (sparse {}/{}, dense {}/{})",
+                        ss.kept, ss.screened, sd.kept, sd.screened
+                    ));
+                }
+                // identical active sets (support of the solutions)
+                for j in 0..sparse_ds.p() {
+                    if (bs[k][j] != 0.0) != (bd[k][j] != 0.0)
+                        && (bs[k][j] - bd[k][j]).abs() > 1e-10
+                    {
+                        return Err(format!(
+                            "{rule:?} step {k} feature {j}: active-set mismatch \
+                             ({} vs {})",
+                            bs[k][j], bd[k][j]
+                        ));
+                    }
+                }
+                // objective parity to 1e-10 (relative), computed with the
+                // same (dense) arithmetic for both solution vectors
+                let mut obj = |beta: &[f64]| {
+                    dense_ds.x.matvec(beta, &mut fit);
+                    let resid: Vec<f64> = dense_ds
+                        .y
+                        .iter()
+                        .zip(fit.iter())
+                        .map(|(a, b)| a - b)
+                        .collect();
+                    primal_objective(&resid, beta, *lam)
+                };
+                let (os, od) = (obj(&bs[k]), obj(&bd[k]));
+                if (os - od).abs() > 1e-10 * (1.0 + os.abs()) {
+                    return Err(format!(
+                        "{rule:?} step {k}: objective diverged ({os} vs {od})"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_io_roundtrip() {
     forall(108, 10, 25, 50, |case| {
         let ds = build_instance(case);
