@@ -1,0 +1,34 @@
+//! Helpers shared by the bench binaries via `#[path = "common.rs"] mod
+//! common;` — bench targets cannot import each other, and `autobenches`
+//! is off so this file is never mistaken for a bench target itself.
+
+use std::time::Instant;
+
+#[allow(dead_code)]
+pub fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+#[allow(dead_code)]
+pub fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Time `f` adaptively until it has run for at least `min_secs`; returns
+/// seconds per call.
+#[allow(dead_code)]
+pub fn bench<F: FnMut()>(mut f: F, min_secs: f64) -> f64 {
+    f(); // warmup
+    let mut iters = 1u64;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        if dt >= min_secs {
+            return dt / iters as f64;
+        }
+        iters = (iters * 2).max((iters as f64 * min_secs / dt.max(1e-9)) as u64 + 1);
+    }
+}

@@ -13,38 +13,15 @@
 //! acceptance bar for the sparse subsystem); the bench exits nonzero if it
 //! does not.
 
-use std::time::Instant;
-
 use sasvi::coordinator::{run_path, PathOptions, PathPlan};
 use sasvi::data::synthetic::SyntheticSpec;
 use sasvi::linalg::DesignMatrix;
 use sasvi::metrics::Table;
 use sasvi::screening::RuleKind;
 
-fn env_f64(key: &str, default: f64) -> f64 {
-    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
-}
-
-fn env_usize(key: &str, default: usize) -> usize {
-    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
-}
-
-/// Time `f` adaptively until it has run for at least `min_secs`.
-fn bench<F: FnMut()>(mut f: F, min_secs: f64) -> f64 {
-    f(); // warmup
-    let mut iters = 1u64;
-    loop {
-        let t0 = Instant::now();
-        for _ in 0..iters {
-            f();
-        }
-        let dt = t0.elapsed().as_secs_f64();
-        if dt >= min_secs {
-            return dt / iters as f64;
-        }
-        iters = (iters * 2).max((iters as f64 * min_secs / dt.max(1e-9)) as u64 + 1);
-    }
-}
+#[path = "common.rs"]
+mod common;
+use common::{bench, env_f64, env_usize};
 
 fn main() {
     // clamp below 1.0: at density 1.0 the generator emits a dense design

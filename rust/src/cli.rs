@@ -96,6 +96,10 @@ PRESETS: synthetic100/1000/5000 (dense), sparseP for P% density CSC
          (e.g. sparse5), mnist-like, pie-like. Datasets can also be loaded
          from the binary cache (--data FILE) or libsvm text (--libsvm FILE);
          every command runs on dense or sparse storage transparently.
+
+GLOBAL:  --threads N sets the column-block worker-pool width for any
+         command (default: SASVI_THREADS env var, else all cores). Results
+         are bit-identical at every thread count; only wall-clock changes.
 ";
 
 /// Entry point. Returns the process exit code.
@@ -105,6 +109,11 @@ pub fn run(args: &[String]) -> Result<i32> {
         return Ok(2);
     };
     let flags = Flags::parse(rest)?;
+    // global knob: worker-pool width for the parallel column-block engine
+    if let Some(t) = flags.get("threads") {
+        let t: usize = t.parse().with_context(|| format!("--threads {t}"))?;
+        crate::linalg::par::set_threads(t.max(1));
+    }
     match cmd.as_str() {
         "help" | "--help" | "-h" => {
             print!("{HELP}");
@@ -306,10 +315,12 @@ fn cmd_sure_removal(flags: &Flags) -> Result<i32> {
     let st = DualState::from_residual(&ds.x, &resid, lam1);
     let ctx = ScreenContext::new(&ds.x, &ds.y, &pre);
     let analysis = SureRemovalAnalysis::new(&ctx, &st);
-    let mut reports: Vec<(usize, crate::screening::sure_removal::FeatureRemoval)> =
-        (0..ds.p())
-            .map(|j| (j, analysis.analyze(&ctx, &st, j, 0.01 * pre.lambda_max)))
-            .collect();
+    // batched Theorem-4 analysis: parallel over column blocks
+    let mut reports: Vec<(usize, crate::screening::sure_removal::FeatureRemoval)> = analysis
+        .analyze_all(&ctx, &st, 0.01 * pre.lambda_max)
+        .into_iter()
+        .enumerate()
+        .collect();
     reports.sort_by(|a, b| a.1.lam_s.total_cmp(&b.1.lam_s));
     let mut t = Table::new(&["feature", "lam_s/lmax", "lam_2a/lmax", "lam_2y/lmax", "case"]);
     for (j, r) in reports.iter().take(top) {
@@ -366,6 +377,11 @@ fn cmd_run_config(flags: &Flags) -> Result<i32> {
         .context("--config FILE is required")?;
     let cfg = Config::load(path)?;
     let exp = ExperimentConfig::from_config(&cfg);
+    // CLI beats config: an explicit --threads (already applied in run())
+    // must not be overridden by the config file's threads knob
+    if flags.get("threads").is_none() {
+        exp.apply_threads();
+    }
     println!("experiment: {exp:?}");
     let preset = Preset::parse(&exp.dataset)
         .with_context(|| format!("unknown preset {}", exp.dataset))?;
@@ -429,6 +445,18 @@ mod tests {
         ]))
         .unwrap();
         assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn threads_flag_is_accepted_and_validated() {
+        let _guard = crate::linalg::par::test_knob_guard();
+        let code = run(&s(&[
+            "solve-path", "--preset", "synthetic100", "--scale", "0.01",
+            "--grid", "4", "--rule", "sasvi", "--threads", "2",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+        assert!(run(&s(&["solve-path", "--threads", "bogus"])).is_err());
     }
 
     #[test]

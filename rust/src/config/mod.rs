@@ -169,6 +169,9 @@ pub struct ExperimentConfig {
     pub rules: Vec<String>,
     pub trials: usize,
     pub out_dir: String,
+    /// worker lanes for the `linalg::par` column-block pool
+    /// (0 = keep the process default: `SASVI_THREADS` env var or all cores)
+    pub threads: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -188,6 +191,7 @@ impl Default for ExperimentConfig {
             ],
             trials: 1,
             out_dir: "results".into(),
+            threads: 0,
         }
     }
 }
@@ -212,6 +216,14 @@ impl ExperimentConfig {
             rules,
             trials: c.get_usize("experiment.trials", d.trials),
             out_dir: c.get_str("experiment.out_dir", &d.out_dir),
+            threads: c.get_usize("experiment.threads", d.threads),
+        }
+    }
+
+    /// Apply the `threads` knob to the process-wide pool (no-op when 0).
+    pub fn apply_threads(&self) {
+        if self.threads > 0 {
+            crate::linalg::par::set_threads(self.threads);
         }
     }
 }
@@ -261,6 +273,14 @@ trials = 3
         assert_eq!(e.dataset, "pie");
         assert_eq!(e.grid_points, 100);
         assert_eq!(e.rules.len(), 5);
+        assert_eq!(e.threads, 0, "threads defaults to 'process default'");
+    }
+
+    #[test]
+    fn threads_knob_parses() {
+        let c = Config::parse("[experiment]\nthreads = 4\n").unwrap();
+        let e = ExperimentConfig::from_config(&c);
+        assert_eq!(e.threads, 4);
     }
 
     #[test]

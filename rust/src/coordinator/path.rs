@@ -5,6 +5,13 @@
 //! warm-start coordinate descent, correct KKT violations when the rule is
 //! unsafe (strong rule), then compute the next dual state from the residual
 //! (the one full `X^T r` pass each step costs).
+//!
+//! Every per-column pass in this loop — the rule screens, the `X^T r`
+//! statistics pass, the KKT correction sweep, the FISTA compaction gather —
+//! dispatches through the [`crate::linalg::par`] column-block pool, so path
+//! throughput scales with the configured thread count while the computed
+//! path stays bit-identical to a serial run (see `par`'s determinism
+//! contract).
 
 use std::time::{Duration, Instant};
 

@@ -1,5 +1,6 @@
 //! Dataset serialization: the binary cache format (dense v1 + sparse v2)
-//! and a libsvm-format text reader.
+//! and a libsvm-format text reader/writer ([`load_libsvm`] /
+//! [`save_libsvm`], which round-trip exactly).
 //!
 //! ## Binary format
 //!
@@ -178,6 +179,81 @@ pub fn load(path: impl AsRef<Path>) -> Result<Dataset> {
         None
     };
     Ok(Dataset { name, x, y, beta_true, seed })
+}
+
+/// Write a dataset in libsvm text format (the inverse of [`load_libsvm`]):
+/// one `<label> <index>:<value> ...` line per sample, 1-based indices in
+/// ascending order, shortest-round-trip `f64` formatting. Works on either
+/// storage backend.
+///
+/// Round-trip contract: every entry that compares *unequal* to zero (and
+/// every label) reloads bit-exactly. Entries equal to zero — including a
+/// stored `-0.0` — are the format's notion of "absent" and reload as
+/// `+0.0`; that matches [`load_libsvm`], whose triplet assembly drops
+/// explicit zeros.
+pub fn save_libsvm(ds: &Dataset, path: impl AsRef<Path>) -> Result<()> {
+    let f = File::create(path.as_ref())
+        .with_context(|| format!("create {}", path.as_ref().display()))?;
+    let mut w = BufWriter::new(f);
+    let (n, p) = (ds.n(), ds.p());
+    match &ds.x {
+        DesignMatrix::Dense(m) => {
+            // stream row by row with strided column reads: no row-major
+            // copy of the (potentially huge) dense matrix
+            for i in 0..n {
+                write!(w, "{}", fmt_f64(ds.y[i]))?;
+                for j in 0..p {
+                    let v = m.col(j)[i];
+                    if v != 0.0 {
+                        write!(w, " {}:{}", j + 1, fmt_f64(v))?;
+                    }
+                }
+                writeln!(w)?;
+            }
+        }
+        DesignMatrix::Sparse(m) => {
+            // counting-sort transpose to CSR (exact-size buffers, O(nnz)),
+            // then stream rows; within a row columns come out ascending
+            // because the transpose walks columns in order
+            let nnz = m.nnz();
+            let mut row_ptr = vec![0usize; n + 1];
+            for &i in m.indices() {
+                row_ptr[i + 1] += 1;
+            }
+            for i in 0..n {
+                row_ptr[i + 1] += row_ptr[i];
+            }
+            let mut cols = vec![0usize; nnz];
+            let mut vals = vec![0.0f64; nnz];
+            let mut cursor = row_ptr.clone();
+            for j in 0..p {
+                let (ridx, cvals) = m.col(j);
+                for (&i, &v) in ridx.iter().zip(cvals.iter()) {
+                    let k = cursor[i];
+                    cols[k] = j;
+                    vals[k] = v;
+                    cursor[i] += 1;
+                }
+            }
+            for i in 0..n {
+                write!(w, "{}", fmt_f64(ds.y[i]))?;
+                for k in row_ptr[i]..row_ptr[i + 1] {
+                    if vals[k] != 0.0 {
+                        write!(w, " {}:{}", cols[k] + 1, fmt_f64(vals[k]))?;
+                    }
+                }
+                writeln!(w)?;
+            }
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Shortest decimal representation that round-trips an `f64` (Rust's
+/// default `Display` for floats guarantees this).
+fn fmt_f64(v: f64) -> String {
+    format!("{v}")
 }
 
 /// Read a libsvm-format text file (see the module docs for the layout).
@@ -390,6 +466,81 @@ mod tests {
         let bad2 = dir.join("bad2.txt");
         std::fs::write(&bad2, "1.0 x:2.0\n").unwrap();
         assert!(load_libsvm(&bad2, 0).is_err());
+    }
+
+    #[test]
+    fn libsvm_save_load_roundtrip_both_backends() {
+        let dir = std::env::temp_dir().join("sasvi_io_libsvm_rt");
+        std::fs::create_dir_all(&dir).unwrap();
+        // sparse backend
+        let sp = SyntheticSpec { n: 15, p: 25, nnz: 4, density: 0.2, ..Default::default() }
+            .generate(11);
+        assert!(sp.x.is_sparse());
+        let path = dir.join("sp.libsvm");
+        save_libsvm(&sp, &path).unwrap();
+        let back = load_libsvm(&path, sp.p()).unwrap();
+        assert_eq!(back.n(), sp.n());
+        assert_eq!(back.p(), sp.p());
+        for (a, b) in back.y.iter().zip(sp.y.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "labels must round-trip exactly");
+        }
+        for i in 0..sp.n() {
+            for j in 0..sp.p() {
+                assert_eq!(
+                    back.x.get(i, j).to_bits(),
+                    sp.x.get(i, j).to_bits(),
+                    "entry ({i}, {j})"
+                );
+            }
+        }
+        // dense backend writes the same text modulo explicit zeros
+        let mut dn = sp.clone();
+        dn.x = sp.x.to_dense().into();
+        let path2 = dir.join("dn.libsvm");
+        save_libsvm(&dn, &path2).unwrap();
+        assert_eq!(
+            std::fs::read_to_string(&path).unwrap(),
+            std::fs::read_to_string(&path2).unwrap()
+        );
+    }
+
+    #[test]
+    fn libsvm_out_of_order_indices_are_sorted_not_fatal() {
+        let dir = std::env::temp_dir().join("sasvi_io_libsvm_ooo");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ooo.txt");
+        std::fs::write(&path, "1.0 3:3.0 1:1.0 2:2.0\n").unwrap();
+        let ds = load_libsvm(&path, 0).unwrap();
+        assert_eq!(ds.p(), 3);
+        assert_eq!(ds.x.get(0, 0), 1.0);
+        assert_eq!(ds.x.get(0, 1), 2.0);
+        assert_eq!(ds.x.get(0, 2), 3.0);
+    }
+
+    #[test]
+    fn libsvm_malformed_inputs_error_instead_of_panicking() {
+        let dir = std::env::temp_dir().join("sasvi_io_libsvm_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let cases: &[(&str, &str)] = &[
+            ("trailing_garbage", "1.0 1:2.0 garbage\n"),
+            ("bad_label", "abc 1:2.0\n"),
+            ("bad_value", "1.0 1:notafloat\n"),
+            ("missing_value", "1.0 1:\n"),
+            ("negative_index", "1.0 -3:2.0\n"),
+            ("empty_only", "\n   \n# just a comment\n"),
+            ("no_features", "1.0\n2.0\n"),
+        ];
+        for (name, text) in cases {
+            let path = dir.join(format!("{name}.txt"));
+            std::fs::write(&path, text).unwrap();
+            let res = load_libsvm(&path, 0);
+            assert!(res.is_err(), "{name} must be rejected, got {res:?}");
+        }
+        // interior empty lines between valid samples are fine
+        let ok = dir.join("interior_blank.txt");
+        std::fs::write(&ok, "1.0 1:2.0\n\n\n-1.0 2:0.5\n").unwrap();
+        let ds = load_libsvm(&ok, 0).unwrap();
+        assert_eq!(ds.n(), 2);
     }
 
     #[test]

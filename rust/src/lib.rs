@@ -28,6 +28,30 @@
 //! statistics pass runs an order of magnitude faster than dense (measured
 //! in `benches/sparse.rs`).
 //!
+//! ## Parallel column-block engine
+//!
+//! Every whole-matrix pass on the screen/check path — the `X^T r`
+//! statistics pass, column norms/normalization, all four rules' batched
+//! per-feature evaluation, the KKT correction sweep, the Theorem-4
+//! sure-removal batch — dispatches through [`linalg::par`]: a persistent
+//! hand-rolled worker pool (std threads + a channel; no rayon) spawned
+//! once per process and shared by both storage backends.
+//!
+//! **The determinism contract:** parallel results are *bit-identical* to
+//! serial execution at every thread count. Work is cut into fixed-size
+//! column blocks (never derived from the thread count), each block runs
+//! the backends' serial kernels, and block outputs land in disjoint output
+//! regions or are folded in block order — never atomically-accumulated
+//! floats. `rust/tests/determinism.rs` pins this down for
+//! `threads ∈ {1, 2, 4, 8}` on both backends.
+//!
+//! The thread count is one process-wide knob ([`linalg::par::set_threads`])
+//! exposed as the CLI `--threads` flag (any command), the
+//! `experiment.threads` config key, the optional trailing argument of the
+//! server's `GEN` command, and the `SASVI_THREADS` env var; the default is
+//! all available cores. `benches/parallel.rs` measures the serial-vs-pool
+//! scaling of the statistics pass and the full-rule screens.
+//!
 //! ## Quickstart
 //!
 //! ```no_run

@@ -74,15 +74,30 @@ impl DenseMatrix {
         &self.data
     }
 
+    /// Mutable raw column-major buffer (the parallel normalization kernel
+    /// carves disjoint per-block column regions out of it).
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
     /// `y = X * beta` (dense matvec over all columns).
     pub fn matvec(&self, beta: &[f64], out: &mut [f64]) {
         assert_eq!(beta.len(), self.p);
         assert_eq!(out.len(), self.n);
+        self.matvec_rows(beta, 0..self.n, out);
+    }
+
+    /// `out = X[rows, :] * beta` for a contiguous row range — the serial
+    /// kernel one row-parallel block executes. Per output element the
+    /// column-accumulation order equals the full matvec's, so splitting
+    /// rows across blocks cannot change a single bit.
+    pub fn matvec_rows(&self, beta: &[f64], rows: std::ops::Range<usize>, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), rows.len());
         out.fill(0.0);
-        for j in 0..self.p {
-            let b = beta[j];
+        for (j, &b) in beta.iter().enumerate() {
             if b != 0.0 {
-                ops::axpy(b, self.col(j), out);
+                ops::axpy(b, &self.col(j)[rows.clone()], out);
             }
         }
     }
@@ -91,8 +106,15 @@ impl DenseMatrix {
     pub fn t_matvec(&self, v: &[f64], out: &mut [f64]) {
         assert_eq!(v.len(), self.n);
         assert_eq!(out.len(), self.p);
-        for j in 0..self.p {
-            out[j] = ops::dot(self.col(j), v);
+        self.t_matvec_block(v, 0..self.p, out);
+    }
+
+    /// `out[k] = <x_{cols.start+k}, v>` — the serial kernel one parallel
+    /// column block executes; `t_matvec` is this over the full range.
+    pub fn t_matvec_block(&self, v: &[f64], cols: std::ops::Range<usize>, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), cols.len());
+        for (o, j) in out.iter_mut().zip(cols) {
+            *o = ops::dot(self.col(j), v);
         }
     }
 
@@ -106,7 +128,17 @@ impl DenseMatrix {
 
     /// Squared norms of every column.
     pub fn col_norms_sq(&self) -> Vec<f64> {
-        (0..self.p).map(|j| ops::nrm2sq(self.col(j))).collect()
+        let mut out = vec![0.0; self.p];
+        self.col_norms_sq_block(0..self.p, &mut out);
+        out
+    }
+
+    /// Squared norms for a column block (see `t_matvec_block`).
+    pub fn col_norms_sq_block(&self, cols: std::ops::Range<usize>, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), cols.len());
+        for (o, j) in out.iter_mut().zip(cols) {
+            *o = ops::nrm2sq(self.col(j));
+        }
     }
 
     /// Standardize columns in place to unit Euclidean norm; returns the

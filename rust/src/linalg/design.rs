@@ -11,8 +11,16 @@
 //! The per-call `match` costs one predictable branch on top of O(n) (dense)
 //! or O(nnz_j) (sparse) work — unmeasurable next to the memory traffic the
 //! sparse backend saves (see `benches/sparse.rs`).
+//!
+//! The whole-matrix passes (`t_matvec`, `t_matvec_subset`, `col_norms_sq`,
+//! `normalize_columns`, `matvec`, `gather_columns`) dispatch through the
+//! [`crate::linalg::par`] column-block pool at the process-configured
+//! thread count. The parallel results are bit-identical to the backends'
+//! serial kernels at every thread count (fixed block decomposition +
+//! ordered reductions — see `par`'s module docs), so callers never observe
+//! the difference except in wall-clock.
 
-use crate::linalg::{ops, CscMatrix, DenseMatrix};
+use crate::linalg::{ops, par, CscMatrix, DenseMatrix};
 
 /// A design matrix: dense column-major or sparse CSC.
 #[derive(Clone, Debug, PartialEq)]
@@ -117,44 +125,32 @@ impl DesignMatrix {
         }
     }
 
-    /// `y = X * beta`.
+    /// `y = X * beta` (row-parallel for dense storage).
     pub fn matvec(&self, beta: &[f64], out: &mut [f64]) {
-        match self {
-            DesignMatrix::Dense(m) => m.matvec(beta, out),
-            DesignMatrix::Sparse(m) => m.matvec(beta, out),
-        }
+        par::matvec_with(par::global(), par::threads(), self, beta, out);
     }
 
-    /// `out[j] = <x_j, v>` for every column (the statistics pass).
+    /// `out[j] = <x_j, v>` for every column (the statistics pass), run in
+    /// parallel column blocks; bit-identical to the serial backends.
     pub fn t_matvec(&self, v: &[f64], out: &mut [f64]) {
-        match self {
-            DesignMatrix::Dense(m) => m.t_matvec(v, out),
-            DesignMatrix::Sparse(m) => m.t_matvec(v, out),
-        }
+        par::t_matvec_with(par::global(), par::threads(), self, v, out);
     }
 
-    /// Active-set variant of [`DesignMatrix::t_matvec`].
+    /// Active-set variant of [`DesignMatrix::t_matvec`]. `idx` must be
+    /// duplicate-free (active sets are).
     pub fn t_matvec_subset(&self, v: &[f64], idx: &[usize], out: &mut [f64]) {
-        match self {
-            DesignMatrix::Dense(m) => m.t_matvec_subset(v, idx, out),
-            DesignMatrix::Sparse(m) => m.t_matvec_subset(v, idx, out),
-        }
+        par::t_matvec_subset_with(par::global(), par::threads(), self, v, idx, out);
     }
 
-    /// Squared norms of every column.
+    /// Squared norms of every column (parallel column blocks).
     pub fn col_norms_sq(&self) -> Vec<f64> {
-        match self {
-            DesignMatrix::Dense(m) => m.col_norms_sq(),
-            DesignMatrix::Sparse(m) => m.col_norms_sq(),
-        }
+        par::col_norms_sq_with(par::global(), par::threads(), self)
     }
 
-    /// Normalize columns in place to unit norm; returns the original norms.
+    /// Normalize columns in place to unit norm; returns the original norms
+    /// (parallel column blocks, bit-identical to the serial backends).
     pub fn normalize_columns(&mut self) -> Vec<f64> {
-        match self {
-            DesignMatrix::Dense(m) => m.normalize_columns(),
-            DesignMatrix::Sparse(m) => m.normalize_columns(),
-        }
+        par::normalize_columns_with(par::global(), par::threads(), self)
     }
 
     pub fn fro_norm_sq(&self) -> f64 {
@@ -188,14 +184,10 @@ impl DesignMatrix {
     }
 
     /// Gather the given columns into a dense `n x idx.len()` submatrix
-    /// (the compaction step of the FISTA path solver).
+    /// (the compaction step of the FISTA path solver), copied in parallel
+    /// column blocks.
     pub fn gather_columns(&self, idx: &[usize]) -> DenseMatrix {
-        let n = self.nrows();
-        let mut sub = DenseMatrix::zeros(n, idx.len());
-        for (c, &j) in idx.iter().enumerate() {
-            self.col_dense_into(j, sub.col_mut(c));
-        }
-        sub
+        par::gather_columns_with(par::global(), par::threads(), self, idx)
     }
 
     /// Dense expansion (copies for a dense backend).

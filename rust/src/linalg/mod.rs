@@ -9,15 +9,22 @@
 //! screening rules touch *columns* (features) of the design matrix, never
 //! rows. [`DesignMatrix`] is the unified column-level API over both
 //! backends that the rest of the crate consumes — see [`design`].
+//!
+//! The whole-matrix passes run on the [`par`] column-block engine: a
+//! persistent hand-rolled worker pool whose parallel results are
+//! bit-identical to serial execution at every thread count (fixed block
+//! decomposition, ordered reductions).
 
 pub mod chol;
 pub mod dense;
 pub mod design;
 pub mod ops;
+pub mod par;
 pub mod sparse;
 
 pub use chol::Cholesky;
 pub use dense::DenseMatrix;
 pub use design::DesignMatrix;
 pub use ops::{axpy, dot, gemv, gemv_t, nrm2, nrm2sq, scal};
+pub use par::ThreadPool;
 pub use sparse::CscMatrix;

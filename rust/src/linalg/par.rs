@@ -1,0 +1,718 @@
+//! Parallel column-block engine: a hand-rolled persistent worker pool plus
+//! the block kernels the screening hot path runs on it.
+//!
+//! Design constraints, in priority order:
+//!
+//! 1. **Determinism.** Parallel results are *bit-identical* to serial
+//!    execution at every thread count. Work is split into fixed-size column
+//!    blocks ([`COL_BLOCK`] — independent of the thread count), each block
+//!    runs the same serial kernel the storage backends expose
+//!    (`t_matvec_block`, `col_norms_sq_block`, ...), and block outputs
+//!    either land in disjoint regions of one output buffer or are returned
+//!    per-block and folded in block order ([`ThreadPool::map_blocks`]).
+//!    There are no atomically-accumulated floats anywhere, so scheduling
+//!    can never reorder a floating-point reduction.
+//! 2. **No dependencies.** rayon is unavailable offline; this is std
+//!    threads + a channel, the same substrate as the job-level
+//!    [`crate::coordinator::pool`].
+//! 3. **One pool per process.** Workers are spawned lazily once
+//!    ([`global`]) and live for the process; a dispatch costs one channel
+//!    send per helper lane. The *effective* parallelism is a runtime knob
+//!    ([`set_threads`], the `SASVI_THREADS` env var, CLI `--threads`,
+//!    config `experiment.threads`, server `GEN ... [threads]`) consulted
+//!    per call, so it can be retuned without respawning anything.
+//!
+//! The calling thread always participates as one lane, so a dispatch can
+//! never deadlock even when every helper is busy with another caller's
+//! blocks — at worst it degrades to serial execution plus queue latency.
+
+use std::ops::Range;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+use crate::linalg::{DenseMatrix, DesignMatrix};
+
+/// Columns per parallel block. Fixed (never derived from the thread count)
+/// so the block decomposition — and therefore every result bit — is
+/// identical no matter how many lanes execute it. 256 columns keeps a block
+/// in the tens-of-microseconds range on paper-scale designs while leaving
+/// 40 blocks to balance across lanes at p = 10000.
+pub const COL_BLOCK: usize = 256;
+
+/// Rows per block for the row-parallel dense `X beta`.
+pub const ROW_BLOCK: usize = 1024;
+
+/// Hard cap on the configurable thread count (sanity bound, not a tuning
+/// parameter).
+pub const MAX_THREADS: usize = 256;
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// A persistent pool of helper threads executing block ranges.
+///
+/// `lanes` is the *total* parallelism including the calling thread, so
+/// `ThreadPool::new(1)` spawns nothing and runs every dispatch inline —
+/// which is also the bit-exact reference the determinism tests compare
+/// against.
+pub struct ThreadPool {
+    tx: Mutex<Sender<Task>>,
+    lanes: usize,
+}
+
+/// Shared state of one `for_blocks` dispatch. `remaining` counts *lanes*
+/// (not blocks): the dispatcher returns only after every lane has exited,
+/// which is what makes handing lanes a reference to a stack closure sound.
+struct BlockJob {
+    next: AtomicUsize,
+    n: usize,
+    block: usize,
+    nblocks: usize,
+    panicked: AtomicBool,
+    /// first panic payload, re-raised on the dispatching thread
+    payload: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+    remaining: Mutex<usize>,
+    done: Condvar,
+    f: &'static (dyn Fn(usize, Range<usize>) + Sync),
+}
+
+fn run_lane(job: &BlockJob) {
+    loop {
+        if job.panicked.load(Ordering::Relaxed) {
+            break;
+        }
+        let b = job.next.fetch_add(1, Ordering::Relaxed);
+        if b >= job.nblocks {
+            break;
+        }
+        let lo = b * job.block;
+        let hi = (lo + job.block).min(job.n);
+        if let Err(e) = std::panic::catch_unwind(AssertUnwindSafe(|| (job.f)(b, lo..hi))) {
+            let mut payload = job.payload.lock().unwrap();
+            if payload.is_none() {
+                *payload = Some(e);
+            }
+            drop(payload);
+            job.panicked.store(true, Ordering::Relaxed);
+            break;
+        }
+    }
+    let mut left = job.remaining.lock().unwrap();
+    *left -= 1;
+    if *left == 0 {
+        job.done.notify_all();
+    }
+}
+
+impl ThreadPool {
+    /// A pool with `lanes` total parallel lanes; `lanes - 1` helper threads
+    /// are spawned (the calling thread is the last lane).
+    pub fn new(lanes: usize) -> Self {
+        let lanes = lanes.clamp(1, MAX_THREADS);
+        let (tx, rx) = std::sync::mpsc::channel::<Task>();
+        let rx = Arc::new(Mutex::new(rx));
+        for i in 0..lanes - 1 {
+            let rx = Arc::clone(&rx);
+            std::thread::Builder::new()
+                .name(format!("sasvi-par-{i}"))
+                .spawn(move || loop {
+                    // Hold the lock only while receiving, never while
+                    // running a task.
+                    let task = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    match task {
+                        Ok(t) => t(),
+                        Err(_) => break, // pool dropped
+                    }
+                })
+                .expect("spawn sasvi-par worker");
+        }
+        Self { tx: Mutex::new(tx), lanes }
+    }
+
+    /// Total lanes (helper threads + the calling thread).
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Run `f(block_index, column_range)` for every fixed-size block of
+    /// `0..n`, on up to `max_lanes` lanes. Blocks are claimed dynamically,
+    /// but `f` must be a pure function of the block it is given (writing
+    /// only to per-block-disjoint state), so the schedule can never change
+    /// the result. Blocks on `n = 0` are a no-op.
+    ///
+    /// Panics in `f` are contained: all lanes stop claiming blocks, the
+    /// dispatch completes, and the panic is re-raised on the caller.
+    pub fn for_blocks<F>(&self, n: usize, block: usize, max_lanes: usize, f: F)
+    where
+        F: Fn(usize, Range<usize>) + Sync,
+    {
+        let block = block.max(1);
+        let nblocks = (n + block - 1) / block;
+        let lanes = self.lanes.min(max_lanes).min(nblocks).max(1);
+        if lanes == 1 {
+            // Serial fast path: same blocks, same kernel, zero dispatch.
+            for b in 0..nblocks {
+                f(b, b * block..((b + 1) * block).min(n));
+            }
+            return;
+        }
+        // Erase the closure's lifetime. SAFETY: this function does not
+        // return (or unwind) until `remaining` — which counts lanes, and
+        // which every lane decrements exactly once on exit — reaches zero,
+        // so no lane can observe `f` after it dies. A helper that dequeues
+        // its lane task late (after the blocks are exhausted) exits without
+        // ever touching `f`.
+        let f_obj: &(dyn Fn(usize, Range<usize>) + Sync) = &f;
+        let f_static: &'static (dyn Fn(usize, Range<usize>) + Sync) =
+            unsafe { std::mem::transmute(f_obj) };
+        let job = Arc::new(BlockJob {
+            next: AtomicUsize::new(0),
+            n,
+            block,
+            nblocks,
+            panicked: AtomicBool::new(false),
+            payload: Mutex::new(None),
+            remaining: Mutex::new(lanes),
+            done: Condvar::new(),
+            f: f_static,
+        });
+        {
+            let tx = self.tx.lock().unwrap();
+            for _ in 0..lanes - 1 {
+                let j = Arc::clone(&job);
+                tx.send(Box::new(move || run_lane(&j)))
+                    .expect("sasvi-par pool disconnected");
+            }
+        }
+        run_lane(&job);
+        let mut left = job.remaining.lock().unwrap();
+        while *left > 0 {
+            left = job.done.wait(left).unwrap();
+        }
+        drop(left);
+        if job.panicked.load(Ordering::Relaxed) {
+            // re-raise the block kernel's own panic on the dispatcher
+            let payload = job
+                .payload
+                .lock()
+                .unwrap()
+                .take()
+                .unwrap_or_else(|| Box::new("parallel block kernel panicked"));
+            std::panic::resume_unwind(payload);
+        }
+    }
+
+    /// Run `f` over fixed-size blocks and return each block's value in a
+    /// Vec indexed by block — i.e. a reduction whose fold order is the
+    /// block order, independent of scheduling.
+    pub fn map_blocks<T, F>(&self, n: usize, block: usize, max_lanes: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize, Range<usize>) -> T + Sync,
+    {
+        let block = block.max(1);
+        let nblocks = (n + block - 1) / block;
+        let mut slots: Vec<Option<T>> = Vec::with_capacity(nblocks);
+        slots.resize_with(nblocks, || None);
+        {
+            let base = SendPtr(slots.as_mut_ptr());
+            self.for_blocks(n, block, max_lanes, |b, r| {
+                // SAFETY: each block index is claimed exactly once, so each
+                // slot is written by exactly one lane.
+                unsafe { *base.get().add(b) = Some(f(b, r)) };
+            });
+        }
+        slots
+            .into_iter()
+            .map(|s| s.expect("block result missing"))
+            .collect()
+    }
+}
+
+/// A raw pointer wrapper asserting Send + Sync, used to hand each block a
+/// disjoint region of one output buffer. Every use site documents why its
+/// writes are disjoint.
+pub(crate) struct SendPtr<T>(pub *mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        SendPtr(self.0)
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    pub fn get(&self) -> *mut T {
+        self.0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// process-wide pool + effective-thread knob
+// ---------------------------------------------------------------------------
+
+static EFFECTIVE_THREADS: AtomicUsize = AtomicUsize::new(0); // 0 = unset
+
+/// Set the process-wide effective parallelism (clamped to
+/// `1..=MAX_THREADS`). Takes effect on the next dispatch; results are
+/// unchanged by construction, only wall-clock is.
+pub fn set_threads(n: usize) {
+    EFFECTIVE_THREADS.store(n.clamp(1, MAX_THREADS), Ordering::Relaxed);
+}
+
+/// The current effective parallelism: the last [`set_threads`] value, else
+/// the `SASVI_THREADS` env var, else the number of available cores.
+pub fn threads() -> usize {
+    match EFFECTIVE_THREADS.load(Ordering::Relaxed) {
+        0 => default_threads(),
+        t => t,
+    }
+}
+
+/// The env/hardware default, computed once — `threads()` sits on the hot
+/// path of every dispatch (FISTA calls three kernels per iteration), so it
+/// must not re-read the environment or issue an affinity syscall each time.
+fn default_threads() -> usize {
+    static DEFAULT: OnceLock<usize> = OnceLock::new();
+    *DEFAULT.get_or_init(|| {
+        if let Ok(v) = std::env::var("SASVI_THREADS") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                return n.clamp(1, MAX_THREADS);
+            }
+        }
+        hardware_threads()
+    })
+}
+
+/// Available hardware parallelism (1 if it cannot be determined).
+pub fn hardware_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// The process-wide pool, spawned on first use and sized to the largest of
+/// the hardware width, the `SASVI_THREADS` env var, and any [`set_threads`]
+/// value already in effect — so an oversubscribe request made before the
+/// first dispatch (CLI `--threads`, config, server `GEN`) is honored just
+/// like the env var. A `set_threads` larger than the pool *after* first
+/// use is capped at the pool's width (the server reports the capped
+/// value).
+pub fn global() -> &'static ThreadPool {
+    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        ThreadPool::new(hardware_threads().max(default_threads()).max(threads()))
+    })
+}
+
+/// Serializes unit tests that mutate and assert on the process-global
+/// thread knob (they would otherwise race under cargo's parallel test
+/// runner). Robust to poisoning: a panicking test must not wedge the rest.
+#[cfg(test)]
+pub(crate) fn test_knob_guard() -> std::sync::MutexGuard<'static, ()> {
+    static KNOB: Mutex<()> = Mutex::new(());
+    KNOB.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Dispatch fixed-size column blocks of `0..n` on the global pool at the
+/// configured effective parallelism.
+pub fn for_columns<F>(n: usize, f: F)
+where
+    F: Fn(usize, Range<usize>) + Sync,
+{
+    global().for_blocks(n, COL_BLOCK, threads(), f);
+}
+
+/// [`ThreadPool::map_blocks`] on the global pool at the configured
+/// effective parallelism.
+pub fn map_columns<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, Range<usize>) -> T + Sync,
+{
+    global().map_blocks(n, COL_BLOCK, threads(), f)
+}
+
+/// Parallel fill of `out[j] = f(j)` — the shape every screening rule's
+/// per-feature bounds pass takes. Each index is written exactly once by a
+/// pure function, so the result is schedule-independent.
+pub fn fill_columns<F>(out: &mut [f64], f: F)
+where
+    F: Fn(usize) -> f64 + Sync,
+{
+    let base = SendPtr(out.as_mut_ptr());
+    for_columns(out.len(), |_, r| {
+        // SAFETY: blocks cover disjoint index ranges of `out`.
+        let o = unsafe { std::slice::from_raw_parts_mut(base.get().add(r.start), r.len()) };
+        for (o_k, j) in o.iter_mut().zip(r) {
+            *o_k = f(j);
+        }
+    });
+}
+
+/// Parallel fill of a keep mask plus the kept count (per-block counts
+/// folded in block order). Used by the fused rule screens.
+pub fn fill_mask_count<F>(keep: &mut [bool], f: F) -> usize
+where
+    F: Fn(usize) -> bool + Sync,
+{
+    let base = SendPtr(keep.as_mut_ptr());
+    let counts = map_columns(keep.len(), |_, r| {
+        // SAFETY: blocks cover disjoint index ranges of `keep`.
+        let o = unsafe { std::slice::from_raw_parts_mut(base.get().add(r.start), r.len()) };
+        let mut kept = 0usize;
+        for (o_k, j) in o.iter_mut().zip(r) {
+            let v = f(j);
+            *o_k = v;
+            kept += v as usize;
+        }
+        kept
+    });
+    counts.into_iter().sum()
+}
+
+// ---------------------------------------------------------------------------
+// design-matrix kernels (the `_with` variants take an explicit pool + lane
+// budget so the determinism tests can drive pools of any width; the
+// `DesignMatrix` methods call them on the global pool)
+// ---------------------------------------------------------------------------
+
+/// Parallel `out[j] = <x_j, v>` over column blocks — the screening
+/// statistics pass. Bit-identical to the backends' serial `t_matvec`.
+pub fn t_matvec_with(
+    pool: &ThreadPool,
+    lanes: usize,
+    x: &DesignMatrix,
+    v: &[f64],
+    out: &mut [f64],
+) {
+    assert_eq!(v.len(), x.nrows());
+    assert_eq!(out.len(), x.ncols());
+    let base = SendPtr(out.as_mut_ptr());
+    pool.for_blocks(x.ncols(), COL_BLOCK, lanes, |_, r| {
+        // SAFETY: blocks cover disjoint index ranges of `out`.
+        let o = unsafe { std::slice::from_raw_parts_mut(base.get().add(r.start), r.len()) };
+        match x {
+            DesignMatrix::Dense(m) => m.t_matvec_block(v, r, o),
+            DesignMatrix::Sparse(m) => m.t_matvec_block(v, r, o),
+        }
+    });
+}
+
+/// Parallel active-set variant: `out[j] = <x_j, v>` for `j` in `idx` only.
+/// Bounds and duplicate-freeness are validated up front (panic, keeping
+/// this a sound safe API): a duplicate index would make two lanes write
+/// the same `out[j]` concurrently — a data race — where the serial loop
+/// was merely redundant.
+pub fn t_matvec_subset_with(
+    pool: &ThreadPool,
+    lanes: usize,
+    x: &DesignMatrix,
+    v: &[f64],
+    idx: &[usize],
+    out: &mut [f64],
+) {
+    assert_eq!(v.len(), x.nrows());
+    assert_eq!(out.len(), x.ncols());
+    // O(k log k) over the active set only — never O(p), which is what this
+    // fast path exists to avoid
+    let mut sorted = idx.to_vec();
+    sorted.sort_unstable();
+    for w in sorted.windows(2) {
+        assert!(w[0] != w[1], "t_matvec_subset: duplicate index {}", w[0]);
+    }
+    if let Some(&last) = sorted.last() {
+        assert!(last < out.len(), "t_matvec_subset: index {last} out of range");
+    }
+    let base = SendPtr(out.as_mut_ptr());
+    pool.for_blocks(idx.len(), COL_BLOCK, lanes, |_, r| {
+        for &j in &idx[r] {
+            // SAFETY: j < out.len() was asserted above; `idx` is
+            // duplicate-free, so each `out[j]` has exactly one writer.
+            unsafe { *base.get().add(j) = x.col_dot(j, v) };
+        }
+    });
+}
+
+/// Parallel squared column norms.
+pub fn col_norms_sq_with(pool: &ThreadPool, lanes: usize, x: &DesignMatrix) -> Vec<f64> {
+    let p = x.ncols();
+    let mut out = vec![0.0; p];
+    let base = SendPtr(out.as_mut_ptr());
+    pool.for_blocks(p, COL_BLOCK, lanes, |_, r| {
+        // SAFETY: blocks cover disjoint index ranges of `out`.
+        let o = unsafe { std::slice::from_raw_parts_mut(base.get().add(r.start), r.len()) };
+        match x {
+            DesignMatrix::Dense(m) => m.col_norms_sq_block(r, o),
+            DesignMatrix::Sparse(m) => m.col_norms_sq_block(r, o),
+        }
+    });
+    out
+}
+
+/// Parallel in-place column normalization; returns the original norms.
+/// Norm computation and the scale pass both run over column blocks; the
+/// arithmetic per column is exactly the serial backends', so results are
+/// bit-identical to `DenseMatrix::normalize_columns` /
+/// `CscMatrix::normalize_columns`.
+pub fn normalize_columns_with(pool: &ThreadPool, lanes: usize, x: &mut DesignMatrix) -> Vec<f64> {
+    let p = x.ncols();
+    let mut norms = col_norms_sq_with(pool, lanes, x);
+    for v in norms.iter_mut() {
+        *v = v.sqrt();
+    }
+    match x {
+        DesignMatrix::Dense(m) => {
+            let n = m.nrows();
+            let base = SendPtr(m.as_mut_slice().as_mut_ptr());
+            let norms_ref = &norms;
+            pool.for_blocks(p, COL_BLOCK, lanes, |_, r| {
+                // SAFETY: column-major storage — block `r` owns the
+                // contiguous, disjoint region `data[r.start*n .. r.end*n]`.
+                let data = unsafe {
+                    std::slice::from_raw_parts_mut(base.get().add(r.start * n), r.len() * n)
+                };
+                for (k, j) in r.enumerate() {
+                    let nrm = norms_ref[j];
+                    if nrm > 0.0 {
+                        let inv = 1.0 / nrm;
+                        for v in data[k * n..(k + 1) * n].iter_mut() {
+                            *v *= inv;
+                        }
+                    }
+                }
+            });
+        }
+        DesignMatrix::Sparse(m) => {
+            let indptr = m.indptr().to_vec();
+            let base = SendPtr(m.values_mut().as_mut_ptr());
+            let norms_ref = &norms;
+            let ip = &indptr;
+            pool.for_blocks(p, COL_BLOCK, lanes, |_, r| {
+                for j in r {
+                    let nrm = norms_ref[j];
+                    if nrm > 0.0 {
+                        let inv = 1.0 / nrm;
+                        let (lo, hi) = (ip[j], ip[j + 1]);
+                        // SAFETY: CSC value ranges of distinct columns are
+                        // disjoint by the indptr invariant.
+                        let vals = unsafe {
+                            std::slice::from_raw_parts_mut(base.get().add(lo), hi - lo)
+                        };
+                        for v in vals.iter_mut() {
+                            *v *= inv;
+                        }
+                    }
+                }
+            });
+        }
+    }
+    norms
+}
+
+/// `y = X beta`. Dense designs run row-parallel (each block owns a disjoint
+/// row range of `out`; per element the column-accumulation order is the
+/// serial one, so results are bit-identical). The CSC backend stays serial:
+/// its matvec is a column scatter whose parallelization would race on
+/// `out`, and `n` is small in every workload this crate targets.
+pub fn matvec_with(
+    pool: &ThreadPool,
+    lanes: usize,
+    x: &DesignMatrix,
+    beta: &[f64],
+    out: &mut [f64],
+) {
+    assert_eq!(beta.len(), x.ncols());
+    assert_eq!(out.len(), x.nrows());
+    match x {
+        DesignMatrix::Dense(m) => {
+            let base = SendPtr(out.as_mut_ptr());
+            pool.for_blocks(x.nrows(), ROW_BLOCK, lanes, |_, r| {
+                // SAFETY: blocks cover disjoint row ranges of `out`.
+                let o =
+                    unsafe { std::slice::from_raw_parts_mut(base.get().add(r.start), r.len()) };
+                m.matvec_rows(beta, r, o);
+            });
+        }
+        DesignMatrix::Sparse(m) => m.matvec(beta, out),
+    }
+}
+
+/// Parallel gather of the given columns into a dense `n x idx.len()`
+/// submatrix (the FISTA compaction step of the path coordinator).
+pub fn gather_columns_with(
+    pool: &ThreadPool,
+    lanes: usize,
+    x: &DesignMatrix,
+    idx: &[usize],
+) -> DenseMatrix {
+    let n = x.nrows();
+    let mut sub = DenseMatrix::zeros(n, idx.len());
+    let base = SendPtr(sub.as_mut_slice().as_mut_ptr());
+    pool.for_blocks(idx.len(), COL_BLOCK, lanes, |_, r| {
+        for c in r {
+            // SAFETY: submatrix column `c` is the contiguous region
+            // `data[c*n .. (c+1)*n]`; blocks own disjoint `c` ranges.
+            let dst = unsafe { std::slice::from_raw_parts_mut(base.get().add(c * n), n) };
+            x.col_dense_into(idx[c], dst);
+        }
+    });
+    sub
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::CscMatrix;
+
+    fn matrices(n: usize, p: usize) -> (DesignMatrix, DesignMatrix) {
+        let dense = DenseMatrix::from_fn(n, p, |i, j| {
+            let h = (i * 37 + j * 101) % 17;
+            if h < 7 {
+                0.0
+            } else {
+                (h as f64) * 0.25 - 2.0
+            }
+        });
+        let sparse = CscMatrix::from_dense(&dense, 0.0);
+        (DesignMatrix::Dense(dense), DesignMatrix::Sparse(sparse))
+    }
+
+    #[test]
+    fn for_blocks_covers_every_index_once() {
+        let pool = ThreadPool::new(4);
+        let n = 10_000usize;
+        let mut hits = vec![0u8; n];
+        let base = SendPtr(hits.as_mut_ptr());
+        pool.for_blocks(n, 64, 4, |_, r| {
+            for i in r {
+                unsafe { *base.get().add(i) += 1 };
+            }
+        });
+        assert!(hits.iter().all(|&h| h == 1));
+    }
+
+    #[test]
+    fn map_blocks_returns_in_block_order() {
+        let pool = ThreadPool::new(8);
+        let ids = pool.map_blocks(1000, 64, 8, |b, r| (b, r.start, r.end));
+        assert_eq!(ids.len(), 16);
+        for (k, &(b, lo, hi)) in ids.iter().enumerate() {
+            assert_eq!(b, k);
+            assert_eq!(lo, k * 64);
+            assert_eq!(hi, (k * 64 + 64).min(1000));
+        }
+    }
+
+    #[test]
+    fn empty_and_single_block_inputs() {
+        let pool = ThreadPool::new(4);
+        pool.for_blocks(0, 64, 4, |_, _| panic!("no blocks on n = 0"));
+        let one: Vec<usize> = pool.map_blocks(5, 64, 4, |_, r| r.len());
+        assert_eq!(one, vec![5]);
+    }
+
+    #[test]
+    fn t_matvec_bitwise_matches_serial_all_widths() {
+        let (d, s) = matrices(23, 700);
+        let v: Vec<f64> = (0..23).map(|i| ((i * 7) % 5) as f64 - 1.5).collect();
+        for x in [&d, &s] {
+            let mut serial = vec![0.0; 700];
+            match x {
+                DesignMatrix::Dense(m) => m.t_matvec(&v, &mut serial),
+                DesignMatrix::Sparse(m) => m.t_matvec(&v, &mut serial),
+            }
+            for lanes in [1usize, 2, 4, 8] {
+                let pool = ThreadPool::new(lanes);
+                let mut out = vec![f64::NAN; 700];
+                let base = SendPtr(out.as_mut_ptr());
+                // small block size to force many blocks even at p = 700
+                pool.for_blocks(700, 64, lanes, |_, r| {
+                    let o = unsafe {
+                        std::slice::from_raw_parts_mut(base.get().add(r.start), r.len())
+                    };
+                    match x {
+                        DesignMatrix::Dense(m) => m.t_matvec_block(&v, r, o),
+                        DesignMatrix::Sparse(m) => m.t_matvec_block(&v, r, o),
+                    }
+                });
+                for (a, b) in out.iter().zip(serial.iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "lanes {lanes}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn normalize_columns_bitwise_matches_serial() {
+        let (d, s) = matrices(19, 600);
+        for x in [&d, &s] {
+            let mut serial = x.clone();
+            let serial_norms = match &mut serial {
+                DesignMatrix::Dense(m) => m.normalize_columns(),
+                DesignMatrix::Sparse(m) => m.normalize_columns(),
+            };
+            for lanes in [1usize, 3, 8] {
+                let pool = ThreadPool::new(lanes);
+                let mut par = x.clone();
+                let norms = normalize_columns_with(&pool, lanes, &mut par);
+                assert_eq!(par, serial, "lanes {lanes}");
+                for (a, b) in norms.iter().zip(serial_norms.iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "lanes {lanes}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_rows_bitwise_matches_serial() {
+        let (d, _) = matrices(2100, 40);
+        let beta: Vec<f64> = (0..40).map(|j| ((j % 7) as f64) - 3.0).collect();
+        let mut serial = vec![0.0; 2100];
+        d.as_dense().unwrap().matvec(&beta, &mut serial);
+        for lanes in [1usize, 2, 4] {
+            let pool = ThreadPool::new(lanes);
+            let mut out = vec![f64::NAN; 2100];
+            matvec_with(&pool, lanes, &d, &beta, &mut out);
+            for (a, b) in out.iter().zip(serial.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "lanes {lanes}");
+            }
+        }
+    }
+
+    #[test]
+    fn panic_in_block_propagates_without_hanging() {
+        let pool = ThreadPool::new(4);
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.for_blocks(1000, 16, 4, |b, _| {
+                if b == 7 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(caught.is_err());
+        // pool is still usable afterwards
+        let sums: Vec<usize> = pool.map_blocks(100, 10, 4, |_, r| r.len());
+        assert_eq!(sums.iter().sum::<usize>(), 100);
+    }
+
+    #[test]
+    fn thread_knob_round_trips() {
+        let _guard = test_knob_guard();
+        let before = threads();
+        set_threads(3);
+        assert_eq!(threads(), 3);
+        set_threads(0); // clamped up to 1
+        assert_eq!(threads(), 1);
+        set_threads(before.max(1));
+        assert!(hardware_threads() >= 1);
+        assert!(global().lanes() >= 1);
+    }
+}

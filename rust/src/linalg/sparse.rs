@@ -275,8 +275,15 @@ impl CscMatrix {
     pub fn t_matvec(&self, v: &[f64], out: &mut [f64]) {
         assert_eq!(v.len(), self.n);
         assert_eq!(out.len(), self.p);
-        for j in 0..self.p {
-            out[j] = self.col_dot(j, v);
+        self.t_matvec_block(v, 0..self.p, out);
+    }
+
+    /// `out[k] = <x_{cols.start+k}, v>` — the serial kernel one parallel
+    /// column block executes; `t_matvec` is this over the full range.
+    pub fn t_matvec_block(&self, v: &[f64], cols: std::ops::Range<usize>, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), cols.len());
+        for (o, j) in out.iter_mut().zip(cols) {
+            *o = self.col_dot(j, v);
         }
     }
 
@@ -290,12 +297,18 @@ impl CscMatrix {
 
     /// Squared norms of every column.
     pub fn col_norms_sq(&self) -> Vec<f64> {
-        (0..self.p)
-            .map(|j| {
-                let (_, vals) = self.col(j);
-                vals.iter().map(|&v| v * v).sum()
-            })
-            .collect()
+        let mut out = vec![0.0; self.p];
+        self.col_norms_sq_block(0..self.p, &mut out);
+        out
+    }
+
+    /// Squared norms for a column block (see `t_matvec_block`).
+    pub fn col_norms_sq_block(&self, cols: std::ops::Range<usize>, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), cols.len());
+        for (o, j) in out.iter_mut().zip(cols) {
+            let (_, vals) = self.col(j);
+            *o = vals.iter().map(|&v| v * v).sum();
+        }
     }
 
     /// Standardize columns in place to unit Euclidean norm; returns the
@@ -355,6 +368,12 @@ impl CscMatrix {
 
     pub fn values(&self) -> &[f64] {
         &self.values
+    }
+
+    /// Mutable stored values (the parallel normalization kernel carves
+    /// disjoint per-column regions out of this buffer via `indptr`).
+    pub(crate) fn values_mut(&mut self) -> &mut [f64] {
+        &mut self.values
     }
 }
 

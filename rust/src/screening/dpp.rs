@@ -18,10 +18,9 @@ impl Rule for DppRule {
 
     fn bounds(&self, ctx: &ScreenContext, state: &DualState, lam2: f64, out: &mut [f64]) {
         let radius = ctx.pre.y_norm_sq.sqrt() * (1.0 / lam2 - 1.0 / state.lambda);
-        for j in 0..ctx.p() {
-            out[j] = state.xt_theta[j].abs()
-                + ctx.pre.col_norms_sq[j].sqrt() * radius;
-        }
+        let xt = &state.xt_theta;
+        let xn2 = &ctx.pre.col_norms_sq;
+        crate::linalg::par::fill_columns(out, |j| xt[j].abs() + xn2[j].sqrt() * radius);
     }
 }
 

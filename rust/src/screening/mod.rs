@@ -13,6 +13,12 @@
 //! * [`strong`] — Tibshirani et al.'s heuristic (unsafe; needs KKT
 //!   correction, which the coordinator performs);
 //! * [`RuleKind::None`] — no screening (the plain-solver baseline).
+//!
+//! Per-feature rule evaluation is batched over column blocks on the
+//! [`crate::linalg::par`] pool (shared per-invocation geometry is computed
+//! once, then each block evaluates its features with the same serial
+//! arithmetic), so screening results are bit-identical at every thread
+//! count.
 
 pub mod dpp;
 pub mod safe;
@@ -87,6 +93,8 @@ pub trait Rule: Send + Sync {
 
     /// Fill `keep[j] = bound_j >= 1 - SCREEN_EPS`. The default implements
     /// this via [`Rule::bounds`]; rules may override with a fused loop.
+    /// Both the bounds pass and the mask fill run on the
+    /// [`crate::linalg::par`] column-block pool.
     fn screen(
         &self,
         ctx: &ScreenContext,
@@ -96,10 +104,9 @@ pub trait Rule: Send + Sync {
     ) -> ScreenOutcome {
         let mut bounds = vec![0.0; ctx.p()];
         self.bounds(ctx, state, lam2, &mut bounds);
-        for (k, &b) in keep.iter_mut().zip(bounds.iter()) {
-            *k = b >= 1.0 - SCREEN_EPS;
-        }
-        ScreenOutcome::from_mask(keep)
+        let thr = 1.0 - SCREEN_EPS;
+        let kept = crate::linalg::par::fill_mask_count(keep, |j| bounds[j] >= thr);
+        ScreenOutcome { kept, screened: keep.len() - kept }
     }
 }
 

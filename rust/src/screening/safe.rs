@@ -41,10 +41,11 @@ impl Rule for SafeRule {
 
     fn bounds(&self, ctx: &ScreenContext, state: &DualState, lam2: f64, out: &mut [f64]) {
         let g = SafeGeometry::compute(ctx, state, lam2);
-        for j in 0..ctx.p() {
-            let xnorm = ctx.pre.col_norms_sq[j].sqrt();
-            out[j] = ctx.pre.xty[j].abs() / g.lam2 + xnorm * g.radius;
-        }
+        let xty = &ctx.pre.xty;
+        let xn2 = &ctx.pre.col_norms_sq;
+        crate::linalg::par::fill_columns(out, |j| {
+            xty[j].abs() / g.lam2 + xn2[j].sqrt() * g.radius
+        });
     }
 }
 

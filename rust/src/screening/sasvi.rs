@@ -69,15 +69,13 @@ impl Rule for SasviRule {
 
     fn bounds(&self, ctx: &ScreenContext, state: &DualState, lam2: f64, out: &mut [f64]) {
         let g = Geometry::compute(ctx, state, lam2);
-        for j in 0..ctx.p() {
-            let (up, um) = feature_bounds(
-                &g,
-                state.xt_theta[j],
-                ctx.pre.xty[j],
-                ctx.pre.col_norms_sq[j],
-            );
-            out[j] = up.max(um);
-        }
+        let xt = &state.xt_theta;
+        let xty = &ctx.pre.xty;
+        let xn2 = &ctx.pre.col_norms_sq;
+        crate::linalg::par::fill_columns(out, |j| {
+            let (up, um) = feature_bounds(&g, xt[j], xty[j], xn2[j]);
+            up.max(um)
+        });
     }
 
     fn screen(
@@ -92,13 +90,10 @@ impl Rule for SasviRule {
         let xty = &ctx.pre.xty;
         let xn2 = &ctx.pre.col_norms_sq;
         let thr = 1.0 - SCREEN_EPS;
-        let mut kept = 0usize;
-        for j in 0..ctx.p() {
+        let kept = crate::linalg::par::fill_mask_count(keep, |j| {
             let (up, um) = feature_bounds(&g, xt[j], xty[j], xn2[j]);
-            let k = up >= thr || um >= thr;
-            keep[j] = k;
-            kept += k as usize;
-        }
+            up >= thr || um >= thr
+        });
         ScreenOutcome { kept, screened: ctx.p() - kept }
     }
 }

@@ -21,12 +21,11 @@ impl Rule for StrongRule {
         false
     }
 
-    fn bounds(&self, ctx: &ScreenContext, state: &DualState, lam2: f64, out: &mut [f64]) {
+    fn bounds(&self, _ctx: &ScreenContext, state: &DualState, lam2: f64, out: &mut [f64]) {
         let ratio = state.lambda / lam2;
         let slack = ratio - 1.0;
-        for j in 0..ctx.p() {
-            out[j] = ratio * state.xt_theta[j].abs() + slack;
-        }
+        let xt = &state.xt_theta;
+        crate::linalg::par::fill_columns(out, |j| ratio * xt[j].abs() + slack);
     }
 }
 

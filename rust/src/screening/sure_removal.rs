@@ -168,6 +168,28 @@ impl SureRemovalAnalysis {
         FeatureRemoval { lam_2a, lam_2y, case, lam_s }
     }
 
+    /// Theorem-4 reports for *every* feature, evaluated in parallel column
+    /// blocks on the [`crate::linalg::par`] pool. Each feature's scan
+    /// (grid walk + bisections) is independent and costs far more than a
+    /// dot product, so this is the best-scaling pass in the crate. Results
+    /// are identical to calling [`SureRemovalAnalysis::analyze`] serially.
+    pub fn analyze_all(
+        &self,
+        ctx: &ScreenContext,
+        state: &DualState,
+        lam_min: f64,
+    ) -> Vec<FeatureRemoval> {
+        // map_columns returns per-block Vecs in block order, so the
+        // flattened result is in feature order — no unsafe scatter needed.
+        crate::linalg::par::map_columns(ctx.p(), |_, r| {
+            r.map(|j| self.analyze(ctx, state, j, lam_min))
+                .collect::<Vec<_>>()
+        })
+        .into_iter()
+        .flatten()
+        .collect()
+    }
+
     /// Smallest `lam_s` such that `max(u^+, u^-) < 1` for every
     /// `lam in (lam_s, lam1)`; `lam1` if the feature is never screened.
     ///
@@ -316,6 +338,24 @@ mod tests {
                 let v = a.f(root);
                 assert!((v - xja / xn).abs() < 1e-6, "f(root)={v} target={}", xja / xn);
             }
+        }
+    }
+
+    #[test]
+    fn analyze_all_matches_serial_analyze() {
+        let (ds, st) = setup(9, 0.65);
+        let pre = ds.precompute();
+        let ctx = ScreenContext::new(&ds.x, &ds.y, &pre);
+        let a = SureRemovalAnalysis::new(&ctx, &st);
+        let lam_min = 0.05 * st.lambda;
+        let all = a.analyze_all(&ctx, &st, lam_min);
+        assert_eq!(all.len(), ds.p());
+        for (j, batch) in all.iter().enumerate() {
+            let one = a.analyze(&ctx, &st, j, lam_min);
+            assert_eq!(batch.lam_s.to_bits(), one.lam_s.to_bits(), "j={j}");
+            assert_eq!(batch.lam_2a.to_bits(), one.lam_2a.to_bits(), "j={j}");
+            assert_eq!(batch.lam_2y.to_bits(), one.lam_2y.to_bits(), "j={j}");
+            assert_eq!(batch.case, one.case, "j={j}");
         }
     }
 

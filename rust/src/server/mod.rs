@@ -5,7 +5,7 @@
 //!
 //! ```text
 //! PING
-//! GEN <preset> <seed> <scale>            -> {"dataset": id, ...}
+//! GEN <preset> <seed> <scale> [threads]  -> {"dataset": id, ...}
 //! PATH <dataset-id> <rule> <k> <min_frac> -> {"job": id}
 //! STATUS <job-id>                         -> {"status": "..."}
 //! RESULT <job-id>                         -> {"steps": [...], ...} (blocks)
@@ -17,6 +17,12 @@
 //! (`sparse1`, `sparse5`, ...) — and reports the backend (`storage`,
 //! `density`) in its reply; `PATH` jobs run on whichever backend the
 //! dataset carries, since the whole pipeline is [`crate::linalg::DesignMatrix`]-generic.
+//!
+//! The optional trailing `threads` argument of `GEN` retunes the
+//! process-wide [`crate::linalg::par`] column-block pool before any jobs
+//! run on the dataset; the reply always reports the effective `threads`.
+//! Results are bit-identical at every thread count (the pool's determinism
+//! contract), so the knob only trades wall-clock.
 
 pub mod json;
 
@@ -119,7 +125,10 @@ fn handle_conn(stream: TcpStream, state: Arc<ServerState>) -> Result<()> {
                 return Ok(());
             }
             ["PING"] => ok_msg("pong"),
-            ["GEN", preset, seed, scale] => cmd_gen(&state, preset, seed, scale),
+            ["GEN", preset, seed, scale] => cmd_gen(&state, preset, seed, scale, None),
+            ["GEN", preset, seed, scale, threads] => {
+                cmd_gen(&state, preset, seed, scale, Some(threads))
+            }
             ["PATH", ds, rule, k, min_frac] => cmd_path(&state, ds, rule, k, min_frac),
             ["STATUS", job] => cmd_status(&state, job),
             ["RESULT", job] => cmd_result(&state, job),
@@ -142,13 +151,32 @@ fn err_msg(msg: &str) -> String {
     w.finish()
 }
 
-fn cmd_gen(state: &ServerState, preset: &str, seed: &str, scale: &str) -> String {
+fn cmd_gen(
+    state: &ServerState,
+    preset: &str,
+    seed: &str,
+    scale: &str,
+    threads: Option<&str>,
+) -> String {
     let preset = match Preset::parse(preset) {
         Some(p) => p,
         None => return err_msg(&format!("unknown preset {preset}")),
     };
     let seed: u64 = seed.parse().unwrap_or(1);
     let scale: f64 = scale.parse().unwrap_or(0.05);
+    // report the count the pool can actually deliver: the requested width
+    // is capped by the process pool's lane count at dispatch time
+    let lanes = crate::linalg::par::global().lanes();
+    let effective = match threads {
+        Some(t) => match t.parse::<usize>() {
+            Ok(t) if t >= 1 => {
+                crate::linalg::par::set_threads(t);
+                t.min(crate::linalg::par::MAX_THREADS).min(lanes)
+            }
+            _ => return err_msg(&format!("bad thread count {t}")),
+        },
+        None => crate::linalg::par::threads().min(lanes),
+    };
     match preset.generate(seed, scale) {
         Ok(ds) => {
             let id = state.next_dataset.fetch_add(1, Ordering::Relaxed);
@@ -162,6 +190,7 @@ fn cmd_gen(state: &ServerState, preset: &str, seed: &str, scale: &str) -> String
             w.field_u64("p", p as u64);
             w.field_str("storage", storage);
             w.field_f64("density", density);
+            w.field_u64("threads", effective as u64);
             w.finish()
         }
         Err(e) => err_msg(&format!("generate failed: {e}")),
@@ -349,6 +378,36 @@ mod tests {
         assert!(replies[0].contains("\"storage\": \"csc\""), "{}", replies[0]);
         assert!(replies[1].contains("\"job\": 1"), "{}", replies[1]);
         assert!(replies[2].contains("rejection"), "{}", replies[2]);
+        stop.store(true, Ordering::Relaxed);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn gen_threads_argument_is_applied_and_reported() {
+        let _guard = crate::linalg::par::test_knob_guard();
+        let server = Server::bind("127.0.0.1:0", 1).unwrap();
+        let addr = server.local_addr().unwrap();
+        let stop = server.stop_handle();
+        let h = std::thread::spawn(move || server.serve().unwrap());
+        let replies = send(
+            addr,
+            &[
+                "GEN synthetic100 3 0.01 2",
+                "PATH 1 sasvi 5 0.1",
+                "RESULT 1",
+                "GEN synthetic100 3 0.01 zero",
+                "QUIT",
+            ],
+        );
+        // the reply reports what the pool can deliver: min(requested, lanes)
+        let want = 2usize.min(crate::linalg::par::global().lanes());
+        assert!(
+            replies[0].contains(&format!("\"threads\": {want}")),
+            "{}",
+            replies[0]
+        );
+        assert!(replies[2].contains("rejection"), "{}", replies[2]);
+        assert!(replies[3].contains("error"), "{}", replies[3]);
         stop.store(true, Ordering::Relaxed);
         h.join().unwrap();
     }

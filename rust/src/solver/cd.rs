@@ -138,11 +138,19 @@ pub fn restricted_gap(
     beta: &[f64],
     resid: &[f64],
 ) -> f64 {
-    // infeasibility over the active set only
-    let mut infeas = 0.0f64;
-    for &j in active {
-        infeas = infeas.max(x.col_dot(j, resid).abs());
-    }
+    // Infeasibility over the active set only. The per-feature dot products
+    // run in parallel column blocks; per-block maxima are folded in block
+    // order, which reproduces the serial fold exactly (max is associative
+    // and every operand is bit-identical).
+    let infeas = crate::linalg::par::map_columns(active.len(), |_, r| {
+        let mut m = 0.0f64;
+        for &j in &active[r] {
+            m = m.max(x.col_dot(j, resid).abs());
+        }
+        m
+    })
+    .into_iter()
+    .fold(0.0f64, f64::max);
     let denom = lambda.max(infeas);
     let scale = if denom > 0.0 { 1.0 / denom } else { 0.0 };
     let mut diff_sq = 0.0;

@@ -49,27 +49,43 @@ pub fn check_kkt_subset(
     tol: f64,
     subset: Option<&[usize]>,
 ) -> KktReport {
-    let mut report = KktReport::default();
     let slack = lambda * tol + tol;
-    let mut check = |j: usize| {
-        let g = x.col_dot(j, resid);
-        let viol = if beta[j] == 0.0 {
-            (g.abs() - lambda).max(0.0)
-        } else {
-            (g - lambda * beta[j].signum()).abs()
-        };
-        report.checked += 1;
-        if viol > slack {
-            report.violations.push((j, viol));
+    let total = subset.map(|s| s.len()).unwrap_or(x.ncols());
+    // Per-feature checks run in parallel column blocks; partial reports are
+    // merged in block order, so the violation list (pre-sort) is in index
+    // order exactly as the serial loop produced it.
+    let parts = crate::linalg::par::map_columns(total, |_, r| {
+        let mut part = KktReport::default();
+        for k in r {
+            let j = match subset {
+                Some(idx) => idx[k],
+                None => k,
+            };
+            let g = x.col_dot(j, resid);
+            let viol = if beta[j] == 0.0 {
+                (g.abs() - lambda).max(0.0)
+            } else {
+                (g - lambda * beta[j].signum()).abs()
+            };
+            part.checked += 1;
+            if viol > slack {
+                part.violations.push((j, viol));
+            }
+            if viol > part.max_violation {
+                part.max_violation = viol;
+            }
         }
-        if viol > report.max_violation {
-            report.max_violation = viol;
+        part
+    });
+    let mut report = KktReport::default();
+    for part in parts {
+        report.checked += part.checked;
+        report.violations.extend(part.violations);
+        if part.max_violation > report.max_violation {
+            report.max_violation = part.max_violation;
         }
-    };
-    match subset {
-        Some(idx) => idx.iter().copied().for_each(&mut check),
-        None => (0..x.ncols()).for_each(&mut check),
     }
+    // stable sort: ties stay in index order, same as the serial path
     report.violations.sort_by(|a, b| b.1.total_cmp(&a.1));
     report
 }

@@ -1,0 +1,267 @@
+//! The pool's determinism contract, pinned down end to end.
+//!
+//! `linalg::par` promises: parallel results are *bit-identical* to serial
+//! execution at every thread count, on both storage backends. These tests
+//! sweep `threads ∈ {1, 2, 4, 8}` over
+//!
+//!   * the statistics pass `X^T v` (full and active-subset),
+//!   * column norms and in-place normalization,
+//!   * the dense row-parallel `X beta`,
+//!   * all four screening rules' bounds and fused screens,
+//!   * the batched Theorem-4 sure-removal analysis,
+//!   * a whole screened path run,
+//!
+//! comparing against genuinely serial references (the storage backends'
+//! own loops, or the pool pinned to one lane) with `f64::to_bits`
+//! equality — not tolerances.
+
+use std::sync::Mutex;
+
+use sasvi::coordinator::{run_path_keep_betas, PathOptions, PathPlan};
+use sasvi::data::synthetic::SyntheticSpec;
+use sasvi::linalg::{par, DesignMatrix, ThreadPool};
+use sasvi::screening::sure_removal::SureRemovalAnalysis;
+use sasvi::screening::{RuleKind, ScreenContext};
+use sasvi::solver::cd::{solve_cd, CdOptions};
+use sasvi::solver::DualState;
+
+/// The rule/path tests retune the process-wide thread knob; serialize them
+/// so they cannot observe each other's settings.
+static THREAD_KNOB: Mutex<()> = Mutex::new(());
+
+const LANES: [usize; 4] = [1, 2, 4, 8];
+
+/// A dense/sparse pair big enough to span many 256-column blocks (with a
+/// partial tail block).
+fn pair() -> (DesignMatrix, DesignMatrix) {
+    let ds = SyntheticSpec {
+        n: 60,
+        p: 3000,
+        nnz: 40,
+        density: 0.08,
+        ..Default::default()
+    }
+    .generate(42);
+    let sparse = ds.x.clone();
+    assert!(sparse.is_sparse());
+    let dense: DesignMatrix = sparse.to_dense().into();
+    (dense, sparse)
+}
+
+fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (k, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: index {k}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn t_matvec_bit_identical_across_thread_counts() {
+    let (dense, sparse) = pair();
+    let n = dense.nrows();
+    let p = dense.ncols();
+    let v: Vec<f64> = (0..n).map(|i| ((i * 13) % 7) as f64 * 0.31 - 1.0).collect();
+    for x in [&dense, &sparse] {
+        // serial reference: the backend's own loop, no pool involved
+        let mut serial = vec![0.0; p];
+        match x {
+            DesignMatrix::Dense(m) => m.t_matvec(&v, &mut serial),
+            DesignMatrix::Sparse(m) => m.t_matvec(&v, &mut serial),
+        }
+        for lanes in LANES {
+            let pool = ThreadPool::new(lanes);
+            let mut out = vec![f64::NAN; p];
+            par::t_matvec_with(&pool, lanes, x, &v, &mut out);
+            assert_bits_eq(&out, &serial, &format!("t_matvec {} lanes {lanes}", x.storage()));
+        }
+    }
+}
+
+#[test]
+fn t_matvec_subset_bit_identical_across_thread_counts() {
+    let (dense, sparse) = pair();
+    let n = dense.nrows();
+    let p = dense.ncols();
+    let v: Vec<f64> = (0..n).map(|i| (i as f64 * 0.17).sin()).collect();
+    // a scattered, duplicate-free active set
+    let idx: Vec<usize> = (0..p).filter(|j| j % 3 == 1).collect();
+    for x in [&dense, &sparse] {
+        let mut serial = vec![0.0; p];
+        match x {
+            DesignMatrix::Dense(m) => m.t_matvec_subset(&v, &idx, &mut serial),
+            DesignMatrix::Sparse(m) => m.t_matvec_subset(&v, &idx, &mut serial),
+        }
+        for lanes in LANES {
+            let pool = ThreadPool::new(lanes);
+            let mut out = vec![0.0; p];
+            par::t_matvec_subset_with(&pool, lanes, x, &v, &idx, &mut out);
+            assert_bits_eq(
+                &out,
+                &serial,
+                &format!("t_matvec_subset {} lanes {lanes}", x.storage()),
+            );
+        }
+    }
+}
+
+#[test]
+fn norms_and_normalization_bit_identical_across_thread_counts() {
+    let (dense, sparse) = pair();
+    for x in [&dense, &sparse] {
+        let serial_norms_sq = match x {
+            DesignMatrix::Dense(m) => m.col_norms_sq(),
+            DesignMatrix::Sparse(m) => m.col_norms_sq(),
+        };
+        let mut serial_normed = x.clone();
+        let serial_norms = match &mut serial_normed {
+            DesignMatrix::Dense(m) => m.normalize_columns(),
+            DesignMatrix::Sparse(m) => m.normalize_columns(),
+        };
+        for lanes in LANES {
+            let pool = ThreadPool::new(lanes);
+            let norms_sq = par::col_norms_sq_with(&pool, lanes, x);
+            assert_bits_eq(
+                &norms_sq,
+                &serial_norms_sq,
+                &format!("col_norms_sq {} lanes {lanes}", x.storage()),
+            );
+            let mut normed = x.clone();
+            let norms = par::normalize_columns_with(&pool, lanes, &mut normed);
+            assert_bits_eq(
+                &norms,
+                &serial_norms,
+                &format!("normalize norms {} lanes {lanes}", x.storage()),
+            );
+            assert_eq!(
+                normed, serial_normed,
+                "normalized matrix diverged ({} lanes {lanes})",
+                x.storage()
+            );
+        }
+    }
+}
+
+#[test]
+fn dense_matvec_bit_identical_across_thread_counts() {
+    // row-parallel path needs n to span multiple row blocks
+    let ds = SyntheticSpec { n: 4100, p: 50, nnz: 10, ..Default::default() }.generate(5);
+    let dense = &ds.x;
+    let beta: Vec<f64> = (0..50).map(|j| ((j * 11) % 9) as f64 * 0.4 - 1.6).collect();
+    let mut serial = vec![0.0; 4100];
+    dense.as_dense().unwrap().matvec(&beta, &mut serial);
+    for lanes in LANES {
+        let pool = ThreadPool::new(lanes);
+        let mut out = vec![f64::NAN; 4100];
+        par::matvec_with(&pool, lanes, dense, &beta, &mut out);
+        assert_bits_eq(&out, &serial, &format!("dense matvec lanes {lanes}"));
+    }
+}
+
+/// Solve once to obtain a realistic dual state for rule evaluation.
+fn solved_state(ds: &sasvi::data::Dataset, lam1: f64) -> DualState {
+    let active: Vec<usize> = (0..ds.p()).collect();
+    let norms = ds.x.col_norms_sq();
+    let mut beta = vec![0.0; ds.p()];
+    let mut resid = ds.y.clone();
+    solve_cd(
+        &ds.x, &ds.y, lam1, &active, &norms, &mut beta, &mut resid,
+        &CdOptions::default(),
+    );
+    DualState::from_residual(&ds.x, &resid, lam1)
+}
+
+#[test]
+fn rule_outputs_bit_identical_across_thread_counts() {
+    let _guard = THREAD_KNOB.lock().unwrap();
+    let before = par::threads();
+    let sp = SyntheticSpec {
+        n: 50,
+        p: 2000,
+        nnz: 30,
+        density: 0.1,
+        ..Default::default()
+    }
+    .generate(9);
+    let mut dn = sp.clone();
+    dn.x = sp.x.to_dense().into();
+    for ds in [&dn, &sp] {
+        let pre = ds.precompute();
+        let ctx = ScreenContext::new(&ds.x, &ds.y, &pre);
+        let lam1 = 0.7 * pre.lambda_max;
+        let lam2 = 0.5 * pre.lambda_max;
+        let st = solved_state(ds, lam1);
+        for rule_kind in [RuleKind::Safe, RuleKind::Dpp, RuleKind::Strong, RuleKind::Sasvi] {
+            let rule = rule_kind.build();
+            // serial reference: the same code path pinned to one lane
+            par::set_threads(1);
+            let mut bounds_serial = vec![0.0; ds.p()];
+            rule.bounds(&ctx, &st, lam2, &mut bounds_serial);
+            let mut keep_serial = vec![false; ds.p()];
+            let outcome_serial = rule.screen(&ctx, &st, lam2, &mut keep_serial);
+            for lanes in LANES {
+                par::set_threads(lanes);
+                let mut bounds = vec![f64::NAN; ds.p()];
+                rule.bounds(&ctx, &st, lam2, &mut bounds);
+                assert_bits_eq(
+                    &bounds,
+                    &bounds_serial,
+                    &format!("{rule_kind:?} bounds {} lanes {lanes}", ds.x.storage()),
+                );
+                let mut keep = vec![false; ds.p()];
+                let outcome = rule.screen(&ctx, &st, lam2, &mut keep);
+                assert_eq!(keep, keep_serial, "{rule_kind:?} mask lanes {lanes}");
+                assert_eq!(outcome, outcome_serial, "{rule_kind:?} outcome lanes {lanes}");
+            }
+        }
+    }
+    par::set_threads(before);
+}
+
+#[test]
+fn sure_removal_batch_bit_identical_across_thread_counts() {
+    let _guard = THREAD_KNOB.lock().unwrap();
+    let before = par::threads();
+    let ds = SyntheticSpec { n: 40, p: 600, nnz: 12, ..Default::default() }.generate(3);
+    let pre = ds.precompute();
+    let ctx = ScreenContext::new(&ds.x, &ds.y, &pre);
+    let st = solved_state(&ds, 0.6 * pre.lambda_max);
+    let analysis = SureRemovalAnalysis::new(&ctx, &st);
+    let lam_min = 0.05 * pre.lambda_max;
+    par::set_threads(1);
+    let serial = analysis.analyze_all(&ctx, &st, lam_min);
+    for lanes in LANES {
+        par::set_threads(lanes);
+        let batch = analysis.analyze_all(&ctx, &st, lam_min);
+        for (j, (a, b)) in batch.iter().zip(serial.iter()).enumerate() {
+            assert_eq!(a.lam_s.to_bits(), b.lam_s.to_bits(), "lam_s j={j} lanes {lanes}");
+            assert_eq!(a.lam_2a.to_bits(), b.lam_2a.to_bits(), "lam_2a j={j}");
+            assert_eq!(a.lam_2y.to_bits(), b.lam_2y.to_bits(), "lam_2y j={j}");
+            assert_eq!(a.case, b.case, "case j={j}");
+        }
+    }
+    par::set_threads(before);
+}
+
+#[test]
+fn full_screened_path_bit_identical_across_thread_counts() {
+    let _guard = THREAD_KNOB.lock().unwrap();
+    let before = par::threads();
+    let ds = SyntheticSpec { n: 40, p: 800, nnz: 20, ..Default::default() }.generate(7);
+    let plan = PathPlan::linear_spaced(&ds, 12, 0.1);
+    par::set_threads(1);
+    let serial = run_path_keep_betas(&ds, &plan, RuleKind::Sasvi, PathOptions::default());
+    for lanes in [2usize, 4, 8] {
+        par::set_threads(lanes);
+        let parallel = run_path_keep_betas(&ds, &plan, RuleKind::Sasvi, PathOptions::default());
+        let a = serial.betas.as_ref().unwrap();
+        let b = parallel.betas.as_ref().unwrap();
+        for (k, (sa, sb)) in a.iter().zip(b.iter()).enumerate() {
+            assert_bits_eq(sa, sb, &format!("path step {k} lanes {lanes}"));
+        }
+        for (s1, s2) in serial.steps.iter().zip(parallel.steps.iter()) {
+            assert_eq!(s1.kept, s2.kept, "kept count diverged at lanes {lanes}");
+            assert_eq!(s1.nnz, s2.nnz, "nnz diverged at lanes {lanes}");
+        }
+    }
+    par::set_threads(before);
+}

@@ -182,6 +182,82 @@ fn prop_sure_removal_consistent_with_screening() {
 }
 
 #[test]
+fn prop_sure_removal_is_monotone_and_grounded() {
+    // Theorem 4 / §4: the sure-removal parameter lam_s(j) certifies that
+    // feature j, once removed, *stays* removed at every lambda the path
+    // visits inside (lam_s, lam1) — screening never flickers back on
+    // within the certified interval — and the reference (unscreened,
+    // high-precision) solution is zero at each such grid point.
+    use sasvi::screening::sure_removal::SureRemovalAnalysis;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let removable_total = AtomicUsize::new(0);
+    forall(110, 10, 30, 60, |case| {
+        let ds = build_instance(case);
+        let pre = ds.precompute();
+        let lam1 = case.frac1.max(0.4) * pre.lambda_max;
+        let ctx = ScreenContext::new(&ds.x, &ds.y, &pre);
+        let st = state_at(&ds, lam1);
+        let analysis = SureRemovalAnalysis::new(&ctx, &st);
+        let lam_min = 0.05 * lam1;
+        let reports = analysis.analyze_all(&ctx, &st, lam_min);
+        for (j, rep) in reports.iter().enumerate() {
+            if rep.lam_s >= lam1 * 0.999 {
+                continue; // never removable from this state
+            }
+            removable_total.fetch_add(1, Ordering::Relaxed);
+            // contiguity: screened at EVERY lambda strictly inside
+            // (lam_s, lam1) — walk a fine descending grid
+            let lo = rep.lam_s.max(lam_min) * 1.001;
+            let hi = lam1 * 0.999;
+            if lo >= hi {
+                continue;
+            }
+            for t in 0..32 {
+                let lam = hi - (hi - lo) * (t as f64 / 31.0);
+                let (up, um) = analysis.bounds_at(
+                    lam,
+                    st.xt_theta[j],
+                    pre.xty[j],
+                    pre.col_norms_sq[j],
+                );
+                if up.max(um) >= 1.0 {
+                    return Err(format!(
+                        "feature {j}: removed at lam1 {lam1:.4} but bound {} at \
+                         lam {lam:.4} in (lam_s {:.4}, lam1) — removal must be \
+                         monotone within the certified interval",
+                        up.max(um),
+                        rep.lam_s
+                    ));
+                }
+            }
+        }
+        // ground truth on a descending grid: wherever lam_s certifies
+        // removal, the exact solution is zero
+        for frac in [0.9, 0.6, 0.35] {
+            let lam = frac * lam1;
+            if lam <= lam_min {
+                continue;
+            }
+            let (beta, _) = solve_exact(&ds, lam);
+            for (j, rep) in reports.iter().enumerate() {
+                if rep.lam_s < lam * 0.999 && beta[j].abs() > 1e-8 {
+                    return Err(format!(
+                        "feature {j}: certified removed above lam_s {:.4} but \
+                         beta at lam {lam:.4} is {:e}",
+                        rep.lam_s, beta[j]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+    assert!(
+        removable_total.load(Ordering::Relaxed) > 0,
+        "no case produced a removable feature — the property never fired"
+    );
+}
+
+#[test]
 fn prop_sparse_dense_path_parity() {
     // The DesignMatrix abstraction must be storage-transparent: for random
     // sparse datasets, pathwise results — active sets, objective values,
