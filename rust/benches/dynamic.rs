@@ -1,0 +1,127 @@
+//! Bench: static vs dynamic in-solver screening on the paper-scale design.
+//!
+//! Runs the Sasvi-screened path on the 250 x 10000 configuration — dense
+//! and 5%-dense CSC, CD and compacted FISTA — with and without dynamic
+//! re-screening, and reports wall-clock, coordinate updates, and the
+//! `epochs x active-width` work integral (from the per-step epoch-width
+//! trajectories the coordinator records). Solutions are checked to agree
+//! before any number is reported.
+//!
+//! Acceptance bar (the ISSUE-3 criterion, enforced): dynamic screening
+//! must reduce the total `epochs x active-width` solver work vs the static
+//! path on both storage backends.
+//!
+//! Env: SASVI_BENCH_DENSITY (default 0.05), SASVI_BENCH_GRID (default 20),
+//! SASVI_BENCH_P (default 10000), SASVI_BENCH_N (default 250),
+//! SASVI_BENCH_RECHECK (default 5).
+
+use std::time::Instant;
+
+use sasvi::coordinator::{run_path_keep_betas, PathOptions, PathPlan, SolverKind};
+use sasvi::data::synthetic::SyntheticSpec;
+use sasvi::linalg::DesignMatrix;
+use sasvi::metrics::Table;
+use sasvi::screening::dynamic::DynamicOptions;
+use sasvi::screening::RuleKind;
+
+#[path = "common.rs"]
+mod common;
+use common::{env_f64, env_usize};
+
+fn main() {
+    let density = env_f64("SASVI_BENCH_DENSITY", 0.05).clamp(1e-4, 0.99);
+    let grid = env_usize("SASVI_BENCH_GRID", 20).max(2);
+    let p = env_usize("SASVI_BENCH_P", 10_000);
+    let n = env_usize("SASVI_BENCH_N", 250);
+    let recheck = env_usize("SASVI_BENCH_RECHECK", 5).max(1);
+    println!(
+        "== static vs dynamic screening (n={n}, p={p}, csc density={density}, \
+         grid={grid}, recheck every {recheck}) ==\n"
+    );
+
+    let sparse_ds = SyntheticSpec { n, p, nnz: 100, density, ..Default::default() }
+        .generate(7);
+    assert!(sparse_ds.x.is_sparse(), "bench requires a CSC design");
+    let mut dense_ds = sparse_ds.clone();
+    dense_ds.x = DesignMatrix::from(sparse_ds.x.to_dense());
+    let cases = [("dense", &dense_ds), ("csc", &sparse_ds)];
+
+    let mut table = Table::new(&[
+        "config", "static(s)", "dynamic(s)", "static work", "dyn work",
+        "work ratio", "dyn drops", "updates s/d",
+    ]);
+    let mut all_reduced = true;
+    for (label, ds) in cases {
+        let plan = PathPlan::linear_spaced(ds, grid, 0.05);
+        for solver in [SolverKind::Cd, SolverKind::Fista] {
+            let opts_static = PathOptions { solver, ..Default::default() };
+            let opts_dyn = PathOptions {
+                solver,
+                dynamic: DynamicOptions::enabled_every(recheck),
+                ..Default::default()
+            };
+            let t0 = Instant::now();
+            let r_static = run_path_keep_betas(ds, &plan, RuleKind::Sasvi, opts_static);
+            let t_static = t0.elapsed().as_secs_f64();
+            let t1 = Instant::now();
+            let r_dyn = run_path_keep_betas(ds, &plan, RuleKind::Sasvi, opts_dyn);
+            let t_dyn = t1.elapsed().as_secs_f64();
+
+            // correctness first: same path, step by step
+            let a = r_static.betas.as_ref().unwrap();
+            let b = r_dyn.betas.as_ref().unwrap();
+            for (k, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+                for j in 0..ds.p() {
+                    assert!(
+                        (x[j] - y[j]).abs() < 1e-5,
+                        "{label}/{solver:?}: step {k} feature {j} diverged: \
+                         {} vs {}",
+                        x[j],
+                        y[j]
+                    );
+                }
+            }
+
+            let work_static = r_static.solver_work();
+            let work_dyn = r_dyn.solver_work();
+            let ratio = work_dyn as f64 / work_static.max(1) as f64;
+            all_reduced &= work_dyn < work_static;
+            let upd_s: u64 = r_static.steps.iter().map(|s| s.coord_updates).sum();
+            let upd_d: u64 = r_dyn.steps.iter().map(|s| s.coord_updates).sum();
+            table.row(vec![
+                format!("{label}/{solver:?}"),
+                format!("{t_static:.3}"),
+                format!("{t_dyn:.3}"),
+                work_static.to_string(),
+                work_dyn.to_string(),
+                format!("{ratio:.3}"),
+                r_dyn.total_dynamic_dropped().to_string(),
+                format!("{upd_s}/{upd_d}"),
+            ]);
+
+            // epoch-width trajectory at a mid-path step (the shrink curve
+            // dynamic screening buys)
+            if solver == SolverKind::Cd {
+                let traces = r_dyn.dynamic.as_ref().unwrap();
+                let mid = grid / 2;
+                let seg = traces[mid].epochs_at_width(r_dyn.steps[mid].epochs);
+                let curve: Vec<String> =
+                    seg.iter().map(|(w, e)| format!("{w}x{e}")).collect();
+                println!(
+                    "{label}/Cd epoch-width trajectory at lam/lmax={:.2} \
+                     (static width {}): {}",
+                    r_dyn.steps[mid].frac,
+                    r_static.steps[mid].kept,
+                    curve.join(" -> ")
+                );
+            }
+        }
+    }
+    println!("\n{}", table.render());
+    assert!(
+        all_reduced,
+        "acceptance: dynamic screening must reduce epochs x active-width \
+         work vs static on every 250x10000 config"
+    );
+    println!("acceptance: dynamic work < static work on every config — OK");
+}

@@ -100,6 +100,11 @@ PRESETS: synthetic100/1000/5000 (dense), sparseP for P% density CSC
 GLOBAL:  --threads N sets the column-block worker-pool width for any
          command (default: SASVI_THREADS env var, else all cores). Results
          are bit-identical at every thread count; only wall-clock changes.
+         --dynamic [true|false] enables dynamic safe screening inside the
+         solvers (re-screen every K epochs from the current residual;
+         --recheck-every K, default 5; alone it only retunes the cadence).
+         Applies to every path-running command (solve-path, run, table1,
+         fig5, serve jobs); solutions are unchanged, only the work shrinks.
 ";
 
 /// Entry point. Returns the process exit code.
@@ -113,6 +118,33 @@ pub fn run(args: &[String]) -> Result<i32> {
     if let Some(t) = flags.get("threads") {
         let t: usize = t.parse().with_context(|| format!("--threads {t}"))?;
         crate::linalg::par::set_threads(t.max(1));
+    }
+    // global knob: dynamic in-solver screening (consulted wherever path
+    // options are built from user input, including server jobs).
+    // --recheck-every alone only retunes the cadence — enabling is always
+    // explicit (--dynamic, config `screening.dynamic`, or server `dynamic`),
+    // matching the config file's semantics.
+    if let Some(v) = flags.get("dynamic") {
+        let enabled = match v {
+            "true" | "1" | "on" => true,
+            "false" | "0" | "off" => false,
+            other => bail!("--dynamic {other}: expected true/false"),
+        };
+        let recheck = flags
+            .usize_or("recheck-every", crate::screening::dynamic::DEFAULT_RECHECK)?;
+        if enabled && recheck == 0 {
+            // same policy as the server's PATH handler: an explicit dynamic
+            // request that would silently run static is an error
+            bail!("--dynamic with --recheck-every 0 would never re-screen; \
+                   use --dynamic false or a cadence >= 1");
+        }
+        crate::screening::dynamic::set_process_default(
+            crate::screening::dynamic::DynamicOptions { enabled, recheck_every: recheck },
+        );
+    } else if flags.get("recheck-every").is_some() {
+        let mut d = crate::screening::dynamic::process_default();
+        d.recheck_every = flags.usize_or("recheck-every", d.recheck_every)?;
+        crate::screening::dynamic::set_process_default(d);
     }
     match cmd.as_str() {
         "help" | "--help" | "-h" => {
@@ -169,15 +201,17 @@ fn cmd_solve_path(flags: &Flags) -> Result<i32> {
     let min_frac = flags.f64_or("min-frac", 0.05)?;
     let plan = PathPlan::linear_spaced(&ds, grid, min_frac);
     println!("dataset {}: {}", ds.name, ds.summary());
-    let res = run_path(&ds, &plan, rule, PathOptions::default());
+    let res = run_path(&ds, &plan, rule, PathOptions::from_process_defaults());
     let mut t = Table::new(&[
-        "lam/lmax", "kept", "screened", "nnz", "epochs", "kkt-fix", "solve(s)", "screen(s)",
+        "lam/lmax", "kept", "screened", "dyn-drop", "nnz", "epochs", "kkt-fix",
+        "solve(s)", "screen(s)",
     ]);
     for s in res.steps.iter() {
         t.row(vec![
             format!("{:.3}", s.frac),
             s.kept.to_string(),
             s.screened.to_string(),
+            s.dyn_dropped.to_string(),
             s.nnz.to_string(),
             s.epochs.to_string(),
             s.kkt_violations.to_string(),
@@ -187,11 +221,12 @@ fn cmd_solve_path(flags: &Flags) -> Result<i32> {
     }
     println!("{}", t.render());
     println!(
-        "total: {} (solve {}, screen {}, kkt corrections {})",
+        "total: {} (solve {}, screen {}, kkt corrections {}, dynamic drops {})",
         fmt_secs(res.total_time),
         fmt_secs(res.total_solve_time()),
         fmt_secs(res.total_screen_time()),
-        res.total_kkt_violations()
+        res.total_kkt_violations(),
+        res.total_dynamic_dropped()
     );
     Ok(0)
 }
@@ -213,8 +248,9 @@ pub fn table1(scale: f64, trials: usize, grid: usize, seed0: u64) -> Table {
                     .expect("dataset generation"),
             );
             let plan = PathPlan::linear_spaced(&ds, grid, 0.05);
+            let opts = PathOptions::from_process_defaults();
             for (ri, rule) in rules.iter().enumerate() {
-                let res = run_path(&ds, &plan, *rule, PathOptions::default());
+                let res = run_path(&ds, &plan, *rule, opts);
                 cells[ri][pi] += res.total_time.as_secs_f64() / trials as f64;
             }
         }
@@ -249,8 +285,9 @@ pub fn fig5_curves(
     let plan = PathPlan::linear_spaced(ds, grid, 0.05);
     let fracs = plan.fractions();
     let mut curves = HashMap::new();
+    let opts = PathOptions::from_process_defaults();
     for rule in [RuleKind::Safe, RuleKind::Dpp, RuleKind::Strong, RuleKind::Sasvi] {
-        let res = run_path(ds, &plan, rule, PathOptions::default());
+        let res = run_path(ds, &plan, rule, opts);
         curves.insert(
             rule,
             res.steps.iter().map(|s| s.rejection_ratio()).collect(),
@@ -382,26 +419,40 @@ fn cmd_run_config(flags: &Flags) -> Result<i32> {
     if flags.get("threads").is_none() {
         exp.apply_threads();
     }
+    // knob-by-knob precedence, CLI over config: --dynamic decides enabled,
+    // --recheck-every decides cadence, and each falls back to the config
+    // file's `[screening]` value when not given on the command line
+    let mut dynamic = exp.dynamic_options();
+    if flags.get("dynamic").is_some() {
+        dynamic.enabled = crate::screening::dynamic::process_default().enabled;
+    }
+    if flags.get("recheck-every").is_some() {
+        dynamic.recheck_every = flags.usize_or("recheck-every", dynamic.recheck_every)?;
+    }
     println!("experiment: {exp:?}");
     let preset = Preset::parse(&exp.dataset)
         .with_context(|| format!("unknown preset {}", exp.dataset))?;
-    let mut table = Table::new(&["rule", "mean-secs", "screened-total"]);
+    let mut table = Table::new(&["rule", "mean-secs", "screened-total", "dyn-dropped"]);
     for rule_name in &exp.rules {
         let rule = RuleKind::parse(rule_name)
             .with_context(|| format!("unknown rule {rule_name}"))?;
         let mut secs = 0.0;
         let mut screened = 0usize;
+        let mut dyn_dropped = 0usize;
         for trial in 0..exp.trials.max(1) {
             let ds = preset.generate(exp.seed + trial as u64, exp.scale)?;
             let plan = PathPlan::linear_spaced(&ds, exp.grid_points, exp.min_frac);
-            let res = run_path(&ds, &plan, rule, PathOptions::default());
+            let opts = PathOptions { dynamic, ..PathOptions::from_process_defaults() };
+            let res = run_path(&ds, &plan, rule, opts);
             secs += res.total_time.as_secs_f64() / exp.trials.max(1) as f64;
             screened += res.steps.iter().map(|s| s.screened).sum::<usize>();
+            dyn_dropped += res.total_dynamic_dropped();
         }
         table.row(vec![
             rule.name().to_string(),
             format!("{secs:.3}"),
             screened.to_string(),
+            dyn_dropped.to_string(),
         ]);
     }
     println!("{}", table.render());
@@ -457,6 +508,69 @@ mod tests {
         .unwrap();
         assert_eq!(code, 0);
         assert!(run(&s(&["solve-path", "--threads", "bogus"])).is_err());
+    }
+
+    #[test]
+    fn dynamic_flag_is_global_and_validated() {
+        // serializes with every other test touching process-wide knobs
+        let _guard = crate::linalg::par::test_knob_guard();
+        let before = crate::screening::dynamic::process_default();
+        let code = run(&s(&[
+            "solve-path", "--preset", "synthetic100", "--scale", "0.01",
+            "--grid", "5", "--rule", "sasvi", "--dynamic", "--recheck-every", "3",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+        let d = crate::screening::dynamic::process_default();
+        assert!(d.enabled);
+        assert_eq!(d.recheck_every, 3);
+        // explicit off
+        assert_eq!(
+            run(&s(&[
+                "solve-path", "--preset", "synthetic100", "--scale", "0.01",
+                "--grid", "4", "--rule", "sasvi", "--dynamic", "false",
+            ]))
+            .unwrap(),
+            0
+        );
+        assert!(!crate::screening::dynamic::process_default().enabled);
+        // bad value is an error, not a silent default
+        assert!(run(&s(&["solve-path", "--dynamic", "maybe"])).is_err());
+        // explicit dynamic with a 0 cadence is rejected (server parity)
+        assert!(run(&s(&["solve-path", "--dynamic", "--recheck-every", "0"])).is_err());
+        // --recheck-every alone retunes the cadence without enabling
+        crate::screening::dynamic::set_process_default(
+            crate::screening::dynamic::DynamicOptions::off(),
+        );
+        let code = run(&s(&[
+            "solve-path", "--preset", "synthetic100", "--scale", "0.01",
+            "--grid", "4", "--rule", "sasvi", "--recheck-every", "9",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+        let d = crate::screening::dynamic::process_default();
+        assert!(!d.enabled, "--recheck-every alone must not enable dynamic");
+        assert_eq!(d.recheck_every, 9);
+        crate::screening::dynamic::set_process_default(before);
+    }
+
+    #[test]
+    fn run_config_with_dynamic_screening_section() {
+        let _guard = crate::linalg::par::test_knob_guard();
+        let before = crate::screening::dynamic::process_default();
+        let dir = std::env::temp_dir().join("sasvi_cli_dynamic_cfg");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("exp.toml");
+        std::fs::write(
+            &path,
+            "[experiment]\ndataset = \"synthetic100\"\nscale = 0.01\n\
+             grid_points = 5\nrules = [\"sasvi\"]\n\
+             [screening]\ndynamic = true\nrecheck_every = 2\n",
+        )
+        .unwrap();
+        let code = run(&s(&["run", "--config", path.to_str().unwrap()])).unwrap();
+        assert_eq!(code, 0);
+        crate::screening::dynamic::set_process_default(before);
     }
 
     #[test]

@@ -172,6 +172,12 @@ pub struct ExperimentConfig {
     /// worker lanes for the `linalg::par` column-block pool
     /// (0 = keep the process default: `SASVI_THREADS` env var or all cores)
     pub threads: usize,
+    /// `screening.dynamic`: re-screen inside the solvers with a dual point
+    /// scaled from the current residual (see `screening::dynamic`)
+    pub dynamic: bool,
+    /// `screening.recheck_every`: epochs between in-solver re-screens
+    /// (0 degrades to static solving even when `dynamic = true`)
+    pub recheck_every: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -192,6 +198,8 @@ impl Default for ExperimentConfig {
             trials: 1,
             out_dir: "results".into(),
             threads: 0,
+            dynamic: false,
+            recheck_every: crate::screening::dynamic::DEFAULT_RECHECK,
         }
     }
 }
@@ -217,6 +225,8 @@ impl ExperimentConfig {
             trials: c.get_usize("experiment.trials", d.trials),
             out_dir: c.get_str("experiment.out_dir", &d.out_dir),
             threads: c.get_usize("experiment.threads", d.threads),
+            dynamic: c.get_bool("screening.dynamic", d.dynamic),
+            recheck_every: c.get_usize("screening.recheck_every", d.recheck_every),
         }
     }
 
@@ -224,6 +234,14 @@ impl ExperimentConfig {
     pub fn apply_threads(&self) {
         if self.threads > 0 {
             crate::linalg::par::set_threads(self.threads);
+        }
+    }
+
+    /// The `[screening]` dynamic knobs as solver options.
+    pub fn dynamic_options(&self) -> crate::screening::dynamic::DynamicOptions {
+        crate::screening::dynamic::DynamicOptions {
+            enabled: self.dynamic,
+            recheck_every: self.recheck_every,
         }
     }
 }
@@ -281,6 +299,23 @@ trials = 3
         let c = Config::parse("[experiment]\nthreads = 4\n").unwrap();
         let e = ExperimentConfig::from_config(&c);
         assert_eq!(e.threads, 4);
+    }
+
+    #[test]
+    fn dynamic_screening_knobs_parse() {
+        let c = Config::parse("[screening]\ndynamic = true\nrecheck_every = 3\n")
+            .unwrap();
+        let e = ExperimentConfig::from_config(&c);
+        assert!(e.dynamic);
+        assert_eq!(e.recheck_every, 3);
+        let opts = e.dynamic_options();
+        assert!(opts.active());
+        assert_eq!(opts.recheck_every, 3);
+        // defaults: off, with the standard cadence
+        let d = ExperimentConfig::default();
+        assert!(!d.dynamic);
+        assert!(!d.dynamic_options().active());
+        assert_eq!(d.recheck_every, crate::screening::dynamic::DEFAULT_RECHECK);
     }
 
     #[test]

@@ -12,12 +12,22 @@
 //! throughput scales with the configured thread count while the computed
 //! path stays bit-identical to a serial run (see `par`'s determinism
 //! contract).
+//!
+//! With [`PathOptions::dynamic`] enabled the solvers additionally re-screen
+//! *mid-solve* ([`crate::screening::dynamic`]): every `recheck_every`
+//! epochs a dual point scaled from the current residual drives a fused
+//! VI-ball + gap-ball test over the surviving columns, and the active
+//! problem is compacted so later epochs touch only survivors. Each step's
+//! checkpoint history (epochs-at-width trajectory, rejection-over-time) is
+//! retained in [`PathResult::dynamic`]; under the unsafe strong rule,
+//! dynamic discards are folded into the same KKT-correction loop.
 
 use std::time::{Duration, Instant};
 
 use crate::data::Dataset;
+use crate::screening::dynamic::{DynamicOptions, DynamicTrace};
 use crate::screening::{RuleKind, ScreenContext, ScreenOutcome};
-use crate::solver::cd::{solve_cd, CdOptions};
+use crate::solver::cd::{solve_cd, solve_cd_dynamic, CdOptions};
 use crate::solver::kkt::check_kkt_subset;
 use crate::solver::DualState;
 
@@ -44,6 +54,10 @@ pub struct PathOptions {
     pub kkt_tol: f64,
     /// max correction rounds before giving up (should never trigger)
     pub max_kkt_rounds: usize,
+    /// dynamic (in-solver) re-screening; off by default — the CLI, config
+    /// and server consult [`crate::screening::dynamic::process_default`]
+    /// when building options from user input
+    pub dynamic: DynamicOptions,
 }
 
 impl Default for PathOptions {
@@ -58,6 +72,7 @@ impl Default for PathOptions {
             },
             kkt_tol: 1e-6,
             max_kkt_rounds: 16,
+            dynamic: DynamicOptions::off(),
         }
     }
 }
@@ -66,6 +81,28 @@ impl PathOptions {
     /// The SLEP-like configuration used by the Table-1 benchmark.
     pub fn fista_like_slep() -> Self {
         Self { solver: SolverKind::Fista, ..Default::default() }
+    }
+
+    /// Defaults plus every process-wide knob set from user input (today:
+    /// the dynamic-screening flag). Commands that build options on behalf
+    /// of a user go through this so a global CLI/server flag is never
+    /// silently ignored; library callers keep the pure `Default`.
+    pub fn from_process_defaults() -> Self {
+        Self {
+            dynamic: crate::screening::dynamic::process_default(),
+            ..Default::default()
+        }
+    }
+}
+
+/// Mark every feature a dynamic trace discarded as screened-out, so the
+/// KKT correction and the step record see solver-level drops exactly like
+/// rule-level ones.
+fn mark_dynamic_drops(trace: &DynamicTrace, keep: &mut [bool]) {
+    for ev in &trace.events {
+        for &j in &ev.dropped {
+            keep[j] = false;
+        }
     }
 }
 
@@ -88,6 +125,10 @@ pub struct StepRecord {
     /// the full X^T r statistics pass that feeds the next screen
     pub stats_time: Duration,
     pub gap: f64,
+    /// dynamic re-screen checkpoints run inside the solver at this step
+    pub dyn_rechecks: usize,
+    /// features discarded dynamically (on top of the `screened` count)
+    pub dyn_dropped: usize,
 }
 
 impl StepRecord {
@@ -112,6 +153,9 @@ pub struct PathResult {
     pub beta_final: Vec<f64>,
     /// solutions at every grid point (lambda, beta) when `keep_betas`
     pub betas: Option<Vec<Vec<f64>>>,
+    /// per-step dynamic re-screen traces (epochs-at-width histograms,
+    /// rejection-over-time) when `opts.dynamic` is enabled
+    pub dynamic: Option<Vec<DynamicTrace>>,
 }
 
 impl PathResult {
@@ -125,6 +169,31 @@ impl PathResult {
 
     pub fn total_kkt_violations(&self) -> usize {
         self.steps.iter().map(|s| s.kkt_violations).sum()
+    }
+
+    /// Features discarded by in-solver dynamic screening across the path.
+    pub fn total_dynamic_dropped(&self) -> usize {
+        self.steps.iter().map(|s| s.dyn_dropped).sum()
+    }
+
+    /// Total `epochs x active-width` solver work. For a static run this is
+    /// `sum_k epochs_k * kept_k`; a dynamic run integrates the per-step
+    /// epoch-width trajectory instead — the quantity dynamic screening
+    /// shrinks (`benches/dynamic.rs` compares the two).
+    pub fn solver_work(&self) -> u64 {
+        match &self.dynamic {
+            Some(traces) => self
+                .steps
+                .iter()
+                .zip(traces.iter())
+                .map(|(s, t)| t.solver_work(s.epochs))
+                .sum(),
+            None => self
+                .steps
+                .iter()
+                .map(|s| s.epochs as u64 * s.kept as u64)
+                .sum(),
+        }
     }
 }
 
@@ -151,50 +220,102 @@ pub fn run_path_keep_betas(
 
 /// One solve at `lambda` restricted to `active`, dispatching on the
 /// configured solver. Maintains the `beta`/`resid` invariants either way.
+/// With dynamic screening enabled, `active` is shrunk in place to the
+/// features that survived the in-solver checkpoints, and the returned trace
+/// records every checkpoint (dropped indices already remapped to dataset
+/// features).
 fn run_solver(
     ds: &Dataset,
     lambda: f64,
-    active: &[usize],
-    col_norms_sq: &[f64],
+    active: &mut Vec<usize>,
+    pre: &crate::data::dataset::PathPrecompute,
     beta: &mut [f64],
     resid: &mut [f64],
     opts: &PathOptions,
-) -> crate::solver::CdStats {
+) -> (crate::solver::CdStats, Option<DynamicTrace>) {
+    let col_norms_sq = &pre.col_norms_sq;
     match opts.solver {
-        SolverKind::Cd => solve_cd(
-            &ds.x, &ds.y, lambda, active, col_norms_sq, beta, resid, &opts.cd,
-        ),
+        SolverKind::Cd => {
+            if opts.dynamic.active() {
+                let (stats, trace) = solve_cd_dynamic(
+                    &ds.x, &ds.y, lambda, active, col_norms_sq, &pre.xty, beta,
+                    resid, &opts.cd, &opts.dynamic,
+                );
+                (stats, Some(trace))
+            } else {
+                let stats = solve_cd(
+                    &ds.x, &ds.y, lambda, active, col_norms_sq, beta, resid,
+                    &opts.cd,
+                );
+                (stats, None)
+            }
+        }
         SolverKind::Fista => {
             // Compaction: gather the kept columns into a dense submatrix
             // (densifying sparse columns — FISTA's full matvecs favour
             // contiguous storage on the small kept set). This O(n * kept)
             // copy is what turns screening into wall-clock savings for an
-            // O(n * p)-per-iteration solver.
+            // O(n * p)-per-iteration solver. The dynamic variant keeps
+            // compacting mid-solve as checkpoints discard more columns.
             let k = active.len();
             let sub: crate::linalg::DesignMatrix = ds.x.gather_columns(active).into();
             let mut beta0 = vec![0.0; k];
             for (c, &j) in active.iter().enumerate() {
                 beta0[c] = beta[j];
             }
-            let mask = vec![true; k];
-            let (beta_a, iters) =
-                crate::solver::solve_fista_warm(&sub, &ds.y, lambda, &mask, beta0,
-                                                &opts.fista);
-            // scatter back + rebuild the residual
+            let (beta_a, iters, trace) = if opts.dynamic.active() {
+                // per-column stats gathered from the path precompute in
+                // O(kept) — no whole-submatrix passes inside the solver
+                let xty_sub: Vec<f64> = active.iter().map(|&j| pre.xty[j]).collect();
+                let norms_sub: Vec<f64> =
+                    active.iter().map(|&j| pre.col_norms_sq[j]).collect();
+                let (beta_a, iters, mut trace) = crate::solver::solve_fista_dynamic(
+                    &sub, &ds.y, lambda, beta0, Some((xty_sub, norms_sub)),
+                    &opts.fista, &opts.dynamic,
+                );
+                trace.remap(active); // submatrix column -> dataset feature
+                (beta_a, iters, Some(trace))
+            } else {
+                let mask = vec![true; k];
+                let (beta_a, iters) = crate::solver::solve_fista_warm(
+                    &sub, &ds.y, lambda, &mask, beta0, &opts.fista,
+                );
+                (beta_a, iters, None)
+            };
+            // scatter back + rebuild the residual (dynamically dropped
+            // columns come back as exact zeros)
             resid.copy_from_slice(&ds.y);
             for (c, &j) in active.iter().enumerate() {
                 beta[j] = beta_a[c];
                 ds.x.axpy_col(-beta_a[c], j, resid);
             }
+            if let Some(tr) = &trace {
+                if tr.dropped_total() > 0 {
+                    let mut dropped = vec![false; ds.p()];
+                    for ev in &tr.events {
+                        for &j in &ev.dropped {
+                            dropped[j] = true;
+                        }
+                    }
+                    active.retain(|&j| !dropped[j]);
+                }
+            }
             let gap = crate::solver::cd::restricted_gap(
                 &ds.x, &ds.y, lambda, active, beta, resid,
             );
-            crate::solver::CdStats {
+            // one prox update per live coordinate per iteration; the trace's
+            // epoch-width integral counts the post-compaction widths exactly
+            let coord_updates = match &trace {
+                Some(tr) => tr.solver_work(iters),
+                None => (iters * k) as u64,
+            };
+            let stats = crate::solver::CdStats {
                 epochs: iters,
-                coord_updates: (iters * k) as u64,
+                coord_updates,
                 converged: true,
                 final_gap: Some(gap),
-            }
+            };
+            (stats, trace)
         }
     }
 }
@@ -222,6 +343,11 @@ fn run_path_impl(
 
     let mut steps = Vec::with_capacity(plan.len());
     let mut betas = if keep_betas { Some(Vec::with_capacity(plan.len())) } else { None };
+    let mut dyn_traces = if opts.dynamic.active() {
+        Some(Vec::with_capacity(plan.len()))
+    } else {
+        None
+    };
 
     for &lambda in plan.lambdas.iter() {
         // ---- screen -----------------------------------------------------
@@ -255,9 +381,18 @@ fn run_path_impl(
 
         // ---- solve ------------------------------------------------------
         let t1 = Instant::now();
-        let mut stats = run_solver(ds, lambda, &active, &pre.col_norms_sq,
-                                   &mut beta, &mut resid, &opts);
+        let (mut stats, mut dyn_trace) =
+            run_solver(ds, lambda, &mut active, &pre, &mut beta, &mut resid, &opts);
+        // dynamically discarded features leave the kept set too, so the
+        // KKT correction below (and the step record) sees them as screened
+        if let Some(tr) = &dyn_trace {
+            mark_dynamic_drops(tr, &mut keep);
+        }
         let mut kkt_violations = 0usize;
+        // epochs/updates across every solve at this step (KKT re-solves
+        // included), matching the epoch offsets of the absorbed traces
+        let mut total_epochs = stats.epochs;
+        let mut total_updates = stats.coord_updates;
         if !rule.is_safe() {
             // strong-rule correction: re-admit violated features, re-solve
             for _round in 0..opts.max_kkt_rounds {
@@ -277,8 +412,18 @@ fn run_path_impl(
                     keep[j] = true;
                     active.push(j);
                 }
-                stats = run_solver(ds, lambda, &active, &pre.col_norms_sq,
-                                   &mut beta, &mut resid, &opts);
+                let (s2, t2) =
+                    run_solver(ds, lambda, &mut active, &pre, &mut beta, &mut resid, &opts);
+                stats = s2;
+                if let Some(t2) = t2 {
+                    mark_dynamic_drops(&t2, &mut keep);
+                    match dyn_trace.as_mut() {
+                        Some(tr) => tr.absorb(t2, total_epochs),
+                        None => dyn_trace = Some(t2),
+                    }
+                }
+                total_epochs += stats.epochs;
+                total_updates += stats.coord_updates;
             }
         }
         let solve_time = t1.elapsed();
@@ -292,20 +437,29 @@ fn run_path_impl(
         let stats_time = t2.elapsed();
 
         let nnz = beta.iter().filter(|&&b| b != 0.0).count();
+        let (dyn_rechecks, dyn_dropped) = dyn_trace
+            .as_ref()
+            .map(|t| (t.rechecks(), t.distinct_dropped()))
+            .unwrap_or((0, 0));
         steps.push(StepRecord {
             lambda,
             frac: lambda / plan.lambda_max,
             kept: outcome.kept,
             screened: outcome.screened,
             nnz,
-            epochs: stats.epochs,
-            coord_updates: stats.coord_updates,
+            epochs: total_epochs,
+            coord_updates: total_updates,
             kkt_violations,
             screen_time,
             solve_time,
             stats_time,
             gap: stats.final_gap.unwrap_or(f64::NAN),
+            dyn_rechecks,
+            dyn_dropped,
         });
+        if let Some(ts) = dyn_traces.as_mut() {
+            ts.push(dyn_trace.unwrap_or_else(|| DynamicTrace::new(outcome.kept)));
+        }
         if let Some(bs) = betas.as_mut() {
             bs.push(beta.clone());
         }
@@ -319,6 +473,7 @@ fn run_path_impl(
         total_time: start.elapsed(),
         beta_final: beta,
         betas,
+        dynamic: dyn_traces,
     }
 }
 
@@ -465,6 +620,97 @@ mod tests {
         for (s1, s2) in a.steps.iter().zip(b.steps.iter()) {
             assert_eq!(s1.kept, s2.kept, "kept-set size diverged");
         }
+    }
+
+    #[test]
+    fn dynamic_path_matches_static_path_both_solvers() {
+        let ds = tiny();
+        let plan = PathPlan::linear_spaced(&ds, 15, 0.05);
+        // tight solver tolerances: both runs then sit far inside the 1e-5
+        // comparison bar regardless of trajectory differences
+        let fista = crate::solver::FistaOptions {
+            max_iters: 5000,
+            tol: 1e-13,
+            lipschitz: None,
+        };
+        for solver in [SolverKind::Cd, SolverKind::Fista] {
+            let opts_static = PathOptions { solver, fista, ..Default::default() };
+            let opts_dyn = PathOptions {
+                solver,
+                fista,
+                dynamic: crate::screening::dynamic::DynamicOptions::enabled_every(4),
+                ..Default::default()
+            };
+            let a = run_path_keep_betas(&ds, &plan, RuleKind::Sasvi, opts_static);
+            let b = run_path_keep_betas(&ds, &plan, RuleKind::Sasvi, opts_dyn);
+            assert!(b.total_dynamic_dropped() > 0, "{solver:?}: dynamic idle");
+            let traces = b.dynamic.as_ref().expect("dynamic traces retained");
+            assert_eq!(traces.len(), b.steps.len());
+            for (s, t) in b.steps.iter().zip(traces.iter()) {
+                assert_eq!(s.dyn_dropped, t.distinct_dropped());
+                // safe rule: no re-admissions, so events = distinct drops
+                assert_eq!(t.distinct_dropped(), t.dropped_total());
+                assert_eq!(s.dyn_rechecks, t.rechecks());
+                assert!(t.final_width() <= s.kept);
+                assert!(s.dyn_dropped <= s.kept);
+            }
+            let ba = a.betas.as_ref().unwrap();
+            let bb = b.betas.as_ref().unwrap();
+            for (k, (x, y)) in ba.iter().zip(bb.iter()).enumerate() {
+                for j in 0..ds.p() {
+                    assert!(
+                        (x[j] - y[j]).abs() < 1e-5,
+                        "{solver:?} step {k} feature {j}: {} vs {}",
+                        x[j], y[j]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dynamic_with_strong_rule_is_corrected_exactly() {
+        // dynamic discards under the (unsafe) strong rule inherit the KKT
+        // correction; the corrected path must still match the unscreened one
+        let ds = tiny();
+        let plan = PathPlan::linear_spaced(&ds, 15, 0.05);
+        let base = run_path_keep_betas(&ds, &plan, RuleKind::None, PathOptions::default());
+        let opts = PathOptions {
+            dynamic: crate::screening::dynamic::DynamicOptions::enabled_every(3),
+            ..Default::default()
+        };
+        let r = run_path_keep_betas(&ds, &plan, RuleKind::Strong, opts);
+        let b0 = base.betas.as_ref().unwrap();
+        let b1 = r.betas.as_ref().unwrap();
+        for (k, (x, y)) in b0.iter().zip(b1.iter()).enumerate() {
+            for j in 0..ds.p() {
+                assert!(
+                    (x[j] - y[j]).abs() < 1e-5,
+                    "step {k} feature {j}: {} vs {}",
+                    x[j], y[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dynamic_screens_everything_at_the_first_grid_point() {
+        // the first grid point is lambda_max: the epoch-0 checkpoint must
+        // discard (nearly) the whole kept set before a single sweep
+        let ds = tiny();
+        let plan = PathPlan::linear_spaced(&ds, 8, 0.2);
+        let opts = PathOptions {
+            dynamic: crate::screening::dynamic::DynamicOptions::enabled_every(5),
+            ..Default::default()
+        };
+        let r = run_path(&ds, &plan, RuleKind::Sasvi, opts);
+        let first = &r.steps[0];
+        assert_eq!(first.nnz, 0);
+        assert!(
+            first.dyn_dropped >= ds.p() - 4,
+            "expected a near-total epoch-0 discard, got {}",
+            first.dyn_dropped
+        );
     }
 
     #[test]

@@ -52,6 +52,24 @@
 //! all available cores. `benches/parallel.rs` measures the serial-vs-pool
 //! scaling of the statistics pass and the full-rule screens.
 //!
+//! ## Dynamic screening
+//!
+//! Beyond once-per-grid-point screening, [`screening::dynamic`] re-screens
+//! *inside* the solvers: every `recheck_every` epochs a dual-feasible point
+//! is scaled from the current residual and a fused VI-ball + gap-ball test
+//! runs over the surviving columns (parallel batched, deterministic), after
+//! which the active problem is compacted — CD shrinks its index set, the
+//! compacted FISTA re-gathers the survivors into a smaller submatrix — so
+//! later epochs touch only survivors. The contract is threefold: **safety**
+//! (a dynamic discard is never wrong when the prior kept set was safe —
+//! safe restrictions compose), **exactness** (dynamic and static paths
+//! agree to 1e-10 in objective), and **determinism** (bit-identical at
+//! every thread count). Knobs: CLI `--dynamic` / `--recheck-every` (global
+//! flags), config `screening.dynamic` / `screening.recheck_every`, server
+//! `PATH ... dynamic [k]`. `rust/tests/dynamic_safety.rs` and
+//! `rust/tests/determinism.rs` pin the contract; `benches/dynamic.rs`
+//! measures the `epochs x active-width` work reduction.
+//!
 //! ## Quickstart
 //!
 //! ```no_run

@@ -1,0 +1,520 @@
+//! Dynamic safe screening — re-screening *inside* the solver.
+//!
+//! The pathwise rules ([`super::sasvi`], [`super::safe`], [`super::dpp`])
+//! screen once per grid point, from the dual optimum of the *previous*
+//! grid point. But the paper's variational-inequality construction works
+//! for **any** dual-feasible point, not just an optimal one — so the test
+//! can be re-applied as the solver converges, with a dual point built from
+//! the current residual. Each re-screen shrinks the surviving set further,
+//! and later epochs touch only the survivors (Dynamic Sasvi, Yamada &
+//! Yamada 2021; Gap Safe rules, Fercoq, Gramfort & Salmon 2015).
+//!
+//! ## The fused test
+//!
+//! At a checkpoint inside a solve at `lambda`, with surviving set `A`,
+//! current iterate `beta` (supported on `A`) and residual `r = y - X beta`,
+//! build the feasible dual point of the **restricted** problem by dual
+//! scaling:
+//!
+//! ```text
+//!   theta = r / max(lambda, ||X_A^T r||_inf)
+//! ```
+//!
+//! Two regions then contain the restricted dual optimum `theta*`:
+//!
+//! * **VI ball** (the dynamic analogue of the paper's Theorem-2 ball):
+//!   `theta*` is the projection of `y/lambda` onto the dual feasible set,
+//!   so instantiating its variational inequality at the feasible `theta`
+//!   gives `<theta* - y/lambda, theta - theta*> >= 0` — the ball with
+//!   diameter `[theta, y/lambda]`. This is Eq. 28/29's closed form with
+//!   `b = y/lambda - theta`. (The *half-space* of the pathwise Sasvi dome
+//!   is **not** available here: it instantiates the VI *at* `theta1`,
+//!   which requires `theta1` to be optimal — mid-solve it is not.)
+//! * **Gap ball**: the dual objective is `lambda^2`-strongly concave, so
+//!   `||theta* - theta|| <= sqrt(2 G) / lambda` with
+//!   `G = P(beta) - D(theta)` the restricted duality gap.
+//!
+//! Feature `j in A` is discarded when the smaller of the two maxima of
+//! `|<x_j, .>|` over these regions is `< 1 - SCREEN_EPS`.
+//!
+//! ## When is this safe?
+//!
+//! The test certifies `beta*_j = 0` for the optimum of the problem
+//! **restricted to `A`**. If `A` itself came from safe screening (the
+//! pathwise safe rules, or previous dynamic checkpoints — safety
+//! composes), the restricted optimum extends to the full optimum by
+//! zeros, so every dynamic discard is exact for the full problem. Under
+//! the unsafe strong rule the discards are "restricted-safe" and the
+//! coordinator's KKT correction re-admits any casualties, exactly as it
+//! does for the rule's own mistakes.
+//!
+//! Everything here runs on the [`crate::linalg::par`] column-block pool
+//! with block-ordered reductions, so checkpoint decisions — and therefore
+//! the whole dynamic solve — are bit-identical at every thread count.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+use crate::linalg::{par, DesignMatrix};
+use crate::SCREEN_EPS;
+
+/// Default re-screen cadence (epochs / iterations between checkpoints).
+pub const DEFAULT_RECHECK: usize = 5;
+
+/// Knobs for dynamic screening inside the solvers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DynamicOptions {
+    pub enabled: bool,
+    /// Epochs (CD) / iterations (FISTA) between re-screens. An epoch-0
+    /// checkpoint always runs when enabled (it screens with the warm-start
+    /// residual — at `lambda >= lambda_max` it discards everything before
+    /// the first sweep). `0` disables re-screening entirely: the solve
+    /// degrades gracefully to the static solver instead of erroring.
+    /// Huge values behave like "epoch-0 checkpoint only".
+    pub recheck_every: usize,
+}
+
+impl Default for DynamicOptions {
+    fn default() -> Self {
+        Self::off()
+    }
+}
+
+impl DynamicOptions {
+    /// Dynamic screening off (the static baseline).
+    pub fn off() -> Self {
+        Self { enabled: false, recheck_every: DEFAULT_RECHECK }
+    }
+
+    /// Dynamic screening on, re-screening every `k` epochs.
+    pub fn enabled_every(k: usize) -> Self {
+        Self { enabled: true, recheck_every: k }
+    }
+
+    /// True when checkpoints will actually run.
+    pub fn active(&self) -> bool {
+        self.enabled && self.recheck_every > 0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// process-wide default (the global CLI `--dynamic` flag / config / server)
+// ---------------------------------------------------------------------------
+
+static PROCESS_ENABLED: AtomicBool = AtomicBool::new(false);
+static PROCESS_RECHECK: AtomicUsize = AtomicUsize::new(DEFAULT_RECHECK);
+
+/// Set the process-wide dynamic-screening default. Consulted wherever path
+/// options are built from user input (CLI commands, the server's `PATH`
+/// jobs) — mirroring how [`crate::linalg::par::set_threads`] makes
+/// `--threads` a global knob. Library callers that build a
+/// [`crate::coordinator::PathOptions`] directly are unaffected
+/// (`PathOptions::default()` stays static).
+pub fn set_process_default(opts: DynamicOptions) {
+    PROCESS_ENABLED.store(opts.enabled, Ordering::Relaxed);
+    PROCESS_RECHECK.store(opts.recheck_every, Ordering::Relaxed);
+}
+
+/// The current process-wide dynamic-screening default.
+pub fn process_default() -> DynamicOptions {
+    DynamicOptions {
+        enabled: PROCESS_ENABLED.load(Ordering::Relaxed),
+        recheck_every: PROCESS_RECHECK.load(Ordering::Relaxed),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the checkpoint test
+// ---------------------------------------------------------------------------
+
+/// Outcome of one re-screen checkpoint.
+#[derive(Clone, Debug)]
+pub struct Rescreen {
+    /// surviving column indices, in the order they appeared in `active`
+    pub survivors: Vec<usize>,
+    /// discarded column indices, in the order they appeared in `active`
+    pub dropped: Vec<usize>,
+    /// restricted duality gap at the constructed dual point
+    pub gap: f64,
+    /// `||X_A^T r||_inf` (the dual-scaling denominator candidate)
+    pub infeas: f64,
+}
+
+/// Evaluate the fused VI-ball + gap-ball test over the surviving set.
+///
+/// * `xty[j]` = `<x_j, y>` and `col_norms_sq[j]` = `||x_j||^2`, indexable
+///   by every `j` in `active`;
+/// * `beta` must be supported on `active` and `resid = y - X beta`;
+/// * `xt_r` is scratch of length `x.ncols()`; on return `xt_r[j]` holds
+///   `<x_j, r>` for `j` in `active`.
+///
+/// Pure function of its inputs; parallel over column blocks with
+/// block-ordered reductions (bit-identical at every thread count).
+#[allow(clippy::too_many_arguments)]
+pub fn rescreen(
+    x: &DesignMatrix,
+    y: &[f64],
+    lambda: f64,
+    xty: &[f64],
+    col_norms_sq: &[f64],
+    active: &[usize],
+    beta: &[f64],
+    resid: &[f64],
+    xt_r: &mut [f64],
+) -> Rescreen {
+    assert!(lambda > 0.0, "dynamic screening needs lambda > 0");
+    assert_eq!(y.len(), x.nrows());
+    assert_eq!(resid.len(), x.nrows());
+    // statistics over the survivors only: O(nnz(A)), never O(nnz(X))
+    x.t_matvec_subset(resid, active, xt_r);
+    let s: &[f64] = xt_r;
+    // block maxima folded in block order — reproduces the serial fold
+    let infeas = par::map_columns(active.len(), |_, r| {
+        let mut m = 0.0f64;
+        for &j in &active[r] {
+            m = m.max(s[j].abs());
+        }
+        m
+    })
+    .into_iter()
+    .fold(0.0f64, f64::max);
+    // restricted duality gap at (beta, theta), via the same shared
+    // arithmetic the CD stopping criterion uses; note theta - y/lambda = -b,
+    // so the gap computation also yields ||b||^2 for the VI ball below
+    let l1: f64 = active.iter().map(|&j| beta[j].abs()).sum();
+    let (gap, bnorm2, scale) = crate::solver::scaled_dual_gap(y, resid, lambda, infeas, l1);
+    let radius = (2.0 * gap.max(0.0)).sqrt() / lambda;
+    let bnorm = bnorm2.sqrt();
+    let thr = 1.0 - SCREEN_EPS;
+
+    // fused per-feature test; per-block survivor/dropped lists are
+    // concatenated in block order, so the output order is deterministic
+    let parts = par::map_columns(active.len(), |_, r| {
+        let mut surv = Vec::new();
+        let mut drop = Vec::new();
+        for &j in &active[r] {
+            let xt = s[j] * scale; // <x_j, theta>
+            let xn = col_norms_sq[j].sqrt();
+            let gap_bound = xt.abs() + xn * radius;
+            let xjb = xty[j] / lambda - xt; // <x_j, b>, b = y/lambda - theta
+            let up = xt + 0.5 * (xn * bnorm + xjb);
+            let um = -xt + 0.5 * (xn * bnorm - xjb);
+            if gap_bound.min(up.max(um)) >= thr {
+                surv.push(j);
+            } else {
+                drop.push(j);
+            }
+        }
+        (surv, drop)
+    });
+    let mut survivors = Vec::with_capacity(active.len());
+    let mut dropped = Vec::new();
+    for (sv, dr) in parts {
+        survivors.extend(sv);
+        dropped.extend(dr);
+    }
+    Rescreen { survivors, dropped, gap, infeas }
+}
+
+// ---------------------------------------------------------------------------
+// per-solve trace (the observability the coordinator and benches consume)
+// ---------------------------------------------------------------------------
+
+/// One re-screen checkpoint inside a solve.
+#[derive(Clone, Debug)]
+pub struct DynamicEvent {
+    /// epochs (CD) / iterations (FISTA) completed before this checkpoint
+    pub epoch: usize,
+    pub width_before: usize,
+    pub width_after: usize,
+    /// restricted duality gap at the checkpoint's dual point
+    pub gap: f64,
+    /// columns discarded at this checkpoint. Index space is the solver's:
+    /// dataset-global for CD; the path coordinator remaps FISTA's
+    /// submatrix-local indices to global via [`DynamicTrace::remap`].
+    pub dropped: Vec<usize>,
+}
+
+/// The full re-screen history of one solve.
+#[derive(Clone, Debug, Default)]
+pub struct DynamicTrace {
+    /// active width when the solve started
+    pub initial_width: usize,
+    pub events: Vec<DynamicEvent>,
+}
+
+impl DynamicTrace {
+    pub fn new(initial_width: usize) -> Self {
+        Self { initial_width, events: Vec::new() }
+    }
+
+    pub fn push_event(
+        &mut self,
+        epoch: usize,
+        width_before: usize,
+        width_after: usize,
+        gap: f64,
+        dropped: Vec<usize>,
+    ) {
+        self.events.push(DynamicEvent { epoch, width_before, width_after, gap, dropped });
+    }
+
+    /// Checkpoints run during the solve.
+    pub fn rechecks(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Total discard events. Under a safe rule this equals the number of
+    /// distinct features discarded; under the strong rule's KKT correction
+    /// a re-admitted feature may be discarded again in a later re-solve,
+    /// so events can exceed [`DynamicTrace::distinct_dropped`].
+    pub fn dropped_total(&self) -> usize {
+        self.events.iter().map(|e| e.dropped.len()).sum()
+    }
+
+    /// Distinct features discarded dynamically (what the step records and
+    /// the server's rejection ratios report — never exceeds the starting
+    /// width, even across KKT re-solves).
+    pub fn distinct_dropped(&self) -> usize {
+        let mut ids: Vec<usize> = self
+            .events
+            .iter()
+            .flat_map(|e| e.dropped.iter().copied())
+            .collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids.len()
+    }
+
+    /// Active width after the last checkpoint.
+    pub fn final_width(&self) -> usize {
+        self.events.last().map(|e| e.width_after).unwrap_or(self.initial_width)
+    }
+
+    /// Fraction of the starting width discarded dynamically (the dynamic
+    /// analogue of the paper's Fig. 5 rejection ratio). Counts distinct
+    /// features, so re-admission cycles cannot push it above 1.
+    pub fn rejection_ratio(&self) -> f64 {
+        if self.initial_width == 0 {
+            0.0
+        } else {
+            self.distinct_dropped() as f64 / self.initial_width as f64
+        }
+    }
+
+    /// Map solver-local dropped indices to another index space (used by
+    /// the path coordinator: FISTA submatrix column -> dataset feature).
+    pub fn remap(&mut self, ids: &[usize]) {
+        for ev in self.events.iter_mut() {
+            for j in ev.dropped.iter_mut() {
+                *j = ids[*j];
+            }
+        }
+    }
+
+    /// Append another solve's events (a strong-rule correction re-solve),
+    /// offsetting its epochs by `epoch_offset`. Width bookkeeping across
+    /// re-admissions is approximate — the histogram is observability, not
+    /// a correctness surface.
+    pub fn absorb(&mut self, other: DynamicTrace, epoch_offset: usize) {
+        for mut ev in other.events {
+            ev.epoch += epoch_offset;
+            self.events.push(ev);
+        }
+    }
+
+    /// The epoch-width trajectory: `(width, epochs spent at that width)`
+    /// segments, in order, covering `total_epochs` solver epochs.
+    pub fn epochs_at_width(&self, total_epochs: usize) -> Vec<(usize, usize)> {
+        fn push(segs: &mut Vec<(usize, usize)>, width: usize, epochs: usize) {
+            if epochs == 0 {
+                return;
+            }
+            if let Some(last) = segs.last_mut() {
+                if last.0 == width {
+                    last.1 += epochs;
+                    return;
+                }
+            }
+            segs.push((width, epochs));
+        }
+        let mut segs = Vec::new();
+        let mut width = self.initial_width;
+        let mut at = 0usize;
+        for ev in &self.events {
+            let e = ev.epoch.min(total_epochs);
+            if e > at {
+                push(&mut segs, width, e - at);
+                at = e;
+            }
+            width = ev.width_after;
+        }
+        if total_epochs > at {
+            push(&mut segs, width, total_epochs - at);
+        }
+        segs
+    }
+
+    /// Total `epochs x active-width` work of the solve — the quantity
+    /// dynamic screening exists to reduce (`benches/dynamic.rs` compares
+    /// it against the static solver's `epochs * kept`).
+    pub fn solver_work(&self, total_epochs: usize) -> u64 {
+        self.epochs_at_width(total_epochs)
+            .into_iter()
+            .map(|(w, e)| w as u64 * e as u64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticSpec;
+    use crate::solver::cd::{solve_cd, CdOptions};
+
+    fn tight() -> CdOptions {
+        CdOptions { max_epochs: 30_000, tol: 1e-13, gap_tol: 1e-13, ..Default::default() }
+    }
+
+    fn exact(ds: &crate::data::Dataset, lam: f64) -> (Vec<f64>, Vec<f64>) {
+        let active: Vec<usize> = (0..ds.p()).collect();
+        let norms = ds.x.col_norms_sq();
+        let mut beta = vec![0.0; ds.p()];
+        let mut resid = ds.y.clone();
+        solve_cd(&ds.x, &ds.y, lam, &active, &norms, &mut beta, &mut resid, &tight());
+        (beta, resid)
+    }
+
+    #[test]
+    fn rescreen_is_safe_at_a_near_optimal_point() {
+        for seed in [2u64, 14] {
+            let ds = SyntheticSpec { n: 30, p: 150, nnz: 10, ..Default::default() }
+                .generate(seed);
+            let pre = ds.precompute();
+            let lam = 0.4 * pre.lambda_max;
+            let (beta, resid) = exact(&ds, lam);
+            let active: Vec<usize> = (0..ds.p()).collect();
+            let mut scratch = vec![0.0; ds.p()];
+            let rs = rescreen(
+                &ds.x, &ds.y, lam, &pre.xty, &pre.col_norms_sq, &active, &beta,
+                &resid, &mut scratch,
+            );
+            assert!(rs.gap >= -1e-9, "gap {}", rs.gap);
+            assert!(!rs.dropped.is_empty(), "seed {seed}: nothing screened");
+            for &j in &rs.dropped {
+                assert!(
+                    beta[j].abs() < 1e-10,
+                    "seed {seed}: dropped active feature {j} (beta {})",
+                    beta[j]
+                );
+            }
+            // survivors + dropped partition the input set, order preserved
+            let mut all: Vec<usize> = rs.survivors.clone();
+            all.extend(&rs.dropped);
+            all.sort_unstable();
+            assert_eq!(all, active);
+        }
+    }
+
+    #[test]
+    fn rescreen_is_safe_mid_solve() {
+        // stop CD early (a genuinely suboptimal iterate) and verify the
+        // drops against the exact solution
+        let ds = SyntheticSpec { n: 30, p: 200, nnz: 15, ..Default::default() }
+            .generate(6);
+        let pre = ds.precompute();
+        let lam = 0.3 * pre.lambda_max;
+        let active: Vec<usize> = (0..ds.p()).collect();
+        let mut beta = vec![0.0; ds.p()];
+        let mut resid = ds.y.clone();
+        let rough = CdOptions { max_epochs: 3, gap_check_every: 0, ..Default::default() };
+        solve_cd(&ds.x, &ds.y, lam, &active, &pre.col_norms_sq, &mut beta,
+                 &mut resid, &rough);
+        let mut scratch = vec![0.0; ds.p()];
+        let rs = rescreen(
+            &ds.x, &ds.y, lam, &pre.xty, &pre.col_norms_sq, &active, &beta,
+            &resid, &mut scratch,
+        );
+        let (beta_star, _) = exact(&ds, lam);
+        for &j in &rs.dropped {
+            assert!(beta_star[j].abs() < 1e-10, "feature {j}: {}", beta_star[j]);
+        }
+    }
+
+    #[test]
+    fn zero_residual_checkpoint_is_finite_and_safe() {
+        // y = X beta0 exactly: the checkpoint sees r = 0, theta = 0
+        let ds = SyntheticSpec { n: 20, p: 40, nnz: 4, ..Default::default() }
+            .generate(8);
+        let mut beta = vec![0.0; ds.p()];
+        beta[3] = 1.5;
+        beta[17] = -0.25;
+        let mut y = vec![0.0; ds.n()];
+        ds.x.matvec(&beta, &mut y);
+        let mut xty = vec![0.0; ds.p()];
+        ds.x.t_matvec(&y, &mut xty);
+        let norms = ds.x.col_norms_sq();
+        let resid = vec![0.0; ds.n()];
+        let active: Vec<usize> = (0..ds.p()).collect();
+        let mut scratch = vec![0.0; ds.p()];
+        let rs = rescreen(&ds.x, &y, 0.5, &xty, &norms, &active, &beta, &resid,
+                          &mut scratch);
+        assert!(rs.gap.is_finite() && rs.gap >= 0.0, "gap {}", rs.gap);
+        assert!(rs.infeas == 0.0);
+        assert_eq!(rs.survivors.len() + rs.dropped.len(), ds.p());
+    }
+
+    #[test]
+    fn empty_active_set_is_a_noop() {
+        let ds = SyntheticSpec { n: 10, p: 20, nnz: 2, ..Default::default() }
+            .generate(1);
+        let pre = ds.precompute();
+        let beta = vec![0.0; ds.p()];
+        let mut scratch = vec![0.0; ds.p()];
+        let rs = rescreen(
+            &ds.x, &ds.y, 1.0, &pre.xty, &pre.col_norms_sq, &[], &beta, &ds.y,
+            &mut scratch,
+        );
+        assert!(rs.survivors.is_empty() && rs.dropped.is_empty());
+        assert!(rs.gap.is_finite());
+    }
+
+    #[test]
+    fn options_and_process_default_round_trip() {
+        let _guard = crate::linalg::par::test_knob_guard();
+        let before = process_default();
+        assert!(!DynamicOptions::off().active());
+        assert!(DynamicOptions::enabled_every(3).active());
+        assert!(!DynamicOptions { enabled: true, recheck_every: 0 }.active());
+        set_process_default(DynamicOptions::enabled_every(7));
+        assert_eq!(process_default(), DynamicOptions::enabled_every(7));
+        set_process_default(before);
+    }
+
+    #[test]
+    fn distinct_dropped_dedupes_readmission_cycles() {
+        // a KKT-re-admitted feature discarded again must count once
+        let mut t = DynamicTrace::new(10);
+        t.push_event(0, 10, 8, 1.0, vec![3, 7]);
+        t.push_event(4, 9, 8, 0.5, vec![7]); // 7 re-admitted then re-dropped
+        assert_eq!(t.dropped_total(), 3);
+        assert_eq!(t.distinct_dropped(), 2);
+    }
+
+    #[test]
+    fn trace_histogram_and_work() {
+        let mut t = DynamicTrace::new(100);
+        t.push_event(0, 100, 80, 1.0, (80..100).collect());
+        t.push_event(5, 80, 50, 0.1, (50..80).collect());
+        assert_eq!(t.rechecks(), 2);
+        assert_eq!(t.dropped_total(), 50);
+        assert_eq!(t.final_width(), 50);
+        assert!((t.rejection_ratio() - 0.5).abs() < 1e-15);
+        // epochs 0..5 at width 80, 5..12 at width 50
+        assert_eq!(t.epochs_at_width(12), vec![(80, 5), (50, 7)]);
+        assert_eq!(t.solver_work(12), 80 * 5 + 50 * 7);
+        // remap into another index space
+        let ids: Vec<usize> = (0..100).map(|j| j + 1000).collect();
+        t.remap(&ids);
+        assert_eq!(t.events[0].dropped[0], 1080);
+    }
+}

@@ -19,8 +19,24 @@
 //! once, then each block evaluates its features with the same serial
 //! arithmetic), so screening results are bit-identical at every thread
 //! count.
+//!
+//! ## Dynamic screening ([`dynamic`])
+//!
+//! The rules above screen once per grid point. [`dynamic`] re-applies a
+//! fused VI-ball + gap-ball test *inside* the solvers, every
+//! `recheck_every` epochs, with a dual-feasible point scaled from the
+//! current residual. **The dynamic contract:** a re-screen is safe
+//! whenever the surviving set it starts from is itself safe — the test
+//! certifies zeros of the problem restricted to the survivors, and safe
+//! restrictions compose. Along a path that means: safe rule screens →
+//! every dynamic discard is exact; strong rule screens → dynamic discards
+//! inherit the rule's "restricted-safe" status and are repaired by the
+//! same KKT correction. `rust/tests/dynamic_safety.rs` pins the guarantee
+//! per checkpoint; `rust/tests/determinism.rs` pins bit-identity across
+//! thread counts and objective agreement with the static path.
 
 pub mod dpp;
+pub mod dynamic;
 pub mod safe;
 pub mod sasvi;
 pub mod strong;

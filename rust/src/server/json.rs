@@ -62,6 +62,11 @@ impl JsonWriter {
         self.buf.push_str(&v.to_string());
     }
 
+    pub fn field_bool(&mut self, k: &str, v: bool) {
+        self.key(k);
+        self.buf.push_str(if v { "true" } else { "false" });
+    }
+
     pub fn field_f64(&mut self, k: &str, v: f64) {
         self.key(k);
         self.buf.push_str(&fmt_f64(v));
@@ -96,9 +101,10 @@ mod tests {
         w.field_u64("n", 3);
         w.field_f64("t", 1.5);
         w.field_f64_array("xs", &[1.0, 0.25]);
+        w.field_bool("dyn", true);
         assert_eq!(
             w.finish(),
-            r#"{"name": "sasvi", "n": 3, "t": 1.5, "xs": [1.0, 0.25]}"#
+            r#"{"name": "sasvi", "n": 3, "t": 1.5, "xs": [1.0, 0.25], "dyn": true}"#
         );
     }
 

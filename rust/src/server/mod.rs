@@ -6,7 +6,8 @@
 //! ```text
 //! PING
 //! GEN <preset> <seed> <scale> [threads]  -> {"dataset": id, ...}
-//! PATH <dataset-id> <rule> <k> <min_frac> -> {"job": id}
+//! PATH <dataset-id> <rule> <k> <min_frac> [dynamic|static [recheck]]
+//!                                         -> {"job": id}
 //! STATUS <job-id>                         -> {"status": "..."}
 //! RESULT <job-id>                         -> {"steps": [...], ...} (blocks)
 //! SUREREMOVAL <dataset-id> <lam1-frac> <j> -> {"lam_s": ...}
@@ -23,6 +24,13 @@
 //! run on the dataset; the reply always reports the effective `threads`.
 //! Results are bit-identical at every thread count (the pool's determinism
 //! contract), so the knob only trades wall-clock.
+//!
+//! `PATH` jobs default to the process-wide dynamic-screening setting
+//! ([`crate::screening::dynamic::process_default`], e.g. from `serve
+//! --dynamic`); the optional 5th/6th arguments override it per job. The
+//! `GEN` reply reports the default in effect (`dynamic`), and `RESULT`
+//! reports the in-solver rejection: `dynamic_dropped` (total) and
+//! `dynamic_rejection` (per step, relative to the post-screen width).
 
 pub mod json;
 
@@ -129,7 +137,15 @@ fn handle_conn(stream: TcpStream, state: Arc<ServerState>) -> Result<()> {
             ["GEN", preset, seed, scale, threads] => {
                 cmd_gen(&state, preset, seed, scale, Some(threads))
             }
-            ["PATH", ds, rule, k, min_frac] => cmd_path(&state, ds, rule, k, min_frac),
+            ["PATH", ds, rule, k, min_frac] => {
+                cmd_path(&state, ds, rule, k, min_frac, None, None)
+            }
+            ["PATH", ds, rule, k, min_frac, mode] => {
+                cmd_path(&state, ds, rule, k, min_frac, Some(mode), None)
+            }
+            ["PATH", ds, rule, k, min_frac, mode, recheck] => {
+                cmd_path(&state, ds, rule, k, min_frac, Some(mode), Some(recheck))
+            }
             ["STATUS", job] => cmd_status(&state, job),
             ["RESULT", job] => cmd_result(&state, job),
             ["SUREREMOVAL", ds, frac, j] => cmd_sure_removal(&state, ds, frac, j),
@@ -191,13 +207,22 @@ fn cmd_gen(
             w.field_str("storage", storage);
             w.field_f64("density", density);
             w.field_u64("threads", effective as u64);
+            w.field_bool("dynamic", crate::screening::dynamic::process_default().enabled);
             w.finish()
         }
         Err(e) => err_msg(&format!("generate failed: {e}")),
     }
 }
 
-fn cmd_path(state: &ServerState, ds: &str, rule: &str, k: &str, min_frac: &str) -> String {
+fn cmd_path(
+    state: &ServerState,
+    ds: &str,
+    rule: &str,
+    k: &str,
+    min_frac: &str,
+    mode: Option<&str>,
+    recheck: Option<&str>,
+) -> String {
     let ds_id: u64 = match ds.parse() {
         Ok(v) => v,
         Err(_) => return err_msg("bad dataset id"),
@@ -212,12 +237,31 @@ fn cmd_path(state: &ServerState, ds: &str, rule: &str, k: &str, min_frac: &str) 
     };
     let k: usize = k.parse().unwrap_or(100);
     let min_frac: f64 = min_frac.parse().unwrap_or(0.05);
+    let mut dynamic = crate::screening::dynamic::process_default();
+    match mode {
+        None => {}
+        Some("dynamic") => dynamic.enabled = true,
+        Some("static") => dynamic.enabled = false,
+        Some(other) => return err_msg(&format!("bad path mode {other}")),
+    }
+    if let Some(r) = recheck {
+        match r.parse::<usize>() {
+            Ok(v) => dynamic.recheck_every = v,
+            Err(_) => return err_msg(&format!("bad recheck cadence {r}")),
+        }
+    }
+    // an explicit dynamic request with a 0 cadence would silently run
+    // static — reject it instead (a cadence of 0 only makes sense as the
+    // config-level "degrade gracefully" default, never as a job request)
+    if matches!(mode, Some("dynamic")) && !dynamic.active() {
+        return err_msg("dynamic requested but recheck cadence is 0");
+    }
     let plan = PathPlan::linear_spaced(&dataset, k.max(2), min_frac.clamp(0.001, 0.99));
     let job_id = state.pool.submit(JobSpec {
         dataset,
         plan,
         rule,
-        opts: PathOptions::default(),
+        opts: PathOptions { dynamic, ..PathOptions::from_process_defaults() },
         tag: format!("svc-{rule:?}"),
     });
     let id = state.next_job.fetch_add(1, Ordering::Relaxed);
@@ -267,6 +311,16 @@ fn cmd_result(state: &ServerState, job: &str) -> String {
             w.field_f64_array("rejection", &rej);
             let fr: Vec<f64> = res.steps.iter().map(|s| s.frac).collect();
             w.field_f64_array("frac", &fr);
+            // in-solver rejection: dropped dynamically / post-screen width,
+            // clamped to 1 (strong-rule KKT re-admissions can make drops
+            // exceed the original kept set)
+            w.field_u64("dynamic_dropped", res.total_dynamic_dropped() as u64);
+            let dyn_rej: Vec<f64> = res
+                .steps
+                .iter()
+                .map(|s| (s.dyn_dropped as f64 / s.kept.max(1) as f64).min(1.0))
+                .collect();
+            w.field_f64_array("dynamic_rejection", &dyn_rej);
             w.finish()
         }
         None => err_msg("job failed or already consumed"),
@@ -408,6 +462,50 @@ mod tests {
         );
         assert!(replies[2].contains("rejection"), "{}", replies[2]);
         assert!(replies[3].contains("error"), "{}", replies[3]);
+        stop.store(true, Ordering::Relaxed);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn dynamic_path_jobs_and_reporting() {
+        let _guard = crate::linalg::par::test_knob_guard();
+        let server = Server::bind("127.0.0.1:0", 1).unwrap();
+        let addr = server.local_addr().unwrap();
+        let stop = server.stop_handle();
+        let h = std::thread::spawn(move || server.serve().unwrap());
+        let replies = send(
+            addr,
+            &[
+                "GEN synthetic100 3 0.01",
+                "PATH 1 sasvi 6 0.1 dynamic 3",
+                "RESULT 1",
+                "PATH 1 sasvi 6 0.1 static",
+                "RESULT 2",
+                "PATH 1 sasvi 6 0.1 sometimes",
+                "PATH 1 sasvi 6 0.1 dynamic 0",
+                "QUIT",
+            ],
+        );
+        // GEN reports the process-wide dynamic default
+        assert!(replies[0].contains("\"dynamic\": "), "{}", replies[0]);
+        assert!(replies[1].contains("\"job\": 1"), "{}", replies[1]);
+        assert!(replies[2].contains("dynamic_rejection"), "{}", replies[2]);
+        // a dynamic sasvi path screens something inside the solver
+        assert!(replies[2].contains("\"dynamic_dropped\": "), "{}", replies[2]);
+        assert!(
+            !replies[2].contains("\"dynamic_dropped\": 0,"),
+            "dynamic job dropped nothing: {}",
+            replies[2]
+        );
+        // static jobs report zero in-solver drops
+        assert!(
+            replies[4].contains("\"dynamic_dropped\": 0"),
+            "{}",
+            replies[4]
+        );
+        assert!(replies[5].contains("error"), "{}", replies[5]);
+        // explicit dynamic with cadence 0 is rejected, not silently static
+        assert!(replies[6].contains("error"), "{}", replies[6]);
         stop.store(true, Ordering::Relaxed);
         h.join().unwrap();
     }

@@ -11,6 +11,7 @@
 //! tail of the optimization cheap — a standard glmnet-style trick.
 
 use crate::linalg::{ops, DesignMatrix};
+use crate::screening::dynamic::{self, DynamicOptions, DynamicTrace};
 
 #[derive(Clone, Copy, Debug)]
 pub struct CdOptions {
@@ -126,6 +127,183 @@ pub fn solve_cd(
     stats
 }
 
+/// One dynamic-screening checkpoint inside [`solve_cd_dynamic`]: rescreen
+/// the surviving set, evict the warm-start mass of any dropped feature
+/// (restoring the residual exactly), shrink `active`/`working`, and record
+/// the event. Returns the restricted gap at the checkpoint and whether a
+/// nonzero coefficient was evicted (in which case the gap is stale and must
+/// not be used as a convergence certificate this round).
+#[allow(clippy::too_many_arguments)]
+fn cd_checkpoint(
+    x: &DesignMatrix,
+    y: &[f64],
+    lambda: f64,
+    xty: &[f64],
+    col_norms_sq: &[f64],
+    active: &mut Vec<usize>,
+    working: &mut Vec<usize>,
+    alive: &mut [bool],
+    beta: &mut [f64],
+    resid: &mut [f64],
+    xt_r: &mut [f64],
+    epoch: usize,
+    trace: &mut DynamicTrace,
+) -> (f64, bool) {
+    let rs = dynamic::rescreen(x, y, lambda, xty, col_norms_sq, active, beta, resid, xt_r);
+    let mut evicted = false;
+    if !rs.dropped.is_empty() {
+        for &j in &rs.dropped {
+            alive[j] = false;
+            if beta[j] != 0.0 {
+                // safe: the checkpoint certifies beta*_j = 0
+                x.axpy_col(beta[j], j, resid);
+                beta[j] = 0.0;
+                evicted = true;
+            }
+        }
+        working.retain(|&j| alive[j]);
+        trace.push_event(epoch, active.len(), rs.survivors.len(), rs.gap, rs.dropped);
+        *active = rs.survivors;
+    } else {
+        trace.push_event(epoch, active.len(), active.len(), rs.gap, Vec::new());
+    }
+    (rs.gap, evicted)
+}
+
+/// The dynamic-screening twin of [`solve_cd`]: identical sweep arithmetic,
+/// plus a re-screen checkpoint every `dynamic.recheck_every` epochs (and one
+/// at epoch 0, before the first sweep) that shrinks `active` in place so
+/// later epochs touch only surviving features. With `dynamic` inactive
+/// (disabled or `recheck_every == 0`) the iteration sequence — and hence
+/// every result bit — is the static solver's.
+///
+/// `xty[j] = <x_j, y>` must be valid for every `j` in `active` (the path
+/// precompute provides it). `active` is shrunk in place to the survivors.
+#[allow(clippy::too_many_arguments)]
+pub fn solve_cd_dynamic(
+    x: &DesignMatrix,
+    y: &[f64],
+    lambda: f64,
+    active: &mut Vec<usize>,
+    col_norms_sq: &[f64],
+    xty: &[f64],
+    beta: &mut [f64],
+    resid: &mut [f64],
+    opts: &CdOptions,
+    dyn_opts: &DynamicOptions,
+) -> (CdStats, DynamicTrace) {
+    let mut stats = CdStats::default();
+    let mut trace = DynamicTrace::new(active.len());
+    let y_scale = ops::inf_norm(y).max(1.0);
+    let tol = opts.tol * y_scale;
+    let gap_scale = 0.5 * ops::nrm2sq(y) + 1e-12;
+    let every = dyn_opts.recheck_every;
+    let dyn_on = dyn_opts.active() && lambda > 0.0;
+
+    let (mut xt_r, mut alive) = if dyn_on {
+        (vec![0.0; x.ncols()], vec![false; x.ncols()])
+    } else {
+        (Vec::new(), Vec::new())
+    };
+    if dyn_on {
+        for &j in active.iter() {
+            alive[j] = true;
+        }
+        // epoch-0 checkpoint: screens with the warm-start residual — at
+        // lambda >= lambda_max this empties the active set before any sweep
+        let mut working = Vec::new();
+        let (gap, evicted) = cd_checkpoint(
+            x, y, lambda, xty, col_norms_sq, active, &mut working, &mut alive,
+            beta, resid, &mut xt_r, 0, &mut trace,
+        );
+        // an eviction changed (beta, resid) after the gap was computed, so
+        // the stale value must be neither reported, kept, nor used as a
+        // convergence certificate — clearing it makes the tail recompute run
+        if evicted {
+            stats.final_gap = None;
+        } else {
+            stats.final_gap = Some(gap);
+            if gap <= opts.gap_tol * gap_scale {
+                stats.converged = true;
+                return (stats, trace);
+            }
+        }
+    }
+
+    let mut working: Vec<usize> = active.to_vec();
+    let mut moved: Vec<usize> = Vec::with_capacity(active.len());
+
+    for epoch in 0..opts.max_epochs {
+        stats.epochs = epoch + 1;
+        let mut max_delta = 0.0f64;
+        moved.clear();
+        for &j in working.iter() {
+            let nrm = col_norms_sq[j];
+            if nrm <= 0.0 {
+                continue;
+            }
+            let old = beta[j];
+            let rho = x.col_dot(j, resid) + nrm * old;
+            let new = ops::soft_threshold(rho, lambda) / nrm;
+            let delta = new - old;
+            stats.coord_updates += 1;
+            if delta != 0.0 {
+                x.axpy_col(-delta, j, resid);
+                beta[j] = new;
+                let ad = delta.abs();
+                if ad > tol {
+                    moved.push(j);
+                }
+                if ad > max_delta {
+                    max_delta = ad;
+                }
+            }
+        }
+
+        let on_full_set = working.len() == active.len();
+        if max_delta < tol {
+            if on_full_set {
+                stats.converged = true;
+                break;
+            }
+            working = active.to_vec();
+            continue;
+        }
+        if moved.len() * 4 < working.len() && !moved.is_empty() {
+            working = moved.clone();
+        }
+
+        if dyn_on && (epoch + 1) % every == 0 {
+            let (gap, evicted) = cd_checkpoint(
+                x, y, lambda, xty, col_norms_sq, active, &mut working, &mut alive,
+                beta, resid, &mut xt_r, epoch + 1, &mut trace,
+            );
+            // a post-eviction gap is stale: drop any previously stored gap
+            // too, so the tail refresh recomputes one for the final iterate
+            if evicted {
+                stats.final_gap = None;
+            } else {
+                stats.final_gap = Some(gap);
+                if gap <= opts.gap_tol * gap_scale {
+                    stats.converged = true;
+                    break;
+                }
+            }
+        } else if opts.gap_check_every > 0 && (epoch + 1) % opts.gap_check_every == 0 {
+            let gap = restricted_gap(x, y, lambda, active, beta, resid);
+            stats.final_gap = Some(gap);
+            if gap <= opts.gap_tol * gap_scale {
+                stats.converged = true;
+                break;
+            }
+        }
+    }
+    if stats.final_gap.is_none() && opts.gap_check_every > 0 {
+        stats.final_gap = Some(restricted_gap(x, y, lambda, active, beta, resid));
+    }
+    (stats, trace)
+}
+
 /// Duality gap of the problem restricted to the kept set. When the kept set
 /// came from a *safe* rule this equals the gap of the full problem at the
 /// optimum; during iteration it is a sound stopping criterion for the
@@ -151,17 +329,9 @@ pub fn restricted_gap(
     })
     .into_iter()
     .fold(0.0f64, f64::max);
-    let denom = lambda.max(infeas);
-    let scale = if denom > 0.0 { 1.0 / denom } else { 0.0 };
-    let mut diff_sq = 0.0;
-    for (rv, yv) in resid.iter().zip(y.iter()) {
-        let d = rv * scale - yv / lambda;
-        diff_sq += d * d;
-    }
-    let primal = 0.5 * ops::nrm2sq(resid)
-        + lambda * active.iter().map(|&j| beta[j].abs()).sum::<f64>();
-    let dual = 0.5 * ops::nrm2sq(y) - 0.5 * lambda * lambda * diff_sq;
-    primal - dual
+    let l1: f64 = active.iter().map(|&j| beta[j].abs()).sum();
+    let (gap, _, _) = crate::solver::scaled_dual_gap(y, resid, lambda, infeas, l1);
+    gap
 }
 
 #[cfg(test)]
@@ -261,6 +431,111 @@ mod tests {
         for i in 0..ds.n() {
             assert!((resid[i] - (ds.y[i] - fit[i])).abs() < 1e-8);
         }
+    }
+
+    fn solve_dyn(
+        ds: &crate::data::Dataset,
+        lambda: f64,
+        opts: &CdOptions,
+        dyn_opts: &DynamicOptions,
+    ) -> (Vec<f64>, Vec<usize>, CdStats, DynamicTrace) {
+        let pre = ds.precompute();
+        let mut active: Vec<usize> = (0..ds.p()).collect();
+        let mut beta = vec![0.0; ds.p()];
+        let mut resid = ds.y.clone();
+        let (stats, trace) = solve_cd_dynamic(
+            &ds.x, &ds.y, lambda, &mut active, &pre.col_norms_sq, &pre.xty,
+            &mut beta, &mut resid, opts, dyn_opts,
+        );
+        (beta, active, stats, trace)
+    }
+
+    #[test]
+    fn dynamic_matches_static_solution() {
+        let ds = SyntheticSpec { n: 40, p: 120, nnz: 12, ..Default::default() }
+            .generate(21);
+        let lam = 0.3 * ds.lambda_max();
+        let opts = CdOptions { tol: 1e-12, gap_tol: 1e-12, max_epochs: 20_000,
+                               ..Default::default() };
+        let (beta_s, resid_s, _) = solve_fresh(&ds, lam, &opts);
+        let (beta_d, active, stats, trace) =
+            solve_dyn(&ds, lam, &opts, &DynamicOptions::enabled_every(3));
+        assert!(stats.converged);
+        assert!(trace.dropped_total() > 0, "dynamic screened nothing");
+        for j in 0..ds.p() {
+            assert!(
+                (beta_s[j] - beta_d[j]).abs() < 1e-8,
+                "j={j}: {} vs {}", beta_s[j], beta_d[j]
+            );
+        }
+        // objective agreement at the 1e-10 bar
+        let obj_s = crate::solver::primal_objective(&resid_s, &beta_s, lam);
+        let mut fit = vec![0.0; ds.n()];
+        ds.x.matvec(&beta_d, &mut fit);
+        let resid_d: Vec<f64> =
+            ds.y.iter().zip(fit.iter()).map(|(y, f)| y - f).collect();
+        let obj_d = crate::solver::primal_objective(&resid_d, &beta_d, lam);
+        assert!(
+            (obj_s - obj_d).abs() <= 1e-10 * (1.0 + obj_s.abs()),
+            "objectives {obj_s} vs {obj_d}"
+        );
+        // the surviving active set still covers the support
+        for j in 0..ds.p() {
+            if beta_d[j] != 0.0 {
+                assert!(active.contains(&j), "support feature {j} not in survivors");
+            }
+        }
+    }
+
+    #[test]
+    fn dynamic_inactive_is_bitwise_static() {
+        let ds = SyntheticSpec { n: 30, p: 60, nnz: 6, ..Default::default() }
+            .generate(17);
+        let lam = 0.35 * ds.lambda_max();
+        let opts = CdOptions::default();
+        let (beta_s, resid_s, stats_s) = solve_fresh(&ds, lam, &opts);
+        for dyn_opts in [
+            DynamicOptions::off(),
+            DynamicOptions { enabled: true, recheck_every: 0 }, // degrades, no panic
+        ] {
+            let (beta_d, active, stats_d, trace) = solve_dyn(&ds, lam, &opts, &dyn_opts);
+            assert_eq!(trace.rechecks(), 0);
+            assert_eq!(active.len(), ds.p());
+            assert_eq!(stats_s.epochs, stats_d.epochs);
+            for j in 0..ds.p() {
+                assert_eq!(beta_s[j].to_bits(), beta_d[j].to_bits(), "j={j}");
+            }
+            let _ = &resid_s;
+        }
+    }
+
+    #[test]
+    fn dynamic_above_lambda_max_screens_everything_at_epoch_zero() {
+        let ds = SyntheticSpec { n: 20, p: 50, nnz: 5, ..Default::default() }
+            .generate(4);
+        let lam = 1.05 * ds.lambda_max();
+        let (beta, active, stats, trace) = solve_dyn(
+            &ds, lam, &CdOptions::default(), &DynamicOptions::enabled_every(5),
+        );
+        assert!(active.is_empty(), "{} survivors", active.len());
+        assert_eq!(trace.events[0].epoch, 0);
+        assert_eq!(trace.events[0].width_after, 0);
+        assert!(stats.converged);
+        assert!(beta.iter().all(|&b| b == 0.0));
+    }
+
+    #[test]
+    fn dynamic_huge_recheck_runs_only_epoch_zero() {
+        let ds = SyntheticSpec { n: 25, p: 40, nnz: 4, ..Default::default() }
+            .generate(2);
+        let lam = 0.4 * ds.lambda_max();
+        let (beta, _, stats, trace) = solve_dyn(
+            &ds, lam, &CdOptions::default(),
+            &DynamicOptions::enabled_every(usize::MAX),
+        );
+        assert_eq!(trace.rechecks(), 1, "only the epoch-0 checkpoint");
+        assert!(stats.converged);
+        assert!(beta.iter().all(|b| b.is_finite()));
     }
 
     #[test]

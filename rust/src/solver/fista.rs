@@ -5,6 +5,7 @@
 //! the whole solve should run inside XLA artifacts.
 
 use crate::linalg::{ops, DesignMatrix};
+use crate::screening::dynamic::{self, DynamicOptions, DynamicTrace};
 
 #[derive(Clone, Copy, Debug)]
 pub struct FistaOptions {
@@ -111,6 +112,176 @@ pub fn solve_fista_warm(
     (beta, iters)
 }
 
+/// The dynamic-screening FISTA: every `dyn_opts.recheck_every` iterations
+/// (and once at iteration 0, with the warm-start residual) a re-screen
+/// checkpoint runs on the *current* matrix, and when features are discarded
+/// the live problem is **physically compacted** — surviving columns are
+/// gathered into a fresh dense submatrix ([`DesignMatrix::gather_columns`],
+/// available on both the dense and CSC backends) so every later matvec
+/// touches only survivors. Momentum and the stall detector restart after a
+/// compaction (a standard FISTA restart, so convergence is preserved).
+///
+/// `beta0` has one entry per column of `x`; the returned coefficient vector
+/// is scattered back to that same index space (discarded columns are 0).
+/// The trace's dropped indices are columns of `x` — the path coordinator
+/// remaps them to dataset features via [`DynamicTrace::remap`].
+///
+/// `stats0`, when given, supplies `(<x_j, y>, ||x_j||^2)` per column of `x`
+/// (e.g. gathered from the path precompute in O(kept)); otherwise both are
+/// computed here with one pass each.
+///
+/// With `dyn_opts` inactive this runs the plain warm-started FISTA
+/// iteration (no mask — all columns live).
+pub fn solve_fista_dynamic(
+    x: &DesignMatrix,
+    y: &[f64],
+    lambda: f64,
+    beta0: Vec<f64>,
+    stats0: Option<(Vec<f64>, Vec<f64>)>,
+    opts: &FistaOptions,
+    dyn_opts: &DynamicOptions,
+) -> (Vec<f64>, usize, DynamicTrace) {
+    let n = x.nrows();
+    let k0 = x.ncols();
+    assert_eq!(beta0.len(), k0);
+    assert_eq!(y.len(), n);
+    let lip = opts
+        .lipschitz
+        .unwrap_or_else(|| x.spectral_norm_sq(100))
+        .max(f64::MIN_POSITIVE)
+        * 1.001;
+    let every = dyn_opts.recheck_every;
+    let dyn_on = dyn_opts.active() && lambda > 0.0;
+    let mut trace = DynamicTrace::new(k0);
+
+    // live problem state; `live` maps current columns -> original columns
+    let mut live: Vec<usize> = (0..k0).collect();
+    let mut owned: Option<DesignMatrix> = None; // compacted submatrix, if any
+    let mut beta = beta0;
+    let mut z = beta.clone();
+    let (mut xty, mut norms_sq) = match stats0 {
+        Some((xty, norms_sq)) => {
+            assert_eq!(xty.len(), k0);
+            assert_eq!(norms_sq.len(), k0);
+            (xty, norms_sq)
+        }
+        None => {
+            let mut xty = vec![0.0; k0];
+            x.t_matvec(y, &mut xty);
+            (xty, x.col_norms_sq())
+        }
+    };
+    let mut grad = vec![0.0; k0];
+    let mut scratch = vec![0.0; k0];
+    let mut t = 1.0f64;
+    let mut xv = vec![0.0; n];
+    let mut resid = vec![0.0; n];
+    let mut have_resid = false;
+    let mut last_obj = f64::INFINITY;
+    let mut stall = 0;
+    let mut iters = 0;
+
+    for it in 0..opts.max_iters {
+        if live.is_empty() {
+            break;
+        }
+        // ---- dynamic checkpoint -----------------------------------------
+        if dyn_on && it % every == 0 {
+            let w = live.len();
+            let rs = {
+                let m: &DesignMatrix = owned.as_ref().unwrap_or(x);
+                if !have_resid {
+                    m.matvec(&beta, &mut xv);
+                    for (v, yv) in xv.iter_mut().zip(y.iter()) {
+                        *v = yv - *v;
+                    }
+                    resid.copy_from_slice(&xv);
+                    have_resid = true;
+                }
+                let ids: Vec<usize> = (0..w).collect();
+                dynamic::rescreen(
+                    m, y, lambda, &xty, &norms_sq, &ids, &beta, &resid,
+                    &mut scratch[..w],
+                )
+            };
+            trace.push_event(
+                it,
+                w,
+                rs.survivors.len(),
+                rs.gap,
+                rs.dropped.iter().map(|&c| live[c]).collect(),
+            );
+            if !rs.dropped.is_empty() {
+                let keep = &rs.survivors; // ascending current-column ids
+                let gathered = {
+                    let m: &DesignMatrix = owned.as_ref().unwrap_or(x);
+                    m.gather_columns(keep)
+                };
+                owned = Some(gathered.into());
+                live = keep.iter().map(|&c| live[c]).collect();
+                beta = keep.iter().map(|&c| beta[c]).collect();
+                z = keep.iter().map(|&c| z[c]).collect();
+                xty = keep.iter().map(|&c| xty[c]).collect();
+                norms_sq = keep.iter().map(|&c| norms_sq[c]).collect();
+                grad.truncate(live.len());
+                // dropped coordinates may carry warm-start mass: restart
+                // momentum + stall detection on the compacted problem
+                t = 1.0;
+                stall = 0;
+                last_obj = f64::INFINITY;
+                have_resid = false;
+                if live.is_empty() {
+                    break;
+                }
+            }
+        }
+
+        // ---- one FISTA iteration on the (possibly compacted) problem ----
+        let m: &DesignMatrix = owned.as_ref().unwrap_or(x);
+        let w = live.len();
+        iters = it + 1;
+        m.matvec(&z, &mut xv);
+        for (v, yv) in xv.iter_mut().zip(y.iter()) {
+            *v -= yv;
+        }
+        m.t_matvec(&xv, &mut grad);
+        let t_next = 0.5 * (1.0 + (1.0 + 4.0 * t * t).sqrt());
+        let mom = (t - 1.0) / t_next;
+        for j in 0..w {
+            let prev = beta[j];
+            let nxt = ops::soft_threshold(z[j] - grad[j] / lip, lambda / lip);
+            z[j] = nxt + mom * (nxt - prev);
+            beta[j] = nxt;
+        }
+        t = t_next;
+
+        m.matvec(&beta, &mut xv);
+        for (v, yv) in xv.iter_mut().zip(y.iter()) {
+            *v = yv - *v;
+        }
+        resid.copy_from_slice(&xv);
+        have_resid = true;
+        let obj = 0.5 * ops::nrm2sq(&resid)
+            + lambda * beta.iter().map(|b| b.abs()).sum::<f64>();
+        if (last_obj - obj).abs() <= opts.tol * (1.0 + obj.abs()) {
+            stall += 1;
+            if stall >= 5 {
+                break;
+            }
+        } else {
+            stall = 0;
+        }
+        last_obj = obj;
+    }
+
+    // scatter back to the original column space
+    let mut out = vec![0.0; k0];
+    for (c, &orig) in live.iter().enumerate() {
+        out[orig] = beta[c];
+    }
+    (out, iters, trace)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -155,6 +326,79 @@ mod tests {
         for j in 0..10 {
             assert_eq!(beta[j], 0.0);
         }
+    }
+
+    #[test]
+    fn dynamic_fista_matches_static_and_screens() {
+        for density in [1.0f64, 0.1] {
+            let ds = SyntheticSpec {
+                n: 30,
+                p: 80,
+                nnz: 8,
+                density,
+                ..Default::default()
+            }
+            .generate(12);
+            assert_eq!(ds.x.is_sparse(), density < 1.0);
+            let lam = 0.3 * ds.lambda_max();
+            let mask = vec![true; ds.p()];
+            let opts = FistaOptions { max_iters: 5000, tol: 1e-14, lipschitz: None };
+            let (beta_s, _) = solve_fista(&ds.x, &ds.y, lam, &mask, &opts);
+            let (beta_d, _, trace) = solve_fista_dynamic(
+                &ds.x, &ds.y, lam, vec![0.0; ds.p()], None, &opts,
+                &DynamicOptions::enabled_every(4),
+            );
+            assert!(trace.dropped_total() > 0, "dynamic screened nothing");
+            for j in 0..ds.p() {
+                assert!(
+                    (beta_s[j] - beta_d[j]).abs() < 1e-6,
+                    "density {density} j={j}: {} vs {}",
+                    beta_s[j],
+                    beta_d[j]
+                );
+            }
+            // screened features really are zero in the static solution
+            for ev in &trace.events {
+                for &j in &ev.dropped {
+                    assert!(beta_s[j].abs() < 1e-8, "dropped {j} has {}", beta_s[j]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dynamic_fista_inactive_matches_plain_warm() {
+        let ds = SyntheticSpec { n: 20, p: 40, nnz: 4, ..Default::default() }
+            .generate(3);
+        let lam = 0.4 * ds.lambda_max();
+        let mask = vec![true; ds.p()];
+        let opts = FistaOptions::default();
+        let (beta_s, iters_s) =
+            solve_fista_warm(&ds.x, &ds.y, lam, &mask, vec![0.0; ds.p()], &opts);
+        let (beta_d, iters_d, trace) = solve_fista_dynamic(
+            &ds.x, &ds.y, lam, vec![0.0; ds.p()], None, &opts,
+            &DynamicOptions::off(),
+        );
+        assert_eq!(trace.rechecks(), 0);
+        assert_eq!(iters_s, iters_d);
+        for j in 0..ds.p() {
+            assert_eq!(beta_s[j].to_bits(), beta_d[j].to_bits(), "j={j}");
+        }
+    }
+
+    #[test]
+    fn dynamic_fista_single_column() {
+        let x: DesignMatrix = crate::linalg::DenseMatrix::from_fn(6, 1, |i, _| {
+            (i as f64 + 1.0) / 4.0
+        })
+        .into();
+        let y: Vec<f64> = (0..6).map(|i| 0.5 * ((i as f64 + 1.0) / 4.0)).collect();
+        let (beta, _, trace) = solve_fista_dynamic(
+            &x, &y, 0.01, vec![0.0], None, &FistaOptions::default(),
+            &DynamicOptions::enabled_every(2),
+        );
+        assert!(beta[0].is_finite());
+        assert!(trace.rechecks() >= 1);
     }
 
     #[test]

@@ -12,8 +12,8 @@ pub mod cd;
 pub mod fista;
 pub mod kkt;
 
-pub use cd::{solve_cd, CdOptions, CdStats};
-pub use fista::{solve_fista, solve_fista_warm, FistaOptions};
+pub use cd::{solve_cd, solve_cd_dynamic, CdOptions, CdStats};
+pub use fista::{solve_fista, solve_fista_dynamic, solve_fista_warm, FistaOptions};
 pub use kkt::{check_kkt, KktReport};
 
 use crate::linalg::{ops, DesignMatrix};
@@ -71,6 +71,32 @@ impl DualState {
 /// Primal objective value.
 pub fn primal_objective(resid: &[f64], beta: &[f64], lambda: f64) -> f64 {
     0.5 * ops::nrm2sq(resid) + lambda * beta.iter().map(|b| b.abs()).sum::<f64>()
+}
+
+/// The dual-scaled duality gap shared by [`cd::restricted_gap`] and the
+/// dynamic-screening checkpoint ([`crate::screening::dynamic::rescreen`]):
+/// given the active-set infeasibility `infeas = ||X_A^T r||_inf` and the
+/// active l1 mass, scale `theta = r / max(lambda, infeas)` and return
+/// `(gap, ||theta - y/lambda||^2, scale)`. One implementation so the two
+/// call sites can never drift — the exactness contract compares gaps
+/// computed here against each other.
+pub(crate) fn scaled_dual_gap(
+    y: &[f64],
+    resid: &[f64],
+    lambda: f64,
+    infeas: f64,
+    l1: f64,
+) -> (f64, f64, f64) {
+    let denom = lambda.max(infeas);
+    let scale = if denom > 0.0 { 1.0 / denom } else { 0.0 };
+    let mut bnorm2 = 0.0;
+    for (rv, yv) in resid.iter().zip(y.iter()) {
+        let d = rv * scale - yv / lambda;
+        bnorm2 += d * d;
+    }
+    let primal = 0.5 * ops::nrm2sq(resid) + lambda * l1;
+    let dual = 0.5 * ops::nrm2sq(y) - 0.5 * lambda * lambda * bnorm2;
+    (primal - dual, bnorm2, scale)
 }
 
 /// Duality gap given a residual and a *feasible* dual point theta.

@@ -17,9 +17,10 @@
 
 use std::sync::Mutex;
 
-use sasvi::coordinator::{run_path_keep_betas, PathOptions, PathPlan};
+use sasvi::coordinator::{run_path_keep_betas, PathOptions, PathPlan, SolverKind};
 use sasvi::data::synthetic::SyntheticSpec;
 use sasvi::linalg::{par, DesignMatrix, ThreadPool};
+use sasvi::screening::dynamic::DynamicOptions;
 use sasvi::screening::sure_removal::SureRemovalAnalysis;
 use sasvi::screening::{RuleKind, ScreenContext};
 use sasvi::solver::cd::{solve_cd, CdOptions};
@@ -237,6 +238,96 @@ fn sure_removal_batch_bit_identical_across_thread_counts() {
             assert_eq!(a.lam_2a.to_bits(), b.lam_2a.to_bits(), "lam_2a j={j}");
             assert_eq!(a.lam_2y.to_bits(), b.lam_2y.to_bits(), "lam_2y j={j}");
             assert_eq!(a.case, b.case, "case j={j}");
+        }
+    }
+    par::set_threads(before);
+}
+
+/// Primal objective of a solution vector against a dataset.
+fn objective(ds: &sasvi::data::Dataset, beta: &[f64], lam: f64) -> f64 {
+    let mut fit = vec![0.0; ds.n()];
+    ds.x.matvec(beta, &mut fit);
+    let resid: Vec<f64> = ds.y.iter().zip(fit.iter()).map(|(y, f)| y - f).collect();
+    sasvi::solver::primal_objective(&resid, beta, lam)
+}
+
+/// The dynamic-screening determinism contract: a dynamically screened path
+/// is bit-identical at every thread count — the checkpoint decisions
+/// (parallel batched bounds, block-ordered reductions) never depend on the
+/// schedule — and its final objectives match the static path to 1e-10 on
+/// both solvers and both storage backends.
+#[test]
+fn dynamic_path_bit_identical_and_matches_static_objectives() {
+    let _guard = THREAD_KNOB.lock().unwrap();
+    let before = par::threads();
+    let sp = SyntheticSpec {
+        n: 50,
+        p: 600,
+        nnz: 20,
+        density: 0.08,
+        ..Default::default()
+    }
+    .generate(19);
+    let mut dn = sp.clone();
+    dn.x = sp.x.to_dense().into();
+    // tight tolerances so both runs land well inside the 1e-10 objective bar
+    let cd = CdOptions { max_epochs: 30_000, tol: 1e-12, gap_tol: 1e-12, ..Default::default() };
+    let fista = sasvi::solver::FistaOptions { max_iters: 20_000, tol: 1e-14, lipschitz: None };
+    for ds in [&dn, &sp] {
+        let plan = PathPlan::linear_spaced(ds, 10, 0.2);
+        for solver in [SolverKind::Cd, SolverKind::Fista] {
+            let opts_dyn = PathOptions {
+                solver,
+                cd,
+                fista,
+                dynamic: DynamicOptions::enabled_every(3),
+                ..Default::default()
+            };
+            par::set_threads(1);
+            let serial = run_path_keep_betas(ds, &plan, RuleKind::Sasvi, opts_dyn);
+            assert!(
+                serial.total_dynamic_dropped() > 0,
+                "{solver:?} ({}): dynamic screened nothing — vacuous",
+                ds.x.storage()
+            );
+            for lanes in [2usize, 4, 8] {
+                par::set_threads(lanes);
+                let parallel = run_path_keep_betas(ds, &plan, RuleKind::Sasvi, opts_dyn);
+                let a = serial.betas.as_ref().unwrap();
+                let b = parallel.betas.as_ref().unwrap();
+                for (k, (sa, sb)) in a.iter().zip(b.iter()).enumerate() {
+                    assert_bits_eq(
+                        sa,
+                        sb,
+                        &format!("{solver:?} {} dyn path step {k} lanes {lanes}",
+                                 ds.x.storage()),
+                    );
+                }
+                for (s1, s2) in serial.steps.iter().zip(parallel.steps.iter()) {
+                    assert_eq!(s1.kept, s2.kept, "kept diverged at lanes {lanes}");
+                    assert_eq!(s1.dyn_dropped, s2.dyn_dropped,
+                               "dynamic drops diverged at lanes {lanes}");
+                    assert_eq!(s1.dyn_rechecks, s2.dyn_rechecks,
+                               "checkpoint count diverged at lanes {lanes}");
+                    assert_eq!(s1.epochs, s2.epochs,
+                               "epoch count diverged at lanes {lanes}");
+                }
+            }
+            // static reference with the same solver tolerances
+            par::set_threads(before.max(1));
+            let opts_static = PathOptions { solver, cd, fista, ..Default::default() };
+            let stat = run_path_keep_betas(ds, &plan, RuleKind::Sasvi, opts_static);
+            let bd = serial.betas.as_ref().unwrap();
+            let bs = stat.betas.as_ref().unwrap();
+            for (k, lam) in plan.lambdas.iter().enumerate() {
+                let od = objective(ds, &bd[k], *lam);
+                let os = objective(ds, &bs[k], *lam);
+                assert!(
+                    (od - os).abs() <= 1e-10 * (1.0 + os.abs()),
+                    "{solver:?} ({}): step {k} objective {od} vs static {os}",
+                    ds.x.storage()
+                );
+            }
         }
     }
     par::set_threads(before);

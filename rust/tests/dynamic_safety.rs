@@ -1,0 +1,260 @@
+//! Dynamic screening's safety guarantee, pinned per checkpoint.
+//!
+//! For every λ-path step, every in-solver re-screen checkpoint records the
+//! features it discarded. Safety means each of those features is
+//! numerically zero (|β_j| < 1e-10) in a high-precision *unscreened* solve
+//! at that step's λ — i.e. a dynamic discard is never wrong, no matter how
+//! far from converged the solver was when it fired.
+//!
+//! Runs on both storage backends (dense and 5% CSC), both solvers (CD and
+//! compacted FISTA), and both λ-path presets (linear and log grids), with
+//! the Sasvi pathwise rule in front and with no pathwise rule at all
+//! (pure dynamic screening).
+
+use sasvi::coordinator::{run_path_keep_betas, PathOptions, PathPlan, SolverKind};
+use sasvi::data::synthetic::SyntheticSpec;
+use sasvi::data::Dataset;
+use sasvi::screening::dynamic::DynamicOptions;
+use sasvi::screening::RuleKind;
+use sasvi::solver::cd::{solve_cd, solve_cd_dynamic, CdOptions};
+
+fn tight() -> CdOptions {
+    CdOptions {
+        max_epochs: 30_000,
+        tol: 1e-13,
+        gap_tol: 1e-13,
+        ..Default::default()
+    }
+}
+
+/// High-precision unscreened reference solve.
+fn solve_exact(ds: &Dataset, lam: f64) -> Vec<f64> {
+    let active: Vec<usize> = (0..ds.p()).collect();
+    let norms = ds.x.col_norms_sq();
+    let mut beta = vec![0.0; ds.p()];
+    let mut resid = ds.y.clone();
+    solve_cd(&ds.x, &ds.y, lam, &active, &norms, &mut beta, &mut resid, &tight());
+    beta
+}
+
+/// A 5%-dense CSC dataset and its densified twin.
+fn backend_pair(seed: u64) -> (Dataset, Dataset) {
+    let sp = SyntheticSpec {
+        n: 100,
+        p: 400,
+        nnz: 20,
+        density: 0.05,
+        ..Default::default()
+    }
+    .generate(seed);
+    assert!(sp.x.is_sparse());
+    let mut dn = sp.clone();
+    dn.x = sp.x.to_dense().into();
+    (dn, sp)
+}
+
+/// The property: every feature dropped at ANY checkpoint of ANY step is
+/// zero in the exact solution at that step's λ. Returns the number of
+/// dynamic discards verified (so callers can assert non-vacuity).
+fn check_dynamic_safety(
+    ds: &Dataset,
+    solver: SolverKind,
+    rule: RuleKind,
+    plan: &PathPlan,
+    recheck: usize,
+) -> usize {
+    let opts = PathOptions {
+        solver,
+        cd: tight(),
+        fista: sasvi::solver::FistaOptions {
+            max_iters: 10_000,
+            tol: 1e-13,
+            lipschitz: None,
+        },
+        dynamic: DynamicOptions::enabled_every(recheck),
+        ..Default::default()
+    };
+    let r = run_path_keep_betas(ds, plan, rule, opts);
+    let traces = r.dynamic.as_ref().expect("dynamic traces must be retained");
+    assert_eq!(traces.len(), plan.len());
+    let mut verified = 0usize;
+    for (step, trace) in plan.lambdas.iter().zip(traces.iter()) {
+        if trace.dropped_total() == 0 {
+            continue;
+        }
+        let exact = solve_exact(ds, *step);
+        for (ci, ev) in trace.events.iter().enumerate() {
+            for &j in &ev.dropped {
+                assert!(
+                    exact[j].abs() < 1e-10,
+                    "{solver:?}/{rule:?} ({}): checkpoint {ci} (epoch {}) at \
+                     lam/lmax={:.3} dropped feature {j}, but the exact solution \
+                     has beta_j = {:e}",
+                    ds.x.storage(),
+                    ev.epoch,
+                    step / plan.lambda_max,
+                    exact[j]
+                );
+                verified += 1;
+            }
+        }
+        // width bookkeeping is internally consistent
+        for ev in &trace.events {
+            assert_eq!(ev.width_before - ev.dropped.len(), ev.width_after);
+        }
+    }
+    verified
+}
+
+#[test]
+fn dynamic_safety_cd_dense_and_sparse_linear_grid() {
+    for seed in [1u64, 12] {
+        let (dn, sp) = backend_pair(seed);
+        for ds in [&dn, &sp] {
+            let plan = PathPlan::linear_spaced(ds, 10, 0.05);
+            let v = check_dynamic_safety(ds, SolverKind::Cd, RuleKind::Sasvi, &plan, 3);
+            assert!(v > 0, "seed {seed} ({}): no dynamic discards", ds.x.storage());
+        }
+    }
+}
+
+#[test]
+fn dynamic_safety_cd_log_grid() {
+    let (dn, sp) = backend_pair(5);
+    for ds in [&dn, &sp] {
+        let plan = PathPlan::log_spaced(ds, 10, 0.05);
+        let v = check_dynamic_safety(ds, SolverKind::Cd, RuleKind::Sasvi, &plan, 4);
+        assert!(v > 0, "{}: no dynamic discards", ds.x.storage());
+    }
+}
+
+#[test]
+fn dynamic_safety_fista_dense_and_sparse() {
+    let (dn, sp) = backend_pair(7);
+    for ds in [&dn, &sp] {
+        let plan = PathPlan::linear_spaced(ds, 8, 0.1);
+        let v = check_dynamic_safety(ds, SolverKind::Fista, RuleKind::Sasvi, &plan, 5);
+        assert!(v > 0, "{}: no dynamic discards", ds.x.storage());
+    }
+}
+
+#[test]
+fn dynamic_safety_without_a_pathwise_rule() {
+    // pure dynamic screening: the prior "safe set" is all of {0..p}, so
+    // every checkpoint certifies against the full problem directly
+    let (dn, sp) = backend_pair(9);
+    for ds in [&dn, &sp] {
+        let plan = PathPlan::linear_spaced(ds, 8, 0.1);
+        let v = check_dynamic_safety(ds, SolverKind::Cd, RuleKind::None, &plan, 3);
+        assert!(v > 0, "{}: no dynamic discards", ds.x.storage());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// edge cases: degenerate inputs must degrade gracefully, never panic
+// ---------------------------------------------------------------------------
+
+#[test]
+fn edge_lambda_at_and_above_lambda_max() {
+    let ds = SyntheticSpec { n: 30, p: 60, nnz: 6, ..Default::default() }.generate(3);
+    let pre = ds.precompute();
+    for lam in [pre.lambda_max, 1.5 * pre.lambda_max] {
+        let mut active: Vec<usize> = (0..ds.p()).collect();
+        let mut beta = vec![0.0; ds.p()];
+        let mut resid = ds.y.clone();
+        let (stats, trace) = solve_cd_dynamic(
+            &ds.x, &ds.y, lam, &mut active, &pre.col_norms_sq, &pre.xty,
+            &mut beta, &mut resid, &CdOptions::default(),
+            &DynamicOptions::enabled_every(5),
+        );
+        assert!(stats.converged);
+        assert!(beta.iter().all(|&b| b == 0.0));
+        assert_eq!(trace.events[0].epoch, 0, "checkpoint must fire at epoch 0");
+        // strictly above lambda_max everything goes at epoch 0; at exactly
+        // lambda_max only the argmax feature(s) may survive
+        assert!(
+            trace.events[0].width_after <= 2,
+            "lam={lam}: width after epoch-0 screen = {}",
+            trace.events[0].width_after
+        );
+    }
+}
+
+#[test]
+fn edge_zero_residual_warm_start() {
+    // y = X beta0 exactly: the epoch-0 checkpoint sees r = 0 and must not
+    // panic or produce non-finite state
+    let ds = SyntheticSpec { n: 25, p: 50, nnz: 5, ..Default::default() }.generate(6);
+    let mut beta = vec![0.0; ds.p()];
+    beta[4] = 0.75;
+    beta[31] = -1.25;
+    let mut y = vec![0.0; ds.n()];
+    ds.x.matvec(&beta, &mut y);
+    let mut resid = vec![0.0; ds.n()];
+    let mut xty = vec![0.0; ds.p()];
+    ds.x.t_matvec(&y, &mut xty);
+    let norms = ds.x.col_norms_sq();
+    let mut active: Vec<usize> = (0..ds.p()).collect();
+    let lam = 0.1 * sasvi::linalg::ops::inf_norm(&xty);
+    let (stats, trace) = solve_cd_dynamic(
+        &ds.x, &y, lam, &mut active, &norms, &xty, &mut beta, &mut resid,
+        &CdOptions::default(), &DynamicOptions::enabled_every(2),
+    );
+    assert!(beta.iter().all(|b| b.is_finite()));
+    assert!(resid.iter().all(|r| r.is_finite()));
+    assert!(trace.events.iter().all(|e| e.gap.is_finite()));
+    assert!(stats.epochs > 0);
+}
+
+#[test]
+fn edge_single_column_path() {
+    let x: sasvi::linalg::DesignMatrix =
+        sasvi::linalg::DenseMatrix::from_fn(8, 1, |i, _| ((i % 3) as f64 + 1.0) / 3.0)
+            .into();
+    let y: Vec<f64> = (0..8).map(|i| (i as f64) * 0.2 - 0.7).collect();
+    let ds = Dataset { name: "one-col".into(), x, y, beta_true: None, seed: 0 };
+    let plan = PathPlan::linear_spaced(&ds, 6, 0.2);
+    for solver in [SolverKind::Cd, SolverKind::Fista] {
+        let opts = PathOptions {
+            solver,
+            dynamic: DynamicOptions::enabled_every(2),
+            ..Default::default()
+        };
+        let r = sasvi::coordinator::run_path(&ds, &plan, RuleKind::Sasvi, opts);
+        assert!(r.beta_final.iter().all(|b| b.is_finite()));
+        assert_eq!(r.steps.len(), 6);
+    }
+}
+
+#[test]
+fn edge_recheck_cadence_zero_and_huge() {
+    let ds = SyntheticSpec { n: 30, p: 80, nnz: 8, ..Default::default() }.generate(11);
+    let plan = PathPlan::linear_spaced(&ds, 8, 0.1);
+    let base = run_path_keep_betas(&ds, &plan, RuleKind::Sasvi, PathOptions::default());
+    for recheck in [0usize, usize::MAX] {
+        let opts = PathOptions {
+            dynamic: DynamicOptions { enabled: true, recheck_every: recheck },
+            ..Default::default()
+        };
+        let r = run_path_keep_betas(&ds, &plan, RuleKind::Sasvi, opts);
+        // recheck = 0 degrades to the static solver (no checkpoints at
+        // all); a huge cadence runs only the epoch-0 checkpoint — both
+        // must complete and agree with the static path
+        let a = base.betas.as_ref().unwrap();
+        let b = r.betas.as_ref().unwrap();
+        for (k, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            for j in 0..ds.p() {
+                assert!(
+                    (x[j] - y[j]).abs() < 1e-6,
+                    "recheck={recheck} step {k} feature {j}"
+                );
+            }
+        }
+        if recheck == 0 {
+            assert_eq!(r.total_dynamic_dropped(), 0);
+            assert!(r.steps.iter().all(|s| s.dyn_rechecks == 0));
+        } else {
+            assert!(r.steps.iter().all(|s| s.dyn_rechecks <= 1));
+        }
+    }
+}

@@ -144,6 +144,39 @@ fn screened_warm_start_keeps_residual_consistent() {
     }
 }
 
+/// The degenerate datasets above must also survive *dynamic* screening:
+/// a zero column is dropped by the first checkpoint (its bound is 0), and
+/// an orthogonal response never produces NaNs in the checkpoint geometry.
+#[test]
+fn dynamic_screening_handles_degenerate_datasets() {
+    use sasvi::screening::dynamic::DynamicOptions;
+    // zero column
+    let mut ds = SyntheticSpec { n: 20, p: 30, nnz: 4, ..Default::default() }
+        .generate(3);
+    ds.x.as_dense_mut().unwrap().col_mut(7).fill(0.0);
+    let plan = PathPlan::linear_spaced(&ds, 8, 0.1);
+    let opts = PathOptions {
+        dynamic: DynamicOptions::enabled_every(2),
+        ..Default::default()
+    };
+    for rule in [RuleKind::None, RuleKind::Sasvi, RuleKind::Strong] {
+        let r = run_path(&ds, &plan, rule, opts);
+        assert_eq!(r.beta_final[7], 0.0);
+        assert!(r.beta_final.iter().all(|b| b.is_finite()));
+    }
+    // orthogonal response (lambda_max ~ 0, custom positive grid)
+    let n = 8;
+    let x = DenseMatrix::from_fn(n, 6, |i, j| {
+        if i < 4 { ((i * 7 + j * 3) % 5) as f64 - 2.0 } else { 0.0 }
+    });
+    let y: Vec<f64> = (0..n).map(|i| if i >= 4 { 1.0 } else { 0.0 }).collect();
+    let ds = Dataset { name: "orth-dyn".into(), x: x.into(), y, beta_true: None, seed: 0 };
+    let plan = PathPlan::custom(vec![1.0, 0.5, 0.25], 1.0);
+    let r = run_path(&ds, &plan, RuleKind::Sasvi, opts);
+    assert!(r.beta_final.iter().all(|&b| b == 0.0));
+    assert!(r.total_dynamic_dropped() > 0, "zero-bound features must drop");
+}
+
 /// Pool backpressure: a 1-slot queue with a single worker still completes
 /// a burst of jobs, in order, with no deadlock.
 #[test]
