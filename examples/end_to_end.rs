@@ -31,6 +31,11 @@ use sasvi::solver::DualState;
 
 fn main() {
     let (n, p) = (250, 1000);
+    // optional arg: column-block pool width for every native per-feature
+    // pass (the PR-2 knob; SASVI_THREADS works too)
+    if let Some(t) = std::env::args().nth(1).and_then(|s| s.parse::<usize>().ok()) {
+        sasvi::linalg::par::set_threads(t.max(1));
+    }
     let rt = match Runtime::open("artifacts") {
         Ok(rt) => rt,
         Err(e) => {
@@ -39,6 +44,10 @@ fn main() {
         }
     };
     println!("PJRT platform: {}", rt.platform());
+    println!(
+        "native pool width: {} lane(s)",
+        sasvi::linalg::par::effective_lanes()
+    );
 
     let ds = SyntheticSpec { n, p, nnz: 100, ..Default::default() }.generate(7);
     println!("dataset: {} | {}", ds.name, ds.summary());
@@ -119,6 +128,26 @@ fn main() {
     // ---- native baselines ---------------------------------------------------
     let base = run_path(&ds, &plan, RuleKind::None, PathOptions::default());
     let native = run_path(&ds, &plan, RuleKind::Sasvi, PathOptions::default());
+    // the PR-3/PR-4 in-solver machinery, for the work comparison below
+    let native_dyn = run_path(
+        &ds,
+        &plan,
+        RuleKind::Sasvi,
+        PathOptions {
+            dynamic: sasvi::screening::dynamic::DynamicOptions::enabled_every(5),
+            ..Default::default()
+        },
+    );
+    let native_ws = run_path(
+        &ds,
+        &plan,
+        RuleKind::Sasvi,
+        PathOptions {
+            working_set:
+                sasvi::solver::working_set::WorkingSetOptions::enabled_with_grow(10),
+            ..Default::default()
+        },
+    );
 
     // ---- verification -------------------------------------------------------
     let max_diff = base
@@ -151,6 +180,12 @@ fn main() {
     println!(
         "  mean rejection ratio: {:.3}",
         total_screened as f64 / (plan.len() * p) as f64
+    );
+    println!(
+        "  solver work (epochs x width): screen {} | +dynamic {} | +working-set {}",
+        native.solver_work(),
+        native_dyn.solver_work(),
+        native_ws.solver_work()
     );
     println!("\nEND-TO-END OK: L1 Pallas kernel -> L2 JAX graph -> HLO text -> PJRT -> L3 coordinator");
 }

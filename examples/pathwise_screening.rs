@@ -2,12 +2,17 @@
 //! rules over the regularization path, on each of the paper's dataset
 //! families (synthetic + MNIST-like + PIE-like).
 //!
+//! Every per-feature pass below runs on the PR-2 column-block pool; the
+//! optional second argument retunes its width (curves are bit-identical at
+//! every width — the determinism contract — so only wall-clock changes).
+//!
 //! ```sh
-//! cargo run --release --example pathwise_screening [-- scale]
+//! cargo run --release --example pathwise_screening [-- scale [threads]]
 //! ```
 
 use sasvi::cli::fig5_curves;
 use sasvi::data::Preset;
+use sasvi::linalg::par;
 use sasvi::metrics::Table;
 use sasvi::screening::RuleKind;
 
@@ -16,7 +21,13 @@ fn main() {
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(0.02);
-    println!("rejection-ratio curves at scale {scale} (paper Fig. 5)\n");
+    if let Some(t) = std::env::args().nth(2).and_then(|s| s.parse::<usize>().ok()) {
+        par::set_threads(t.max(1));
+    }
+    println!(
+        "rejection-ratio curves at scale {scale} (paper Fig. 5); pool width {}\n",
+        par::effective_lanes()
+    );
 
     for preset in Preset::all() {
         let ds = preset.generate(7, scale).expect("generate");

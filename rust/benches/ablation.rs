@@ -19,6 +19,10 @@ use sasvi::screening::{RuleKind, ScreenContext};
 use sasvi::solver::cd::{solve_cd, CdOptions};
 use sasvi::solver::DualState;
 
+#[path = "common.rs"]
+mod common;
+use common::BenchJson;
+
 fn solve_state(
     ds: &sasvi::data::Dataset,
     lam: f64,
@@ -34,7 +38,7 @@ fn solve_state(
     (beta, resid, st)
 }
 
-fn ablation_tightness() {
+fn ablation_tightness(json: &mut BenchJson) {
     println!("== A. bound tightness: mean (bound - |<x_j, theta2*>|) ==");
     let ds = SyntheticSpec { n: 100, p: 2000, nnz: 100, ..Default::default() }
         .generate(7);
@@ -47,6 +51,7 @@ fn ablation_tightness() {
         let lam2 = f * lam1;
         let (_, _, st2) = solve_state(&ds, lam2);
         let mut row = vec![format!("{f:.2}")];
+        let mut looseness = Vec::new();
         for rule in [RuleKind::Safe, RuleKind::Dpp, RuleKind::Strong, RuleKind::Sasvi] {
             let mut bounds = vec![0.0; ds.p()];
             rule.build().bounds(&ctx, &st1, lam2, &mut bounds);
@@ -56,19 +61,22 @@ fn ablation_tightness() {
                 .map(|(b, x)| b - x.abs())
                 .sum::<f64>()
                 / ds.p() as f64;
+            looseness.push(loose);
             row.push(format!("{loose:.4}"));
         }
+        json.arr(&format!("tightness_f{:02.0}", f * 100.0), &looseness);
         t.row(row);
     }
     println!("{}", t.render());
     println!("(smaller = tighter; Sasvi must be the tightest safe rule)\n");
 }
 
-fn ablation_grid_density() {
+fn ablation_grid_density(json: &mut BenchJson) {
     println!("== B. grid-density sensitivity: mean rejection vs grid size ==");
     let ds = SyntheticSpec { n: 100, p: 2000, nnz: 100, ..Default::default() }
         .generate(11);
     let mut t = Table::new(&["grid", "SAFE", "DPP", "Sasvi"]);
+    let mut sasvi_means = Vec::new();
     for grid in [10usize, 25, 50, 100, 200] {
         let plan = PathPlan::linear_spaced(&ds, grid, 0.05);
         let mut row = vec![grid.to_string()];
@@ -80,15 +88,19 @@ fn ablation_grid_density() {
                 .map(|s| s.rejection_ratio())
                 .sum::<f64>()
                 / res.steps.len() as f64;
+            if rule == RuleKind::Sasvi {
+                sasvi_means.push(mean);
+            }
             row.push(format!("{mean:.3}"));
         }
         t.row(row);
     }
+    json.arr("grid_density_sasvi_mean_rejection", &sasvi_means);
     println!("{}", t.render());
     println!("(coarser grids = larger lambda gaps; relaxed feasible sets degrade faster)\n");
 }
 
-fn ablation_solver() {
+fn ablation_solver(json: &mut BenchJson) {
     println!("== C. solver ablation: warm start + working set ==");
     let ds = SyntheticSpec { n: 150, p: 3000, nnz: 150, ..Default::default() }
         .generate(3);
@@ -126,10 +138,14 @@ fn ablation_solver() {
         cold_updates.to_string(),
     ]);
     println!("{}", t.render());
+    json.num("solver_warm_screen_secs", warm_time.as_secs_f64())
+        .num("solver_cold_noscreen_secs", cold_time.as_secs_f64())
+        .int("solver_warm_updates", warm_updates)
+        .int("solver_cold_updates", cold_updates);
     println!();
 }
 
-fn ablation_overhead() {
+fn ablation_overhead(json: &mut BenchJson) {
     println!("== D. screening overhead vs one solver epoch ==");
     let ds = SyntheticSpec { n: 250, p: 10_000, nnz: 100, ..Default::default() }
         .generate(5);
@@ -148,6 +164,7 @@ fn ablation_overhead() {
     let stats_pass = t0.elapsed().as_secs_f64() / 5.0;
 
     let mut t = Table::new(&["rule", "screen-only (ms)", "x stats-pass"]);
+    let mut screen_ms = Vec::new();
     for rule in [RuleKind::Safe, RuleKind::Dpp, RuleKind::Strong, RuleKind::Sasvi] {
         let r = rule.build();
         let mut keep = vec![false; ds.p()];
@@ -157,12 +174,15 @@ fn ablation_overhead() {
             r.screen(&ctx, &st, lam2, &mut keep);
         }
         let per = t1.elapsed().as_secs_f64() / iters as f64;
+        screen_ms.push(per * 1e3);
         t.row(vec![
             rule.name().into(),
             format!("{:.3}", per * 1e3),
             format!("{:.3}", per / stats_pass),
         ]);
     }
+    json.num("overhead_stats_pass_ms", stats_pass * 1e3)
+        .arr("overhead_screen_ms", &screen_ms);
     println!("{}", t.render());
     println!(
         "stats pass (X^T r over p={} features): {:.3} ms — screening is O(p) on top\n",
@@ -172,8 +192,10 @@ fn ablation_overhead() {
 }
 
 fn main() {
-    ablation_tightness();
-    ablation_grid_density();
-    ablation_solver();
-    ablation_overhead();
+    let mut json = BenchJson::new("ablation");
+    ablation_tightness(&mut json);
+    ablation_grid_density(&mut json);
+    ablation_solver(&mut json);
+    ablation_overhead(&mut json);
+    json.write();
 }

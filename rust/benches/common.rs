@@ -1,6 +1,12 @@
 //! Helpers shared by the bench binaries via `#[path = "common.rs"] mod
 //! common;` — bench targets cannot import each other, and `autobenches`
 //! is off so this file is never mistaken for a bench target itself.
+//!
+//! Besides the timing helpers, this provides the shared bench-telemetry
+//! writer: every bench assembles a [`BenchJson`] (config, timings, work
+//! counters) and writes it as machine-readable `BENCH_<name>.json` at the
+//! repo root, where CI uploads it as an artifact — the perf trajectory of
+//! the project lives in those files, not in scrollback.
 
 use std::time::Instant;
 
@@ -30,5 +36,65 @@ pub fn bench<F: FnMut()>(mut f: F, min_secs: f64) -> f64 {
             return dt / iters as f64;
         }
         iters = (iters * 2).max((iters as f64 * min_secs / dt.max(1e-9)) as u64 + 1);
+    }
+}
+
+/// Machine-readable bench telemetry: a flat JSON object written to
+/// `BENCH_<name>.json` at the repo root (one file per bench target, always
+/// overwritten — the artifact store keeps history). Built on the crate's
+/// own [`sasvi::server::json::JsonWriter`] so there is exactly one JSON
+/// emitter in the project.
+#[allow(dead_code)]
+pub struct BenchJson {
+    name: String,
+    w: sasvi::server::json::JsonWriter,
+}
+
+#[allow(dead_code)]
+impl BenchJson {
+    pub fn new(name: &str) -> Self {
+        let mut w = sasvi::server::json::JsonWriter::object();
+        w.field_str("bench", name);
+        Self { name: name.to_string(), w }
+    }
+
+    pub fn str(&mut self, k: &str, v: &str) -> &mut Self {
+        self.w.field_str(k, v);
+        self
+    }
+
+    pub fn num(&mut self, k: &str, v: f64) -> &mut Self {
+        self.w.field_f64(k, v);
+        self
+    }
+
+    pub fn int(&mut self, k: &str, v: u64) -> &mut Self {
+        self.w.field_u64(k, v);
+        self
+    }
+
+    pub fn flag(&mut self, k: &str, v: bool) -> &mut Self {
+        self.w.field_bool(k, v);
+        self
+    }
+
+    pub fn arr(&mut self, k: &str, vs: &[f64]) -> &mut Self {
+        self.w.field_f64_array(k, vs);
+        self
+    }
+
+    /// Write `BENCH_<name>.json` at the repo root (one level above the
+    /// crate manifest). Never fails the bench: telemetry is observability,
+    /// not a correctness surface.
+    pub fn write(self) {
+        let path = format!(
+            "{}/../BENCH_{}.json",
+            env!("CARGO_MANIFEST_DIR"),
+            self.name
+        );
+        match std::fs::write(&path, self.w.finish()) {
+            Ok(()) => println!("bench telemetry: wrote {path}"),
+            Err(e) => eprintln!("bench telemetry: could not write {path}: {e}"),
+        }
     }
 }

@@ -26,7 +26,7 @@ use sasvi::screening::RuleKind;
 
 #[path = "common.rs"]
 mod common;
-use common::{env_f64, env_usize};
+use common::{env_f64, env_usize, BenchJson};
 
 fn main() {
     let density = env_f64("SASVI_BENCH_DENSITY", 0.05).clamp(1e-4, 0.99);
@@ -50,6 +50,12 @@ fn main() {
         "config", "static(s)", "dynamic(s)", "static work", "dyn work",
         "work ratio", "dyn drops", "updates s/d",
     ]);
+    let mut json = BenchJson::new("dynamic");
+    json.int("n", n as u64)
+        .int("p", p as u64)
+        .int("grid", grid as u64)
+        .num("density", density)
+        .int("recheck", recheck as u64);
     let mut all_reduced = true;
     for (label, ds) in cases {
         let plan = PathPlan::linear_spaced(ds, grid, 0.05);
@@ -98,6 +104,13 @@ fn main() {
                 r_dyn.total_dynamic_dropped().to_string(),
                 format!("{upd_s}/{upd_d}"),
             ]);
+            let tag = format!("{label}_{}", format!("{solver:?}").to_lowercase());
+            json.num(&format!("{tag}_static_secs"), t_static)
+                .num(&format!("{tag}_dynamic_secs"), t_dyn)
+                .int(&format!("{tag}_static_work"), work_static)
+                .int(&format!("{tag}_dynamic_work"), work_dyn)
+                .num(&format!("{tag}_work_ratio"), ratio)
+                .int(&format!("{tag}_dyn_drops"), r_dyn.total_dynamic_dropped() as u64);
 
             // epoch-width trajectory at a mid-path step (the shrink curve
             // dynamic screening buys)
@@ -118,6 +131,8 @@ fn main() {
         }
     }
     println!("\n{}", table.render());
+    json.flag("work_reduced_everywhere", all_reduced);
+    json.write();
     assert!(
         all_reduced,
         "acceptance: dynamic screening must reduce epochs x active-width \

@@ -12,19 +12,17 @@ use sasvi::data::Preset;
 use sasvi::metrics::{to_csv, Table};
 use sasvi::screening::RuleKind;
 
-fn env_f64(key: &str, default: f64) -> f64 {
-    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
-}
-
-fn env_usize(key: &str, default: usize) -> usize {
-    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
-}
+#[path = "common.rs"]
+mod common;
+use common::{env_f64, env_usize, BenchJson};
 
 fn main() {
     let scale = env_f64("SASVI_SCALE", 0.04);
     let grid = env_usize("SASVI_GRID", 100);
     println!("== Figure 5: rejection ratios (scale={scale}, grid={grid}) ==\n");
     std::fs::create_dir_all("bench_results").ok();
+    let mut json = BenchJson::new("fig5");
+    json.num("scale", scale).int("grid", grid as u64);
 
     for preset in Preset::all() {
         let ds = preset.generate(7, scale).unwrap();
@@ -70,9 +68,20 @@ fn main() {
             mean(RuleKind::Strong),
             mean(RuleKind::Sasvi),
         );
+        json.arr(
+            &format!("mean_rejection_{}", preset.name()),
+            &[
+                mean(RuleKind::Safe),
+                mean(RuleKind::Dpp),
+                mean(RuleKind::Strong),
+                mean(RuleKind::Sasvi),
+            ],
+        );
         assert!(mean(RuleKind::Sasvi) >= mean(RuleKind::Dpp));
         assert!(mean(RuleKind::Sasvi) >= mean(RuleKind::Safe));
         println!();
     }
+    json.str("mean_rejection_order", "safe,dpp,strong,sasvi");
+    json.write();
     println!("Fig. 5 shape REPRODUCED (Sasvi >= DPP, SAFE everywhere; ~Strong)");
 }

@@ -16,6 +16,10 @@ use sasvi::screening::{Geometry, RuleKind, ScreenContext};
 use sasvi::solver::cd::{solve_cd, CdOptions};
 use sasvi::solver::DualState;
 
+#[path = "common.rs"]
+mod common;
+use common::BenchJson;
+
 fn bench<F: FnMut()>(mut f: F, min_secs: f64) -> (f64, u64) {
     // warmup
     f();
@@ -35,6 +39,7 @@ fn bench<F: FnMut()>(mut f: F, min_secs: f64) -> (f64, u64) {
 
 fn main() {
     let mut table = Table::new(&["benchmark", "per-op", "throughput"]);
+    let mut json = BenchJson::new("microbench");
 
     // ---- level-1 kernels ---------------------------------------------------
     let n = 4096;
@@ -52,6 +57,7 @@ fn main() {
         format!("{:.1} ns", t * 1e9),
         format!("{:.2} GFLOP/s", 2.0 * n as f64 / t / 1e9),
     ]);
+    json.num("dot_ns", t * 1e9);
 
     let mut y = b.clone();
     let (t, _) = bench(
@@ -63,6 +69,7 @@ fn main() {
         format!("{:.1} ns", t * 1e9),
         format!("{:.2} GFLOP/s", 2.0 * n as f64 / t / 1e9),
     ]);
+    json.num("axpy_ns", t * 1e9);
 
     // ---- the statistics pass -------------------------------------------------
     let ds = SyntheticSpec { n: 250, p: 10_000, nnz: 100, ..Default::default() }
@@ -75,6 +82,7 @@ fn main() {
         format!("{:.2} ms", t * 1e3),
         format!("{:.2} GB/s", bytes / t / 1e9),
     ]);
+    json.num("stats_pass_ms", t * 1e3).num("stats_pass_gbps", bytes / t / 1e9);
 
     // ---- Sasvi bound evaluation -----------------------------------------------
     let pre = ds.precompute();
@@ -97,6 +105,8 @@ fn main() {
         format!("{:.3} ms", t * 1e3),
         format!("{:.1} ns/feature", t / ds.p() as f64 * 1e9),
     ]);
+    json.num("sasvi_screen_ms", t * 1e3)
+        .num("sasvi_screen_ns_per_feature", t / ds.p() as f64 * 1e9);
 
     // geometry setup alone (O(n) per invocation)
     let (t, _) = bench(|| {
@@ -107,6 +117,7 @@ fn main() {
         format!("{:.2} us", t * 1e6),
         "-".into(),
     ]);
+    json.num("geometry_setup_us", t * 1e6);
 
     // ---- one CD epoch -----------------------------------------------------------
     let nnz_active: Vec<usize> = (0..ds.p()).step_by(10).collect(); // 1000 features
@@ -125,6 +136,7 @@ fn main() {
             (nnz_active.len() * ds.n() * 8) as f64 / t / 1e9
         ),
     ]);
+    json.num("cd_epoch_ms", t * 1e3);
 
     // ---- PJRT screen execution ------------------------------------------------
     if std::path::Path::new("artifacts/manifest.txt").exists() {
@@ -170,5 +182,6 @@ fn main() {
     }
 
     println!("{}", table.render());
+    json.write();
     std::hint::black_box(acc);
 }

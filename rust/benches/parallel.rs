@@ -22,7 +22,7 @@ use sasvi::solver::DualState;
 
 #[path = "common.rs"]
 mod common;
-use common::{bench, env_f64};
+use common::{bench, env_f64, BenchJson};
 
 const THREAD_SWEEP: [usize; 4] = [1, 2, 4, 8];
 
@@ -53,6 +53,12 @@ fn main() {
 
     // ---- X^T r stats pass: serial backend vs pool at each width ----------
     let mut dense_speedup_at_8 = 0.0f64;
+    let mut json = BenchJson::new("parallel");
+    json.int("n", n as u64)
+        .int("p", p as u64)
+        .num("density", density)
+        .int("cores", cores as u64)
+        .arr("thread_sweep", &THREAD_SWEEP.map(|t| t as f64));
     let mut table = Table::new(&[
         "X^T r", "serial", "1 thr", "2 thr", "4 thr", "8 thr", "best speedup",
     ]);
@@ -67,6 +73,7 @@ fn main() {
         );
         let mut row = vec![case.label.to_string(), format!("{:.3} ms", t_serial * 1e3)];
         let mut best = 0.0f64;
+        let mut per_thread_ms: Vec<f64> = Vec::new();
         for &threads in THREAD_SWEEP.iter() {
             let pool = ThreadPool::new(threads);
             let mut out = vec![0.0; p];
@@ -74,6 +81,7 @@ fn main() {
                 || par::t_matvec_with(&pool, threads, &case.x, &case.y, &mut out),
                 min_secs,
             );
+            per_thread_ms.push(t * 1e3);
             // determinism contract: bit-identical to serial at every width
             for (k, (a, b)) in out.iter().zip(serial_out.iter()).enumerate() {
                 assert_eq!(
@@ -92,6 +100,9 @@ fn main() {
         }
         row.push(format!("{best:.2}x"));
         table.row(row);
+        json.num(&format!("{}_stats_serial_ms", case.label), t_serial * 1e3)
+            .arr(&format!("{}_stats_ms_per_threads", case.label), &per_thread_ms)
+            .num(&format!("{}_stats_best_speedup", case.label), best);
     }
     println!("{}", table.render());
 
@@ -154,6 +165,8 @@ fn main() {
     println!(
         "\ndense X^T r speedup at 8 threads vs serial: {dense_speedup_at_8:.2}x"
     );
+    json.num("dense_speedup_at_8", dense_speedup_at_8);
+    json.write();
     if cores >= 8 {
         assert!(
             dense_speedup_at_8 >= 3.0,

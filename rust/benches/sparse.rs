@@ -21,7 +21,7 @@ use sasvi::screening::RuleKind;
 
 #[path = "common.rs"]
 mod common;
-use common::{bench, env_f64, env_usize};
+use common::{bench, env_f64, env_usize, BenchJson};
 
 fn main() {
     // clamp below 1.0: at density 1.0 the generator emits a dense design
@@ -91,6 +91,19 @@ fn main() {
     println!("{}", table.render());
     println!("max |beta_dense - beta_sparse| at the last grid point: {max_diff:.2e}");
     assert!(max_diff < 1e-6, "backends must produce the same path");
+
+    let mut json = BenchJson::new("sparse");
+    json.int("n", n as u64)
+        .int("p", p as u64)
+        .int("grid", grid as u64)
+        .num("density", density)
+        .num("stats_dense_ms", t_dense * 1e3)
+        .num("stats_sparse_ms", t_sparse * 1e3)
+        .num("stats_speedup", stats_speedup)
+        .num("path_dense_secs", pd)
+        .num("path_sparse_secs", ps)
+        .num("path_speedup", pd / ps.max(1e-12));
+    json.write();
 
     if density <= 0.05 {
         assert!(

@@ -18,13 +18,9 @@ use sasvi::data::Preset;
 use sasvi::metrics::Table;
 use sasvi::screening::RuleKind;
 
-fn env_f64(key: &str, default: f64) -> f64 {
-    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
-}
-
-fn env_usize(key: &str, default: usize) -> usize {
-    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
-}
+#[path = "common.rs"]
+mod common;
+use common::{env_f64, env_usize, BenchJson};
 
 const PAPER: [(&str, [f64; 5]); 5] = [
     ("solver", [88.55, 101.00, 101.55, 2683.57, 617.85]),
@@ -116,4 +112,18 @@ fn main() {
         "\npaper shape (solver >> SAFE > DPP >> Strong ~ Sasvi): {}",
         if shape_ok { "REPRODUCED" } else { "DEVIATION (see above)" }
     );
+
+    let mut json = BenchJson::new("table1");
+    json.num("scale", scale)
+        .int("trials", trials as u64)
+        .int("grid", grid as u64)
+        .str("solver", &format!("{:?}", opts.solver))
+        .flag("shape_reproduced", shape_ok);
+    for (ri, rule) in rules.iter().enumerate() {
+        json.arr(
+            &format!("secs_{}", rule.name().to_ascii_lowercase()),
+            &cells[ri],
+        );
+    }
+    json.write();
 }

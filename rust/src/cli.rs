@@ -73,6 +73,19 @@ impl Flags {
             None => Ok(default),
         }
     }
+
+    /// Parse an optional boolean flag (`--key` alone means true). Returns
+    /// `None` when absent; errors on anything but true/false spellings —
+    /// the shared parser for the global `--dynamic` / `--working-set`
+    /// toggles, so their accepted vocabulary can never drift apart.
+    pub fn bool_flag(&self, key: &str) -> Result<Option<bool>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some("true") | Some("1") | Some("on") => Ok(Some(true)),
+            Some("false") | Some("0") | Some("off") => Ok(Some(false)),
+            Some(other) => bail!("--{key} {other}: expected true/false"),
+        }
+    }
 }
 
 const HELP: &str = "\
@@ -103,7 +116,12 @@ GLOBAL:  --threads N sets the column-block worker-pool width for any
          --dynamic [true|false] enables dynamic safe screening inside the
          solvers (re-screen every K epochs from the current residual;
          --recheck-every K, default 5; alone it only retunes the cadence).
-         Applies to every path-running command (solve-path, run, table1,
+         --working-set [true|false] enables the working-set outer/inner
+         solver (restricted solves + full-gap certification + KKT-guided
+         expansion; --ws-grow K floors the expansion batch, default 10;
+         alone it only retunes the batch). Composes with --dynamic (inner
+         solves then re-screen mid-solve too).
+         All apply to every path-running command (solve-path, run, table1,
          fig5, serve jobs); solutions are unchanged, only the work shrinks.
 ";
 
@@ -124,12 +142,7 @@ pub fn run(args: &[String]) -> Result<i32> {
     // --recheck-every alone only retunes the cadence — enabling is always
     // explicit (--dynamic, config `screening.dynamic`, or server `dynamic`),
     // matching the config file's semantics.
-    if let Some(v) = flags.get("dynamic") {
-        let enabled = match v {
-            "true" | "1" | "on" => true,
-            "false" | "0" | "off" => false,
-            other => bail!("--dynamic {other}: expected true/false"),
-        };
+    if let Some(enabled) = flags.bool_flag("dynamic")? {
         let recheck = flags
             .usize_or("recheck-every", crate::screening::dynamic::DEFAULT_RECHECK)?;
         if enabled && recheck == 0 {
@@ -145,6 +158,27 @@ pub fn run(args: &[String]) -> Result<i32> {
         let mut d = crate::screening::dynamic::process_default();
         d.recheck_every = flags.usize_or("recheck-every", d.recheck_every)?;
         crate::screening::dynamic::set_process_default(d);
+    }
+    // global knob: the working-set outer/inner solver, same shape as
+    // --dynamic: enabling is always explicit, --ws-grow alone only retunes
+    // the expansion batch floor.
+    if let Some(enabled) = flags.bool_flag("working-set")? {
+        let grow = flags.usize_or("ws-grow", crate::solver::working_set::DEFAULT_GROW)?;
+        if enabled && grow == 0 {
+            bail!("--working-set with --ws-grow 0 could never expand; \
+                   use --working-set false or a batch >= 1");
+        }
+        crate::solver::working_set::set_process_default(
+            crate::solver::working_set::WorkingSetOptions {
+                enabled,
+                grow,
+                max_outer: crate::solver::working_set::DEFAULT_MAX_OUTER,
+            },
+        );
+    } else if flags.get("ws-grow").is_some() {
+        let mut d = crate::solver::working_set::process_default();
+        d.grow = flags.usize_or("ws-grow", d.grow)?;
+        crate::solver::working_set::set_process_default(d);
     }
     match cmd.as_str() {
         "help" | "--help" | "-h" => {
@@ -203,8 +237,8 @@ fn cmd_solve_path(flags: &Flags) -> Result<i32> {
     println!("dataset {}: {}", ds.name, ds.summary());
     let res = run_path(&ds, &plan, rule, PathOptions::from_process_defaults());
     let mut t = Table::new(&[
-        "lam/lmax", "kept", "screened", "dyn-drop", "nnz", "epochs", "kkt-fix",
-        "solve(s)", "screen(s)",
+        "lam/lmax", "kept", "screened", "dyn-drop", "ws", "nnz", "epochs",
+        "kkt-fix", "solve(s)", "screen(s)",
     ]);
     for s in res.steps.iter() {
         t.row(vec![
@@ -212,6 +246,7 @@ fn cmd_solve_path(flags: &Flags) -> Result<i32> {
             s.kept.to_string(),
             s.screened.to_string(),
             s.dyn_dropped.to_string(),
+            s.ws_final.to_string(),
             s.nnz.to_string(),
             s.epochs.to_string(),
             s.kkt_violations.to_string(),
@@ -221,12 +256,14 @@ fn cmd_solve_path(flags: &Flags) -> Result<i32> {
     }
     println!("{}", t.render());
     println!(
-        "total: {} (solve {}, screen {}, kkt corrections {}, dynamic drops {})",
+        "total: {} (solve {}, screen {}, kkt corrections {}, dynamic drops {}, \
+         ws outer iters {})",
         fmt_secs(res.total_time),
         fmt_secs(res.total_solve_time()),
         fmt_secs(res.total_screen_time()),
         res.total_kkt_violations(),
-        res.total_dynamic_dropped()
+        res.total_dynamic_dropped(),
+        res.total_ws_outer()
     );
     Ok(0)
 }
@@ -429,30 +466,47 @@ fn cmd_run_config(flags: &Flags) -> Result<i32> {
     if flags.get("recheck-every").is_some() {
         dynamic.recheck_every = flags.usize_or("recheck-every", dynamic.recheck_every)?;
     }
+    // same precedence for the `[solver]` working-set knobs
+    let mut working_set = exp.working_set_options();
+    if flags.get("working-set").is_some() {
+        working_set.enabled = crate::solver::working_set::process_default().enabled;
+    }
+    if flags.get("ws-grow").is_some() {
+        working_set.grow = flags.usize_or("ws-grow", working_set.grow)?;
+    }
     println!("experiment: {exp:?}");
     let preset = Preset::parse(&exp.dataset)
         .with_context(|| format!("unknown preset {}", exp.dataset))?;
-    let mut table = Table::new(&["rule", "mean-secs", "screened-total", "dyn-dropped"]);
+    let mut table = Table::new(&[
+        "rule", "mean-secs", "screened-total", "dyn-dropped", "ws-outer",
+    ]);
     for rule_name in &exp.rules {
         let rule = RuleKind::parse(rule_name)
             .with_context(|| format!("unknown rule {rule_name}"))?;
         let mut secs = 0.0;
         let mut screened = 0usize;
         let mut dyn_dropped = 0usize;
+        let mut ws_outer = 0usize;
         for trial in 0..exp.trials.max(1) {
             let ds = preset.generate(exp.seed + trial as u64, exp.scale)?;
             let plan = PathPlan::linear_spaced(&ds, exp.grid_points, exp.min_frac);
-            let opts = PathOptions { dynamic, ..PathOptions::from_process_defaults() };
+            let opts = PathOptions {
+                dynamic,
+                working_set,
+                ..PathOptions::from_process_defaults()
+            };
             let res = run_path(&ds, &plan, rule, opts);
             secs += res.total_time.as_secs_f64() / exp.trials.max(1) as f64;
             screened += res.steps.iter().map(|s| s.screened).sum::<usize>();
             dyn_dropped += res.total_dynamic_dropped();
+            ws_outer += res.total_ws_outer();
         }
         table.row(vec![
             rule.name().to_string(),
             format!("{secs:.3}"),
             screened.to_string(),
             dyn_dropped.to_string(),
+            ws_outer.to_string(),
         ]);
     }
     println!("{}", table.render());
@@ -474,6 +528,13 @@ mod tests {
         assert_eq!(f.get("verbose"), Some("true"));
         assert_eq!(f.usize_or("grid", 0).unwrap(), 10);
         assert_eq!(f.f64_or("missing", 1.5).unwrap(), 1.5);
+        // the shared boolean-toggle parser: bare flag = true, absent = None
+        assert_eq!(f.bool_flag("verbose").unwrap(), Some(true));
+        assert_eq!(f.bool_flag("missing").unwrap(), None);
+        let f = Flags::parse(&s(&["--dynamic", "off"])).unwrap();
+        assert_eq!(f.bool_flag("dynamic").unwrap(), Some(false));
+        let f = Flags::parse(&s(&["--dynamic", "maybe"])).unwrap();
+        assert!(f.bool_flag("dynamic").is_err());
     }
 
     #[test]
@@ -552,6 +613,79 @@ mod tests {
         assert!(!d.enabled, "--recheck-every alone must not enable dynamic");
         assert_eq!(d.recheck_every, 9);
         crate::screening::dynamic::set_process_default(before);
+    }
+
+    #[test]
+    fn working_set_flag_is_global_and_validated() {
+        let _guard = crate::linalg::par::test_knob_guard();
+        let before = crate::solver::working_set::process_default();
+        let code = run(&s(&[
+            "solve-path", "--preset", "synthetic100", "--scale", "0.01",
+            "--grid", "5", "--rule", "sasvi", "--working-set", "--ws-grow", "6",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+        let d = crate::solver::working_set::process_default();
+        assert!(d.enabled);
+        assert_eq!(d.grow, 6);
+        // explicit off
+        assert_eq!(
+            run(&s(&[
+                "solve-path", "--preset", "synthetic100", "--scale", "0.01",
+                "--grid", "4", "--rule", "sasvi", "--working-set", "false",
+            ]))
+            .unwrap(),
+            0
+        );
+        assert!(!crate::solver::working_set::process_default().enabled);
+        // bad value is an error, not a silent default
+        assert!(run(&s(&["solve-path", "--working-set", "maybe"])).is_err());
+        // explicit enable with a 0 batch is rejected (server parity)
+        assert!(run(&s(&["solve-path", "--working-set", "--ws-grow", "0"])).is_err());
+        // --ws-grow alone retunes the batch without enabling
+        crate::solver::working_set::set_process_default(
+            crate::solver::working_set::WorkingSetOptions::off(),
+        );
+        let code = run(&s(&[
+            "solve-path", "--preset", "synthetic100", "--scale", "0.01",
+            "--grid", "4", "--rule", "sasvi", "--ws-grow", "9",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+        let d = crate::solver::working_set::process_default();
+        assert!(!d.enabled, "--ws-grow alone must not enable working sets");
+        assert_eq!(d.grow, 9);
+        // composes with --dynamic in one invocation
+        let dyn_before = crate::screening::dynamic::process_default();
+        let code = run(&s(&[
+            "solve-path", "--preset", "synthetic100", "--scale", "0.01",
+            "--grid", "5", "--rule", "sasvi", "--working-set", "--dynamic",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+        assert!(crate::solver::working_set::process_default().enabled);
+        assert!(crate::screening::dynamic::process_default().enabled);
+        crate::screening::dynamic::set_process_default(dyn_before);
+        crate::solver::working_set::set_process_default(before);
+    }
+
+    #[test]
+    fn run_config_with_working_set_section() {
+        let _guard = crate::linalg::par::test_knob_guard();
+        let before = crate::solver::working_set::process_default();
+        let dir = std::env::temp_dir().join("sasvi_cli_ws_cfg");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("exp.toml");
+        std::fs::write(
+            &path,
+            "[experiment]\ndataset = \"synthetic100\"\nscale = 0.01\n\
+             grid_points = 5\nrules = [\"sasvi\"]\n\
+             [solver]\nworking_set = true\nws_grow = 4\n",
+        )
+        .unwrap();
+        let code = run(&s(&["run", "--config", path.to_str().unwrap()])).unwrap();
+        assert_eq!(code, 0);
+        crate::solver::working_set::set_process_default(before);
     }
 
     #[test]

@@ -178,6 +178,13 @@ pub struct ExperimentConfig {
     /// `screening.recheck_every`: epochs between in-solver re-screens
     /// (0 degrades to static solving even when `dynamic = true`)
     pub recheck_every: usize,
+    /// `solver.working_set`: run the working-set outer/inner solver
+    /// (restricted solves + full-gap certification + KKT-guided expansion;
+    /// see `solver::working_set`)
+    pub working_set: bool,
+    /// `solver.ws_grow`: floor on the KKT violators admitted per expansion
+    /// (0 degrades to the plain solver even when `working_set = true`)
+    pub ws_grow: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -200,6 +207,8 @@ impl Default for ExperimentConfig {
             threads: 0,
             dynamic: false,
             recheck_every: crate::screening::dynamic::DEFAULT_RECHECK,
+            working_set: false,
+            ws_grow: crate::solver::working_set::DEFAULT_GROW,
         }
     }
 }
@@ -227,6 +236,8 @@ impl ExperimentConfig {
             threads: c.get_usize("experiment.threads", d.threads),
             dynamic: c.get_bool("screening.dynamic", d.dynamic),
             recheck_every: c.get_usize("screening.recheck_every", d.recheck_every),
+            working_set: c.get_bool("solver.working_set", d.working_set),
+            ws_grow: c.get_usize("solver.ws_grow", d.ws_grow),
         }
     }
 
@@ -242,6 +253,15 @@ impl ExperimentConfig {
         crate::screening::dynamic::DynamicOptions {
             enabled: self.dynamic,
             recheck_every: self.recheck_every,
+        }
+    }
+
+    /// The `[solver]` working-set knobs as solver options.
+    pub fn working_set_options(&self) -> crate::solver::working_set::WorkingSetOptions {
+        crate::solver::working_set::WorkingSetOptions {
+            enabled: self.working_set,
+            grow: self.ws_grow,
+            max_outer: crate::solver::working_set::DEFAULT_MAX_OUTER,
         }
     }
 }
@@ -319,6 +339,25 @@ trials = 3
     }
 
     #[test]
+    fn working_set_knobs_parse() {
+        let c = Config::parse("[solver]\nworking_set = true\nws_grow = 7\n").unwrap();
+        let e = ExperimentConfig::from_config(&c);
+        assert!(e.working_set);
+        assert_eq!(e.ws_grow, 7);
+        let opts = e.working_set_options();
+        assert!(opts.active());
+        assert_eq!(opts.grow, 7);
+        // defaults: off, with the standard batch floor
+        let d = ExperimentConfig::default();
+        assert!(!d.working_set);
+        assert!(!d.working_set_options().active());
+        assert_eq!(d.ws_grow, crate::solver::working_set::DEFAULT_GROW);
+        // grow 0 degrades gracefully rather than erroring
+        let c = Config::parse("[solver]\nworking_set = true\nws_grow = 0\n").unwrap();
+        assert!(!ExperimentConfig::from_config(&c).working_set_options().active());
+    }
+
+    #[test]
     fn rejects_bad_lines() {
         assert!(Config::parse("not a kv line").is_err());
         assert!(Config::parse("x = @bogus").is_err());
@@ -327,7 +366,7 @@ trials = 3
     #[test]
     fn bools_and_negatives() {
         let c = Config::parse("a = true\nb = -3\nc = -0.5\n").unwrap();
-        assert_eq!(c.get_bool("a", false), true);
+        assert!(c.get_bool("a", false));
         assert_eq!(c.get("b").unwrap().as_i64(), Some(-3));
         assert_eq!(c.get_f64("c", 0.0), -0.5);
     }

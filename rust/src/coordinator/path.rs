@@ -21,6 +21,17 @@
 //! checkpoint history (epochs-at-width trajectory, rejection-over-time) is
 //! retained in [`PathResult::dynamic`]; under the unsafe strong rule,
 //! dynamic discards are folded into the same KKT-correction loop.
+//!
+//! With [`PathOptions::working_set`] enabled each grid point instead runs
+//! the [`crate::solver::working_set`] outer/inner loop: restricted solves
+//! on a small working set, full-gap certification, fused pruning and
+//! KKT-guided expansion at every outer iteration. The coordinator seeds
+//! each step's working set with the previous step's final working set plus
+//! the strong-rule survivors at the new `lambda` (computed in O(kept) from
+//! the dual state it already carries), so working sets are warm-started
+//! along the path; per-step outer-iteration traces are retained in
+//! [`PathResult::working_set`], and checkpoint prunes feed the same
+//! KKT-correction loop as dynamic drops.
 
 use std::time::{Duration, Instant};
 
@@ -29,6 +40,9 @@ use crate::screening::dynamic::{DynamicOptions, DynamicTrace};
 use crate::screening::{RuleKind, ScreenContext, ScreenOutcome};
 use crate::solver::cd::{solve_cd, solve_cd_dynamic, CdOptions};
 use crate::solver::kkt::check_kkt_subset;
+use crate::solver::working_set::{
+    solve_working_set_cd, solve_working_set_fista, WorkingSetOptions, WorkingSetTrace,
+};
 use crate::solver::DualState;
 
 /// Which solver runs at each grid point.
@@ -58,6 +72,11 @@ pub struct PathOptions {
     /// and server consult [`crate::screening::dynamic::process_default`]
     /// when building options from user input
     pub dynamic: DynamicOptions,
+    /// working-set outer/inner solving ([`crate::solver::working_set`]);
+    /// off by default — user-facing entry points consult
+    /// [`crate::solver::working_set::process_default`]. Composes with
+    /// `dynamic`: inner restricted solves then re-screen mid-solve too.
+    pub working_set: WorkingSetOptions,
 }
 
 impl Default for PathOptions {
@@ -73,6 +92,7 @@ impl Default for PathOptions {
             kkt_tol: 1e-6,
             max_kkt_rounds: 16,
             dynamic: DynamicOptions::off(),
+            working_set: WorkingSetOptions::off(),
         }
     }
 }
@@ -90,6 +110,7 @@ impl PathOptions {
     pub fn from_process_defaults() -> Self {
         Self {
             dynamic: crate::screening::dynamic::process_default(),
+            working_set: crate::solver::working_set::process_default(),
             ..Default::default()
         }
     }
@@ -101,6 +122,19 @@ impl PathOptions {
 fn mark_dynamic_drops(trace: &DynamicTrace, keep: &mut [bool]) {
     for ev in &trace.events {
         for &j in &ev.dropped {
+            keep[j] = false;
+        }
+    }
+}
+
+/// Same for the working-set driver's checkpoint prunes: pruned candidates
+/// leave the kept set, so the strong-rule KKT correction re-checks them
+/// exactly like rule- or dynamic-screened features. (Features merely left
+/// *outside* the working set are still covered by the solve's full-gap
+/// certificate and stay kept.)
+fn mark_ws_prunes(trace: &WorkingSetTrace, keep: &mut [bool]) {
+    for ev in &trace.events {
+        for &j in &ev.pruned {
             keep[j] = false;
         }
     }
@@ -129,6 +163,13 @@ pub struct StepRecord {
     pub dyn_rechecks: usize,
     /// features discarded dynamically (on top of the `screened` count)
     pub dyn_dropped: usize,
+    /// working-set outer iterations at this step (0 when working-set
+    /// solving is off)
+    pub ws_outer: usize,
+    /// final working-set width at this step
+    pub ws_final: usize,
+    /// candidates pruned by working-set checkpoints at this step
+    pub ws_pruned: usize,
 }
 
 impl StepRecord {
@@ -154,8 +195,13 @@ pub struct PathResult {
     /// solutions at every grid point (lambda, beta) when `keep_betas`
     pub betas: Option<Vec<Vec<f64>>>,
     /// per-step dynamic re-screen traces (epochs-at-width histograms,
-    /// rejection-over-time) when `opts.dynamic` is enabled
+    /// rejection-over-time) when `opts.dynamic` is enabled (and working-set
+    /// solving is not: inner-solve dynamic work is folded into the
+    /// working-set traces instead)
     pub dynamic: Option<Vec<DynamicTrace>>,
+    /// per-step working-set outer-iteration traces when
+    /// `opts.working_set` is enabled
+    pub working_set: Option<Vec<WorkingSetTrace>>,
 }
 
 impl PathResult {
@@ -176,11 +222,26 @@ impl PathResult {
         self.steps.iter().map(|s| s.dyn_dropped).sum()
     }
 
+    /// Working-set outer iterations across the path.
+    pub fn total_ws_outer(&self) -> usize {
+        self.steps.iter().map(|s| s.ws_outer).sum()
+    }
+
+    /// Candidates pruned by working-set checkpoints across the path.
+    pub fn total_ws_pruned(&self) -> usize {
+        self.steps.iter().map(|s| s.ws_pruned).sum()
+    }
+
     /// Total `epochs x active-width` solver work. For a static run this is
     /// `sum_k epochs_k * kept_k`; a dynamic run integrates the per-step
-    /// epoch-width trajectory instead — the quantity dynamic screening
-    /// shrinks (`benches/dynamic.rs` compares the two).
+    /// epoch-width trajectory, and a working-set run sums the inner-solve
+    /// `epochs x working-set-width` integrals — the quantity the in-solver
+    /// machinery exists to shrink (`benches/dynamic.rs` and
+    /// `benches/working_set.rs` compare the three).
     pub fn solver_work(&self) -> u64 {
+        if let Some(traces) = &self.working_set {
+            return traces.iter().map(|t| t.solver_work()).sum();
+        }
         match &self.dynamic {
             Some(traces) => self
                 .steps
@@ -223,7 +284,10 @@ pub fn run_path_keep_betas(
 /// With dynamic screening enabled, `active` is shrunk in place to the
 /// features that survived the in-solver checkpoints, and the returned trace
 /// records every checkpoint (dropped indices already remapped to dataset
-/// features).
+/// features). With working-set solving enabled the outer/inner driver runs
+/// instead (dynamic options then apply to its inner restricted solves) and
+/// the working-set trace is returned; `ws_seed` warm-starts its working
+/// set.
 fn run_solver(
     ds: &Dataset,
     lambda: f64,
@@ -232,8 +296,23 @@ fn run_solver(
     beta: &mut [f64],
     resid: &mut [f64],
     opts: &PathOptions,
-) -> (crate::solver::CdStats, Option<DynamicTrace>) {
+    ws_seed: Option<&[usize]>,
+) -> (crate::solver::CdStats, Option<DynamicTrace>, Option<WorkingSetTrace>) {
     let col_norms_sq = &pre.col_norms_sq;
+    if opts.working_set.active() && lambda > 0.0 {
+        let (stats, trace) = match opts.solver {
+            SolverKind::Cd => solve_working_set_cd(
+                &ds.x, &ds.y, lambda, active, col_norms_sq, &pre.xty, beta, resid,
+                &opts.cd, &opts.dynamic, &opts.working_set, ws_seed,
+            ),
+            SolverKind::Fista => solve_working_set_fista(
+                &ds.x, &ds.y, lambda, active, col_norms_sq, &pre.xty, beta, resid,
+                &opts.fista, opts.cd.gap_tol, &opts.dynamic, &opts.working_set,
+                ws_seed,
+            ),
+        };
+        return (stats, None, Some(trace));
+    }
     match opts.solver {
         SolverKind::Cd => {
             if opts.dynamic.active() {
@@ -241,13 +320,13 @@ fn run_solver(
                     &ds.x, &ds.y, lambda, active, col_norms_sq, &pre.xty, beta,
                     resid, &opts.cd, &opts.dynamic,
                 );
-                (stats, Some(trace))
+                (stats, Some(trace), None)
             } else {
                 let stats = solve_cd(
                     &ds.x, &ds.y, lambda, active, col_norms_sq, beta, resid,
                     &opts.cd,
                 );
-                (stats, None)
+                (stats, None, None)
             }
         }
         SolverKind::Fista => {
@@ -315,7 +394,7 @@ fn run_solver(
                 converged: true,
                 final_gap: Some(gap),
             };
-            (stats, trace)
+            (stats, trace, None)
         }
     }
 }
@@ -343,11 +422,17 @@ fn run_path_impl(
 
     let mut steps = Vec::with_capacity(plan.len());
     let mut betas = if keep_betas { Some(Vec::with_capacity(plan.len())) } else { None };
-    let mut dyn_traces = if opts.dynamic.active() {
+    let ws_on = opts.working_set.active();
+    // inner-solve dynamic work is folded into the working-set traces, so
+    // per-step dynamic traces are only collected for plain dynamic runs
+    let mut dyn_traces = if opts.dynamic.active() && !ws_on {
         Some(Vec::with_capacity(plan.len()))
     } else {
         None
     };
+    let mut ws_traces = if ws_on { Some(Vec::with_capacity(plan.len())) } else { None };
+    // the previous step's final working set, carried as the next seed
+    let mut prev_ws: Vec<usize> = Vec::new();
 
     for &lambda in plan.lambdas.iter() {
         // ---- screen -----------------------------------------------------
@@ -381,12 +466,52 @@ fn run_path_impl(
 
         // ---- solve ------------------------------------------------------
         let t1 = Instant::now();
-        let (mut stats, mut dyn_trace) =
-            run_solver(ds, lambda, &mut active, &pre, &mut beta, &mut resid, &opts);
-        // dynamically discarded features leave the kept set too, so the
-        // KKT correction below (and the step record) sees them as screened
+        // working-set seed: the previous step's working set plus the
+        // strong-rule survivors at this lambda (both restricted to the kept
+        // set) — the warm-started initialization the subsystem docs
+        // describe. O(kept) from state the coordinator already holds.
+        let ws_seed: Option<Vec<usize>> = if ws_on {
+            let mut in_seed = vec![false; p];
+            let mut s: Vec<usize> = Vec::new();
+            for &j in prev_ws.iter() {
+                if keep[j] && !in_seed[j] {
+                    in_seed[j] = true;
+                    s.push(j);
+                }
+            }
+            // Strong-rule survivors need a *fresh* dual state; under
+            // RuleKind::None the statistics pass is skipped and `state`
+            // stays at lambda_max, where the growing slack (ratio - 1)
+            // would eventually admit every feature and silently degrade
+            // the working set to full width — so seed from carry/support
+            // only and let KKT expansion do the growing.
+            if lambda < state.lambda && !matches!(rule_kind, RuleKind::None) {
+                let ratio = state.lambda / lambda;
+                let slack = ratio - 1.0;
+                let thr = 1.0 - crate::SCREEN_EPS;
+                for &j in active.iter() {
+                    if !in_seed[j] && ratio * state.xt_theta[j].abs() + slack >= thr {
+                        in_seed[j] = true;
+                        s.push(j);
+                    }
+                }
+            }
+            Some(s)
+        } else {
+            None
+        };
+        let (mut stats, mut dyn_trace, mut ws_trace) = run_solver(
+            ds, lambda, &mut active, &pre, &mut beta, &mut resid, &opts,
+            ws_seed.as_deref(),
+        );
+        // dynamically discarded / checkpoint-pruned features leave the kept
+        // set too, so the KKT correction below (and the step record) sees
+        // them as screened
         if let Some(tr) = &dyn_trace {
             mark_dynamic_drops(tr, &mut keep);
+        }
+        if let Some(tr) = &ws_trace {
+            mark_ws_prunes(tr, &mut keep);
         }
         let mut kkt_violations = 0usize;
         // epochs/updates across every solve at this step (KKT re-solves
@@ -412,14 +537,23 @@ fn run_path_impl(
                     keep[j] = true;
                     active.push(j);
                 }
-                let (s2, t2) =
-                    run_solver(ds, lambda, &mut active, &pre, &mut beta, &mut resid, &opts);
+                let (s2, t2, w2) = run_solver(
+                    ds, lambda, &mut active, &pre, &mut beta, &mut resid, &opts,
+                    ws_seed.as_deref(),
+                );
                 stats = s2;
                 if let Some(t2) = t2 {
                     mark_dynamic_drops(&t2, &mut keep);
                     match dyn_trace.as_mut() {
                         Some(tr) => tr.absorb(t2, total_epochs),
                         None => dyn_trace = Some(t2),
+                    }
+                }
+                if let Some(w2) = w2 {
+                    mark_ws_prunes(&w2, &mut keep);
+                    match ws_trace.as_mut() {
+                        Some(tr) => tr.absorb(w2),
+                        None => ws_trace = Some(w2),
                     }
                 }
                 total_epochs += stats.epochs;
@@ -441,6 +575,10 @@ fn run_path_impl(
             .as_ref()
             .map(|t| (t.rechecks(), t.distinct_dropped()))
             .unwrap_or((0, 0));
+        let (ws_outer, ws_final, ws_pruned) = ws_trace
+            .as_ref()
+            .map(|t| (t.outer_iters(), t.final_width(), t.pruned_total()))
+            .unwrap_or((0, 0, 0));
         steps.push(StepRecord {
             lambda,
             frac: lambda / plan.lambda_max,
@@ -456,9 +594,17 @@ fn run_path_impl(
             gap: stats.final_gap.unwrap_or(f64::NAN),
             dyn_rechecks,
             dyn_dropped,
+            ws_outer,
+            ws_final,
+            ws_pruned,
         });
         if let Some(ts) = dyn_traces.as_mut() {
             ts.push(dyn_trace.unwrap_or_else(|| DynamicTrace::new(outcome.kept)));
+        }
+        if let Some(ts) = ws_traces.as_mut() {
+            let tr = ws_trace.unwrap_or_default();
+            prev_ws = tr.final_ws.clone();
+            ts.push(tr);
         }
         if let Some(bs) = betas.as_mut() {
             bs.push(beta.clone());
@@ -474,6 +620,7 @@ fn run_path_impl(
         beta_final: beta,
         betas,
         dynamic: dyn_traces,
+        working_set: ws_traces,
     }
 }
 
@@ -711,6 +858,121 @@ mod tests {
             "expected a near-total epoch-0 discard, got {}",
             first.dyn_dropped
         );
+    }
+
+    #[test]
+    fn working_set_path_matches_static_path_both_solvers() {
+        let ds = tiny();
+        let plan = PathPlan::linear_spaced(&ds, 15, 0.05);
+        let fista = crate::solver::FistaOptions {
+            max_iters: 5000,
+            tol: 1e-13,
+            lipschitz: None,
+        };
+        for solver in [SolverKind::Cd, SolverKind::Fista] {
+            let opts_static = PathOptions { solver, fista, ..Default::default() };
+            let opts_ws = PathOptions {
+                solver,
+                fista,
+                working_set: crate::solver::working_set::WorkingSetOptions::enabled_with_grow(8),
+                ..Default::default()
+            };
+            let a = run_path_keep_betas(&ds, &plan, RuleKind::Sasvi, opts_static);
+            let b = run_path_keep_betas(&ds, &plan, RuleKind::Sasvi, opts_ws);
+            assert!(b.total_ws_outer() > 0, "{solver:?}: no outer iterations");
+            let traces = b.working_set.as_ref().expect("working-set traces retained");
+            assert_eq!(traces.len(), b.steps.len());
+            assert!(b.dynamic.is_none(), "no dynamic traces in working-set mode");
+            let mut carried = false;
+            for (k, (s, t)) in b.steps.iter().zip(traces.iter()).enumerate() {
+                assert_eq!(s.ws_outer, t.outer_iters());
+                assert_eq!(s.ws_final, t.final_width());
+                assert_eq!(s.ws_pruned, t.pruned_total());
+                assert!(s.ws_final <= s.kept, "step {k}: W wider than kept");
+                // the support always sits inside the final working set
+                let bb = &b.betas.as_ref().unwrap()[k];
+                for j in 0..ds.p() {
+                    if bb[j] != 0.0 {
+                        assert!(t.final_ws.contains(&j), "step {k}: support {j} outside W");
+                    }
+                }
+                if k > 0 && t.initial_width > 0 {
+                    carried = true;
+                }
+            }
+            assert!(carried, "{solver:?}: working sets never warm-started");
+            // the work integral is what the subsystem exists to shrink
+            assert!(
+                b.solver_work() < a.solver_work(),
+                "{solver:?}: ws work {} >= static work {}",
+                b.solver_work(),
+                a.solver_work()
+            );
+            let ba = a.betas.as_ref().unwrap();
+            let bb = b.betas.as_ref().unwrap();
+            for (k, (x, y)) in ba.iter().zip(bb.iter()).enumerate() {
+                for j in 0..ds.p() {
+                    assert!(
+                        (x[j] - y[j]).abs() < 1e-5,
+                        "{solver:?} step {k} feature {j}: {} vs {}",
+                        x[j], y[j]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn working_set_with_strong_rule_is_corrected_exactly() {
+        // working-set prunes under the (unsafe) strong rule inherit the KKT
+        // correction; the corrected path must still match the unscreened one
+        let ds = tiny();
+        let plan = PathPlan::linear_spaced(&ds, 15, 0.05);
+        let base = run_path_keep_betas(&ds, &plan, RuleKind::None, PathOptions::default());
+        let opts = PathOptions {
+            working_set: crate::solver::working_set::WorkingSetOptions::enabled_with_grow(8),
+            ..Default::default()
+        };
+        let r = run_path_keep_betas(&ds, &plan, RuleKind::Strong, opts);
+        let b0 = base.betas.as_ref().unwrap();
+        let b1 = r.betas.as_ref().unwrap();
+        for (k, (x, y)) in b0.iter().zip(b1.iter()).enumerate() {
+            for j in 0..ds.p() {
+                assert!(
+                    (x[j] - y[j]).abs() < 1e-5,
+                    "step {k} feature {j}: {} vs {}",
+                    x[j], y[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn working_set_composes_with_dynamic_inner_solves() {
+        let ds = tiny();
+        let plan = PathPlan::linear_spaced(&ds, 12, 0.05);
+        let base = run_path_keep_betas(&ds, &plan, RuleKind::Sasvi, PathOptions::default());
+        let opts = PathOptions {
+            working_set: crate::solver::working_set::WorkingSetOptions::enabled_with_grow(8),
+            dynamic: crate::screening::dynamic::DynamicOptions::enabled_every(4),
+            ..Default::default()
+        };
+        let r = run_path_keep_betas(&ds, &plan, RuleKind::Sasvi, opts);
+        assert!(r.total_ws_outer() > 0);
+        // dynamic work is folded into the working-set traces, not reported
+        // as separate per-step dynamic traces
+        assert!(r.dynamic.is_none());
+        let b0 = base.betas.as_ref().unwrap();
+        let b1 = r.betas.as_ref().unwrap();
+        for (k, (x, y)) in b0.iter().zip(b1.iter()).enumerate() {
+            for j in 0..ds.p() {
+                assert!(
+                    (x[j] - y[j]).abs() < 1e-5,
+                    "step {k} feature {j}: {} vs {}",
+                    x[j], y[j]
+                );
+            }
+        }
     }
 
     #[test]

@@ -9,8 +9,8 @@
 //! the honest choice for a CPU-bound workload like pathwise Lasso.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
@@ -43,6 +43,10 @@ pub struct JobId(pub u64);
 struct Shared {
     status: Mutex<HashMap<JobId, JobStatus>>,
     results: Mutex<HashMap<JobId, PathResult>>,
+    /// fast-shutdown flag: when set, workers mark still-queued jobs as
+    /// `Failed` ("evicted") instead of running them, so waiters unblock
+    /// promptly and no Done notification is ever lost or fabricated
+    evict: AtomicBool,
 }
 
 enum Msg {
@@ -68,6 +72,7 @@ impl JobPool {
         let shared = Arc::new(Shared {
             status: Mutex::new(HashMap::new()),
             results: Mutex::new(HashMap::new()),
+            evict: AtomicBool::new(false),
         });
         let handles = (0..workers)
             .map(|_| {
@@ -116,13 +121,33 @@ impl JobPool {
         ids.into_iter().map(|id| self.wait(id)).collect()
     }
 
-    /// Graceful shutdown: drains the queue, joins workers.
+    /// Graceful shutdown: drains the queue (queued jobs still run and post
+    /// their Done notifications), joins workers.
     pub fn shutdown(mut self) {
         for _ in 0..self.workers.len() {
             let _ = self.tx.send(Msg::Shutdown);
         }
         for h in self.workers.drain(..) {
             let _ = h.join();
+        }
+    }
+
+    /// Fast shutdown under load: jobs already running finish normally (and
+    /// post Done), but jobs still queued are *evicted* — marked
+    /// `Failed("evicted by shutdown")` without running — so a concurrent
+    /// [`JobPool::wait`] on them returns `None` promptly instead of
+    /// blocking forever. Takes `&self` so callers holding job ids can still
+    /// `wait()` afterwards; the eventual drop joins the workers.
+    pub fn shutdown_now(&self) {
+        self.shared.evict.store(true, Ordering::SeqCst);
+        // best-effort wakeups: if the queue is full the workers are busy
+        // draining it anyway (evicting as they go); Drop later sends the
+        // blocking Shutdown messages that terminate the worker loops.
+        for _ in 0..self.workers.len() {
+            match self.tx.try_send(Msg::Shutdown) {
+                Ok(()) | Err(TrySendError::Full(_)) => {}
+                Err(TrySendError::Disconnected(_)) => break,
+            }
         }
     }
 }
@@ -146,6 +171,15 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Msg>>>, shared: Arc<Shared>) {
         };
         match msg {
             Ok(Msg::Job(id, spec)) => {
+                if shared.evict.load(Ordering::SeqCst) {
+                    // fast shutdown: don't run queued work, just unblock
+                    // any waiter with a terminal status
+                    shared.status.lock().unwrap().insert(
+                        id,
+                        JobStatus::Failed("evicted by shutdown".to_string()),
+                    );
+                    continue;
+                }
                 shared
                     .status
                     .lock()
@@ -225,6 +259,77 @@ mod tests {
             assert_eq!(pool.status(id), Some(JobStatus::Done));
             assert!(pool.wait(id).is_none());
         }
+    }
+
+    #[test]
+    fn drop_with_queued_jobs_drains_without_losing_done() {
+        // Dropping (or gracefully shutting down) a pool with a full queue
+        // must neither hang nor lose Done notifications: the Shutdown
+        // messages queue *behind* the jobs, so workers drain everything
+        // first. Statuses are checked through a clone of the shared maps
+        // taken before the drop.
+        let ds = Arc::new(
+            SyntheticSpec { n: 20, p: 60, nnz: 6, ..Default::default() }.generate(4),
+        );
+        let pool = JobPool::new(1, 8);
+        let ids: Vec<JobId> = (0..5)
+            .map(|_| pool.submit(spec(&ds, RuleKind::Sasvi, 6)))
+            .collect();
+        let shared = Arc::clone(&pool.shared);
+        drop(pool); // must return (drain + join), not deadlock
+        let status = shared.status.lock().unwrap();
+        for id in &ids {
+            assert_eq!(
+                status.get(id),
+                Some(&JobStatus::Done),
+                "queued job {id:?} lost its Done notification"
+            );
+        }
+        assert_eq!(shared.results.lock().unwrap().len(), ids.len());
+    }
+
+    #[test]
+    fn shutdown_now_evicts_queued_jobs_and_unblocks_wait() {
+        // Fast shutdown under load: the running job still completes (its
+        // Done is not lost), queued jobs are evicted, and wait() on an
+        // evicted job returns None instead of blocking forever.
+        let ds = Arc::new(
+            SyntheticSpec { n: 40, p: 200, nnz: 20, ..Default::default() }.generate(6),
+        );
+        let pool = JobPool::new(1, 8);
+        // a job meaty enough to still be running when we pull the plug
+        let running = pool.submit(spec(&ds, RuleKind::None, 25));
+        // wait until the single worker has actually picked it up, so the
+        // next submissions are guaranteed to sit in the queue behind it
+        loop {
+            match pool.status(running) {
+                Some(JobStatus::Queued) => std::thread::sleep(
+                    std::time::Duration::from_millis(1),
+                ),
+                Some(JobStatus::Running) | Some(JobStatus::Done) => break,
+                other => panic!("unexpected status {other:?}"),
+            }
+        }
+        let queued: Vec<JobId> = (0..3)
+            .map(|_| pool.submit(spec(&ds, RuleKind::Sasvi, 6)))
+            .collect();
+        pool.shutdown_now();
+        // evicted jobs resolve to None promptly (Failed, result absent)
+        for id in &queued {
+            assert!(pool.wait(*id).is_none(), "evicted job {id:?} produced a result");
+            assert!(
+                matches!(pool.status(*id), Some(JobStatus::Failed(_))),
+                "evicted job {id:?} not marked failed: {:?}",
+                pool.status(*id)
+            );
+        }
+        // the in-flight job still posts its Done notification
+        assert!(
+            pool.wait(running).is_some(),
+            "running job lost its result on fast shutdown"
+        );
+        // dropping afterwards joins cleanly
+        drop(pool);
     }
 
     #[test]

@@ -70,6 +70,27 @@
 //! `rust/tests/determinism.rs` pin the contract; `benches/dynamic.rs`
 //! measures the `epochs x active-width` work reduction.
 //!
+//! ## Working-set solving
+//!
+//! Screening only ever *removes* features; [`solver::working_set`] adds
+//! the complementary move (Blitz/Celer-style): solve restricted to a small
+//! working set (warm-start support ∪ strong-rule survivors, carried along
+//! the λ-path by the coordinator), then take **one** batched `|X_A^T r|`
+//! pass per outer iteration that simultaneously (a) certifies the
+//! full-problem duality gap — stop when below tolerance, (b) prunes the
+//! candidate set with the same fused VI-ball + gap-sphere test dynamic
+//! screening uses (one shared checkpoint), and (c) scores the KKT
+//! violators that expand the working set (top-K, geometric batch growth).
+//! Inner solves run CD in place or compacted FISTA via `gather_columns`
+//! on either storage backend, and compose with dynamic re-screening.
+//! Contract: exactness (1e-8 objective agreement with full unscreened
+//! solves, `rust/tests/properties.rs`), determinism (bit-identical at
+//! every thread count, `rust/tests/determinism.rs`), and a >= 2x
+//! `epochs x width` work reduction over the dynamic path
+//! (`benches/working_set.rs`). Knobs: CLI `--working-set` / `--ws-grow`
+//! (global flags), config `solver.working_set` / `solver.ws_grow`, server
+//! `PATH ... ws [grow]`.
+//!
 //! ## Quickstart
 //!
 //! ```no_run

@@ -78,7 +78,7 @@ mod tests {
 
     #[test]
     fn factor_identity() {
-        let a = vec![1.0, 0.0, 0.0, 1.0];
+        let a = [1.0, 0.0, 0.0, 1.0];
         let c = Cholesky::factor(&a, 2).unwrap();
         assert!((c.reconstruct(0, 0) - 1.0).abs() < 1e-12);
         assert!((c.reconstruct(1, 0)).abs() < 1e-12);
@@ -105,14 +105,14 @@ mod tests {
 
     #[test]
     fn rejects_indefinite() {
-        let a = vec![1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
+        let a = [1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
         assert!(Cholesky::factor(&a, 2).is_err());
     }
 
     #[test]
     fn apply_has_right_covariance_shape() {
         // L of [[4, 2], [2, 2]] is [[2, 0], [1, 1]]
-        let a = vec![4.0, 2.0, 2.0, 2.0];
+        let a = [4.0, 2.0, 2.0, 2.0];
         let c = Cholesky::factor(&a, 2).unwrap();
         let mut out = vec![0.0; 2];
         c.apply(&[1.0, 0.0], &mut out);

@@ -191,8 +191,8 @@ mod tests {
 
     #[test]
     fn scal_scales() {
-        let mut x = vec![1.0, -2.0];
+        let mut x = [1.0, -2.0];
         scal(-2.0, &mut x);
-        assert_eq!(x, vec![-2.0, 4.0]);
+        assert_eq!(x, [-2.0, 4.0]);
     }
 }

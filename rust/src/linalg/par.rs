@@ -298,6 +298,15 @@ pub fn hardware_threads() -> usize {
         .unwrap_or(1)
 }
 
+/// The lane count dispatches will actually use right now: the configured
+/// [`threads`] knob capped by the global pool's width (the knob alone can
+/// exceed what the pool can deliver). The single implementation behind
+/// every surface that reports the width — the server's `GEN` reply and
+/// the examples both call this.
+pub fn effective_lanes() -> usize {
+    threads().min(global().lanes())
+}
+
 /// The process-wide pool, spawned on first use and sized to the largest of
 /// the hardware width, the `SASVI_THREADS` env var, and any [`set_threads`]
 /// value already in effect — so an oversubscribe request made before the

@@ -420,7 +420,7 @@ mod tests {
     fn sasviq_screens_at_least_a_majority_near_lambda_max() {
         let prob = make(30, 60, 6);
         let lmax = prob.lambda_max();
-        let lambdas = vec![0.95 * lmax, 0.9 * lmax];
+        let lambdas = [0.95 * lmax, 0.9 * lmax];
         let (steps, _) =
             run_logistic_path(&prob, &lambdas, LogiRule::SasviQ, &LogisticOptions::default());
         assert!(

@@ -51,6 +51,17 @@
 //! Everything here runs on the [`crate::linalg::par`] column-block pool
 //! with block-ordered reductions, so checkpoint decisions — and therefore
 //! the whole dynamic solve — are bit-identical at every thread count.
+//!
+//! ## The shared checkpoint
+//!
+//! [`rescreen`] is deliberately the *single* implementation of the
+//! in-solver checkpoint: the dynamic solvers call it to shrink their
+//! active sets, and the [`crate::solver::working_set`] outer loop calls
+//! the very same function once per outer iteration — its `gap` is the
+//! full-candidate-set convergence certificate, its survivors are the
+//! prune, and the `|x_j^T r|` scores it leaves in the caller's scratch are
+//! exactly the KKT expansion scores. One batched pass, three consumers;
+//! the two subsystems can never drift apart.
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 

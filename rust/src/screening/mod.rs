@@ -34,6 +34,10 @@
 //! same KKT correction. `rust/tests/dynamic_safety.rs` pins the guarantee
 //! per checkpoint; `rust/tests/determinism.rs` pins bit-identity across
 //! thread counts and objective agreement with the static path.
+//!
+//! Screening's complement — *growing* a working set by KKT violators,
+//! using the same fused test as the prune half of one shared checkpoint —
+//! lives in [`crate::solver::working_set`].
 
 pub mod dpp;
 pub mod dynamic;
@@ -274,7 +278,7 @@ mod tests {
 
     #[test]
     fn outcome_counts() {
-        let keep = vec![true, false, false, true];
+        let keep = [true, false, false, true];
         let o = ScreenOutcome::from_mask(&keep);
         assert_eq!(o, ScreenOutcome { kept: 2, screened: 2 });
         assert!((o.rejection_ratio() - 0.5).abs() < 1e-15);

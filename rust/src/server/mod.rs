@@ -6,7 +6,7 @@
 //! ```text
 //! PING
 //! GEN <preset> <seed> <scale> [threads]  -> {"dataset": id, ...}
-//! PATH <dataset-id> <rule> <k> <min_frac> [dynamic|static [recheck]]
+//! PATH <dataset-id> <rule> <k> <min_frac> [dynamic|static [recheck] | ws [grow]]
 //!                                         -> {"job": id}
 //! STATUS <job-id>                         -> {"status": "..."}
 //! RESULT <job-id>                         -> {"steps": [...], ...} (blocks)
@@ -25,12 +25,19 @@
 //! Results are bit-identical at every thread count (the pool's determinism
 //! contract), so the knob only trades wall-clock.
 //!
-//! `PATH` jobs default to the process-wide dynamic-screening setting
-//! ([`crate::screening::dynamic::process_default`], e.g. from `serve
-//! --dynamic`); the optional 5th/6th arguments override it per job. The
-//! `GEN` reply reports the default in effect (`dynamic`), and `RESULT`
-//! reports the in-solver rejection: `dynamic_dropped` (total) and
-//! `dynamic_rejection` (per step, relative to the post-screen width).
+//! `PATH` jobs default to the process-wide dynamic-screening and
+//! working-set settings ([`crate::screening::dynamic::process_default`] /
+//! [`crate::solver::working_set::process_default`], e.g. from `serve
+//! --dynamic` / `serve --working-set`); the optional 5th/6th arguments
+//! override them per job — `dynamic [recheck]` selects the dynamic solver
+//! mode (and turns working-set solving off for the job, so its dynamic
+//! telemetry is real), `static` the plain solver, `ws [grow]` the
+//! working-set driver (composing with the dynamic default for its inner
+//! solves). The `GEN` reply reports the
+//! defaults in effect (`dynamic`, `working_set`); `RESULT` reports the
+//! in-solver rejection (`dynamic_dropped` total, `dynamic_rejection` per
+//! step) and the working-set telemetry (`ws_outer` outer-iteration total,
+//! `ws_width` final working-set width per step).
 
 pub mod json;
 
@@ -182,16 +189,15 @@ fn cmd_gen(
     let scale: f64 = scale.parse().unwrap_or(0.05);
     // report the count the pool can actually deliver: the requested width
     // is capped by the process pool's lane count at dispatch time
-    let lanes = crate::linalg::par::global().lanes();
     let effective = match threads {
         Some(t) => match t.parse::<usize>() {
             Ok(t) if t >= 1 => {
                 crate::linalg::par::set_threads(t);
-                t.min(crate::linalg::par::MAX_THREADS).min(lanes)
+                crate::linalg::par::effective_lanes()
             }
             _ => return err_msg(&format!("bad thread count {t}")),
         },
-        None => crate::linalg::par::threads().min(lanes),
+        None => crate::linalg::par::effective_lanes(),
     };
     match preset.generate(seed, scale) {
         Ok(ds) => {
@@ -208,6 +214,10 @@ fn cmd_gen(
             w.field_f64("density", density);
             w.field_u64("threads", effective as u64);
             w.field_bool("dynamic", crate::screening::dynamic::process_default().enabled);
+            w.field_bool(
+                "working_set",
+                crate::solver::working_set::process_default().enabled,
+            );
             w.finish()
         }
         Err(e) => err_msg(&format!("generate failed: {e}")),
@@ -238,16 +248,33 @@ fn cmd_path(
     let k: usize = k.parse().unwrap_or(100);
     let min_frac: f64 = min_frac.parse().unwrap_or(0.05);
     let mut dynamic = crate::screening::dynamic::process_default();
+    let mut working_set = crate::solver::working_set::process_default();
     match mode {
         None => {}
-        Some("dynamic") => dynamic.enabled = true,
-        Some("static") => dynamic.enabled = false,
+        // an explicit `dynamic` request means the dynamic *solver mode* —
+        // it must not be silently absorbed into a process-default
+        // working-set run (whose RESULT would report zero dynamic drops)
+        Some("dynamic") => {
+            dynamic.enabled = true;
+            working_set.enabled = false;
+        }
+        // `static` is the plain solver: neither in-solver machinery runs
+        Some("static") => {
+            dynamic.enabled = false;
+            working_set.enabled = false;
+        }
+        // `ws` composes with the process-wide dynamic default (inner
+        // restricted solves then re-screen mid-solve too)
+        Some("ws") => working_set.enabled = true,
         Some(other) => return err_msg(&format!("bad path mode {other}")),
     }
+    // the optional trailing argument belongs to the mode: recheck cadence
+    // for `dynamic`, expansion batch floor for `ws`
     if let Some(r) = recheck {
-        match r.parse::<usize>() {
-            Ok(v) => dynamic.recheck_every = v,
-            Err(_) => return err_msg(&format!("bad recheck cadence {r}")),
+        match (mode, r.parse::<usize>()) {
+            (Some("ws"), Ok(v)) => working_set.grow = v,
+            (_, Ok(v)) => dynamic.recheck_every = v,
+            (_, Err(_)) => return err_msg(&format!("bad mode argument {r}")),
         }
     }
     // an explicit dynamic request with a 0 cadence would silently run
@@ -256,12 +283,16 @@ fn cmd_path(
     if matches!(mode, Some("dynamic")) && !dynamic.active() {
         return err_msg("dynamic requested but recheck cadence is 0");
     }
+    // same policy for an explicit ws request that could never grow
+    if matches!(mode, Some("ws")) && !working_set.active() {
+        return err_msg("ws requested but the expansion batch is 0");
+    }
     let plan = PathPlan::linear_spaced(&dataset, k.max(2), min_frac.clamp(0.001, 0.99));
     let job_id = state.pool.submit(JobSpec {
         dataset,
         plan,
         rule,
-        opts: PathOptions { dynamic, ..PathOptions::from_process_defaults() },
+        opts: PathOptions { dynamic, working_set, ..PathOptions::from_process_defaults() },
         tag: format!("svc-{rule:?}"),
     });
     let id = state.next_job.fetch_add(1, Ordering::Relaxed);
@@ -321,6 +352,10 @@ fn cmd_result(state: &ServerState, job: &str) -> String {
                 .map(|s| (s.dyn_dropped as f64 / s.kept.max(1) as f64).min(1.0))
                 .collect();
             w.field_f64_array("dynamic_rejection", &dyn_rej);
+            // working-set telemetry: outer iterations + final width per step
+            w.field_u64("ws_outer", res.total_ws_outer() as u64);
+            let ws_w: Vec<f64> = res.steps.iter().map(|s| s.ws_final as f64).collect();
+            w.field_f64_array("ws_width", &ws_w);
             w.finish()
         }
         None => err_msg("job failed or already consumed"),
@@ -506,6 +541,62 @@ mod tests {
         assert!(replies[5].contains("error"), "{}", replies[5]);
         // explicit dynamic with cadence 0 is rejected, not silently static
         assert!(replies[6].contains("error"), "{}", replies[6]);
+        stop.store(true, Ordering::Relaxed);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn working_set_path_jobs_and_reporting() {
+        let _guard = crate::linalg::par::test_knob_guard();
+        // run under a working-set process default: explicit per-job modes
+        // must still mean what they say
+        let ws_before = crate::solver::working_set::process_default();
+        crate::solver::working_set::set_process_default(
+            crate::solver::working_set::WorkingSetOptions::enabled_with_grow(8),
+        );
+        let server = Server::bind("127.0.0.1:0", 1).unwrap();
+        let addr = server.local_addr().unwrap();
+        let stop = server.stop_handle();
+        let h = std::thread::spawn(move || server.serve().unwrap());
+        let replies = send(
+            addr,
+            &[
+                "GEN synthetic100 3 0.01",
+                "PATH 1 sasvi 6 0.1 ws 8",
+                "RESULT 1",
+                "PATH 1 sasvi 6 0.1 static",
+                "RESULT 2",
+                "PATH 1 sasvi 6 0.1 ws 0",
+                "PATH 1 sasvi 6 0.1 dynamic 3",
+                "RESULT 3",
+                "QUIT",
+            ],
+        );
+        // GEN reports the process-wide working-set default
+        assert!(replies[0].contains("\"working_set\": "), "{}", replies[0]);
+        assert!(replies[1].contains("\"job\": 1"), "{}", replies[1]);
+        // a ws job runs outer iterations and reports per-step widths
+        assert!(replies[2].contains("\"ws_outer\": "), "{}", replies[2]);
+        assert!(
+            !replies[2].contains("\"ws_outer\": 0,"),
+            "ws job ran no outer iterations: {}",
+            replies[2]
+        );
+        assert!(replies[2].contains("\"ws_width\": ["), "{}", replies[2]);
+        // static jobs report zero outer iterations even under a ws default
+        assert!(replies[4].contains("\"ws_outer\": 0"), "{}", replies[4]);
+        // explicit ws with a 0 batch is rejected, not silently static
+        assert!(replies[5].contains("error"), "{}", replies[5]);
+        // an explicit `dynamic` job under a ws process default runs the
+        // dynamic solver for real: genuine dynamic drops, no outer iters
+        assert!(replies[6].contains("\"job\": "), "{}", replies[6]);
+        assert!(
+            !replies[7].contains("\"dynamic_dropped\": 0,"),
+            "explicit dynamic job produced no dynamic telemetry: {}",
+            replies[7]
+        );
+        assert!(replies[7].contains("\"ws_outer\": 0"), "{}", replies[7]);
+        crate::solver::working_set::set_process_default(ws_before);
         stop.store(true, Ordering::Relaxed);
         h.join().unwrap();
     }

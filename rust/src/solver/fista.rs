@@ -319,12 +319,12 @@ mod tests {
             .generate(6);
         let lam = 0.1 * ds.lambda_max();
         let mut mask = vec![true; ds.p()];
-        for j in 0..10 {
-            mask[j] = false;
+        for m in mask.iter_mut().take(10) {
+            *m = false;
         }
         let (beta, _) = solve_fista(&ds.x, &ds.y, lam, &mask, &FistaOptions::default());
-        for j in 0..10 {
-            assert_eq!(beta[j], 0.0);
+        for b in beta.iter().take(10) {
+            assert_eq!(*b, 0.0);
         }
     }
 

@@ -6,15 +6,24 @@
 //! masked FISTA that mirrors the L2 JAX graph (used for runtime parity tests
 //! and as an alternative backend).
 //!
-//! Both solve `min_beta 0.5 ||X beta - y||^2 + lambda ||beta||_1`.
+//! On top of both sits the [`working_set`] outer/inner driver: solve on a
+//! small working set, certify with the full duality gap, and grow the set
+//! by the top KKT violators — sharing its per-iteration checkpoint with
+//! [`crate::screening::dynamic`]'s fused prune test.
+//!
+//! All solve `min_beta 0.5 ||X beta - y||^2 + lambda ||beta||_1`.
 
 pub mod cd;
 pub mod fista;
 pub mod kkt;
+pub mod working_set;
 
 pub use cd::{solve_cd, solve_cd_dynamic, CdOptions, CdStats};
 pub use fista::{solve_fista, solve_fista_dynamic, solve_fista_warm, FistaOptions};
 pub use kkt::{check_kkt, KktReport};
+pub use working_set::{
+    solve_working_set_cd, solve_working_set_fista, WorkingSetOptions, WorkingSetTrace,
+};
 
 use crate::linalg::{ops, DesignMatrix};
 

@@ -1,0 +1,813 @@
+//! Working-set solver — screening shrinks, KKT-guided expansion grows.
+//!
+//! Safe screening ([`crate::screening`]) and dynamic re-screening
+//! ([`crate::screening::dynamic`]) only ever *remove* features. This module
+//! implements the complementary move that makes pathwise solvers an order
+//! of magnitude faster in practice (Blitz, Johnson & Guestrin 2015; Celer,
+//! Massias, Gramfort & Salmon 2018; "Safe Active Feature Selection", Ren &
+//! Huang): solve on a *small working set*, then grow it by the features
+//! that actually violate the KKT conditions.
+//!
+//! ## The outer/inner loop
+//!
+//! Given a candidate set `A` (the post-screen kept set) the driver iterates:
+//!
+//! 1. **Shared checkpoint** — one batched `|x_j^T r|` pass over `A` on the
+//!    [`crate::linalg::par`] column-block engine, via the *same*
+//!    [`crate::screening::dynamic::rescreen`] the dynamic checkpoints use.
+//!    The one pass yields three things at once:
+//!    * the **full-problem duality gap** over `A` (stop when it is below
+//!      tolerance — "mind the duality gap": the gap certificate is what
+//!      makes trusting a restricted sub-solve safe, Fercoq, Gramfort &
+//!      Salmon 2015),
+//!    * the fused **VI-ball + gap-sphere prune** of `A` (screening and
+//!      growth share one checkpoint), and
+//!    * the per-feature **expansion scores** `|x_j^T r|`.
+//! 2. **Expansion** — admit the top-K KKT violators (`|x_j^T r| > lambda`,
+//!    largest first, index tie-break) into the working set `W`; the batch
+//!    size grows geometrically (`max(grow, |W|)`) so few outer rounds
+//!    suffice.
+//! 3. **Inner solve** — run CD or compacted FISTA restricted to `W` until
+//!    the *restricted* gap converges. FISTA gathers `W` into a dense
+//!    submatrix with [`crate::linalg::DesignMatrix::gather_columns`]
+//!    (available on both the dense and CSC backends). With
+//!    [`DynamicOptions`] active the inner solve additionally runs its own
+//!    mid-solve re-screens restricted to `W`.
+//!
+//! ## Safety and exactness
+//!
+//! The checkpoint gap is the duality gap of the problem restricted to `A`,
+//! evaluated at the dual-feasible point scaled from the current residual —
+//! when it is below tolerance, the working-set iterate solves the
+//! `A`-restricted problem to the same certificate the static solvers use.
+//! Pruning inherits the dynamic contract (safe whenever `A` itself is
+//! safe; under the unsafe strong rule the coordinator's KKT correction
+//! repairs casualties). Inner-solve dynamic discards are *working-set
+//! local*: they certify zeros of the `W`-restricted problem only, so they
+//! merely shrink `W` — the outer expansion re-admits them if they ever
+//! violate KKT, and the outer certificate never depends on them.
+//!
+//! Everything runs on the deterministic column-block pool with
+//! block-ordered reductions, and the expansion sort is by
+//! (`|x_j^T r|` desc, index asc) with `total_cmp` — working-set solves are
+//! bit-identical at every thread count (`rust/tests/determinism.rs`).
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+use crate::linalg::{ops, DesignMatrix};
+use crate::screening::dynamic::{self, DynamicOptions};
+use crate::solver::cd::{restricted_gap, solve_cd, solve_cd_dynamic, CdOptions, CdStats};
+use crate::solver::fista::{solve_fista_dynamic, solve_fista_warm, FistaOptions};
+
+/// Default floor on the number of violators admitted per expansion (the
+/// actual batch is `max(grow, |W|)` — geometric growth).
+pub const DEFAULT_GROW: usize = 10;
+
+/// Default hard cap on outer iterations. Termination never depends on it
+/// (expansion is monotone and bounded by the candidate width); it bounds
+/// the cost of pathological stalls.
+pub const DEFAULT_MAX_OUTER: usize = 50;
+
+/// Knobs for the working-set outer/inner solver.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WorkingSetOptions {
+    pub enabled: bool,
+    /// Floor on violators admitted per expansion; the batch grows
+    /// geometrically as `max(grow, current width)`. `0` degrades to the
+    /// plain (non-working-set) solver instead of erroring, mirroring
+    /// `recheck_every == 0` in [`DynamicOptions`].
+    pub grow: usize,
+    /// Hard cap on outer iterations.
+    pub max_outer: usize,
+}
+
+impl Default for WorkingSetOptions {
+    fn default() -> Self {
+        Self::off()
+    }
+}
+
+impl WorkingSetOptions {
+    /// Working-set solving off (the plain-solver baseline).
+    pub fn off() -> Self {
+        Self { enabled: false, grow: DEFAULT_GROW, max_outer: DEFAULT_MAX_OUTER }
+    }
+
+    /// Working-set solving on with the given expansion floor.
+    pub fn enabled_with_grow(grow: usize) -> Self {
+        Self { enabled: true, grow, max_outer: DEFAULT_MAX_OUTER }
+    }
+
+    /// True when the outer/inner loop will actually run.
+    pub fn active(&self) -> bool {
+        self.enabled && self.grow > 0 && self.max_outer > 0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// process-wide default (the global CLI `--working-set` flag / config / server)
+// ---------------------------------------------------------------------------
+
+static PROCESS_ENABLED: AtomicBool = AtomicBool::new(false);
+static PROCESS_GROW: AtomicUsize = AtomicUsize::new(DEFAULT_GROW);
+
+/// Set the process-wide working-set default. Consulted wherever path options
+/// are built from user input (CLI commands, the server's `PATH` jobs),
+/// mirroring [`crate::screening::dynamic::set_process_default`]. Library
+/// callers building a `PathOptions` directly are unaffected.
+pub fn set_process_default(opts: WorkingSetOptions) {
+    PROCESS_ENABLED.store(opts.enabled, Ordering::Relaxed);
+    PROCESS_GROW.store(opts.grow, Ordering::Relaxed);
+}
+
+/// The current process-wide working-set default.
+pub fn process_default() -> WorkingSetOptions {
+    WorkingSetOptions {
+        enabled: PROCESS_ENABLED.load(Ordering::Relaxed),
+        grow: PROCESS_GROW.load(Ordering::Relaxed),
+        max_outer: DEFAULT_MAX_OUTER,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// per-solve trace (the observability the coordinator / server / bench consume)
+// ---------------------------------------------------------------------------
+
+/// One outer iteration: checkpoint, expansion, inner solve.
+#[derive(Clone, Debug)]
+pub struct OuterEvent {
+    /// outer iteration index (monotone within a solve; renumbered on
+    /// [`WorkingSetTrace::absorb`])
+    pub outer: usize,
+    /// working-set width the inner solve started at (post-expansion)
+    pub width: usize,
+    /// epochs (CD) / iterations (FISTA) of the inner solve
+    pub inner_epochs: usize,
+    /// `epochs x width` work integral of the inner solve (inner dynamic
+    /// shrink already accounted)
+    pub work: u64,
+    /// full candidate-set duality gap at this iteration's checkpoint
+    pub gap: f64,
+    /// candidates pruned from `A` by the checkpoint's fused VI + gap test
+    pub pruned: Vec<usize>,
+    /// KKT violators admitted into the working set after the checkpoint
+    pub added: usize,
+}
+
+/// The full outer-iteration history of one working-set solve.
+#[derive(Clone, Debug, Default)]
+pub struct WorkingSetTrace {
+    /// candidate-set width when the solve started (kept by
+    /// [`WorkingSetTrace::absorb`]: a KKT-correction re-solve does not
+    /// reset what the step began with)
+    pub initial_active: usize,
+    /// working-set width before the first checkpoint (warm support ∪ seed)
+    pub initial_width: usize,
+    pub events: Vec<OuterEvent>,
+    /// the working set at exit (global column indices) — the coordinator
+    /// carries it to the next grid point as a warm-started seed
+    pub final_ws: Vec<usize>,
+}
+
+impl WorkingSetTrace {
+    /// Outer iterations run (checkpoints taken).
+    pub fn outer_iters(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Working-set width at exit.
+    pub fn final_width(&self) -> usize {
+        self.final_ws.len()
+    }
+
+    /// Widest working set any inner solve ran at.
+    pub fn max_width(&self) -> usize {
+        self.events.iter().map(|e| e.width).max().unwrap_or(self.initial_width)
+    }
+
+    /// Candidates pruned across all checkpoints.
+    pub fn pruned_total(&self) -> usize {
+        self.events.iter().map(|e| e.pruned.len()).sum()
+    }
+
+    /// Total `epochs x width` solver work — the working-set analogue of
+    /// [`crate::screening::dynamic::DynamicTrace::solver_work`], and the
+    /// quantity `benches/working_set.rs` compares against the dynamic path.
+    pub fn solver_work(&self) -> u64 {
+        self.events.iter().map(|e| e.work).sum()
+    }
+
+    /// Append a correction re-solve's events (outer indices renumbered to
+    /// stay monotone) and adopt its final working set.
+    pub fn absorb(&mut self, other: WorkingSetTrace) {
+        let off = self.events.len();
+        for (i, mut ev) in other.events.into_iter().enumerate() {
+            ev.outer = off + i;
+            self.events.push(ev);
+        }
+        self.final_ws = other.final_ws;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the outer/inner driver
+// ---------------------------------------------------------------------------
+
+/// The shared outer loop. `inner` solves the problem restricted to the
+/// working set it is given (which it may shrink — inner dynamic screening
+/// does), maintaining the `beta`/`resid` invariants, and returns its stats
+/// plus its `epochs x width` work integral.
+#[allow(clippy::too_many_arguments)]
+fn drive<Inner>(
+    x: &DesignMatrix,
+    y: &[f64],
+    lambda: f64,
+    active: &mut Vec<usize>,
+    col_norms_sq: &[f64],
+    xty: &[f64],
+    beta: &mut [f64],
+    resid: &mut [f64],
+    gap_tol: f64,
+    seed: Option<&[usize]>,
+    ws_opts: &WorkingSetOptions,
+    mut inner: Inner,
+) -> (CdStats, WorkingSetTrace)
+where
+    Inner: FnMut(&mut Vec<usize>, &mut [f64], &mut [f64]) -> (CdStats, u64),
+{
+    assert!(lambda > 0.0, "working-set solving needs lambda > 0");
+    let p = x.ncols();
+    let mut stats = CdStats::default();
+    let gap_scale = 0.5 * ops::nrm2sq(y) + 1e-12;
+    let tol = gap_tol * gap_scale;
+
+    let mut alive = vec![false; p];
+    for &j in active.iter() {
+        alive[j] = true;
+    }
+    // initial working set: warm-start support ∪ caller-provided seed
+    // (the coordinator seeds with the previous step's working set plus the
+    // strong-rule survivors — the classic pathwise initialization)
+    let mut in_ws = vec![false; p];
+    let mut ws: Vec<usize> = Vec::new();
+    for &j in active.iter() {
+        if beta[j] != 0.0 {
+            ws.push(j);
+            in_ws[j] = true;
+        }
+    }
+    if let Some(seed) = seed {
+        for &j in seed {
+            if j < p && alive[j] && !in_ws[j] {
+                ws.push(j);
+                in_ws[j] = true;
+            }
+        }
+    }
+    let mut trace = WorkingSetTrace {
+        initial_active: active.len(),
+        initial_width: ws.len(),
+        events: Vec::new(),
+        final_ws: Vec::new(),
+    };
+    let mut xt_r = vec![0.0; p];
+    let mut stall_rounds = 0usize;
+    // true when the loop exited right after a checkpoint with beta/resid
+    // untouched since — the checkpoint's gap is then already the honest
+    // closing gap and the epilogue must not repeat the full pass
+    let mut exit_gap_fresh = false;
+
+    for outer in 0..ws_opts.max_outer {
+        // ---- shared checkpoint: one |X_A^T r| pass over the candidates --
+        let rs = dynamic::rescreen(
+            x, y, lambda, xty, col_norms_sq, active, beta, resid, &mut xt_r,
+        );
+        let pruned = rs.dropped;
+        let mut evicted = false;
+        if !pruned.is_empty() {
+            for &j in &pruned {
+                alive[j] = false;
+                in_ws[j] = false;
+                if beta[j] != 0.0 {
+                    // safe: the checkpoint certifies beta*_j = 0 on A
+                    x.axpy_col(beta[j], j, resid);
+                    beta[j] = 0.0;
+                    evicted = true;
+                }
+            }
+            *active = rs.survivors;
+            ws.retain(|&j| alive[j]);
+        }
+        // an eviction changed (beta, resid) after the gap was computed, so
+        // the stale value must not certify convergence this round
+        if !evicted && rs.gap <= tol {
+            stats.converged = true;
+            stats.final_gap = Some(rs.gap);
+            trace.events.push(OuterEvent {
+                outer,
+                width: ws.len(),
+                inner_epochs: 0,
+                work: 0,
+                gap: rs.gap,
+                pruned,
+                added: 0,
+            });
+            break;
+        }
+        stats.final_gap = if evicted { None } else { Some(rs.gap) };
+
+        // ---- KKT-guided expansion: top-K violators among A \ W ----------
+        // xt_r[j] = <x_j, r> for every candidate (filled by the checkpoint).
+        // Violators are exactly the features making the candidate-set
+        // infeasibility exceed lambda; no violators means the restricted
+        // optimum already satisfies the full KKT system.
+        let s: &[f64] = &xt_r;
+        let mut viol: Vec<usize> = active
+            .iter()
+            .copied()
+            .filter(|&j| !in_ws[j] && s[j].abs() > lambda)
+            .collect();
+        viol.sort_unstable_by(|&a, &b| {
+            s[b].abs().total_cmp(&s[a].abs()).then_with(|| a.cmp(&b))
+        });
+        let batch = ws.len().max(ws_opts.grow).min(viol.len());
+        for &j in viol.iter().take(batch) {
+            in_ws[j] = true;
+            ws.push(j);
+        }
+
+        // No violators, nothing pruned, nothing evicted, and still above
+        // tolerance: the inner solve stopped on its coefficient-change
+        // criterion short of the gap certificate. Re-running the inner
+        // solve once may still help (warm restart); two idle rounds in a
+        // row cannot — stop instead of burning full passes.
+        if batch == 0 && pruned.is_empty() && !evicted {
+            stall_rounds += 1;
+            if stall_rounds >= 2 {
+                trace.events.push(OuterEvent {
+                    outer,
+                    width: ws.len(),
+                    inner_epochs: 0,
+                    work: 0,
+                    gap: rs.gap,
+                    pruned,
+                    added: 0,
+                });
+                // nothing moved since this round's checkpoint: its gap
+                // (already in stats.final_gap) is the closing gap
+                exit_gap_fresh = true;
+                break;
+            }
+        } else {
+            stall_rounds = 0;
+        }
+
+        // ---- inner solve restricted to the working set ------------------
+        let width = ws.len();
+        let (ist, work) = inner(&mut ws, beta, resid);
+        stats.epochs += ist.epochs;
+        stats.coord_updates += ist.coord_updates;
+        // the inner solve may have shrunk W (inner dynamic screening);
+        // refresh the membership mask from scratch
+        in_ws.fill(false);
+        for &j in ws.iter() {
+            in_ws[j] = true;
+        }
+        trace.events.push(OuterEvent {
+            outer,
+            width,
+            inner_epochs: ist.epochs,
+            work,
+            gap: rs.gap,
+            pruned,
+            added: batch,
+        });
+    }
+
+    if !stats.converged && !exit_gap_fresh {
+        // max_outer exhaustion ended the loop after an inner solve moved
+        // beta/resid: report an honest closing gap over the survivors
+        // (a stall exit already holds this round's checkpoint gap)
+        let gap = restricted_gap(x, y, lambda, active, beta, resid);
+        stats.converged = gap <= tol;
+        stats.final_gap = Some(gap);
+    }
+    trace.final_ws = ws;
+    (stats, trace)
+}
+
+/// Working-set solve with coordinate descent as the inner solver.
+///
+/// `active` is the candidate set (e.g. the post-screen kept set); it is
+/// pruned in place by the outer checkpoints, exactly like
+/// [`solve_cd_dynamic`] shrinks its active set. `beta`/`resid` are the
+/// usual warm-start state (`resid = y - X beta` on entry, maintained on
+/// exit); `xty[j] = <x_j, y>` must be valid for every candidate. `seed`
+/// optionally pre-populates the working set (entries outside `active` are
+/// ignored). With `dyn_opts` active the inner CD solves run their own
+/// mid-solve re-screens restricted to the working set.
+#[allow(clippy::too_many_arguments)]
+pub fn solve_working_set_cd(
+    x: &DesignMatrix,
+    y: &[f64],
+    lambda: f64,
+    active: &mut Vec<usize>,
+    col_norms_sq: &[f64],
+    xty: &[f64],
+    beta: &mut [f64],
+    resid: &mut [f64],
+    cd: &CdOptions,
+    dyn_opts: &DynamicOptions,
+    ws_opts: &WorkingSetOptions,
+    seed: Option<&[usize]>,
+) -> (CdStats, WorkingSetTrace) {
+    let dyn_opts = *dyn_opts;
+    let cd = *cd;
+    drive(
+        x,
+        y,
+        lambda,
+        active,
+        col_norms_sq,
+        xty,
+        beta,
+        resid,
+        cd.gap_tol,
+        seed,
+        ws_opts,
+        |ws, beta, resid| {
+            if dyn_opts.active() {
+                let (st, tr) = solve_cd_dynamic(
+                    x, y, lambda, ws, col_norms_sq, xty, beta, resid, &cd, &dyn_opts,
+                );
+                let work = tr.solver_work(st.epochs);
+                (st, work)
+            } else {
+                let st = solve_cd(x, y, lambda, ws, col_norms_sq, beta, resid, &cd);
+                (st, st.epochs as u64 * ws.len() as u64)
+            }
+        },
+    )
+}
+
+/// Working-set solve with compacted FISTA as the inner solver: each inner
+/// solve gathers the working set into a dense submatrix
+/// ([`DesignMatrix::gather_columns`], both backends) and runs accelerated
+/// proximal gradient on it, then scatters the coefficients back and patches
+/// the residual by the per-column deltas. `gap_tol` is the relative
+/// full-gap certificate tolerance (the path coordinator passes its CD
+/// `gap_tol` so both solvers stop at the same certificate).
+#[allow(clippy::too_many_arguments)]
+pub fn solve_working_set_fista(
+    x: &DesignMatrix,
+    y: &[f64],
+    lambda: f64,
+    active: &mut Vec<usize>,
+    col_norms_sq: &[f64],
+    xty: &[f64],
+    beta: &mut [f64],
+    resid: &mut [f64],
+    fista: &FistaOptions,
+    gap_tol: f64,
+    dyn_opts: &DynamicOptions,
+    ws_opts: &WorkingSetOptions,
+    seed: Option<&[usize]>,
+) -> (CdStats, WorkingSetTrace) {
+    let dyn_opts = *dyn_opts;
+    let fista = *fista;
+    drive(
+        x,
+        y,
+        lambda,
+        active,
+        col_norms_sq,
+        xty,
+        beta,
+        resid,
+        gap_tol,
+        seed,
+        ws_opts,
+        |ws, beta, resid| {
+            let k = ws.len();
+            if k == 0 {
+                return (
+                    CdStats { epochs: 0, coord_updates: 0, converged: true, final_gap: None },
+                    0,
+                );
+            }
+            let sub: DesignMatrix = x.gather_columns(ws).into();
+            let beta0: Vec<f64> = ws.iter().map(|&j| beta[j]).collect();
+            let old = beta0.clone();
+            let (beta_w, iters, work) = if dyn_opts.active() {
+                // per-column stats gathered in O(|W|) from the caller's
+                // precompute — no whole-submatrix passes inside the solver
+                let xty_sub: Vec<f64> = ws.iter().map(|&j| xty[j]).collect();
+                let norms_sub: Vec<f64> = ws.iter().map(|&j| col_norms_sq[j]).collect();
+                let (b, it, tr) = solve_fista_dynamic(
+                    &sub,
+                    y,
+                    lambda,
+                    beta0,
+                    Some((xty_sub, norms_sub)),
+                    &fista,
+                    &dyn_opts,
+                );
+                let work = tr.solver_work(it);
+                (b, it, work)
+            } else {
+                let mask = vec![true; k];
+                let (b, it) = solve_fista_warm(&sub, y, lambda, &mask, beta0, &fista);
+                (b, it, (it * k) as u64)
+            };
+            // scatter back and patch the residual by the column deltas:
+            // resid stays exactly y - X beta
+            for (c, &j) in ws.iter().enumerate() {
+                let d = beta_w[c] - old[c];
+                if d != 0.0 {
+                    x.axpy_col(-d, j, resid);
+                }
+                beta[j] = beta_w[c];
+            }
+            (
+                CdStats { epochs: iters, coord_updates: work, converged: true, final_gap: None },
+                work,
+            )
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticSpec;
+
+    fn tight() -> CdOptions {
+        CdOptions { max_epochs: 30_000, tol: 1e-12, gap_tol: 1e-12, ..Default::default() }
+    }
+
+    fn solve_full(ds: &crate::data::Dataset, lam: f64, opts: &CdOptions) -> (Vec<f64>, Vec<f64>) {
+        let active: Vec<usize> = (0..ds.p()).collect();
+        let norms = ds.x.col_norms_sq();
+        let mut beta = vec![0.0; ds.p()];
+        let mut resid = ds.y.clone();
+        solve_cd(&ds.x, &ds.y, lam, &active, &norms, &mut beta, &mut resid, opts);
+        (beta, resid)
+    }
+
+    fn solve_ws(
+        ds: &crate::data::Dataset,
+        lam: f64,
+        cd: &CdOptions,
+        dyn_opts: &DynamicOptions,
+        seed: Option<&[usize]>,
+    ) -> (Vec<f64>, Vec<usize>, CdStats, WorkingSetTrace) {
+        let pre = ds.precompute();
+        let mut active: Vec<usize> = (0..ds.p()).collect();
+        let mut beta = vec![0.0; ds.p()];
+        let mut resid = ds.y.clone();
+        let (stats, trace) = solve_working_set_cd(
+            &ds.x,
+            &ds.y,
+            lam,
+            &mut active,
+            &pre.col_norms_sq,
+            &pre.xty,
+            &mut beta,
+            &mut resid,
+            cd,
+            dyn_opts,
+            &WorkingSetOptions::enabled_with_grow(5),
+            seed,
+        );
+        (beta, active, stats, trace)
+    }
+
+    #[test]
+    fn matches_full_solve_and_grows_from_empty() {
+        for seed in [3u64, 11] {
+            let ds = SyntheticSpec { n: 40, p: 150, nnz: 12, ..Default::default() }
+                .generate(seed);
+            let lam = 0.3 * ds.lambda_max();
+            let (beta_f, resid_f) = solve_full(&ds, lam, &tight());
+            let (beta_w, active, stats, trace) =
+                solve_ws(&ds, lam, &tight(), &DynamicOptions::off(), None);
+            assert!(stats.converged, "seed {seed}: {stats:?}");
+            assert!(trace.outer_iters() >= 2, "expansion never ran");
+            assert_eq!(trace.initial_width, 0, "cold start has an empty seed");
+            for j in 0..ds.p() {
+                assert!(
+                    (beta_f[j] - beta_w[j]).abs() < 1e-7,
+                    "seed {seed} j={j}: {} vs {}",
+                    beta_f[j],
+                    beta_w[j]
+                );
+            }
+            // 1e-8 relative objective agreement (the acceptance bar)
+            let obj_f = crate::solver::primal_objective(&resid_f, &beta_f, lam);
+            let mut fit = vec![0.0; ds.n()];
+            ds.x.matvec(&beta_w, &mut fit);
+            let resid_w: Vec<f64> =
+                ds.y.iter().zip(fit.iter()).map(|(y, f)| y - f).collect();
+            let obj_w = crate::solver::primal_objective(&resid_w, &beta_w, lam);
+            assert!(
+                (obj_f - obj_w).abs() <= 1e-8 * (1.0 + obj_f.abs()),
+                "seed {seed}: objectives {obj_f} vs {obj_w}"
+            );
+            // the support lives inside the final working set, which lives
+            // inside the surviving candidates
+            for j in 0..ds.p() {
+                if beta_w[j] != 0.0 {
+                    assert!(trace.final_ws.contains(&j), "support {j} outside W");
+                }
+            }
+            for &j in &trace.final_ws {
+                assert!(active.contains(&j), "W member {j} pruned from A");
+            }
+            // the working set stayed much smaller than the candidate set
+            assert!(trace.max_width() < ds.p(), "working set never restricted");
+        }
+    }
+
+    #[test]
+    fn inner_dynamic_composes() {
+        let ds = SyntheticSpec { n: 40, p: 150, nnz: 12, ..Default::default() }.generate(5);
+        let lam = 0.25 * ds.lambda_max();
+        let (beta_f, _) = solve_full(&ds, lam, &tight());
+        let (beta_w, _, stats, trace) =
+            solve_ws(&ds, lam, &tight(), &DynamicOptions::enabled_every(3), None);
+        assert!(stats.converged);
+        assert!(trace.solver_work() > 0);
+        for j in 0..ds.p() {
+            assert!(
+                (beta_f[j] - beta_w[j]).abs() < 1e-7,
+                "j={j}: {} vs {}",
+                beta_f[j],
+                beta_w[j]
+            );
+        }
+    }
+
+    #[test]
+    fn above_lambda_max_certifies_at_outer_zero() {
+        let ds = SyntheticSpec { n: 20, p: 60, nnz: 5, ..Default::default() }.generate(9);
+        let lam = 1.05 * ds.lambda_max();
+        let (beta, active, stats, trace) =
+            solve_ws(&ds, lam, &CdOptions::default(), &DynamicOptions::off(), None);
+        assert!(stats.converged);
+        assert_eq!(stats.epochs, 0, "no inner solve should run");
+        assert_eq!(trace.outer_iters(), 1);
+        assert!(trace.final_ws.is_empty());
+        assert!(beta.iter().all(|&b| b == 0.0));
+        // the fused prune discards (nearly) every candidate before solving
+        assert!(active.len() <= 2, "{} candidates survived", active.len());
+    }
+
+    #[test]
+    fn seed_prepopulates_the_working_set() {
+        let ds = SyntheticSpec { n: 30, p: 80, nnz: 6, ..Default::default() }.generate(2);
+        let lam = 0.4 * ds.lambda_max();
+        let seed: Vec<usize> = (0..10).collect();
+        let (beta, _, stats, trace) =
+            solve_ws(&ds, lam, &tight(), &DynamicOptions::off(), Some(&seed));
+        assert_eq!(trace.initial_width, 10);
+        assert!(stats.converged);
+        let (beta_f, _) = solve_full(&ds, lam, &tight());
+        for j in 0..ds.p() {
+            assert!((beta[j] - beta_f[j]).abs() < 1e-7, "j={j}");
+        }
+        // out-of-range / duplicate seed entries are ignored, not fatal
+        let weird = [0usize, 0, 5, usize::MAX.min(ds.p() + 100)];
+        let (_, _, stats2, trace2) =
+            solve_ws(&ds, lam, &tight(), &DynamicOptions::off(), Some(&weird));
+        assert!(stats2.converged);
+        assert_eq!(trace2.initial_width, 2, "dedup + bounds filter");
+    }
+
+    #[test]
+    fn rough_inner_solver_still_terminates() {
+        // an inner solver that cannot reach the certificate must not spin:
+        // the stall detector ends the loop within max_outer
+        let ds = SyntheticSpec { n: 30, p: 100, nnz: 10, ..Default::default() }.generate(7);
+        let lam = 0.3 * ds.lambda_max();
+        let rough = CdOptions { max_epochs: 2, gap_check_every: 0, ..Default::default() };
+        let (beta, _, stats, trace) =
+            solve_ws(&ds, lam, &rough, &DynamicOptions::off(), None);
+        assert!(trace.outer_iters() <= DEFAULT_MAX_OUTER);
+        assert!(beta.iter().all(|b| b.is_finite()));
+        assert!(stats.final_gap.is_some(), "closing gap always reported");
+    }
+
+    #[test]
+    fn fista_inner_matches_cd_inner() {
+        for density in [1.0f64, 0.1] {
+            let ds = SyntheticSpec {
+                n: 30,
+                p: 90,
+                nnz: 8,
+                density,
+                ..Default::default()
+            }
+            .generate(13);
+            assert_eq!(ds.x.is_sparse(), density < 1.0);
+            let lam = 0.3 * ds.lambda_max();
+            let pre = ds.precompute();
+            let fista = FistaOptions { max_iters: 20_000, tol: 1e-14, lipschitz: None };
+            let mut active: Vec<usize> = (0..ds.p()).collect();
+            let mut beta = vec![0.0; ds.p()];
+            let mut resid = ds.y.clone();
+            let (stats, trace) = solve_working_set_fista(
+                &ds.x,
+                &ds.y,
+                lam,
+                &mut active,
+                &pre.col_norms_sq,
+                &pre.xty,
+                &mut beta,
+                &mut resid,
+                &fista,
+                1e-10,
+                &DynamicOptions::off(),
+                &WorkingSetOptions::enabled_with_grow(5),
+                None,
+            );
+            assert!(stats.converged, "density {density}: {stats:?}");
+            assert!(trace.outer_iters() >= 2);
+            let (beta_f, _) = solve_full(&ds, lam, &tight());
+            for j in 0..ds.p() {
+                assert!(
+                    (beta_f[j] - beta[j]).abs() < 1e-6,
+                    "density {density} j={j}: {} vs {}",
+                    beta_f[j],
+                    beta[j]
+                );
+            }
+            // the residual invariant survived the scatter/patch updates
+            let mut fit = vec![0.0; ds.n()];
+            ds.x.matvec(&beta, &mut fit);
+            for i in 0..ds.n() {
+                assert!((resid[i] - (ds.y[i] - fit[i])).abs() < 1e-8, "i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn options_and_process_default_round_trip() {
+        let _guard = crate::linalg::par::test_knob_guard();
+        let before = process_default();
+        assert!(!WorkingSetOptions::off().active());
+        assert!(WorkingSetOptions::enabled_with_grow(3).active());
+        assert!(!WorkingSetOptions { enabled: true, grow: 0, max_outer: 10 }.active());
+        assert!(!WorkingSetOptions { enabled: true, grow: 5, max_outer: 0 }.active());
+        set_process_default(WorkingSetOptions::enabled_with_grow(17));
+        assert_eq!(process_default(), WorkingSetOptions::enabled_with_grow(17));
+        set_process_default(before);
+    }
+
+    #[test]
+    fn trace_accounting() {
+        let mut t = WorkingSetTrace {
+            initial_active: 100,
+            initial_width: 4,
+            events: Vec::new(),
+            final_ws: vec![1, 2, 3],
+        };
+        t.events.push(OuterEvent {
+            outer: 0,
+            width: 10,
+            inner_epochs: 5,
+            work: 50,
+            gap: 1.0,
+            pruned: vec![7, 9],
+            added: 6,
+        });
+        t.events.push(OuterEvent {
+            outer: 1,
+            width: 20,
+            inner_epochs: 3,
+            work: 60,
+            gap: 0.1,
+            pruned: Vec::new(),
+            added: 10,
+        });
+        assert_eq!(t.outer_iters(), 2);
+        assert_eq!(t.max_width(), 20);
+        assert_eq!(t.pruned_total(), 2);
+        assert_eq!(t.solver_work(), 110);
+        assert_eq!(t.final_width(), 3);
+        let mut other = WorkingSetTrace::default();
+        other.events.push(OuterEvent {
+            outer: 0,
+            width: 8,
+            inner_epochs: 2,
+            work: 16,
+            gap: 0.01,
+            pruned: Vec::new(),
+            added: 0,
+        });
+        other.final_ws = vec![4, 5];
+        t.absorb(other);
+        assert_eq!(t.events.last().unwrap().outer, 2, "renumbered monotone");
+        assert_eq!(t.solver_work(), 126);
+        assert_eq!(t.final_width(), 2);
+    }
+}

@@ -10,6 +10,8 @@
 //!   * all four screening rules' bounds and fused screens,
 //!   * the batched Theorem-4 sure-removal analysis,
 //!   * a whole screened path run,
+//!   * dynamically screened and working-set paths (checkpoint decisions,
+//!     prunes, expansions),
 //!
 //! comparing against genuinely serial references (the storage backends'
 //! own loops, or the pool pinned to one lane) with `f64::to_bits`
@@ -325,6 +327,96 @@ fn dynamic_path_bit_identical_and_matches_static_objectives() {
                 assert!(
                     (od - os).abs() <= 1e-10 * (1.0 + os.abs()),
                     "{solver:?} ({}): step {k} objective {od} vs static {os}",
+                    ds.x.storage()
+                );
+            }
+        }
+    }
+    par::set_threads(before);
+}
+
+/// The working-set determinism contract: outer checkpoints (fused prune +
+/// expansion scores) run on the batched engine with block-ordered
+/// reductions, and the expansion sort breaks ties by index — so a
+/// working-set path is bit-identical at every thread count, on both
+/// solvers and both storage backends, and its objectives match the static
+/// path to 1e-10.
+#[test]
+fn working_set_path_bit_identical_and_matches_static_objectives() {
+    let _guard = THREAD_KNOB.lock().unwrap();
+    let before = par::threads();
+    let sp = SyntheticSpec {
+        n: 50,
+        p: 600,
+        nnz: 20,
+        density: 0.08,
+        ..Default::default()
+    }
+    .generate(23);
+    let mut dn = sp.clone();
+    dn.x = sp.x.to_dense().into();
+    let cd = CdOptions { max_epochs: 30_000, tol: 1e-12, gap_tol: 1e-12, ..Default::default() };
+    let fista = sasvi::solver::FistaOptions { max_iters: 20_000, tol: 1e-14, lipschitz: None };
+    for ds in [&dn, &sp] {
+        let plan = PathPlan::linear_spaced(ds, 10, 0.2);
+        for solver in [SolverKind::Cd, SolverKind::Fista] {
+            let opts_ws = PathOptions {
+                solver,
+                cd,
+                fista,
+                working_set: sasvi::solver::working_set::WorkingSetOptions::enabled_with_grow(7),
+                ..Default::default()
+            };
+            par::set_threads(1);
+            let serial = run_path_keep_betas(ds, &plan, RuleKind::Sasvi, opts_ws);
+            assert!(
+                serial.total_ws_outer() > 0,
+                "{solver:?} ({}): no outer iterations — vacuous",
+                ds.x.storage()
+            );
+            for lanes in [2usize, 4, 8] {
+                par::set_threads(lanes);
+                let parallel = run_path_keep_betas(ds, &plan, RuleKind::Sasvi, opts_ws);
+                let a = serial.betas.as_ref().unwrap();
+                let b = parallel.betas.as_ref().unwrap();
+                for (k, (sa, sb)) in a.iter().zip(b.iter()).enumerate() {
+                    assert_bits_eq(
+                        sa,
+                        sb,
+                        &format!("{solver:?} {} ws path step {k} lanes {lanes}",
+                                 ds.x.storage()),
+                    );
+                }
+                let ta = serial.working_set.as_ref().unwrap();
+                let tb = parallel.working_set.as_ref().unwrap();
+                for (k, (s1, s2)) in serial.steps.iter().zip(parallel.steps.iter()).enumerate() {
+                    assert_eq!(s1.kept, s2.kept, "kept diverged at lanes {lanes}");
+                    assert_eq!(s1.ws_outer, s2.ws_outer,
+                               "outer iterations diverged at lanes {lanes}");
+                    assert_eq!(s1.ws_final, s2.ws_final,
+                               "final width diverged at lanes {lanes}");
+                    assert_eq!(s1.ws_pruned, s2.ws_pruned,
+                               "prune count diverged at lanes {lanes}");
+                    assert_eq!(s1.epochs, s2.epochs,
+                               "epoch count diverged at lanes {lanes}");
+                    assert_eq!(ta[k].final_ws, tb[k].final_ws,
+                               "working set diverged at step {k} lanes {lanes}");
+                }
+                assert_eq!(serial.solver_work(), parallel.solver_work(),
+                           "work integral diverged at lanes {lanes}");
+            }
+            // static reference with the same solver tolerances
+            par::set_threads(before.max(1));
+            let opts_static = PathOptions { solver, cd, fista, ..Default::default() };
+            let stat = run_path_keep_betas(ds, &plan, RuleKind::Sasvi, opts_static);
+            let bw = serial.betas.as_ref().unwrap();
+            let bs = stat.betas.as_ref().unwrap();
+            for (k, lam) in plan.lambdas.iter().enumerate() {
+                let ow = objective(ds, &bw[k], *lam);
+                let os = objective(ds, &bs[k], *lam);
+                assert!(
+                    (ow - os).abs() <= 1e-10 * (1.0 + os.abs()),
+                    "{solver:?} ({}): step {k} objective {ow} vs static {os}",
                     ds.x.storage()
                 );
             }

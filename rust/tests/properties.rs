@@ -346,6 +346,95 @@ fn prop_sparse_dense_path_parity() {
 }
 
 #[test]
+fn prop_working_set_matches_full_solve() {
+    // The working-set subsystem's exactness contract: on random dense and
+    // 5%-dense CSC problems, working-set solves agree with full unscreened
+    // solves to 1e-8 relative objective at every grid point, for both
+    // solvers, with and without dynamic screening in the inner solves.
+    use sasvi::coordinator::SolverKind;
+    use sasvi::data::synthetic::SyntheticSpec;
+    use sasvi::screening::dynamic::DynamicOptions;
+    use sasvi::solver::primal_objective;
+    use sasvi::solver::working_set::WorkingSetOptions;
+    forall(111, 6, 36, 90, |case| {
+        for density in [1.0f64, 0.05] {
+            let ds = SyntheticSpec {
+                n: case.n.max(12),
+                p: case.p.max(30),
+                nnz: case.nnz.max(2),
+                density,
+                ..Default::default()
+            }
+            .generate(case.seed);
+            if (density < 1.0) != ds.x.is_sparse() {
+                return Err("generator picked the wrong backend".into());
+            }
+            let plan = PathPlan::linear_spaced(&ds, 6, 0.1);
+            let cd = CdOptions {
+                max_epochs: 20_000,
+                tol: 1e-12,
+                gap_tol: 1e-12,
+                ..Default::default()
+            };
+            let fista = sasvi::solver::FistaOptions {
+                max_iters: 20_000,
+                tol: 1e-14,
+                lipschitz: None,
+            };
+            // ground truth: full unscreened solves at every grid point
+            let base = run_path_keep_betas(
+                &ds,
+                &plan,
+                RuleKind::None,
+                PathOptions { cd, ..Default::default() },
+            );
+            let b0 = base.betas.as_ref().unwrap();
+            let mut fit = vec![0.0; ds.n()];
+            let mut obj = |beta: &[f64], lam: f64| {
+                ds.x.matvec(beta, &mut fit);
+                let resid: Vec<f64> =
+                    ds.y.iter().zip(fit.iter()).map(|(a, b)| a - b).collect();
+                primal_objective(&resid, beta, lam)
+            };
+            for solver in [SolverKind::Cd, SolverKind::Fista] {
+                for dyn_on in [false, true] {
+                    let opts = PathOptions {
+                        solver,
+                        cd,
+                        fista,
+                        dynamic: if dyn_on {
+                            DynamicOptions::enabled_every(3)
+                        } else {
+                            DynamicOptions::off()
+                        },
+                        working_set: WorkingSetOptions::enabled_with_grow(5),
+                        ..Default::default()
+                    };
+                    let r = run_path_keep_betas(&ds, &plan, RuleKind::Sasvi, opts);
+                    if r.total_ws_outer() == 0 {
+                        return Err(format!(
+                            "{solver:?} dyn={dyn_on}: no outer iterations — vacuous"
+                        ));
+                    }
+                    let bw = r.betas.as_ref().unwrap();
+                    for (k, lam) in plan.lambdas.iter().enumerate() {
+                        let o0 = obj(&b0[k], *lam);
+                        let ow = obj(&bw[k], *lam);
+                        if (ow - o0).abs() > 1e-8 * (1.0 + o0.abs()) {
+                            return Err(format!(
+                                "{solver:?} dyn={dyn_on} density={density} step {k}: \
+                                 objective {ow} vs full {o0}"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_io_roundtrip() {
     forall(108, 10, 25, 50, |case| {
         let ds = build_instance(case);
