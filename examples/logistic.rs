@@ -1,0 +1,108 @@
+//! §6 extension: the sparse-logistic λ-path as a first-class workload —
+//! SasviQ screening (KKT-corrected, so the path is exact), the gap-safe
+//! dynamic checkpoint inside the solver, and the per-step rejection trace.
+//!
+//! ```sh
+//! cargo run --release --example logistic
+//! ```
+
+use std::time::Instant;
+
+use sasvi::coordinator::logistic::{run_logistic_path_keep_betas, LogisticPathOptions};
+use sasvi::coordinator::PathPlan;
+use sasvi::data::synthetic::SyntheticSpec;
+use sasvi::logistic::{LogiRule, LogisticOptions, LogisticProblem};
+use sasvi::metrics::Table;
+use sasvi::screening::dynamic::DynamicOptions;
+
+fn main() {
+    // genuine ±1 labels from the data layer's classification knob
+    let ds = SyntheticSpec {
+        n: 150,
+        p: 1500,
+        nnz: 75,
+        classification: true,
+        ..Default::default()
+    }
+    .generate(13);
+    let prob = LogisticProblem::from_labels(&ds).expect("generated labels");
+    let plan = PathPlan::linear_from_lambda_max(prob.lambda_max(), 30, 0.1);
+    println!(
+        "sparse logistic regression: n={} p={} lambda_max={:.4}",
+        prob.n(),
+        prob.p(),
+        plan.lambda_max
+    );
+
+    let opts = LogisticPathOptions {
+        solver: LogisticOptions { tol: 1e-11, ..Default::default() },
+        ..Default::default()
+    };
+    let opts_dyn = LogisticPathOptions {
+        dynamic: DynamicOptions::enabled_every(5),
+        ..opts
+    };
+
+    // the per-step rejection trace of the screened + dynamic path
+    let t0 = Instant::now();
+    let res = run_logistic_path_keep_betas(&prob, &plan, LogiRule::SasviQ, opts_dyn);
+    let secs = t0.elapsed().as_secs_f64();
+    let mut table = Table::new(&[
+        "lam/lmax", "kept", "rejection", "dyn-drop", "nnz", "iters", "kkt-fix",
+    ]);
+    for s in res.steps.iter().step_by(3) {
+        table.row(vec![
+            format!("{:.3}", s.frac),
+            s.kept.to_string(),
+            format!("{:.3}", s.rejection_ratio()),
+            s.dyn_dropped.to_string(),
+            s.nnz.to_string(),
+            s.iters.to_string(),
+            s.kkt_violations.to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "sasviq+dynamic: {secs:.3}s, work {}, kkt re-solves {}, dynamic drops {}",
+        res.solver_work(),
+        res.total_kkt_resolves(),
+        res.total_dynamic_dropped()
+    );
+
+    // exactness: the corrected screened path equals the unscreened one
+    let mut summary = Table::new(&["rule", "time(s)", "screened", "work"]);
+    let mut paths = Vec::new();
+    for (rule, o) in [
+        (LogiRule::None, opts),
+        (LogiRule::Strong, opts),
+        (LogiRule::SasviQ, opts),
+    ] {
+        let t0 = Instant::now();
+        let r = run_logistic_path_keep_betas(&prob, &plan, rule, o);
+        summary.row(vec![
+            rule.name().to_string(),
+            format!("{:.3}", t0.elapsed().as_secs_f64()),
+            r.steps.iter().map(|s| s.screened).sum::<usize>().to_string(),
+            r.solver_work().to_string(),
+        ]);
+        paths.push(r);
+    }
+    println!("{}", summary.render());
+    let base = paths[0].betas.as_ref().unwrap();
+    for r in paths.iter().skip(1) {
+        for (k, lam) in plan.lambdas.iter().enumerate() {
+            let oa = prob.objective(&base[k], *lam);
+            let ob = prob.objective(&r.betas.as_ref().unwrap()[k], *lam);
+            assert!(
+                (oa - ob).abs() <= 1e-6 * (1.0 + oa.abs()),
+                "{:?} step {k}: objective {oa} vs {ob}",
+                r.rule
+            );
+        }
+        println!(
+            "max objective gap vs unscreened ({}): within 1e-6 relative",
+            r.rule.name()
+        );
+    }
+    println!("logistic path OK — screened paths exact, rejection >90% near lambda_max");
+}

@@ -97,6 +97,14 @@ COMMANDS:
   gen-data      generate a dataset to a file (--preset --seed --scale --out)
   solve-path    run one path (--preset|--data|--libsvm, --rule, --grid,
                 --min-frac, --scale)
+  solve-logistic  §6 sparse-logistic path (--preset|--data|--libsvm,
+                --rule none|strong|sasviq, --grid, --min-frac, --scale).
+                --libsvm input must carry binary labels ({-1,+1} or {0,1};
+                validated, coerced, anything else errors naming the row);
+                presets and binary caches with regression responses are
+                median-split into balanced classes. Heuristic rules are
+                KKT-corrected; --dynamic adds the provably safe gap-sphere
+                checkpoint inside the solver.
   table1        regenerate Table 1 (--scale --trials --grid)
   fig5          regenerate Fig 5 rejection curves (--scale --grid [--csv dir])
   sure-removal  Theorem-4 report (--preset --lam1-frac --top)
@@ -121,8 +129,10 @@ GLOBAL:  --threads N sets the column-block worker-pool width for any
          expansion; --ws-grow K floors the expansion batch, default 10;
          alone it only retunes the batch). Composes with --dynamic (inner
          solves then re-screen mid-solve too).
-         All apply to every path-running command (solve-path, run, table1,
-         fig5, serve jobs); solutions are unchanged, only the work shrinks.
+         All apply to every path-running command (solve-path,
+         solve-logistic, run, table1, fig5, serve jobs); solutions are
+         unchanged, only the work shrinks. (--working-set applies to the
+         Lasso solvers only.)
 ";
 
 /// Entry point. Returns the process exit code.
@@ -187,6 +197,7 @@ pub fn run(args: &[String]) -> Result<i32> {
         }
         "gen-data" => cmd_gen_data(&flags),
         "solve-path" => cmd_solve_path(&flags),
+        "solve-logistic" => cmd_solve_logistic(&flags),
         "table1" => cmd_table1(&flags),
         "fig5" => cmd_fig5(&flags),
         "sure-removal" => cmd_sure_removal(&flags),
@@ -264,6 +275,84 @@ fn cmd_solve_path(flags: &Flags) -> Result<i32> {
         res.total_kkt_violations(),
         res.total_dynamic_dropped(),
         res.total_ws_outer()
+    );
+    Ok(0)
+}
+
+/// Build the logistic problem for a loaded dataset. libsvm input is the
+/// real-classification entry point and must carry binary labels — it
+/// always goes through the validated coercion
+/// ([`crate::logistic::LogisticProblem::from_labels`]), so a stray
+/// regression target errors instead of silently becoming a median-split
+/// label. Presets and binary caches carry regression responses and are
+/// median-split, unless their labels are already binary (a cached
+/// classification dataset round-trips through `from_labels`).
+fn logistic_problem(
+    flags: &Flags,
+    ds: &crate::data::Dataset,
+) -> Result<crate::logistic::LogisticProblem> {
+    use crate::logistic::LogisticProblem;
+    if flags.get("libsvm").is_some() {
+        LogisticProblem::from_labels(ds)
+    } else {
+        LogisticProblem::from_response(ds)
+    }
+}
+
+fn cmd_solve_logistic(flags: &Flags) -> Result<i32> {
+    use crate::coordinator::logistic::{run_logistic_path, LogisticPathOptions};
+    use crate::logistic::LogiRule;
+    let ds = load_dataset(flags)?;
+    let prob = logistic_problem(flags, &ds)?;
+    let rule_name = flags.get_or("rule", "sasviq");
+    let rule = LogiRule::parse(&rule_name).with_context(|| {
+        format!("unknown logistic rule {rule_name} (expected none|strong|sasviq)")
+    })?;
+    let grid = flags.usize_or("grid", 50)?.max(2);
+    let min_frac = flags.f64_or("min-frac", 0.1)?;
+    if !(0.001..=0.99).contains(&min_frac) {
+        // lambda = 0 has no dual scaling (and the λmax end is degenerate):
+        // reject up front instead of asserting deep in the planner/solver
+        bail!("--min-frac {min_frac}: expected a value in [0.001, 0.99]");
+    }
+    let plan = PathPlan::linear_from_lambda_max(prob.lambda_max(), grid, min_frac);
+    println!(
+        "dataset {}: n={} p={} (logistic, lambda_max={:.4})",
+        ds.name,
+        prob.n(),
+        prob.p(),
+        plan.lambda_max
+    );
+    let res = run_logistic_path(
+        &prob, &plan, rule, LogisticPathOptions::from_process_defaults(),
+    );
+    let mut t = Table::new(&[
+        "lam/lmax", "kept", "screened", "rej", "dyn-drop", "nnz", "iters",
+        "kkt-fix", "solve(s)", "screen(s)",
+    ]);
+    for s in res.steps.iter() {
+        t.row(vec![
+            format!("{:.3}", s.frac),
+            s.kept.to_string(),
+            s.screened.to_string(),
+            format!("{:.3}", s.rejection_ratio()),
+            s.dyn_dropped.to_string(),
+            s.nnz.to_string(),
+            s.iters.to_string(),
+            s.kkt_violations.to_string(),
+            fmt_secs(s.solve_time),
+            fmt_secs(s.screen_time),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "total: {} (kkt violations {}, kkt re-solves {}, dynamic drops {}, \
+         iters x width work {})",
+        fmt_secs(res.total_time),
+        res.total_kkt_violations(),
+        res.total_kkt_resolves(),
+        res.total_dynamic_dropped(),
+        res.solver_work()
     );
     Ok(0)
 }
@@ -510,6 +599,41 @@ fn cmd_run_config(flags: &Flags) -> Result<i32> {
         ]);
     }
     println!("{}", table.render());
+    // the [logistic] section opens the §6 classification workload on the
+    // same experiment dataset (balanced median-split labels), driven by
+    // the same resolved dynamic-screening knobs
+    let lcfg = crate::config::LogisticConfig::from_config(&cfg);
+    if lcfg.enabled {
+        let rule = crate::logistic::LogiRule::parse(&lcfg.rule)
+            .with_context(|| format!("unknown logistic rule {}", lcfg.rule))?;
+        let ds = preset.generate(exp.seed, exp.scale)?;
+        let prob = crate::logistic::LogisticProblem::from_response(&ds)?;
+        let plan = PathPlan::linear_from_lambda_max(
+            prob.lambda_max(),
+            lcfg.grid_points.max(2),
+            // same guard as the server's LPATH: a config typo must not
+            // panic the run deep in the planner or at a lambda = 0 solve
+            lcfg.min_frac.clamp(0.001, 0.99),
+        );
+        let opts = crate::coordinator::logistic::LogisticPathOptions {
+            solver: lcfg.solver_options(),
+            dynamic,
+            ..Default::default()
+        };
+        let res =
+            crate::coordinator::logistic::run_logistic_path(&prob, &plan, rule, opts);
+        let screened: usize = res.steps.iter().map(|s| s.screened).sum();
+        println!(
+            "logistic path (rule {}, grid {}): screened {screened}, \
+             kkt re-solves {}, dynamic drops {}, final nnz {}, {}",
+            rule.name(),
+            plan.len(),
+            res.total_kkt_resolves(),
+            res.total_dynamic_dropped(),
+            res.steps.last().map(|s| s.nnz).unwrap_or(0),
+            fmt_secs(res.total_time),
+        );
+    }
     Ok(0)
 }
 
@@ -705,6 +829,97 @@ mod tests {
         let code = run(&s(&["run", "--config", path.to_str().unwrap()])).unwrap();
         assert_eq!(code, 0);
         crate::screening::dynamic::set_process_default(before);
+    }
+
+    #[test]
+    fn solve_logistic_smoke_and_validation() {
+        // preset (regression response): balanced median split
+        let code = run(&s(&[
+            "solve-logistic", "--preset", "synthetic100", "--scale", "0.01",
+            "--grid", "4", "--rule", "sasviq",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+        // unknown rule is an error, not a silent default
+        assert!(run(&s(&[
+            "solve-logistic", "--preset", "synthetic100", "--scale", "0.01",
+            "--grid", "4", "--rule", "bogus",
+        ]))
+        .is_err());
+        // out-of-range --min-frac is a CLI error, not a planner panic
+        assert!(run(&s(&[
+            "solve-logistic", "--preset", "synthetic100", "--scale", "0.01",
+            "--grid", "4", "--min-frac", "1.5",
+        ]))
+        .is_err());
+    }
+
+    #[test]
+    fn solve_logistic_dynamic_flag_applies() {
+        let _guard = crate::linalg::par::test_knob_guard();
+        let before = crate::screening::dynamic::process_default();
+        let code = run(&s(&[
+            "solve-logistic", "--preset", "synthetic100", "--scale", "0.01",
+            "--grid", "4", "--rule", "strong", "--dynamic", "--recheck-every", "3",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+        assert!(crate::screening::dynamic::process_default().enabled);
+        crate::screening::dynamic::set_process_default(before);
+    }
+
+    #[test]
+    fn solve_logistic_libsvm_labels_are_validated() {
+        let dir = std::env::temp_dir().join("sasvi_cli_logistic_libsvm");
+        std::fs::create_dir_all(&dir).unwrap();
+        // {0,1} labels coerce; enough samples for a solvable toy problem
+        let ok = dir.join("ok.txt");
+        std::fs::write(
+            &ok,
+            "1 1:0.8 2:0.1\n0 2:0.9 3:0.2\n1 1:0.3 3:0.7\n0 1:-0.5 4:1.0\n",
+        )
+        .unwrap();
+        let code = run(&s(&[
+            "solve-logistic", "--libsvm", ok.to_str().unwrap(), "--grid", "4",
+            "--rule", "sasviq",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+        // arbitrary float labels are rejected naming the offending row
+        let bad = dir.join("bad.txt");
+        std::fs::write(&bad, "1 1:0.8\n0.5 2:0.9\n-1 1:0.3\n").unwrap();
+        let err = run(&s(&[
+            "solve-logistic", "--libsvm", bad.to_str().unwrap(), "--grid", "4",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("data row 2"), "{err}");
+    }
+
+    #[test]
+    fn run_config_with_logistic_section() {
+        let _guard = crate::linalg::par::test_knob_guard();
+        let dir = std::env::temp_dir().join("sasvi_cli_logistic_cfg");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("exp.toml");
+        std::fs::write(
+            &path,
+            "[experiment]\ndataset = \"synthetic100\"\nscale = 0.01\n\
+             grid_points = 4\nrules = [\"sasvi\"]\n\
+             [logistic]\nenabled = true\nrule = \"sasviq\"\ngrid_points = 4\n\
+             min_frac = 0.2\n",
+        )
+        .unwrap();
+        let code = run(&s(&["run", "--config", path.to_str().unwrap()])).unwrap();
+        assert_eq!(code, 0);
+        // a bad logistic rule in the config is an error
+        std::fs::write(
+            &path,
+            "[experiment]\ndataset = \"synthetic100\"\nscale = 0.01\n\
+             grid_points = 4\nrules = [\"sasvi\"]\n\
+             [logistic]\nenabled = true\nrule = \"bogus\"\n",
+        )
+        .unwrap();
+        assert!(run(&s(&["run", "--config", path.to_str().unwrap()])).is_err());
     }
 
     #[test]

@@ -266,6 +266,65 @@ impl ExperimentConfig {
     }
 }
 
+/// The `[logistic]` section: the §6 sparse-logistic workload
+/// (`sasvi run --config` runs it alongside the Lasso experiment when
+/// `enabled`; the CLI `solve-logistic` command and the server's `LPATH`
+/// verb drive the same coordinator runner).
+#[derive(Clone, Debug)]
+pub struct LogisticConfig {
+    /// `logistic.enabled`: run the logistic path in `sasvi run`
+    pub enabled: bool,
+    /// `logistic.rule`: none | strong | sasviq
+    pub rule: String,
+    /// `logistic.grid_points`: λ-grid size
+    pub grid_points: usize,
+    /// `logistic.min_frac`: smallest lambda/lambda_max on the grid
+    pub min_frac: f64,
+    /// `logistic.max_iters`: FISTA iteration cap per solve
+    pub max_iters: usize,
+    /// `logistic.tol`: relative-objective stall tolerance
+    pub tol: f64,
+}
+
+impl Default for LogisticConfig {
+    fn default() -> Self {
+        let s = crate::logistic::LogisticOptions::default();
+        Self {
+            enabled: false,
+            rule: "sasviq".into(),
+            grid_points: 30,
+            min_frac: 0.1,
+            max_iters: s.max_iters,
+            tol: s.tol,
+        }
+    }
+}
+
+impl LogisticConfig {
+    pub fn from_config(c: &Config) -> Self {
+        let d = Self::default();
+        Self {
+            enabled: c.get_bool("logistic.enabled", d.enabled),
+            rule: c.get_str("logistic.rule", &d.rule),
+            grid_points: c.get_usize("logistic.grid_points", d.grid_points),
+            min_frac: c.get_f64("logistic.min_frac", d.min_frac),
+            max_iters: c.get_usize("logistic.max_iters", d.max_iters),
+            tol: c.get_f64("logistic.tol", d.tol),
+        }
+    }
+
+    /// The solver knobs as [`crate::logistic::LogisticOptions`] (the
+    /// Lipschitz constant stays per-problem — the path runner computes it
+    /// once from the design).
+    pub fn solver_options(&self) -> crate::logistic::LogisticOptions {
+        crate::logistic::LogisticOptions {
+            max_iters: self.max_iters.max(1),
+            tol: self.tol,
+            ..Default::default()
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -355,6 +414,29 @@ trials = 3
         // grow 0 degrades gracefully rather than erroring
         let c = Config::parse("[solver]\nworking_set = true\nws_grow = 0\n").unwrap();
         assert!(!ExperimentConfig::from_config(&c).working_set_options().active());
+    }
+
+    #[test]
+    fn logistic_knobs_parse_with_defaults() {
+        let c = Config::parse(
+            "[logistic]\nenabled = true\nrule = \"strong\"\ngrid_points = 12\n\
+             min_frac = 0.2\nmax_iters = 500\ntol = 1e-8\n",
+        )
+        .unwrap();
+        let l = LogisticConfig::from_config(&c);
+        assert!(l.enabled);
+        assert_eq!(l.rule, "strong");
+        assert_eq!(l.grid_points, 12);
+        assert_eq!(l.min_frac, 0.2);
+        let opts = l.solver_options();
+        assert_eq!(opts.max_iters, 500);
+        assert_eq!(opts.tol, 1e-8);
+        assert!(opts.lipschitz.is_none(), "Lipschitz stays per-problem");
+        // defaults: disabled, sasviq rule
+        let d = LogisticConfig::from_config(&Config::parse("").unwrap());
+        assert!(!d.enabled);
+        assert_eq!(d.rule, "sasviq");
+        assert!(crate::logistic::LogiRule::parse(&d.rule).is_some());
     }
 
     #[test]

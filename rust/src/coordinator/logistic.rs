@@ -1,0 +1,470 @@
+//! The logistic λ-path runner — the §6 workload as a first-class pipeline.
+//!
+//! Mirrors [`super::path`] for the logistic objective: for each grid point
+//! `lambda_k` (descending) screen against the dual state from
+//! `lambda_{k-1}` with the selected heuristic rule
+//! ([`LogiRule::SasviQ`] / [`LogiRule::Strong`]), restrict the active-set
+//! FISTA solver to the survivors, warm-start from the previous solution,
+//! re-check the discarded set against the logistic KKT conditions and
+//! re-solve on violation (both rules are heuristics — the corrected path
+//! is exact), then compute the next dual state from the fitted
+//! probabilities.
+//!
+//! With [`LogisticPathOptions::dynamic`] enabled the solver additionally
+//! runs the **gap-safe** checkpoint ([`crate::logistic::logistic_rescreen`])
+//! every `recheck_every` iterations (iteration-0 checkpoint included):
+//! a feasible dual point scaled from the current fitted probabilities, the
+//! exact logistic duality gap, and the sphere `sqrt(2 gap)/lambda` —
+//! provably safe for the restricted problem, so it composes with the
+//! heuristic rules exactly like [`crate::screening::dynamic`] composes
+//! with the strong rule (drops feed the same KKT correction).
+//!
+//! The Lipschitz constant is computed **once per problem**
+//! ([`crate::logistic::LogisticProblem::precompute`]) and threaded through
+//! every solve; all batched per-feature passes run on the
+//! [`crate::linalg::par`] block engine, so the whole logistic path is
+//! bit-identical at every thread count.
+
+use std::time::{Duration, Instant};
+
+use crate::logistic::{
+    logistic_screen, solve_logistic_active, LogiRule, LogisticOptions, LogisticProblem,
+};
+use crate::screening::dynamic::{DynamicOptions, DynamicTrace};
+
+/// Options for a logistic path run.
+#[derive(Clone, Copy, Debug)]
+pub struct LogisticPathOptions {
+    pub solver: LogisticOptions,
+    /// KKT tolerance for the heuristic-rule correction
+    pub kkt_tol: f64,
+    /// max correction rounds before giving up (should never trigger)
+    pub max_kkt_rounds: usize,
+    /// gap-safe in-solver re-screening; off by default — user-facing entry
+    /// points consult [`crate::screening::dynamic::process_default`]
+    pub dynamic: DynamicOptions,
+}
+
+impl Default for LogisticPathOptions {
+    fn default() -> Self {
+        Self {
+            solver: LogisticOptions::default(),
+            kkt_tol: 1e-6,
+            max_kkt_rounds: 16,
+            dynamic: DynamicOptions::off(),
+        }
+    }
+}
+
+impl LogisticPathOptions {
+    /// Defaults plus the process-wide dynamic-screening knob (the global
+    /// CLI `--dynamic` / config / server settings) — the same contract as
+    /// [`super::PathOptions::from_process_defaults`].
+    pub fn from_process_defaults() -> Self {
+        Self {
+            dynamic: crate::screening::dynamic::process_default(),
+            ..Default::default()
+        }
+    }
+}
+
+/// Per-grid-point record of a logistic path run (the logistic twin of
+/// [`super::StepRecord`]).
+#[derive(Clone, Copy, Debug)]
+pub struct LogiStepRecord {
+    pub lambda: f64,
+    pub frac: f64,
+    /// features kept by the pathwise screen (solver input size)
+    pub kept: usize,
+    pub screened: usize,
+    /// nonzeros in the computed solution
+    pub nnz: usize,
+    /// FISTA iterations across every solve at this step (KKT re-solves
+    /// included)
+    pub iters: usize,
+    /// KKT violations re-admitted at this step
+    pub kkt_violations: usize,
+    /// solver re-runs triggered by the KKT correction at this step
+    pub kkt_resolves: usize,
+    /// gap-safe checkpoints run inside the solver at this step
+    pub dyn_rechecks: usize,
+    /// features discarded by gap-safe checkpoints (on top of `screened`)
+    pub dyn_dropped: usize,
+    /// duality gap at the last checkpoint (NaN without dynamic screening)
+    pub gap: f64,
+    /// `iterations x active-width` solver work at this step, accumulated
+    /// per solve call at the width that solve actually ran (KKT re-solves
+    /// run *wider* than the screened set after re-admission; dynamic
+    /// solves integrate their own epoch-width trajectory)
+    pub work: u64,
+    pub screen_time: Duration,
+    pub solve_time: Duration,
+}
+
+impl LogiStepRecord {
+    /// Fraction of features rejected by the pathwise screen (Fig. 5 style).
+    pub fn rejection_ratio(&self) -> f64 {
+        let total = self.kept + self.screened;
+        if total == 0 {
+            0.0
+        } else {
+            self.screened as f64 / total as f64
+        }
+    }
+}
+
+/// Result of a full logistic path run.
+#[derive(Clone, Debug)]
+pub struct LogisticPathResult {
+    pub rule: LogiRule,
+    pub steps: Vec<LogiStepRecord>,
+    pub total_time: Duration,
+    /// final coefficients at the smallest lambda
+    pub beta_final: Vec<f64>,
+    /// solutions at every grid point when requested
+    pub betas: Option<Vec<Vec<f64>>>,
+    /// per-step gap-safe checkpoint traces when `opts.dynamic` is enabled
+    pub dynamic: Option<Vec<DynamicTrace>>,
+}
+
+impl LogisticPathResult {
+    pub fn total_kkt_violations(&self) -> usize {
+        self.steps.iter().map(|s| s.kkt_violations).sum()
+    }
+
+    /// Solver re-runs triggered by the KKT correction across the path.
+    pub fn total_kkt_resolves(&self) -> usize {
+        self.steps.iter().map(|s| s.kkt_resolves).sum()
+    }
+
+    /// Features discarded by gap-safe checkpoints across the path.
+    pub fn total_dynamic_dropped(&self) -> usize {
+        self.steps.iter().map(|s| s.dyn_dropped).sum()
+    }
+
+    /// Total `iterations x active-width` solver work — the quantity
+    /// screening exists to shrink (`benches/logistic.rs` compares rules).
+    /// Summed from the per-step [`LogiStepRecord::work`] accounting, which
+    /// prices every solve (KKT re-solves included) at the width it
+    /// actually ran.
+    pub fn solver_work(&self) -> u64 {
+        self.steps.iter().map(|s| s.work).sum()
+    }
+}
+
+/// Run a full logistic regularization path with the given screening rule.
+pub fn run_logistic_path(
+    prob: &LogisticProblem,
+    plan: &crate::coordinator::PathPlan,
+    rule: LogiRule,
+    opts: LogisticPathOptions,
+) -> LogisticPathResult {
+    run_logistic_path_impl(prob, plan, rule, opts, false)
+}
+
+/// Same as [`run_logistic_path`], additionally retaining every solution
+/// (used by the exactness tests and benches).
+pub fn run_logistic_path_keep_betas(
+    prob: &LogisticProblem,
+    plan: &crate::coordinator::PathPlan,
+    rule: LogiRule,
+    opts: LogisticPathOptions,
+) -> LogisticPathResult {
+    run_logistic_path_impl(prob, plan, rule, opts, true)
+}
+
+fn run_logistic_path_impl(
+    prob: &LogisticProblem,
+    plan: &crate::coordinator::PathPlan,
+    rule: LogiRule,
+    opts: LogisticPathOptions,
+    keep_betas: bool,
+) -> LogisticPathResult {
+    let start = Instant::now();
+    let p = prob.p();
+    // a caller-pinned Lipschitz constant skips the power iteration
+    // entirely (column norms are still needed for the checkpoint bounds)
+    let pre = match opts.solver.lipschitz {
+        Some(l) => crate::logistic::LogisticPrecompute {
+            col_norms_sq: prob.x.col_norms_sq(),
+            lipschitz: l,
+        },
+        None => prob.precompute(),
+    };
+    let solver = LogisticOptions { lipschitz: Some(pre.lipschitz), ..opts.solver };
+
+    let mut beta = vec![0.0; p];
+    let mut keep = vec![true; p];
+    let mut grad = vec![0.0; p];
+    let mut active: Vec<usize> = Vec::with_capacity(p);
+    let mut lam1 = plan.lambda_max;
+    let (mut theta1, mut xt_theta1) = prob.dual_point(&beta, lam1);
+
+    let mut steps = Vec::with_capacity(plan.len());
+    let mut betas = if keep_betas { Some(Vec::with_capacity(plan.len())) } else { None };
+    let mut dyn_traces = if opts.dynamic.active() {
+        Some(Vec::with_capacity(plan.len()))
+    } else {
+        None
+    };
+
+    for &lambda in plan.lambdas.iter() {
+        // ---- screen -----------------------------------------------------
+        let t0 = Instant::now();
+        let screened = if lambda >= lam1 * (1.0 - 1e-12) || matches!(rule, LogiRule::None) {
+            keep.fill(true);
+            0
+        } else {
+            logistic_screen(
+                prob, rule, &beta, &theta1, &xt_theta1, lam1, lambda,
+                &pre.col_norms_sq, &mut keep,
+            )
+        };
+        let screen_time = t0.elapsed();
+        let kept = p - screened;
+
+        // restrict: evict warm-start mass on screened coordinates (the KKT
+        // correction re-admits any heuristic casualties)
+        active.clear();
+        for j in 0..p {
+            if keep[j] {
+                active.push(j);
+            } else {
+                beta[j] = 0.0;
+            }
+        }
+
+        // ---- solve (+ KKT correction loop) ------------------------------
+        let t1 = Instant::now();
+        let width0 = active.len() as u64;
+        let mut trace = DynamicTrace::new(active.len());
+        let mut iters = solve_logistic_active(
+            prob, lambda, &mut active, &mut beta, &pre, &solver, &opts.dynamic,
+            &mut trace,
+        );
+        // work accounting per solve call, at the width the solve ran:
+        // a static solve never changes width; a dynamic solve integrates
+        // its own epoch-width trajectory
+        let mut work = if opts.dynamic.active() {
+            trace.solver_work(iters)
+        } else {
+            iters as u64 * width0
+        };
+        // gap-safe drops leave the kept set too, so the correction below
+        // re-checks them exactly like rule-level discards
+        for ev in trace.events.iter() {
+            for &j in &ev.dropped {
+                keep[j] = false;
+            }
+        }
+        let mut kkt_violations = 0usize;
+        let mut kkt_resolves = 0usize;
+        for _round in 0..opts.max_kkt_rounds {
+            if keep.iter().all(|&k| k) {
+                break;
+            }
+            prob.grad(&beta, &mut grad);
+            let mut violated = false;
+            for j in 0..p {
+                let violates =
+                    !keep[j] && grad[j].abs() > lambda * (1.0 + opts.kkt_tol) + opts.kkt_tol;
+                if violates {
+                    keep[j] = true;
+                    active.push(j);
+                    kkt_violations += 1;
+                    violated = true;
+                }
+            }
+            if !violated {
+                break;
+            }
+            kkt_resolves += 1;
+            // the re-solve runs at the *expanded* width (re-admissions make
+            // it wider than the screened set) — price it at that width
+            let width2 = active.len() as u64;
+            let mut t2 = DynamicTrace::new(active.len());
+            let it2 = solve_logistic_active(
+                prob, lambda, &mut active, &mut beta, &pre, &solver, &opts.dynamic,
+                &mut t2,
+            );
+            for ev in t2.events.iter() {
+                for &j in &ev.dropped {
+                    keep[j] = false;
+                }
+            }
+            work += if opts.dynamic.active() {
+                t2.solver_work(it2)
+            } else {
+                it2 as u64 * width2
+            };
+            // offset by the iterations already spent before this re-solve
+            trace.absorb(t2, iters);
+            iters += it2;
+        }
+        let solve_time = t1.elapsed();
+
+        // ---- dual state for the next screen -----------------------------
+        if !matches!(rule, LogiRule::None) {
+            let (t, xt) = prob.dual_point(&beta, lambda);
+            theta1 = t;
+            xt_theta1 = xt;
+        }
+        lam1 = lambda;
+
+        let gap = trace.events.last().map(|e| e.gap).unwrap_or(f64::NAN);
+        steps.push(LogiStepRecord {
+            lambda,
+            frac: lambda / plan.lambda_max,
+            kept,
+            screened,
+            nnz: beta.iter().filter(|&&b| b != 0.0).count(),
+            iters,
+            kkt_violations,
+            kkt_resolves,
+            dyn_rechecks: trace.rechecks(),
+            dyn_dropped: trace.distinct_dropped(),
+            gap,
+            work,
+            screen_time,
+            solve_time,
+        });
+        if let Some(ts) = dyn_traces.as_mut() {
+            ts.push(trace);
+        }
+        if let Some(bs) = betas.as_mut() {
+            bs.push(beta.clone());
+        }
+    }
+
+    LogisticPathResult {
+        rule,
+        steps,
+        total_time: start.elapsed(),
+        beta_final: beta,
+        betas,
+        dynamic: dyn_traces,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::PathPlan;
+    use crate::data::synthetic::SyntheticSpec;
+
+    fn tiny() -> LogisticProblem {
+        let ds = SyntheticSpec {
+            n: 30,
+            p: 80,
+            nnz: 10,
+            classification: true,
+            ..Default::default()
+        }
+        .generate(17);
+        LogisticProblem::from_labels(&ds).expect("generated labels")
+    }
+
+    fn tight() -> LogisticPathOptions {
+        LogisticPathOptions {
+            solver: LogisticOptions { tol: 1e-12, max_iters: 20_000, ..Default::default() },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn all_rules_produce_identical_paths() {
+        let prob = tiny();
+        let plan = PathPlan::linear_from_lambda_max(prob.lambda_max(), 8, 0.15);
+        let base = run_logistic_path_keep_betas(&prob, &plan, LogiRule::None, tight());
+        for rule in [LogiRule::Strong, LogiRule::SasviQ] {
+            let r = run_logistic_path_keep_betas(&prob, &plan, rule, tight());
+            let screened: usize = r.steps.iter().map(|s| s.screened).sum();
+            assert!(screened > 0, "{rule:?} screened nothing");
+            let b0 = base.betas.as_ref().unwrap();
+            let b1 = r.betas.as_ref().unwrap();
+            for (k, lam) in plan.lambdas.iter().enumerate() {
+                let oa = prob.objective(&b0[k], *lam);
+                let ob = prob.objective(&b1[k], *lam);
+                assert!(
+                    (oa - ob).abs() <= 1e-8 * (1.0 + oa.abs()),
+                    "{rule:?} step {k}: objective {oa} vs {ob}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dynamic_path_matches_static_and_records_traces() {
+        let prob = tiny();
+        let plan = PathPlan::linear_from_lambda_max(prob.lambda_max(), 8, 0.15);
+        let opts_dyn = LogisticPathOptions {
+            dynamic: DynamicOptions::enabled_every(4),
+            ..tight()
+        };
+        let a = run_logistic_path_keep_betas(&prob, &plan, LogiRule::SasviQ, tight());
+        let b = run_logistic_path_keep_betas(&prob, &plan, LogiRule::SasviQ, opts_dyn);
+        assert!(b.total_dynamic_dropped() > 0, "gap-safe checkpoints idle");
+        let traces = b.dynamic.as_ref().expect("dynamic traces retained");
+        assert_eq!(traces.len(), b.steps.len());
+        for (s, t) in b.steps.iter().zip(traces.iter()) {
+            assert_eq!(s.dyn_dropped, t.distinct_dropped());
+            assert_eq!(s.dyn_rechecks, t.rechecks());
+            assert!(s.dyn_dropped <= s.kept);
+        }
+        // dynamic shrinks the work integral without changing the path
+        assert!(b.solver_work() < a.solver_work());
+        let ba = a.betas.as_ref().unwrap();
+        let bb = b.betas.as_ref().unwrap();
+        for (k, lam) in plan.lambdas.iter().enumerate() {
+            let oa = prob.objective(&ba[k], *lam);
+            let ob = prob.objective(&bb[k], *lam);
+            assert!(
+                (oa - ob).abs() <= 1e-8 * (1.0 + oa.abs()),
+                "step {k}: objective {oa} vs {ob}"
+            );
+        }
+    }
+
+    #[test]
+    fn step_records_are_consistent() {
+        let prob = tiny();
+        let plan = PathPlan::linear_from_lambda_max(prob.lambda_max(), 6, 0.2);
+        let r = run_logistic_path(&prob, &plan, LogiRule::SasviQ, tight());
+        assert_eq!(r.steps.len(), 6);
+        for s in &r.steps {
+            assert_eq!(s.kept + s.screened, prob.p());
+            // the support lies in the screened-kept set plus any KKT
+            // re-admissions (each re-admission is counted as a violation)
+            assert!(
+                s.nnz <= s.kept + s.kkt_violations,
+                "support outside kept ∪ re-admitted"
+            );
+            assert!(s.frac <= 1.0 + 1e-12 && s.frac >= 0.2 - 1e-12);
+            assert!(s.rejection_ratio() <= 1.0);
+        }
+        // first grid point is lambda_max: nothing to fit
+        assert_eq!(r.steps[0].nnz, 0);
+    }
+
+    #[test]
+    fn rejection_increases_toward_lambda_max() {
+        let prob = tiny();
+        let plan = PathPlan::linear_from_lambda_max(prob.lambda_max(), 10, 0.15);
+        let r = run_logistic_path(&prob, &plan, LogiRule::SasviQ, tight());
+        let early = r.steps[1].rejection_ratio();
+        let late = r.steps[9].rejection_ratio();
+        assert!(early > late || early > 0.9, "early {early} late {late}");
+    }
+
+    #[test]
+    fn process_default_feeds_dynamic_knob() {
+        let _guard = crate::linalg::par::test_knob_guard();
+        let before = crate::screening::dynamic::process_default();
+        crate::screening::dynamic::set_process_default(DynamicOptions::enabled_every(7));
+        let opts = LogisticPathOptions::from_process_defaults();
+        assert!(opts.dynamic.active());
+        assert_eq!(opts.dynamic.recheck_every, 7);
+        crate::screening::dynamic::set_process_default(before);
+        assert!(!LogisticPathOptions::default().dynamic.active());
+    }
+}

@@ -4,14 +4,22 @@
 //!   equally spaced on the `lambda/lambda_max` scale from 0.05 to 1);
 //! * [`path`] — the sequential path runner: screen → restrict → warm-start
 //!   solve → (KKT-correct if the rule is unsafe) → next dual state;
+//! * [`logistic`] — the same loop for the §6 sparse-logistic workload
+//!   (SasviQ/Strong screens, gap-safe in-solver checkpoints, KKT-corrected
+//!   so the path is exact);
 //! * [`pool`] — a worker pool running many path jobs concurrently with
 //!   bounded queues and per-job result channels (the screening service and
 //!   the benches sit on top of it).
 
+pub mod logistic;
 pub mod path;
 pub mod planner;
 pub mod pool;
 
+pub use logistic::{
+    run_logistic_path, run_logistic_path_keep_betas, LogiStepRecord, LogisticPathOptions,
+    LogisticPathResult,
+};
 pub use path::{run_path, run_path_keep_betas, PathOptions, PathResult, SolverKind, StepRecord};
 pub use planner::PathPlan;
 pub use pool::{JobPool, JobSpec, JobStatus};

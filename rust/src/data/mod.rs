@@ -15,7 +15,10 @@
 //!
 //! * [`synthetic::SyntheticSpec`] with `density = 1.0` (default) emits the
 //!   paper's dense AR(1) design; `density < 1.0` emits CSC columns with
-//!   `round(density * n)` Gaussian nonzeros each.
+//!   `round(density * n)` Gaussian nonzeros each. The `classification`
+//!   knob swaps the regression response for genuine ±1 labels
+//!   (`y = sign(X beta* + noise)`) on either backend — the entry point of
+//!   the §6 logistic workload ([`crate::logistic`]).
 //! * [`io::load_libsvm`] reads the standard `label idx:val ...` sparse
 //!   text format (1-based indices, `#` comments) straight into CSC.
 //! * [`io::save`] / [`io::load`] cache either backend in a binary format

@@ -32,6 +32,10 @@ pub struct SyntheticSpec {
     /// per-column nonzero fraction; 1.0 (the default) keeps the paper's
     /// dense AR(1) design, anything below emits genuinely sparse CSC columns
     pub density: f64,
+    /// emit genuine ±1 classification labels (`y = sign(X beta* + noise)`)
+    /// instead of the regression response — the §6 logistic workload's
+    /// entry point, on either storage backend
+    pub classification: bool,
 }
 
 impl Default for SyntheticSpec {
@@ -44,6 +48,7 @@ impl Default for SyntheticSpec {
             sigma: 0.1,
             normalize: true,
             density: 1.0,
+            classification: false,
         }
     }
 }
@@ -92,6 +97,13 @@ impl SyntheticSpec {
         for v in y.iter_mut() {
             *v += self.sigma * rng.normal();
         }
+        if self.classification {
+            // genuine ±1 labels from the noisy margin (a latent-variable
+            // classifier with ground-truth weights beta*)
+            for v in y.iter_mut() {
+                *v = if *v > 0.0 { 1.0 } else { -1.0 };
+            }
+        }
 
         if self.normalize {
             let norms = x.normalize_columns();
@@ -104,7 +116,12 @@ impl SyntheticSpec {
         }
 
         Dataset {
-            name: format!("synthetic(n={n},p={p},nnz={},rho={})", self.nnz, self.rho),
+            name: format!(
+                "synthetic{}(n={n},p={p},nnz={},rho={})",
+                if self.classification { "-clf" } else { "" },
+                self.nnz,
+                self.rho
+            ),
             x: x.into(),
             y,
             beta_true: Some(beta),
@@ -149,6 +166,13 @@ impl SyntheticSpec {
         for v in y.iter_mut() {
             *v += self.sigma * rng.normal();
         }
+        if self.classification {
+            // genuine ±1 labels from the noisy margin (a latent-variable
+            // classifier with ground-truth weights beta*)
+            for v in y.iter_mut() {
+                *v = if *v > 0.0 { 1.0 } else { -1.0 };
+            }
+        }
 
         if self.normalize {
             let norms = x.normalize_columns();
@@ -161,8 +185,10 @@ impl SyntheticSpec {
 
         Dataset {
             name: format!(
-                "synthetic-sparse(n={n},p={p},nnz={},density={})",
-                self.nnz, self.density
+                "synthetic-sparse{}(n={n},p={p},nnz={},density={})",
+                if self.classification { "-clf" } else { "" },
+                self.nnz,
+                self.density
             ),
             x: x.into(),
             y,
@@ -234,6 +260,44 @@ mod tests {
             .filter(|&&b| b != 0.0)
             .count();
         assert_eq!(nz, 7);
+    }
+
+    #[test]
+    fn classification_labels_on_both_backends() {
+        for density in [1.0, 0.05] {
+            let spec = SyntheticSpec {
+                n: 120,
+                p: 200,
+                nnz: 20,
+                density,
+                classification: true,
+                ..Default::default()
+            };
+            let ds = spec.generate(6);
+            assert_eq!(ds.x.is_sparse(), density < 1.0);
+            assert!(ds.y.iter().all(|&v| v == 1.0 || v == -1.0));
+            let pos = ds.y.iter().filter(|&&v| v > 0.0).count();
+            assert!(pos > 0 && pos < ds.n(), "single-class labels ({pos})");
+            // deterministic per seed, like the regression generator
+            assert_eq!(spec.generate(6).y, ds.y);
+            // labels must carry the planted signal: among rows with a
+            // clear margin (|X beta*| > 2 sigma, so noise rarely flips the
+            // sign) the labels agree with the margin sign
+            let beta = ds.beta_true.as_ref().unwrap();
+            let mut fit = vec![0.0; ds.n()];
+            ds.x.matvec(beta, &mut fit);
+            let clear: Vec<usize> = (0..ds.n()).filter(|&i| fit[i].abs() > 0.2).collect();
+            assert!(!clear.is_empty());
+            let agree = clear
+                .iter()
+                .filter(|&&i| fit[i].signum() == ds.y[i].signum())
+                .count();
+            assert!(
+                agree * 4 >= clear.len() * 3,
+                "only {agree}/{} clear-margin rows agree",
+                clear.len()
+            );
+        }
     }
 
     #[test]

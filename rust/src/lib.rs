@@ -91,6 +91,36 @@
 //! (global flags), config `solver.working_set` / `solver.ws_grow`, server
 //! `PATH ... ws [grow]`.
 //!
+//! ## Logistic regression (§6)
+//!
+//! The paper's GLM sketch is a first-class workload: [`logistic`] holds
+//! the problem type (balanced median-split [`logistic::LogisticProblem::from_dataset`],
+//! validated-label [`logistic::LogisticProblem::from_labels`], and the
+//! `classification` knob on [`data::synthetic::SyntheticSpec`] for genuine
+//! ±1-label designs on either storage backend), the quadratic-approximation
+//! **SasviQ** screen (the IRLS working response through the *identical*
+//! Theorem-3 geometry), the Eq. (31) **Strong** rule, and an active-set
+//! FISTA whose Lipschitz constant is computed once per problem. Both rules
+//! are heuristics, so [`coordinator::logistic`] runs the same
+//! screen → restrict → warm-start → KKT-recheck → re-solve loop the Lasso
+//! path uses for the strong rule — the delivered path is exact regardless.
+//!
+//! The dynamic complement is **provably safe** for any smooth loss: the
+//! gap-safe sphere ([`logistic::logistic_rescreen`]) built from the
+//! feasible dual point `y .* (1 - p) / lambda` and the exact logistic
+//! duality gap (radius `sqrt(2 gap) / lambda`) re-screens the survivors
+//! *inside* the solver every `recheck_every` iterations, on the same
+//! batched block engine — so the logistic path inherits the determinism
+//! contract (bit-identical at every thread count,
+//! `rust/tests/determinism.rs`) and the per-checkpoint safety battery
+//! (`rust/tests/logistic_path.rs`). Surfaces: CLI `solve-logistic`
+//! (`--rule none|strong|sasviq` plus the global `--threads` /
+//! `--dynamic` / `--recheck-every` flags), the `[logistic]` config
+//! section, and the server's synchronous `LPATH <preset> <seed> <scale>
+//! <rule> ...` verb (per-step rejection + KKT re-solve telemetry).
+//! `benches/logistic.rs` enforces the screened-beats-unscreened
+//! `iters x width` work bar.
+//!
 //! ## Quickstart
 //!
 //! ```no_run

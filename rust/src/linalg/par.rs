@@ -387,6 +387,52 @@ where
     counts.into_iter().sum()
 }
 
+/// Block-ordered `max_j |s[idx[j]]|` over an index list — the shared
+/// infeasibility fold of the dynamic checkpoints
+/// ([`crate::screening::dynamic::rescreen`] and
+/// [`crate::logistic::logistic_rescreen`]). Per-block maxima are folded in
+/// block order, reproducing the serial fold at every thread count.
+pub fn max_abs_indexed(idx: &[usize], s: &[f64]) -> f64 {
+    map_columns(idx.len(), |_, r| {
+        let mut m = 0.0f64;
+        for &j in &idx[r] {
+            m = m.max(s[j].abs());
+        }
+        m
+    })
+    .into_iter()
+    .fold(0.0f64, f64::max)
+}
+
+/// Deterministic parallel partition of an index list: `(kept, dropped)`
+/// with per-block lists concatenated in block order, so the output order
+/// equals the serial order at every thread count — the harvest step both
+/// dynamic checkpoints share.
+pub fn partition_indexed<F>(idx: &[usize], pred: F) -> (Vec<usize>, Vec<usize>)
+where
+    F: Fn(usize) -> bool + Sync,
+{
+    let parts = map_columns(idx.len(), |_, r| {
+        let mut keep = Vec::new();
+        let mut drop = Vec::new();
+        for &j in &idx[r] {
+            if pred(j) {
+                keep.push(j);
+            } else {
+                drop.push(j);
+            }
+        }
+        (keep, drop)
+    });
+    let mut kept = Vec::with_capacity(idx.len());
+    let mut dropped = Vec::new();
+    for (k, d) in parts {
+        kept.extend(k);
+        dropped.extend(d);
+    }
+    (kept, dropped)
+}
+
 // ---------------------------------------------------------------------------
 // design-matrix kernels (the `_with` variants take an explicit pool + lane
 // budget so the determinism tests can drive pools of any width; the

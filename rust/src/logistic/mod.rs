@@ -6,25 +6,53 @@
 //! The paper sketches the Sasvi extension to GLMs and proposes replacing
 //! the exact (entropy-shaped) dual feasible set by its **quadratic
 //! approximation** so the bound maximization keeps the Lasso closed form.
-//! This module implements that plan:
+//! This module implements that plan, plus the provably safe dynamic
+//! complement:
 //!
-//! * masked FISTA solver with Lipschitz constant `||X||_2^2 / 4`;
+//! * active-set FISTA solver ([`solve_logistic_active`]) with Lipschitz
+//!   constant `||X||_2^2 / 4` computed **once per problem**
+//!   ([`LogisticProblem::precompute`]) and per-iteration cost
+//!   `O(n * |active|)` on either storage backend;
 //! * dual point `theta = y .* (1 - p) / lambda` (with `p_i = sigma(y_i
 //!   <x^i, beta>)`), scaled into `||X^T theta||_inf <= 1`;
 //! * [`LogiRule::SasviQ`]: the IRLS working response `z = X beta_1 +
 //!   4 lambda_1 theta_1` (Taylor point with W ≈ I/4) is fed through the
 //!   *identical* Theorem-3 geometry as the Lasso rule;
-//! * [`LogiRule::Strong`]: Eq. (31) verbatim on the logistic dual point.
+//! * [`LogiRule::Strong`]: Eq. (31) verbatim on the logistic dual point;
+//! * [`logistic_rescreen`]: the **gap-safe dynamic checkpoint** — at any
+//!   feasible dual point the sphere `||theta* - theta|| <=
+//!   sqrt(2 gap) / lambda` (from the `lambda^2`-strong concavity of the
+//!   logistic dual; the true modulus is `4 lambda^2`, so the radius is
+//!   conservative) contains the dual optimum, and features with
+//!   `|<x_j, theta>| + ||x_j|| r < 1` are discarded *mid-solve*. Unlike
+//!   SasviQ/Strong this test is provably safe for the restricted problem
+//!   (Fercoq, Gramfort & Salmon, "Mind the duality gap"; the dynamic
+//!   dual-point framing of Yamada & Yamada, "Dynamic Sasvi"). The
+//!   pathwise Sasvi dome is **not** fused into the mid-solve test: its
+//!   half-space instantiates the VI at a point that must be dual-optimal,
+//!   which a mid-solve iterate is not — so the dome screens once per grid
+//!   point and the gap sphere shrinks its survivors, mirroring
+//!   [`crate::screening::dynamic`].
 //!
-//! Both are quadratic/heuristic approximations, so the path runner treats
-//! them like the paper treats the strong rule: discarded features are
-//! re-checked against the logistic KKT conditions after the solve and the
-//! solver re-runs on violation — the final path is exact regardless.
+//! SasviQ and Strong are quadratic/heuristic approximations, so the path
+//! runner ([`crate::coordinator::logistic`]) treats them like the paper
+//! treats the strong rule: discarded features are re-checked against the
+//! logistic KKT conditions after the solve and the solver re-runs on
+//! violation — the final path is exact regardless.
+//!
+//! Every whole-matrix pass here (the `X_A^T v` statistics of the
+//! checkpoint and the rules' batched bounds) runs on the
+//! [`crate::linalg::par`] column-block pool with block-ordered reductions,
+//! so the logistic path inherits the determinism contract: bit-identical
+//! results at every thread count (`rust/tests/determinism.rs`).
+
+use anyhow::bail;
 
 use crate::data::Dataset;
-use crate::linalg::{ops, DesignMatrix};
+use crate::linalg::{ops, par, DesignMatrix};
+use crate::screening::dynamic::{DynamicOptions, DynamicTrace, Rescreen};
 use crate::screening::{sasvi::feature_bounds, Geometry};
-use crate::SCREEN_EPS;
+use crate::{Result, SCREEN_EPS};
 
 #[inline]
 fn sigmoid(t: f64) -> f64 {
@@ -36,6 +64,27 @@ fn sigmoid(t: f64) -> f64 {
     }
 }
 
+/// `log(1 + exp(t))`, stably.
+#[inline]
+fn log1pexp(t: f64) -> f64 {
+    if t > 0.0 {
+        t + (-t).exp().ln_1p()
+    } else {
+        t.exp().ln_1p()
+    }
+}
+
+/// `c ln c` with the `0 ln 0 = 0` convention (binary-entropy terms of the
+/// logistic dual objective).
+#[inline]
+fn xlogx(c: f64) -> f64 {
+    if c > 0.0 {
+        c * c.ln()
+    } else {
+        0.0
+    }
+}
+
 /// A binary-labelled design; labels in {-1, +1}.
 #[derive(Clone, Debug)]
 pub struct LogisticProblem {
@@ -43,15 +92,115 @@ pub struct LogisticProblem {
     pub y: Vec<f64>,
 }
 
+/// Per-problem precompute for the logistic path: column norms for the
+/// checkpoint bounds and the FISTA Lipschitz constant `||X||_2^2 / 4` —
+/// computed **once** and threaded through every solve on the λ-grid
+/// (recomputing the 60-iteration power method per grid point was pure
+/// waste on a warm-started path).
+#[derive(Clone, Debug)]
+pub struct LogisticPrecompute {
+    pub col_norms_sq: Vec<f64>,
+    /// `||X||_2^2 / 4` (times a 0.1% safety factor for the power-method
+    /// underestimate)
+    pub lipschitz: f64,
+}
+
 impl LogisticProblem {
     /// Build a synthetic classification problem from a regression dataset
-    /// by thresholding its response at the median.
-    pub fn from_dataset(ds: &Dataset) -> Self {
+    /// by thresholding its response at the median. Ties at the median are
+    /// split (deterministically, in sample order) so the classes stay
+    /// balanced; a response with no usable variation is an error rather
+    /// than a silent single-class problem.
+    pub fn from_dataset(ds: &Dataset) -> Result<Self> {
+        let n = ds.y.len();
+        if n < 2 {
+            bail!("classification split needs at least 2 samples, got {n}");
+        }
         let mut sorted = ds.y.clone();
         sorted.sort_by(f64::total_cmp);
-        let med = sorted[sorted.len() / 2];
-        let y = ds.y.iter().map(|&v| if v > med { 1.0 } else { -1.0 }).collect();
-        Self { x: ds.x.clone(), y }
+        if sorted[0] == sorted[n - 1] {
+            bail!(
+                "response is constant ({}): a median split would produce \
+                 arbitrary labels",
+                sorted[0]
+            );
+        }
+        let med = sorted[(n - 1) / 2];
+        let above = ds.y.iter().filter(|&&v| v > med).count();
+        let ties = ds.y.iter().filter(|&&v| v == med).count();
+        // promote just enough ties to +1 to balance the classes
+        let mut promote = (n + 1) / 2 - above.min((n + 1) / 2);
+        promote = promote.min(ties);
+        let y: Vec<f64> = ds
+            .y
+            .iter()
+            .map(|&v| {
+                if v > med {
+                    1.0
+                } else if v == med && promote > 0 {
+                    promote -= 1;
+                    1.0
+                } else {
+                    -1.0
+                }
+            })
+            .collect();
+        let pos = y.iter().filter(|&&v| v > 0.0).count();
+        if pos == 0 || pos == n {
+            bail!("median split produced a single-class label vector ({pos}/{n} positive)");
+        }
+        Ok(Self { x: ds.x.clone(), y })
+    }
+
+    /// The classification entry point for datasets that already carry
+    /// labels (e.g. libsvm files): validates `y in {-1, +1}`, coercing the
+    /// common `{0, 1}` encoding (`0 -> -1`, `1 -> +1`); anything else is
+    /// an error naming the offending sample (for libsvm input: the data
+    /// row, counting samples only — comment/blank lines are skipped by
+    /// the reader). Single-class label vectors are rejected like in
+    /// [`LogisticProblem::from_dataset`].
+    pub fn from_labels(ds: &Dataset) -> Result<Self> {
+        let mut y = Vec::with_capacity(ds.y.len());
+        for (i, &v) in ds.y.iter().enumerate() {
+            let label = if v == 1.0 {
+                1.0
+            } else if v == -1.0 || v == 0.0 {
+                -1.0
+            } else {
+                // i counts samples; in a libsvm file that is the (i+1)-th
+                // data row (comment/blank lines excluded)
+                bail!(
+                    "sample {} (data row {}): label {v} is not a binary label \
+                     (expected -1/+1 or 0/1)",
+                    i,
+                    i + 1
+                );
+            };
+            y.push(label);
+        }
+        let pos = y.iter().filter(|&&v| v > 0.0).count();
+        if y.len() < 2 || pos == 0 || pos == y.len() {
+            bail!(
+                "labels form a single class ({pos}/{} positive) — logistic \
+                 regression needs both",
+                y.len()
+            );
+        }
+        Ok(Self { x: ds.x.clone(), y })
+    }
+
+    /// Auto-detecting entry point for datasets of unknown provenance
+    /// (generated presets, binary caches): a response that is already
+    /// binary-labelled ({-1,+1} or {0,1}) goes through the validated
+    /// coercion — median-splitting ±1 labels would corrupt them — and
+    /// anything else is median-split via
+    /// [`LogisticProblem::from_dataset`].
+    pub fn from_response(ds: &Dataset) -> Result<Self> {
+        if ds.y.iter().all(|&v| v == 1.0 || v == -1.0 || v == 0.0) {
+            Self::from_labels(ds)
+        } else {
+            Self::from_dataset(ds)
+        }
     }
 
     pub fn n(&self) -> usize {
@@ -62,18 +211,27 @@ impl LogisticProblem {
         self.x.ncols()
     }
 
+    /// Column norms + Lipschitz constant, computed once per problem.
+    pub fn precompute(&self) -> LogisticPrecompute {
+        LogisticPrecompute {
+            col_norms_sq: self.x.col_norms_sq(),
+            lipschitz: (self.x.spectral_norm_sq(60) / 4.0).max(f64::MIN_POSITIVE) * 1.001,
+        }
+    }
+
     /// Logistic loss at beta.
     pub fn loss(&self, beta: &[f64]) -> f64 {
         let mut xb = vec![0.0; self.n()];
         self.x.matvec(beta, &mut xb);
         xb.iter()
             .zip(self.y.iter())
-            .map(|(&m, &yi)| {
-                let t = -yi * m;
-                // log(1 + exp(t)) stably
-                if t > 0.0 { t + (1.0 + (-t).exp()).ln() } else { (1.0 + t.exp()).ln() }
-            })
+            .map(|(&m, &yi)| log1pexp(-yi * m))
             .sum()
+    }
+
+    /// Primal objective `loss(beta) + lambda ||beta||_1`.
+    pub fn objective(&self, beta: &[f64], lambda: f64) -> f64 {
+        self.loss(beta) + lambda * beta.iter().map(|b| b.abs()).sum::<f64>()
     }
 
     /// Gradient of the loss: `-X^T (y .* (1 - p))`.
@@ -121,17 +279,201 @@ impl LogisticProblem {
 #[derive(Clone, Copy, Debug)]
 pub struct LogisticOptions {
     pub max_iters: usize,
+    /// stop when the relative objective change stays below `tol` across
+    /// two consecutive stall checks
     pub tol: f64,
+    /// override the precomputed Lipschitz constant (library callers
+    /// without a [`LogisticPrecompute`]); `None` uses the precompute
+    pub lipschitz: Option<f64>,
+    /// iterations between full-objective stall checks — the objective
+    /// costs an extra `O(n |active|)` pass, so it is evaluated every K
+    /// iterations instead of every iteration
+    pub stall_check_every: usize,
 }
 
 impl Default for LogisticOptions {
     fn default() -> Self {
-        Self { max_iters: 3000, tol: 1e-10 }
+        Self { max_iters: 3000, tol: 1e-10, lipschitz: None, stall_check_every: 5 }
     }
 }
 
-/// Masked FISTA for L1 logistic regression; warm-startable via `beta`.
+/// `out = X[:, active] * beta[active]` via per-column axpy — `O(n |active|)`
+/// on either backend, the masked-matvec every solver iteration needs.
+fn active_matvec(x: &DesignMatrix, active: &[usize], beta: &[f64], out: &mut [f64]) {
+    out.fill(0.0);
+    for &j in active {
+        x.axpy_col(beta[j], j, out);
+    }
+}
+
+/// The gap-safe dynamic checkpoint for the logistic path.
+///
+/// Given the margins `xb = X beta` of the current iterate (supported on
+/// `active`), builds the feasible dual point of the **restricted** problem
+/// by dual scaling (`theta = y .* (1-p) / max(lambda, ||X_A^T (y.*(1-p))||_inf)`),
+/// computes the restricted duality gap with the exact (entropy-shaped)
+/// logistic dual objective, and discards every surviving feature whose
+/// gap-sphere bound `|<x_j, theta>| + ||x_j|| sqrt(2 gap)/lambda` is below
+/// `1 - SCREEN_EPS`.
+///
+/// Safety composes exactly as in [`crate::screening::dynamic`]: when
+/// `active` came from safe restrictions the discards are exact for the
+/// full problem; under the heuristic SasviQ/Strong rules they are
+/// "restricted-safe" and the path runner's KKT correction re-admits any
+/// casualties.
+///
+/// `scratch` has length `p`; on return `scratch[j] = <x_j, y.*(1-p)>` for
+/// `j in active`. Parallel over column blocks with block-ordered
+/// reductions — bit-identical at every thread count.
+pub fn logistic_rescreen(
+    prob: &LogisticProblem,
+    lambda: f64,
+    active: &[usize],
+    beta: &[f64],
+    xb: &[f64],
+    col_norms_sq: &[f64],
+    scratch: &mut [f64],
+) -> Rescreen {
+    assert!(lambda > 0.0, "logistic screening needs lambda > 0");
+    let n = prob.n();
+    assert_eq!(xb.len(), n);
+    // w = y .* (1 - p) (the unscaled dual direction) and the primal loss
+    let mut w = vec![0.0; n];
+    let mut loss = 0.0;
+    for i in 0..n {
+        let m = prob.y[i] * xb[i];
+        w[i] = prob.y[i] * (1.0 - sigmoid(m));
+        loss += log1pexp(-m);
+    }
+    prob.x.t_matvec_subset(&w, active, scratch);
+    let s: &[f64] = scratch;
+    // block maxima folded in block order — reproduces the serial fold
+    let infeas = par::max_abs_indexed(active, s);
+    let denom = lambda.max(infeas);
+    let scale = if denom > 0.0 { 1.0 / denom } else { 0.0 };
+    // dual objective at theta = w * scale: with c_i = lambda theta_i y_i
+    // = lambda scale (1 - p_i) in [0, 1],
+    //   D(theta) = -sum_i [c_i ln c_i + (1 - c_i) ln(1 - c_i)]
+    let lam_scale = (lambda * scale).min(1.0);
+    let mut dual = 0.0;
+    for i in 0..n {
+        let c = (lam_scale * (w[i] * prob.y[i])).clamp(0.0, 1.0);
+        dual -= xlogx(c) + xlogx(1.0 - c);
+    }
+    let l1: f64 = active.iter().map(|&j| beta[j].abs()).sum();
+    let gap = loss + lambda * l1 - dual;
+    // lambda^2-strong concavity of the logistic dual (conservative: the
+    // true modulus is 4 lambda^2)
+    let radius = (2.0 * gap.max(0.0)).sqrt() / lambda;
+    let thr = 1.0 - SCREEN_EPS;
+    let (survivors, dropped) = par::partition_indexed(active, |j| {
+        (s[j] * scale).abs() + col_norms_sq[j].sqrt() * radius >= thr
+    });
+    Rescreen { survivors, dropped, gap, infeas }
+}
+
+/// Active-set FISTA for L1 logistic regression; warm-startable via `beta`
+/// (which must be supported on `active`). Per-iteration cost is
+/// `O(n |active|)`: the masked matvec runs over the active columns only
+/// and the gradient statistics use the batched subset pass.
+///
+/// With `dynamic.active()`, a [`logistic_rescreen`] checkpoint runs at
+/// iteration 0 (on the warm-start margins) and every `recheck_every`
+/// iterations; discarded coordinates are zeroed, `active` shrinks in
+/// place, momentum restarts, and every checkpoint is recorded in `trace`.
 /// Returns iterations used.
+#[allow(clippy::too_many_arguments)]
+pub fn solve_logistic_active(
+    prob: &LogisticProblem,
+    lambda: f64,
+    active: &mut Vec<usize>,
+    beta: &mut [f64],
+    pre: &LogisticPrecompute,
+    opts: &LogisticOptions,
+    dynamic: &DynamicOptions,
+    trace: &mut DynamicTrace,
+) -> usize {
+    let n = prob.n();
+    let p = prob.p();
+    assert_eq!(beta.len(), p);
+    let lip = opts.lipschitz.unwrap_or(pre.lipschitz).max(f64::MIN_POSITIVE);
+    let mut z = beta.to_vec();
+    let mut t = 1.0f64;
+    let mut xb = vec![0.0; n];
+    let mut grad = vec![0.0; p];
+    let mut scratch = vec![0.0; p];
+    let mut last = f64::INFINITY;
+    let mut stall = 0;
+    let mut iters = 0;
+    let check_every = opts.stall_check_every.max(1);
+    for it in 0..opts.max_iters {
+        if dynamic.active() && it % dynamic.recheck_every == 0 {
+            active_matvec(&prob.x, active, beta, &mut xb);
+            let rs = logistic_rescreen(
+                prob, lambda, active, beta, &xb, &pre.col_norms_sq, &mut scratch,
+            );
+            let width_before = active.len();
+            if !rs.dropped.is_empty() {
+                for &j in &rs.dropped {
+                    beta[j] = 0.0;
+                    z[j] = 0.0;
+                }
+                *active = rs.survivors;
+                // momentum restart on shrink (the prox trajectory changed)
+                for &j in active.iter() {
+                    z[j] = beta[j];
+                }
+                t = 1.0;
+            }
+            trace.push_event(it, width_before, active.len(), rs.gap, rs.dropped);
+            if active.is_empty() {
+                break;
+            }
+        }
+        iters = it + 1;
+        // gradient at the momentum point z, restricted to the active set
+        active_matvec(&prob.x, active, &z, &mut xb);
+        for i in 0..n {
+            let pi = sigmoid(prob.y[i] * xb[i]);
+            xb[i] = -prob.y[i] * (1.0 - pi);
+        }
+        prob.x.t_matvec_subset(&xb, active, &mut grad);
+        let t_next = 0.5 * (1.0 + (1.0 + 4.0 * t * t).sqrt());
+        let mom = (t - 1.0) / t_next;
+        for &j in active.iter() {
+            let prev = beta[j];
+            let nxt = ops::soft_threshold(z[j] - grad[j] / lip, lambda / lip);
+            z[j] = nxt + mom * (nxt - prev);
+            beta[j] = nxt;
+        }
+        t = t_next;
+        // full-objective stall check every K iterations (the objective
+        // costs another O(n |active|) pass — hoisted off the per-iteration
+        // path)
+        if (it + 1) % check_every == 0 {
+            active_matvec(&prob.x, active, beta, &mut xb);
+            let mut obj = 0.0;
+            for i in 0..n {
+                obj += log1pexp(-prob.y[i] * xb[i]);
+            }
+            obj += lambda * active.iter().map(|&j| beta[j].abs()).sum::<f64>();
+            if (last - obj).abs() <= opts.tol * (1.0 + obj.abs()) {
+                stall += 1;
+                if stall >= 2 {
+                    break;
+                }
+            } else {
+                stall = 0;
+            }
+            last = obj;
+        }
+    }
+    iters
+}
+
+/// Masked-interface wrapper around [`solve_logistic_active`] (library /
+/// test convenience; the path runner uses the active-set form with a
+/// shared precompute). Returns iterations used.
 pub fn solve_logistic(
     prob: &LogisticProblem,
     lambda: f64,
@@ -142,46 +484,23 @@ pub fn solve_logistic(
     let p = prob.p();
     assert_eq!(mask.len(), p);
     assert_eq!(beta.len(), p);
+    let mut active = Vec::with_capacity(p);
     for j in 0..p {
-        if !mask[j] {
+        if mask[j] {
+            active.push(j);
+        } else {
             beta[j] = 0.0;
         }
     }
-    let lip = (prob.x.spectral_norm_sq(60) / 4.0).max(f64::MIN_POSITIVE) * 1.001;
-    let mut z = beta.to_vec();
-    let mut t = 1.0f64;
-    let mut grad = vec![0.0; p];
-    let mut last = f64::INFINITY;
-    let mut stall = 0;
-    let mut iters = 0;
-    for it in 0..opts.max_iters {
-        iters = it + 1;
-        prob.grad(&z, &mut grad);
-        let t_next = 0.5 * (1.0 + (1.0 + 4.0 * t * t).sqrt());
-        let mom = (t - 1.0) / t_next;
-        for j in 0..p {
-            let prev = beta[j];
-            let nxt = if mask[j] {
-                ops::soft_threshold(z[j] - grad[j] / lip, lambda / lip)
-            } else {
-                0.0
-            };
-            z[j] = nxt + mom * (nxt - prev);
-            beta[j] = nxt;
-        }
-        t = t_next;
-        let obj = prob.loss(beta) + lambda * beta.iter().map(|b| b.abs()).sum::<f64>();
-        if (last - obj).abs() <= opts.tol * (1.0 + obj.abs()) {
-            stall += 1;
-            if stall >= 5 {
-                break;
-            }
-        } else {
-            stall = 0;
-        }
-        last = obj;
-    }
-    iters
+    let pre = match opts.lipschitz {
+        // avoid the power iteration entirely when the caller supplies L
+        Some(_) => LogisticPrecompute { col_norms_sq: Vec::new(), lipschitz: 0.0 },
+        None => prob.precompute(),
+    };
+    let mut trace = DynamicTrace::new(active.len());
+    solve_logistic_active(
+        prob, lambda, &mut active, beta, &pre, opts, &DynamicOptions::off(), &mut trace,
+    )
 }
 
 /// Screening rules for the logistic path.
@@ -195,8 +514,34 @@ pub enum LogiRule {
     SasviQ,
 }
 
+impl LogiRule {
+    pub fn parse(name: &str) -> Option<Self> {
+        match name {
+            "none" => Some(LogiRule::None),
+            "strong" => Some(LogiRule::Strong),
+            "sasviq" => Some(LogiRule::SasviQ),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LogiRule::None => "none",
+            LogiRule::Strong => "strong",
+            LogiRule::SasviQ => "sasviq",
+        }
+    }
+
+    pub fn all() -> [LogiRule; 3] {
+        [LogiRule::None, LogiRule::Strong, LogiRule::SasviQ]
+    }
+}
+
 /// Screen for `lam2` given the solved state at `lam1`.
-/// `xt_theta1[j] = <x_j, theta1>`; `z` is the working response for SasviQ.
+/// `xt_theta1[j] = <x_j, theta1>`; `col_norms_sq` comes from the path
+/// precompute. Returns the screened count. Batched over column blocks
+/// (bit-identical at every thread count).
+#[allow(clippy::too_many_arguments)]
 pub fn logistic_screen(
     prob: &LogisticProblem,
     rule: LogiRule,
@@ -205,6 +550,7 @@ pub fn logistic_screen(
     xt_theta1: &[f64],
     lam1: f64,
     lam2: f64,
+    col_norms_sq: &[f64],
     keep: &mut [bool],
 ) -> usize {
     let p = prob.p();
@@ -216,13 +562,11 @@ pub fn logistic_screen(
         LogiRule::Strong => {
             let ratio = lam1 / lam2;
             let slack = ratio - 1.0;
-            let mut screened = 0;
-            for j in 0..p {
-                let b = ratio * xt_theta1[j].abs() + slack;
-                keep[j] = b >= 1.0 - SCREEN_EPS;
-                screened += (!keep[j]) as usize;
-            }
-            screened
+            let thr = 1.0 - SCREEN_EPS;
+            let kept = par::fill_mask_count(keep, |j| {
+                ratio * xt_theta1[j].abs() + slack >= thr
+            });
+            p - kept
         }
         LogiRule::SasviQ => {
             // IRLS working response at (beta1, theta1): with W ~ I/4,
@@ -244,82 +588,14 @@ pub fn logistic_screen(
             let g = Geometry::from_scalars(lam1, lam2, anorm2, az, znorm2);
             let mut xtz = vec![0.0; p];
             prob.x.t_matvec(&z, &mut xtz);
-            let norms = prob.x.col_norms_sq();
-            let mut screened = 0;
-            for j in 0..p {
-                let (up, um) = feature_bounds(&g, xt_theta1[j], xtz[j], norms[j]);
-                keep[j] = up >= 1.0 - SCREEN_EPS || um >= 1.0 - SCREEN_EPS;
-                screened += (!keep[j]) as usize;
-            }
-            screened
+            let thr = 1.0 - SCREEN_EPS;
+            let kept = par::fill_mask_count(keep, |j| {
+                let (up, um) = feature_bounds(&g, xt_theta1[j], xtz[j], col_norms_sq[j]);
+                up >= thr || um >= thr
+            });
+            p - kept
         }
     }
-}
-
-/// Per-step record of a logistic path run.
-#[derive(Clone, Copy, Debug)]
-pub struct LogiStep {
-    pub lambda: f64,
-    pub screened: usize,
-    pub kkt_violations: usize,
-    pub nnz: usize,
-    pub iters: usize,
-}
-
-/// Pathwise L1-logistic with screening + KKT correction; returns per-step
-/// records and the final coefficients.
-pub fn run_logistic_path(
-    prob: &LogisticProblem,
-    lambdas: &[f64],
-    rule: LogiRule,
-    opts: &LogisticOptions,
-) -> (Vec<LogiStep>, Vec<f64>) {
-    let p = prob.p();
-    let mut beta = vec![0.0; p];
-    let mut keep = vec![true; p];
-    let mut grad = vec![0.0; p];
-    let mut steps = Vec::with_capacity(lambdas.len());
-    let mut lam1 = prob.lambda_max();
-    let (mut theta1, mut xt_theta1) = prob.dual_point(&beta, lam1);
-
-    for &lambda in lambdas {
-        let screened = if lambda < lam1 {
-            logistic_screen(prob, rule, &beta, &theta1, &xt_theta1, lam1, lambda, &mut keep)
-        } else {
-            keep.fill(true);
-            0
-        };
-        let mut iters = solve_logistic(prob, lambda, &keep, &mut beta, opts);
-        // KKT correction on the discarded set (both rules are heuristics)
-        let mut kkt_violations = 0;
-        for _ in 0..16 {
-            prob.grad(&beta, &mut grad);
-            let mut violated = false;
-            for j in 0..p {
-                if !keep[j] && grad[j].abs() > lambda * (1.0 + 1e-6) + 1e-6 {
-                    keep[j] = true;
-                    violated = true;
-                    kkt_violations += 1;
-                }
-            }
-            if !violated {
-                break;
-            }
-            iters += solve_logistic(prob, lambda, &keep, &mut beta, opts);
-        }
-        let (t, xt) = prob.dual_point(&beta, lambda);
-        theta1 = t;
-        xt_theta1 = xt;
-        lam1 = lambda;
-        steps.push(LogiStep {
-            lambda,
-            screened,
-            kkt_violations,
-            nnz: beta.iter().filter(|&&b| b != 0.0).count(),
-            iters,
-        });
-    }
-    (steps, beta)
 }
 
 #[cfg(test)]
@@ -330,7 +606,75 @@ mod tests {
     fn make(n: usize, p: usize, seed: u64) -> LogisticProblem {
         let ds = SyntheticSpec { n, p, nnz: p / 8, ..Default::default() }
             .generate(seed);
-        LogisticProblem::from_dataset(&ds)
+        LogisticProblem::from_dataset(&ds).expect("median split")
+    }
+
+    #[test]
+    fn median_split_is_balanced_and_deterministic() {
+        let ds = SyntheticSpec { n: 41, p: 10, nnz: 2, ..Default::default() }
+            .generate(3);
+        let a = LogisticProblem::from_dataset(&ds).unwrap();
+        let b = LogisticProblem::from_dataset(&ds).unwrap();
+        assert_eq!(a.y, b.y);
+        let pos = a.y.iter().filter(|&&v| v > 0.0).count();
+        // balanced to within one sample, even though n is odd
+        assert!(pos == 20 || pos == 21, "pos {pos}");
+        assert!(a.y.iter().all(|&v| v == 1.0 || v == -1.0));
+    }
+
+    #[test]
+    fn median_split_balances_heavily_tied_responses() {
+        // the old upper-median `>` split labelled this all -1
+        let mut ds = SyntheticSpec { n: 8, p: 4, nnz: 1, ..Default::default() }
+            .generate(1);
+        ds.y = vec![2.0, 2.0, 2.0, 2.0, 2.0, 2.0, 1.0, 3.0];
+        let prob = LogisticProblem::from_dataset(&ds).unwrap();
+        let pos = prob.y.iter().filter(|&&v| v > 0.0).count();
+        assert_eq!(pos, 4, "ties must be split to balance: {:?}", prob.y);
+        // deterministic in sample order: the strict-above sample and the
+        // first three ties get +1
+        assert_eq!(prob.y[7], 1.0);
+        assert_eq!(prob.y[6], -1.0);
+    }
+
+    #[test]
+    fn constant_response_is_an_error_not_a_degenerate_problem() {
+        let mut ds = SyntheticSpec { n: 10, p: 4, nnz: 1, ..Default::default() }
+            .generate(2);
+        ds.y = vec![1.5; 10];
+        let err = LogisticProblem::from_dataset(&ds).unwrap_err();
+        assert!(err.to_string().contains("constant"), "{err}");
+    }
+
+    #[test]
+    fn from_labels_coerces_01_and_rejects_arbitrary_floats() {
+        let mut ds = SyntheticSpec { n: 4, p: 3, nnz: 1, ..Default::default() }
+            .generate(4);
+        ds.y = vec![0.0, 1.0, -1.0, 1.0];
+        let prob = LogisticProblem::from_labels(&ds).unwrap();
+        assert_eq!(prob.y, vec![-1.0, 1.0, -1.0, 1.0]);
+        // arbitrary float labels error, naming the offending sample/row
+        ds.y = vec![1.0, 0.5, -1.0, 1.0];
+        let err = LogisticProblem::from_labels(&ds).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("data row 2") && msg.contains("0.5"), "{msg}");
+        // single-class labels are rejected
+        ds.y = vec![1.0, 1.0, 1.0, 1.0];
+        assert!(LogisticProblem::from_labels(&ds).is_err());
+    }
+
+    #[test]
+    fn from_response_auto_detects_binary_labels() {
+        let mut ds = SyntheticSpec { n: 6, p: 3, nnz: 1, ..Default::default() }
+            .generate(5);
+        // regression response -> balanced median split
+        let prob = LogisticProblem::from_response(&ds).unwrap();
+        assert_eq!(prob.y.iter().filter(|&&v| v > 0.0).count(), 3);
+        // already-binary labels are preserved (a median split would force
+        // this 4/2 imbalance to 3/3, corrupting genuine labels)
+        ds.y = vec![1.0, 1.0, 1.0, 1.0, -1.0, 0.0];
+        let prob = LogisticProblem::from_response(&ds).unwrap();
+        assert_eq!(prob.y, vec![1.0, 1.0, 1.0, 1.0, -1.0, -1.0]);
     }
 
     #[test]
@@ -395,39 +739,127 @@ mod tests {
     }
 
     #[test]
-    fn screened_paths_match_unscreened() {
-        let prob = make(25, 40, 5);
-        let lmax = prob.lambda_max();
-        let lambdas: Vec<f64> = (1..=10).map(|k| lmax * (1.0 - 0.09 * k as f64)).collect();
-        let opts = LogisticOptions::default();
-        let (_, base) = run_logistic_path(&prob, &lambdas, LogiRule::None, &opts);
-        for rule in [LogiRule::Strong, LogiRule::SasviQ] {
-            let (steps, beta) = run_logistic_path(&prob, &lambdas, rule, &opts);
-            for j in 0..prob.p() {
-                assert!(
-                    (beta[j] - base[j]).abs() < 5e-4,
-                    "{rule:?} feature {j}: {} vs {}",
-                    beta[j],
-                    base[j]
-                );
-            }
-            let total: usize = steps.iter().map(|s| s.screened).sum();
-            assert!(total > 0, "{rule:?} screened nothing");
+    fn caller_supplied_lipschitz_matches_precompute_path() {
+        let prob = make(25, 30, 7);
+        let pre = prob.precompute();
+        let lam = 0.4 * prob.lambda_max();
+        let mask = vec![true; 30];
+        let mut a = vec![0.0; 30];
+        solve_logistic(&prob, lam, &mask, &mut a, &LogisticOptions::default());
+        let mut b = vec![0.0; 30];
+        let opts = LogisticOptions {
+            lipschitz: Some(pre.lipschitz),
+            ..Default::default()
+        };
+        solve_logistic(&prob, lam, &mask, &mut b, &opts);
+        for j in 0..30 {
+            assert_eq!(a[j].to_bits(), b[j].to_bits(), "j={j}");
         }
     }
 
     #[test]
-    fn sasviq_screens_at_least_a_majority_near_lambda_max() {
-        let prob = make(30, 60, 6);
-        let lmax = prob.lambda_max();
-        let lambdas = [0.95 * lmax, 0.9 * lmax];
-        let (steps, _) =
-            run_logistic_path(&prob, &lambdas, LogiRule::SasviQ, &LogisticOptions::default());
-        assert!(
-            steps[0].screened * 2 > prob.p(),
-            "screened {} of {}",
-            steps[0].screened,
-            prob.p()
+    fn gap_safe_rescreen_is_safe_at_a_near_optimal_point() {
+        for seed in [5u64, 12] {
+            let prob = make(30, 120, seed);
+            let pre = prob.precompute();
+            let lam = 0.4 * prob.lambda_max();
+            let mut beta = vec![0.0; prob.p()];
+            let mask = vec![true; prob.p()];
+            let tight = LogisticOptions { tol: 1e-13, max_iters: 20_000, ..Default::default() };
+            solve_logistic(&prob, lam, &mask, &mut beta, &tight);
+            let active: Vec<usize> = (0..prob.p()).collect();
+            let mut xb = vec![0.0; prob.n()];
+            prob.x.matvec(&beta, &mut xb);
+            let mut scratch = vec![0.0; prob.p()];
+            let rs = logistic_rescreen(
+                &prob, lam, &active, &beta, &xb, &pre.col_norms_sq, &mut scratch,
+            );
+            assert!(rs.gap >= -1e-9, "gap {}", rs.gap);
+            assert!(!rs.dropped.is_empty(), "seed {seed}: nothing screened");
+            for &j in &rs.dropped {
+                assert!(
+                    beta[j].abs() < 1e-10,
+                    "seed {seed}: dropped feature {j} with beta {}",
+                    beta[j]
+                );
+            }
+            let mut all: Vec<usize> = rs.survivors.clone();
+            all.extend(&rs.dropped);
+            all.sort_unstable();
+            assert_eq!(all, active);
+        }
+    }
+
+    #[test]
+    fn dynamic_solve_matches_static_solve() {
+        let prob = make(30, 80, 9);
+        let pre = prob.precompute();
+        let lam = 0.3 * prob.lambda_max();
+        let opts = LogisticOptions { tol: 1e-12, max_iters: 20_000, ..Default::default() };
+        let mut b_static = vec![0.0; prob.p()];
+        let mut act: Vec<usize> = (0..prob.p()).collect();
+        let mut tr = DynamicTrace::new(act.len());
+        solve_logistic_active(
+            &prob, lam, &mut act, &mut b_static, &pre, &opts,
+            &DynamicOptions::off(), &mut tr,
         );
+        let mut b_dyn = vec![0.0; prob.p()];
+        let mut act2: Vec<usize> = (0..prob.p()).collect();
+        let mut tr2 = DynamicTrace::new(act2.len());
+        solve_logistic_active(
+            &prob, lam, &mut act2, &mut b_dyn, &pre, &opts,
+            &DynamicOptions::enabled_every(4), &mut tr2,
+        );
+        assert!(tr2.rechecks() > 0);
+        assert!(tr2.distinct_dropped() > 0, "checkpoints dropped nothing");
+        assert!(act2.len() < prob.p(), "active set never shrank");
+        let o_static = prob.objective(&b_static, lam);
+        let o_dyn = prob.objective(&b_dyn, lam);
+        assert!(
+            (o_static - o_dyn).abs() <= 1e-8 * (1.0 + o_static.abs()),
+            "objectives diverged: {o_static} vs {o_dyn}"
+        );
+        for &j in &act2 {
+            assert!(act.contains(&j));
+        }
+    }
+
+    #[test]
+    fn rule_parse_name_round_trip() {
+        for rule in LogiRule::all() {
+            assert_eq!(LogiRule::parse(rule.name()), Some(rule));
+        }
+        assert_eq!(LogiRule::parse("bogus"), None);
+    }
+
+    #[test]
+    fn screen_rules_reject_near_lambda_max_and_none_keeps_all() {
+        let prob = make(30, 60, 6);
+        let pre = prob.precompute();
+        let lmax = prob.lambda_max();
+        let lam1 = 0.95 * lmax;
+        let lam2 = 0.9 * lmax;
+        let mask = vec![true; prob.p()];
+        let mut beta = vec![0.0; prob.p()];
+        let tight = LogisticOptions { tol: 1e-12, max_iters: 20_000, ..Default::default() };
+        solve_logistic(&prob, lam1, &mask, &mut beta, &tight);
+        let (theta1, xt1) = prob.dual_point(&beta, lam1);
+        let mut keep = vec![false; prob.p()];
+        let screened_none = logistic_screen(
+            &prob, LogiRule::None, &beta, &theta1, &xt1, lam1, lam2,
+            &pre.col_norms_sq, &mut keep,
+        );
+        assert_eq!(screened_none, 0);
+        assert!(keep.iter().all(|&k| k));
+        for rule in [LogiRule::Strong, LogiRule::SasviQ] {
+            let mut keep = vec![true; prob.p()];
+            let screened = logistic_screen(
+                &prob, rule, &beta, &theta1, &xt1, lam1, lam2,
+                &pre.col_norms_sq, &mut keep,
+            );
+            assert!(screened > 0, "{rule:?} screened nothing");
+            assert!(screened < prob.p(), "{rule:?} screened everything");
+            assert_eq!(keep.iter().filter(|&&k| !k).count(), screened);
+        }
     }
 }

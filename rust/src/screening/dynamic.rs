@@ -179,15 +179,7 @@ pub fn rescreen(
     x.t_matvec_subset(resid, active, xt_r);
     let s: &[f64] = xt_r;
     // block maxima folded in block order — reproduces the serial fold
-    let infeas = par::map_columns(active.len(), |_, r| {
-        let mut m = 0.0f64;
-        for &j in &active[r] {
-            m = m.max(s[j].abs());
-        }
-        m
-    })
-    .into_iter()
-    .fold(0.0f64, f64::max);
+    let infeas = par::max_abs_indexed(active, s);
     // restricted duality gap at (beta, theta), via the same shared
     // arithmetic the CD stopping criterion uses; note theta - y/lambda = -b,
     // so the gap computation also yields ||b||^2 for the VI ball below
@@ -197,32 +189,17 @@ pub fn rescreen(
     let bnorm = bnorm2.sqrt();
     let thr = 1.0 - SCREEN_EPS;
 
-    // fused per-feature test; per-block survivor/dropped lists are
-    // concatenated in block order, so the output order is deterministic
-    let parts = par::map_columns(active.len(), |_, r| {
-        let mut surv = Vec::new();
-        let mut drop = Vec::new();
-        for &j in &active[r] {
-            let xt = s[j] * scale; // <x_j, theta>
-            let xn = col_norms_sq[j].sqrt();
-            let gap_bound = xt.abs() + xn * radius;
-            let xjb = xty[j] / lambda - xt; // <x_j, b>, b = y/lambda - theta
-            let up = xt + 0.5 * (xn * bnorm + xjb);
-            let um = -xt + 0.5 * (xn * bnorm - xjb);
-            if gap_bound.min(up.max(um)) >= thr {
-                surv.push(j);
-            } else {
-                drop.push(j);
-            }
-        }
-        (surv, drop)
+    // fused per-feature test; the shared partition harvest concatenates
+    // per-block lists in block order, so the output order is deterministic
+    let (survivors, dropped) = par::partition_indexed(active, |j| {
+        let xt = s[j] * scale; // <x_j, theta>
+        let xn = col_norms_sq[j].sqrt();
+        let gap_bound = xt.abs() + xn * radius;
+        let xjb = xty[j] / lambda - xt; // <x_j, b>, b = y/lambda - theta
+        let up = xt + 0.5 * (xn * bnorm + xjb);
+        let um = -xt + 0.5 * (xn * bnorm - xjb);
+        gap_bound.min(up.max(um)) >= thr
     });
-    let mut survivors = Vec::with_capacity(active.len());
-    let mut dropped = Vec::new();
-    for (sv, dr) in parts {
-        survivors.extend(sv);
-        dropped.extend(dr);
-    }
     Rescreen { survivors, dropped, gap, infeas }
 }
 

@@ -10,6 +10,8 @@
 //!                                         -> {"job": id}
 //! STATUS <job-id>                         -> {"status": "..."}
 //! RESULT <job-id>                         -> {"steps": [...], ...} (blocks)
+//! LPATH <preset> <seed> <scale> <rule> [k] [min_frac] [dynamic [recheck] | static]
+//!                                         -> {"rejection": [...], ...}
 //! SUREREMOVAL <dataset-id> <lam1-frac> <j> -> {"lam_s": ...}
 //! QUIT
 //! ```
@@ -38,6 +40,19 @@
 //! in-solver rejection (`dynamic_dropped` total, `dynamic_rejection` per
 //! step) and the working-set telemetry (`ws_outer` outer-iteration total,
 //! `ws_width` final working-set width per step).
+//!
+//! `LPATH` is the §6 classification workload: it generates the preset,
+//! builds labels via the auto-detecting entry point (binary responses are
+//! validated/coerced, regression responses median-split into balanced ±1
+//! classes), and runs the logistic λ-path through the same coordinator
+//! runner the CLI `solve-logistic` command uses (rules `none` / `strong` / `sasviq`,
+//! KKT-corrected; the optional trailing mode adds or suppresses the
+//! gap-safe in-solver checkpoint exactly like `PATH`'s `dynamic`/`static`
+//! modes, defaulting to the process-wide dynamic setting). The path is
+//! synchronous — the single reply carries the full telemetry: `rejection`
+//! fraction per step, `kkt_violations` / `kkt_resolves`,
+//! `dynamic_dropped` + per-step `dynamic_rejection`, `nnz`, and the
+//! `iters x width` `work` integral.
 
 pub mod json;
 
@@ -155,6 +170,7 @@ fn handle_conn(stream: TcpStream, state: Arc<ServerState>) -> Result<()> {
             }
             ["STATUS", job] => cmd_status(&state, job),
             ["RESULT", job] => cmd_result(&state, job),
+            ["LPATH", args @ ..] => cmd_lpath(args),
             ["SUREREMOVAL", ds, frac, j] => cmd_sure_removal(&state, ds, frac, j),
             other => err_msg(&format!("unknown command: {other:?}")),
         };
@@ -360,6 +376,109 @@ fn cmd_result(state: &ServerState, job: &str) -> String {
         }
         None => err_msg("job failed or already consumed"),
     }
+}
+
+/// `LPATH <preset> <seed> <scale> <rule> [k] [min_frac] [mode [recheck]]`
+/// — the synchronous logistic-path verb (see the module docs).
+fn cmd_lpath(args: &[&str]) -> String {
+    use crate::coordinator::logistic::{run_logistic_path, LogisticPathOptions};
+    use crate::logistic::{LogiRule, LogisticProblem};
+    let [preset, seed, scale, rule, rest @ ..] = args else {
+        return err_msg("usage: LPATH <preset> <seed> <scale> <rule> [k] [min_frac] [dynamic [recheck] | static]");
+    };
+    let preset = match Preset::parse(preset) {
+        Some(p) => p,
+        None => return err_msg(&format!("unknown preset {preset}")),
+    };
+    let rule = match LogiRule::parse(rule) {
+        Some(r) => r,
+        None => return err_msg(&format!("unknown logistic rule {rule}")),
+    };
+    // every positional slot parses strictly: a misplaced token (e.g.
+    // `dynamic` in the k slot) must error, not silently become a default
+    let seed: u64 = match seed.parse() {
+        Ok(v) => v,
+        Err(_) => return err_msg(&format!("bad seed {seed}")),
+    };
+    let scale: f64 = match scale.parse() {
+        Ok(v) => v,
+        Err(_) => return err_msg(&format!("bad scale {scale}")),
+    };
+    let k: usize = match rest.first() {
+        None => 30,
+        Some(v) => match v.parse() {
+            Ok(k) => k,
+            Err(_) => return err_msg(&format!("bad grid size {v}")),
+        },
+    };
+    let min_frac: f64 = match rest.get(1) {
+        None => 0.1,
+        Some(v) => match v.parse() {
+            Ok(f) => f,
+            Err(_) => return err_msg(&format!("bad min_frac {v}")),
+        },
+    };
+    let mut dynamic = crate::screening::dynamic::process_default();
+    match rest.get(2) {
+        None => {}
+        Some(&"dynamic") => dynamic.enabled = true,
+        Some(&"static") => dynamic.enabled = false,
+        Some(other) => return err_msg(&format!("bad lpath mode {other}")),
+    }
+    if let Some(r) = rest.get(3) {
+        match r.parse::<usize>() {
+            Ok(v) => dynamic.recheck_every = v,
+            Err(_) => return err_msg(&format!("bad recheck cadence {r}")),
+        }
+    }
+    // same policy as PATH: an explicit dynamic request that would silently
+    // run static is an error
+    if matches!(rest.get(2), Some(&"dynamic")) && !dynamic.active() {
+        return err_msg("dynamic requested but recheck cadence is 0");
+    }
+    if rest.len() > 4 {
+        return err_msg("too many LPATH arguments");
+    }
+    let ds = match preset.generate(seed, scale) {
+        Ok(d) => d,
+        Err(e) => return err_msg(&format!("generate failed: {e}")),
+    };
+    // auto-detect: binary-labelled responses go through the validated
+    // coercion, regression responses are median-split
+    let prob = match LogisticProblem::from_response(&ds) {
+        Ok(p) => p,
+        Err(e) => return err_msg(&format!("classification split failed: {e}")),
+    };
+    let plan = PathPlan::linear_from_lambda_max(
+        prob.lambda_max(),
+        k.max(2),
+        min_frac.clamp(0.001, 0.99),
+    );
+    let opts = LogisticPathOptions {
+        dynamic,
+        ..LogisticPathOptions::from_process_defaults()
+    };
+    let res = run_logistic_path(&prob, &plan, rule, opts);
+    let mut w = JsonWriter::object();
+    w.field_str("rule", res.rule.name());
+    w.field_f64("total_secs", res.total_time.as_secs_f64());
+    w.field_u64("steps", res.steps.len() as u64);
+    let rej: Vec<f64> = res.steps.iter().map(|s| s.rejection_ratio()).collect();
+    w.field_f64_array("rejection", &rej);
+    let fr: Vec<f64> = res.steps.iter().map(|s| s.frac).collect();
+    w.field_f64_array("frac", &fr);
+    w.field_u64("kkt_violations", res.total_kkt_violations() as u64);
+    w.field_u64("kkt_resolves", res.total_kkt_resolves() as u64);
+    w.field_u64("dynamic_dropped", res.total_dynamic_dropped() as u64);
+    let dyn_rej: Vec<f64> = res
+        .steps
+        .iter()
+        .map(|s| (s.dyn_dropped as f64 / s.kept.max(1) as f64).min(1.0))
+        .collect();
+    w.field_f64_array("dynamic_rejection", &dyn_rej);
+    w.field_u64("nnz", res.steps.last().map(|s| s.nnz).unwrap_or(0) as u64);
+    w.field_u64("work", res.solver_work());
+    w.finish()
 }
 
 fn cmd_sure_removal(state: &ServerState, ds: &str, frac: &str, j: &str) -> String {
@@ -597,6 +716,54 @@ mod tests {
         );
         assert!(replies[7].contains("\"ws_outer\": 0"), "{}", replies[7]);
         crate::solver::working_set::set_process_default(ws_before);
+        stop.store(true, Ordering::Relaxed);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn lpath_runs_the_logistic_workload() {
+        let _guard = crate::linalg::par::test_knob_guard();
+        let server = Server::bind("127.0.0.1:0", 1).unwrap();
+        let addr = server.local_addr().unwrap();
+        let stop = server.stop_handle();
+        let h = std::thread::spawn(move || server.serve().unwrap());
+        let replies = send(
+            addr,
+            &[
+                "LPATH synthetic100 3 0.01 sasviq 5 0.2",
+                "LPATH synthetic100 3 0.01 sasviq 5 0.2 dynamic 3",
+                "LPATH synthetic100 3 0.01 none 4 0.2 static",
+                "LPATH synthetic100 3 0.01 bogus",
+                "LPATH nope 3 0.01 sasviq",
+                "LPATH synthetic100 3 0.01 sasviq 5 0.2 dynamic 0",
+                "LPATH synthetic100 3 0.01 sasviq 5 0.2 sometimes",
+                "LPATH synthetic100 3 0.01 sasviq dynamic",
+                "QUIT",
+            ],
+        );
+        // a sasviq path reports per-step rejection + the KKT telemetry
+        assert!(replies[0].contains("\"rejection\": ["), "{}", replies[0]);
+        assert!(replies[0].contains("\"kkt_resolves\": "), "{}", replies[0]);
+        assert!(replies[0].contains("\"dynamic_dropped\": 0"), "{}", replies[0]);
+        // the dynamic mode drops features inside the solver
+        assert!(
+            replies[1].contains("\"dynamic_rejection\": ["),
+            "{}",
+            replies[1]
+        );
+        assert!(
+            !replies[1].contains("\"dynamic_dropped\": 0,"),
+            "dynamic lpath dropped nothing: {}",
+            replies[1]
+        );
+        // static + rule none still runs and reports zero screening
+        assert!(replies[2].contains("\"rule\": \"none\""), "{}", replies[2]);
+        assert!(replies[2].contains("\"dynamic_dropped\": 0"), "{}", replies[2]);
+        // bad rule / preset / cadence-0 / bad mode / misplaced mode token
+        // (`dynamic` in the k slot must not silently become grid 30)
+        for r in &replies[3..8] {
+            assert!(r.contains("error"), "{r}");
+        }
         stop.store(true, Ordering::Relaxed);
         h.join().unwrap();
     }

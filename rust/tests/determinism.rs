@@ -425,6 +425,87 @@ fn working_set_path_bit_identical_and_matches_static_objectives() {
     par::set_threads(before);
 }
 
+/// The logistic-path determinism contract: the §6 pipeline (SasviQ screen,
+/// active-set FISTA, gap-safe checkpoints, KKT correction) runs every
+/// batched pass on the same block engine, so a logistic path is
+/// bit-identical at every thread count on both storage backends.
+#[test]
+fn logistic_path_bit_identical_across_thread_counts() {
+    use sasvi::coordinator::logistic::{run_logistic_path_keep_betas, LogisticPathOptions};
+    use sasvi::logistic::{LogiRule, LogisticOptions, LogisticProblem};
+
+    let _guard = THREAD_KNOB.lock().unwrap();
+    let before = par::threads();
+    let sp_ds = SyntheticSpec {
+        n: 40,
+        p: 600,
+        nnz: 20,
+        density: 0.05,
+        classification: true,
+        ..Default::default()
+    }
+    .generate(29);
+    let mut dn_ds = sp_ds.clone();
+    dn_ds.x = sp_ds.x.to_dense().into();
+    let sp = LogisticProblem::from_labels(&sp_ds).unwrap();
+    let dn = LogisticProblem::from_labels(&dn_ds).unwrap();
+    for prob in [&dn, &sp] {
+        let plan = sasvi::coordinator::PathPlan::linear_from_lambda_max(
+            prob.lambda_max(),
+            8,
+            0.2,
+        );
+        let opts = LogisticPathOptions {
+            solver: LogisticOptions { tol: 1e-12, max_iters: 20_000, ..Default::default() },
+            dynamic: DynamicOptions::enabled_every(4),
+            ..Default::default()
+        };
+        par::set_threads(1);
+        let serial = run_logistic_path_keep_betas(prob, &plan, LogiRule::SasviQ, opts);
+        assert!(
+            serial.total_dynamic_dropped() > 0,
+            "{}: gap-safe checkpoints idle — vacuous",
+            prob.x.storage()
+        );
+        for lanes in [2usize, 4, 8] {
+            par::set_threads(lanes);
+            let parallel =
+                run_logistic_path_keep_betas(prob, &plan, LogiRule::SasviQ, opts);
+            let a = serial.betas.as_ref().unwrap();
+            let b = parallel.betas.as_ref().unwrap();
+            for (k, (sa, sb)) in a.iter().zip(b.iter()).enumerate() {
+                assert_bits_eq(
+                    sa,
+                    sb,
+                    &format!("logistic {} path step {k} lanes {lanes}", prob.x.storage()),
+                );
+            }
+            for (s1, s2) in serial.steps.iter().zip(parallel.steps.iter()) {
+                assert_eq!(s1.kept, s2.kept, "kept diverged at lanes {lanes}");
+                assert_eq!(s1.iters, s2.iters, "iters diverged at lanes {lanes}");
+                assert_eq!(
+                    s1.dyn_dropped, s2.dyn_dropped,
+                    "dynamic drops diverged at lanes {lanes}"
+                );
+                assert_eq!(
+                    s1.dyn_rechecks, s2.dyn_rechecks,
+                    "checkpoint count diverged at lanes {lanes}"
+                );
+                assert_eq!(
+                    s1.kkt_violations, s2.kkt_violations,
+                    "kkt corrections diverged at lanes {lanes}"
+                );
+            }
+            assert_eq!(
+                serial.solver_work(),
+                parallel.solver_work(),
+                "work integral diverged at lanes {lanes}"
+            );
+        }
+    }
+    par::set_threads(before);
+}
+
 #[test]
 fn full_screened_path_bit_identical_across_thread_counts() {
     let _guard = THREAD_KNOB.lock().unwrap();

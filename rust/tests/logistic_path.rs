@@ -1,0 +1,178 @@
+//! The §6 logistic workload's safety/exactness battery, in the style of
+//! `tests/screening_safety.rs`.
+//!
+//! * **Gap-safe dynamic safety** (the provable guarantee): every feature a
+//!   [`sasvi::logistic::logistic_rescreen`] checkpoint discards mid-solve
+//!   must be zero (|beta| < 1e-10) in a high-precision *unscreened*
+//!   solution at the same lambda — checked at every checkpoint of every
+//!   grid point, on dense and 5%-dense CSC designs.
+//! * **Exactness** (the KKT-correction guarantee): the SasviQ- and
+//!   Strong-screened logistic paths, with and without the dynamic
+//!   checkpoint, agree with the unscreened path to 1e-8 in objective at
+//!   every grid point, on both storage backends.
+
+use sasvi::coordinator::logistic::{run_logistic_path_keep_betas, LogisticPathOptions};
+use sasvi::coordinator::PathPlan;
+use sasvi::data::synthetic::SyntheticSpec;
+use sasvi::logistic::{LogiRule, LogisticOptions, LogisticProblem};
+use sasvi::screening::dynamic::DynamicOptions;
+
+/// A dense/5%-CSC pair of genuine ±1-label classification problems.
+fn backend_pair(seed: u64) -> (LogisticProblem, LogisticProblem) {
+    let sp_ds = SyntheticSpec {
+        n: 40,
+        p: 150,
+        nnz: 15,
+        density: 0.05,
+        classification: true,
+        ..Default::default()
+    }
+    .generate(seed);
+    assert!(sp_ds.x.is_sparse());
+    let mut dn_ds = sp_ds.clone();
+    dn_ds.x = sp_ds.x.to_dense().into();
+    let sp = LogisticProblem::from_labels(&sp_ds).expect("generated labels");
+    let dn = LogisticProblem::from_labels(&dn_ds).expect("generated labels");
+    (dn, sp)
+}
+
+fn tight() -> LogisticPathOptions {
+    LogisticPathOptions {
+        solver: LogisticOptions { tol: 1e-12, max_iters: 30_000, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+fn storage(prob: &LogisticProblem) -> &'static str {
+    prob.x.storage()
+}
+
+#[test]
+fn gap_safe_dynamic_drops_are_safe_at_every_checkpoint() {
+    for seed in [3u64, 12] {
+        let (dn, sp) = backend_pair(seed);
+        for prob in [&dn, &sp] {
+            let plan = PathPlan::linear_from_lambda_max(prob.lambda_max(), 7, 0.15);
+            // rule None: the kept set entering every solve is the full
+            // (trivially safe) set, so each checkpoint's discards must be
+            // exact for the full problem — the provable contract
+            let opts = LogisticPathOptions {
+                dynamic: DynamicOptions::enabled_every(3),
+                ..tight()
+            };
+            let dynamic =
+                run_logistic_path_keep_betas(prob, &plan, LogiRule::None, opts);
+            let reference =
+                run_logistic_path_keep_betas(prob, &plan, LogiRule::None, tight());
+            let traces = dynamic.dynamic.as_ref().expect("traces retained");
+            assert!(
+                dynamic.total_dynamic_dropped() > 0,
+                "seed {seed} ({}): no checkpoint ever dropped — vacuous",
+                storage(prob)
+            );
+            let refs = reference.betas.as_ref().unwrap();
+            for (k, trace) in traces.iter().enumerate() {
+                for ev in &trace.events {
+                    for &j in &ev.dropped {
+                        assert!(
+                            refs[k][j].abs() < 1e-10,
+                            "seed {seed} ({}): step {k} checkpoint at iter {} \
+                             dropped feature {j} but the unscreened solution \
+                             has beta_j = {:e}",
+                            storage(prob),
+                            ev.epoch,
+                            refs[k][j]
+                        );
+                    }
+                    assert!(ev.gap.is_finite(), "non-finite checkpoint gap");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn corrected_rule_paths_match_unscreened_objectives() {
+    for seed in [5u64, 9] {
+        let (dn, sp) = backend_pair(seed);
+        for prob in [&dn, &sp] {
+            let plan = PathPlan::linear_from_lambda_max(prob.lambda_max(), 8, 0.15);
+            let base =
+                run_logistic_path_keep_betas(prob, &plan, LogiRule::None, tight());
+            let b0 = base.betas.as_ref().unwrap();
+            for rule in [LogiRule::Strong, LogiRule::SasviQ] {
+                for dynamic in [DynamicOptions::off(), DynamicOptions::enabled_every(4)] {
+                    let opts = LogisticPathOptions { dynamic, ..tight() };
+                    let r = run_logistic_path_keep_betas(prob, &plan, rule, opts);
+                    let screened: usize = r.steps.iter().map(|s| s.screened).sum();
+                    assert!(
+                        screened > 0,
+                        "{rule:?} ({}) screened nothing — vacuous",
+                        storage(prob)
+                    );
+                    let b1 = r.betas.as_ref().unwrap();
+                    for (k, lam) in plan.lambdas.iter().enumerate() {
+                        let oa = prob.objective(&b0[k], *lam);
+                        let ob = prob.objective(&b1[k], *lam);
+                        assert!(
+                            (oa - ob).abs() <= 1e-8 * (1.0 + oa.abs()),
+                            "{rule:?} ({}) dynamic={} step {k}: objective \
+                             {oa} vs unscreened {ob}",
+                            storage(prob),
+                            dynamic.active()
+                        );
+                    }
+                    // solutions live inside the screened-kept set plus the
+                    // KKT re-admissions
+                    for (s, b) in r.steps.iter().zip(b1.iter()) {
+                        let nnz = b.iter().filter(|&&v| v != 0.0).count();
+                        assert!(nnz <= s.kept + s.kkt_violations);
+                        assert_eq!(nnz, s.nnz);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn dense_and_sparse_backends_agree() {
+    let (dn, sp) = backend_pair(21);
+    let plan = PathPlan::linear_from_lambda_max(dn.lambda_max(), 6, 0.2);
+    let a = run_logistic_path_keep_betas(&dn, &plan, LogiRule::SasviQ, tight());
+    let b = run_logistic_path_keep_betas(&sp, &plan, LogiRule::SasviQ, tight());
+    for (s1, s2) in a.steps.iter().zip(b.steps.iter()) {
+        assert_eq!(s1.kept, s2.kept, "kept-set size diverged across backends");
+    }
+    let ba = a.betas.as_ref().unwrap();
+    let bb = b.betas.as_ref().unwrap();
+    for (k, (x, y)) in ba.iter().zip(bb.iter()).enumerate() {
+        for j in 0..dn.p() {
+            assert!(
+                (x[j] - y[j]).abs() < 1e-6,
+                "step {k} feature {j}: dense {} vs csc {}",
+                x[j],
+                y[j]
+            );
+        }
+    }
+}
+
+#[test]
+fn lambda_max_grid_point_fits_nothing() {
+    let (dn, _) = backend_pair(7);
+    let plan = PathPlan::linear_from_lambda_max(dn.lambda_max(), 5, 0.3);
+    let r = run_logistic_path_keep_betas(&dn, &plan, LogiRule::SasviQ, tight());
+    assert_eq!(r.steps[0].nnz, 0, "beta = 0 is optimal at lambda_max");
+    // and the dynamic epoch-0 checkpoint discards (nearly) everything there
+    let opts = LogisticPathOptions {
+        dynamic: DynamicOptions::enabled_every(5),
+        ..tight()
+    };
+    let rd = run_logistic_path_keep_betas(&dn, &plan, LogiRule::SasviQ, opts);
+    assert!(
+        rd.steps[0].dyn_dropped >= dn.p() - 4,
+        "expected a near-total epoch-0 discard at lambda_max, got {}",
+        rd.steps[0].dyn_dropped
+    );
+}
