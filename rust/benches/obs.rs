@@ -1,0 +1,109 @@
+//! Bench: observability overhead.
+//!
+//! Measures the primitive costs of the obs layer — an inert (disabled)
+//! span, a live span, a counter increment, a histogram observation — and
+//! the end-to-end cost of running a dynamically screened path with span
+//! tracing on vs off. The observation-only invariant is enforced, not
+//! just reported: the traced path's betas must be bit-identical to the
+//! untraced run before any number is written.
+//!
+//! Env: SASVI_BENCH_N (default 100), SASVI_BENCH_P (default 2000),
+//! SASVI_BENCH_GRID (default 10).
+
+use std::time::Instant;
+
+use sasvi::coordinator::{run_path_keep_betas, PathOptions, PathPlan};
+use sasvi::data::synthetic::SyntheticSpec;
+use sasvi::metrics::Table;
+use sasvi::obs;
+use sasvi::screening::dynamic::DynamicOptions;
+use sasvi::screening::RuleKind;
+
+#[path = "common.rs"]
+mod common;
+use common::{bench, env_usize, BenchJson};
+
+fn main() {
+    let n = env_usize("SASVI_BENCH_N", 100);
+    let p = env_usize("SASVI_BENCH_P", 2000);
+    let grid = env_usize("SASVI_BENCH_GRID", 10).max(2);
+    println!("== observability overhead (n={n}, p={p}, grid={grid}) ==\n");
+
+    // primitive costs
+    obs::trace::set_enabled(false);
+    let span_off = bench(
+        || {
+            let _sp = obs::trace::span("bench_noop");
+        },
+        0.2,
+    );
+    obs::trace::set_enabled(true);
+    let span_on = bench(
+        || {
+            let _sp = obs::trace::span("bench_span");
+        },
+        0.2,
+    );
+    obs::trace::set_enabled(false);
+    let counter = bench(|| obs::metrics::counter_inc("bench_counter_total"), 0.2);
+    let hist = bench(
+        || obs::metrics::observe("bench_hist", 0.5, obs::metrics::LATENCY_BUCKETS),
+        0.2,
+    );
+
+    // end-to-end: the same dynamically screened path, tracing off vs on
+    let ds = SyntheticSpec { n, p, nnz: 30, density: 0.05, ..Default::default() }
+        .generate(11);
+    let plan = PathPlan::linear_spaced(&ds, grid, 0.1);
+    let opts = PathOptions {
+        dynamic: DynamicOptions::enabled_every(4),
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let plain = run_path_keep_betas(&ds, &plan, RuleKind::Sasvi, opts);
+    let t_plain = t0.elapsed().as_secs_f64();
+    obs::trace::set_enabled(true);
+    let t1 = Instant::now();
+    let traced = run_path_keep_betas(&ds, &plan, RuleKind::Sasvi, opts);
+    let t_traced = t1.elapsed().as_secs_f64();
+    obs::trace::set_enabled(false);
+
+    // correctness before any number: observing must not change the solve
+    let a = plain.betas.as_ref().unwrap();
+    let b = traced.betas.as_ref().unwrap();
+    for (k, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        for j in 0..ds.p() {
+            assert_eq!(
+                x[j].to_bits(),
+                y[j].to_bits(),
+                "step {k} feature {j}: tracing changed the solve"
+            );
+        }
+    }
+
+    let ratio = t_traced / t_plain.max(1e-9);
+    let mut table = Table::new(&["primitive", "ns/op"]);
+    table.row(vec!["span (disabled)".into(), format!("{:.1}", span_off * 1e9)]);
+    table.row(vec!["span (enabled)".into(), format!("{:.1}", span_on * 1e9)]);
+    table.row(vec!["counter_inc".into(), format!("{:.1}", counter * 1e9)]);
+    table.row(vec!["histogram observe".into(), format!("{:.1}", hist * 1e9)]);
+    println!("{}", table.render());
+    println!(
+        "dynamic path: untraced {t_plain:.3}s, traced {t_traced:.3}s \
+         (ratio {ratio:.3}); betas bit-identical — OK"
+    );
+
+    let mut json = BenchJson::new("obs");
+    json.int("n", n as u64)
+        .int("p", p as u64)
+        .int("grid", grid as u64)
+        .num("span_disabled_ns", span_off * 1e9)
+        .num("span_enabled_ns", span_on * 1e9)
+        .num("counter_inc_ns", counter * 1e9)
+        .num("observe_ns", hist * 1e9)
+        .num("path_untraced_secs", t_plain)
+        .num("path_traced_secs", t_traced)
+        .num("traced_ratio", ratio)
+        .flag("betas_bit_identical", true);
+    json.write();
+}

@@ -111,6 +111,9 @@ COMMANDS:
   serve         screening service (--addr --workers)
   runtime-info  list + warm PJRT artifacts (--artifacts DIR)
   run           run an experiment config (--config FILE)
+  metrics       run a small path workload and print the process metrics
+                registry in Prometheus text exposition (--preset --scale
+                --grid --min-frac --rule; composes with --dynamic etc.)
   help          this message
 
 PRESETS: synthetic100/1000/5000 (dense), sparseP for P% density CSC
@@ -133,6 +136,9 @@ GLOBAL:  --threads N sets the column-block worker-pool width for any
          solve-logistic, run, table1, fig5, serve jobs); solutions are
          unchanged, only the work shrinks. (--working-set applies to the
          Lasso solvers only.)
+         --trace-json FILE switches span tracing on and appends one JSONL
+         line per solver/path span to FILE, for any command. Observing
+         never changes results: outputs stay bit-identical.
 ";
 
 /// Entry point. Returns the process exit code.
@@ -190,6 +196,12 @@ pub fn run(args: &[String]) -> Result<i32> {
         d.grow = flags.usize_or("ws-grow", d.grow)?;
         crate::solver::working_set::set_process_default(d);
     }
+    // global knob: span tracing to a JSONL sink (any command; an
+    // unopenable path is an error up front, not a silently lost trace)
+    if let Some(path) = flags.get("trace-json") {
+        crate::obs::trace::set_json_sink(std::path::Path::new(path))
+            .with_context(|| format!("--trace-json {path}"))?;
+    }
     match cmd.as_str() {
         "help" | "--help" | "-h" => {
             print!("{HELP}");
@@ -204,6 +216,7 @@ pub fn run(args: &[String]) -> Result<i32> {
         "serve" => cmd_serve(&flags),
         "runtime-info" => cmd_runtime_info(&flags),
         "run" => cmd_run_config(&flags),
+        "metrics" => cmd_metrics(&flags),
         other => {
             eprintln!("unknown command: {other}\n{HELP}");
             Ok(2)
@@ -504,6 +517,24 @@ fn cmd_sure_removal(flags: &Flags) -> Result<i32> {
     Ok(0)
 }
 
+/// `metrics`: run a small path so the registry has something to say,
+/// then print the process-wide snapshot in Prometheus text exposition.
+fn cmd_metrics(flags: &Flags) -> Result<i32> {
+    let rule_name = flags.get_or("rule", "sasvi");
+    let rule = RuleKind::parse(&rule_name)
+        .with_context(|| format!("unknown rule {rule_name}"))?;
+    let ds = load_dataset(flags)?;
+    let grid = flags.usize_or("grid", 6)?.max(2);
+    let min_frac = flags.f64_or("min-frac", 0.1)?;
+    let plan = PathPlan::linear_spaced(&ds, grid, min_frac);
+    let _ = run_path(&ds, &plan, rule, PathOptions::from_process_defaults());
+    print!(
+        "{}",
+        crate::obs::metrics::render_prometheus(&crate::obs::metrics::snapshot())
+    );
+    Ok(0)
+}
+
 fn cmd_serve(flags: &Flags) -> Result<i32> {
     let addr = flags.get_or("addr", "127.0.0.1:7878");
     let workers = flags.usize_or("workers", 2)?.max(1);
@@ -544,6 +575,12 @@ fn cmd_run_config(flags: &Flags) -> Result<i32> {
     // must not be overridden by the config file's threads knob
     if flags.get("threads").is_none() {
         exp.apply_threads();
+    }
+    // same precedence for the [observability] switches: an explicit
+    // --trace-json already attached the sink in run()
+    let obs_cfg = crate::config::ObservabilityConfig::from_config(&cfg);
+    if flags.get("trace-json").is_none() {
+        obs_cfg.apply()?;
     }
     // knob-by-knob precedence, CLI over config: --dynamic decides enabled,
     // --recheck-every decides cadence, and each falls back to the config
@@ -632,6 +669,12 @@ fn cmd_run_config(flags: &Flags) -> Result<i32> {
             res.total_dynamic_dropped(),
             res.steps.last().map(|s| s.nnz).unwrap_or(0),
             fmt_secs(res.total_time),
+        );
+    }
+    if obs_cfg.print_metrics {
+        print!(
+            "{}",
+            crate::obs::metrics::render_prometheus(&crate::obs::metrics::snapshot())
         );
     }
     Ok(0)
@@ -948,6 +991,71 @@ mod tests {
         ]))
         .unwrap();
         assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn run_config_with_observability_section() {
+        let _guard = crate::linalg::par::test_knob_guard();
+        let dir = std::env::temp_dir().join("sasvi_cli_obs_cfg");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("exp.toml");
+        std::fs::write(
+            &path,
+            "[experiment]\ndataset = \"synthetic100\"\nscale = 0.01\n\
+             grid_points = 4\nrules = [\"sasvi\"]\n\
+             [observability]\nprint_metrics = true\n",
+        )
+        .unwrap();
+        let code = run(&s(&["run", "--config", path.to_str().unwrap()])).unwrap();
+        assert_eq!(code, 0);
+        // the run's path work landed in the process registry
+        let snap = crate::obs::metrics::snapshot();
+        assert!(snap.counters.contains_key("sasvi_path_steps_total"));
+    }
+
+    #[test]
+    fn metrics_command_runs_a_workload_and_reports() {
+        let code = run(&s(&[
+            "metrics", "--preset", "synthetic100", "--scale", "0.01", "--grid", "4",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+        // the workload it ran is visible in the process registry
+        let snap = crate::obs::metrics::snapshot();
+        assert!(snap.counters.contains_key("sasvi_path_steps_total"));
+        // unknown rule is an error, not a silent default
+        assert!(run(&s(&["metrics", "--rule", "bogus"])).is_err());
+    }
+
+    #[test]
+    fn trace_json_flag_writes_spans() {
+        let _tg = crate::obs::trace::ENABLED_TEST_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let dir = std::env::temp_dir().join("sasvi_cli_trace");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let code = run(&s(&[
+            "solve-path", "--preset", "synthetic100", "--scale", "0.01",
+            "--grid", "4", "--rule", "sasvi",
+            "--trace-json", path.to_str().unwrap(),
+        ]))
+        .unwrap();
+        crate::obs::trace::clear_json_sink();
+        crate::obs::trace::set_enabled(false);
+        assert_eq!(code, 0);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(
+            text.lines().any(|l| l.contains("\"name\":\"path_step\"")),
+            "no path_step span in trace: {text}"
+        );
+        let _ = std::fs::remove_file(&path);
+        // an unopenable sink path is an up-front error
+        assert!(run(&s(&[
+            "solve-path", "--trace-json", "/nonexistent-dir/x/trace.jsonl",
+        ]))
+        .is_err());
     }
 
     #[test]

@@ -325,6 +325,47 @@ impl LogisticConfig {
     }
 }
 
+/// The `[observability]` section: process-wide telemetry switches for
+/// `sasvi run --config` (applied before the experiment starts; explicit
+/// CLI flags win, see the CLI's precedence rules).
+#[derive(Clone, Debug, Default)]
+pub struct ObservabilityConfig {
+    /// `observability.trace`: switch span tracing on for the run
+    pub trace: bool,
+    /// `observability.trace_json`: JSONL sink path for span events
+    /// (attaching a sink implies `trace`)
+    pub trace_json: Option<String>,
+    /// `observability.print_metrics`: print the metrics registry in
+    /// Prometheus text exposition when the run finishes
+    pub print_metrics: bool,
+}
+
+impl ObservabilityConfig {
+    pub fn from_config(c: &Config) -> Self {
+        Self {
+            trace: c.get_bool("observability.trace", false),
+            trace_json: c
+                .get("observability.trace_json")
+                .and_then(Value::as_str)
+                .map(str::to_string),
+            print_metrics: c.get_bool("observability.print_metrics", false),
+        }
+    }
+
+    /// Apply the switches to the process: attach the JSONL sink (an
+    /// unopenable path is an error, not a silently lost trace), or just
+    /// flip the tracing flag when no sink is configured.
+    pub fn apply(&self) -> Result<()> {
+        if let Some(path) = &self.trace_json {
+            crate::obs::trace::set_json_sink(Path::new(path))
+                .with_context(|| format!("observability.trace_json = {path}"))?;
+        } else if self.trace {
+            crate::obs::trace::set_enabled(true);
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -437,6 +478,24 @@ trials = 3
         assert!(!d.enabled);
         assert_eq!(d.rule, "sasviq");
         assert!(crate::logistic::LogiRule::parse(&d.rule).is_some());
+    }
+
+    #[test]
+    fn observability_knobs_parse() {
+        let c = Config::parse(
+            "[observability]\ntrace = true\ntrace_json = \"t.jsonl\"\n\
+             print_metrics = true\n",
+        )
+        .unwrap();
+        let o = ObservabilityConfig::from_config(&c);
+        assert!(o.trace);
+        assert_eq!(o.trace_json.as_deref(), Some("t.jsonl"));
+        assert!(o.print_metrics);
+        // defaults: everything off
+        let d = ObservabilityConfig::from_config(&Config::parse("").unwrap());
+        assert!(!d.trace);
+        assert!(d.trace_json.is_none());
+        assert!(!d.print_metrics);
     }
 
     #[test]

@@ -150,6 +150,34 @@ impl LogisticPathResult {
     pub fn solver_work(&self) -> u64 {
         self.steps.iter().map(|s| s.work).sum()
     }
+
+    /// Per-step closing duality gap along the path (NaN where no gap-safe
+    /// checkpoint ran) — the convergence-diagnostics series `LPATH`
+    /// exposes.
+    pub fn gap_history(&self) -> Vec<f64> {
+        self.steps.iter().map(|s| s.gap).collect()
+    }
+
+    /// Closing duality gap at the final grid point (NaN on an empty path
+    /// or when no checkpoint ran).
+    pub fn final_gap(&self) -> f64 {
+        self.steps.last().map(|s| s.gap).unwrap_or(f64::NAN)
+    }
+
+    /// Flattened per-checkpoint gap history across the path's gap-safe
+    /// traces: `(step, iteration, gap, width_after, dropped)` per
+    /// checkpoint, in path order. Empty without dynamic traces.
+    pub fn checkpoint_history(&self) -> Vec<(usize, usize, f64, usize, usize)> {
+        let mut out = Vec::new();
+        if let Some(traces) = &self.dynamic {
+            for (si, t) in traces.iter().enumerate() {
+                for ev in &t.events {
+                    out.push((si, ev.epoch, ev.gap, ev.width_after, ev.dropped.len()));
+                }
+            }
+        }
+        out
+    }
 }
 
 /// Run a full logistic regularization path with the given screening rule.
@@ -209,6 +237,8 @@ fn run_logistic_path_impl(
     };
 
     for &lambda in plan.lambdas.iter() {
+        let _sp = crate::obs::trace::span("logistic_path_step");
+        crate::obs::metrics::counter_inc("sasvi_logistic_path_steps_total");
         // ---- screen -----------------------------------------------------
         let t0 = Instant::now();
         let screened = if lambda >= lam1 * (1.0 - 1e-12) || matches!(rule, LogiRule::None) {

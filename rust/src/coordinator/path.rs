@@ -232,6 +232,34 @@ impl PathResult {
         self.steps.iter().map(|s| s.ws_pruned).sum()
     }
 
+    /// Per-step closing duality gap along the path (NaN where the solver
+    /// recorded none) — the convergence-diagnostics series `RESULT` and
+    /// `TRACE` expose.
+    pub fn gap_history(&self) -> Vec<f64> {
+        self.steps.iter().map(|s| s.gap).collect()
+    }
+
+    /// Closing duality gap at the final grid point (NaN on an empty path
+    /// or when the solver recorded none).
+    pub fn final_gap(&self) -> f64 {
+        self.steps.last().map(|s| s.gap).unwrap_or(f64::NAN)
+    }
+
+    /// Flattened per-checkpoint gap history across the path's dynamic
+    /// traces: `(step, epoch, gap, width_after, dropped)` per checkpoint,
+    /// in path order. Empty when the run kept no dynamic traces.
+    pub fn checkpoint_history(&self) -> Vec<(usize, usize, f64, usize, usize)> {
+        let mut out = Vec::new();
+        if let Some(traces) = &self.dynamic {
+            for (si, t) in traces.iter().enumerate() {
+                for ev in &t.events {
+                    out.push((si, ev.epoch, ev.gap, ev.width_after, ev.dropped.len()));
+                }
+            }
+        }
+        out
+    }
+
     /// Total `epochs x active-width` solver work. For a static run this is
     /// `sum_k epochs_k * kept_k`; a dynamic run integrates the per-step
     /// epoch-width trajectory, and a working-set run sums the inner-solve
@@ -435,6 +463,8 @@ fn run_path_impl(
     let mut prev_ws: Vec<usize> = Vec::new();
 
     for &lambda in plan.lambdas.iter() {
+        let _sp = crate::obs::trace::span("path_step");
+        crate::obs::metrics::counter_inc("sasvi_path_steps_total");
         // ---- screen -----------------------------------------------------
         let t0 = Instant::now();
         // The relative slack makes the keep-all branch robust to ulp-level

@@ -13,10 +13,12 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use crate::coordinator::path::{run_path, PathOptions, PathResult};
 use crate::coordinator::planner::PathPlan;
 use crate::data::Dataset;
+use crate::obs;
 use crate::screening::RuleKind;
 
 /// A unit of work: one dataset, one grid, one rule.
@@ -50,7 +52,7 @@ struct Shared {
 }
 
 enum Msg {
-    Job(JobId, JobSpec),
+    Job(JobId, JobSpec, Instant),
     Shutdown,
 }
 
@@ -92,8 +94,10 @@ impl JobPool {
             .lock()
             .unwrap()
             .insert(id, JobStatus::Queued);
+        obs::metrics::counter_inc("sasvi_pool_jobs_submitted_total");
+        obs::metrics::gauge_add("sasvi_pool_queue_depth", 1.0);
         self.tx
-            .send(Msg::Job(id, spec))
+            .send(Msg::Job(id, spec, Instant::now()))
             .expect("pool shut down while submitting");
         id
     }
@@ -163,6 +167,25 @@ impl Drop for JobPool {
     }
 }
 
+/// Snapshot a finished job's telemetry — the worker files this under the
+/// job id *before* handing the result to the (consuming) waiter, so
+/// `TRACE <job-id>` can replay the gap timeline after `RESULT` drained
+/// the `PathResult` itself.
+fn job_trace_of(res: &PathResult, spans: Vec<obs::trace::SpanEvent>) -> obs::trace::JobTrace {
+    let gaps = res
+        .checkpoint_history()
+        .into_iter()
+        .map(|(step, epoch, gap, width, dropped)| obs::trace::GapEvent {
+            step,
+            epoch,
+            gap,
+            width,
+            dropped,
+        })
+        .collect();
+    obs::trace::JobTrace { spans, gaps, step_gaps: res.gap_history() }
+}
+
 fn worker_loop(rx: Arc<Mutex<Receiver<Msg>>>, shared: Arc<Shared>) {
     loop {
         let msg = {
@@ -170,7 +193,13 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Msg>>>, shared: Arc<Shared>) {
             guard.recv()
         };
         match msg {
-            Ok(Msg::Job(id, spec)) => {
+            Ok(Msg::Job(id, spec, enqueued)) => {
+                obs::metrics::gauge_add("sasvi_pool_queue_depth", -1.0);
+                obs::metrics::observe(
+                    "sasvi_pool_wait_seconds",
+                    enqueued.elapsed().as_secs_f64(),
+                    obs::metrics::LATENCY_BUCKETS,
+                );
                 if shared.evict.load(Ordering::SeqCst) {
                     // fast shutdown: don't run queued work, just unblock
                     // any waiter with a terminal status
@@ -185,15 +214,32 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Msg>>>, shared: Arc<Shared>) {
                     .lock()
                     .unwrap()
                     .insert(id, JobStatus::Running);
+                obs::metrics::gauge_add("sasvi_pool_jobs_in_flight", 1.0);
+                obs::trace::begin_job_capture();
+                let t0 = Instant::now();
                 let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                     run_path(&spec.dataset, &spec.plan, spec.rule, spec.opts)
                 }));
+                obs::metrics::observe(
+                    "sasvi_pool_run_seconds",
+                    t0.elapsed().as_secs_f64(),
+                    obs::metrics::LATENCY_BUCKETS,
+                );
+                obs::metrics::gauge_add("sasvi_pool_jobs_in_flight", -1.0);
+                let spans = obs::trace::end_job_capture();
                 match result {
                     Ok(res) => {
+                        obs::metrics::counter_inc("sasvi_pool_jobs_done_total");
+                        obs::trace::store_job_trace(id.0, job_trace_of(&res, spans));
                         shared.results.lock().unwrap().insert(id, res);
                         shared.status.lock().unwrap().insert(id, JobStatus::Done);
                     }
                     Err(_) => {
+                        obs::metrics::counter_inc("sasvi_pool_jobs_failed_total");
+                        obs::trace::store_job_trace(
+                            id.0,
+                            obs::trace::JobTrace { spans, ..Default::default() },
+                        );
                         shared.status.lock().unwrap().insert(
                             id,
                             JobStatus::Failed(format!("job {:?} panicked", id)),
@@ -330,6 +376,26 @@ mod tests {
         );
         // dropping afterwards joins cleanly
         drop(pool);
+    }
+
+    #[test]
+    fn finished_jobs_leave_a_trace_with_gap_history() {
+        let ds = Arc::new(
+            SyntheticSpec { n: 25, p: 80, nnz: 8, ..Default::default() }.generate(9),
+        );
+        let pool = JobPool::new(1, 2);
+        let mut s = spec(&ds, RuleKind::Sasvi, 6);
+        s.opts.dynamic = crate::screening::dynamic::DynamicOptions::enabled_every(2);
+        let id = pool.submit(s);
+        assert!(pool.wait(id).is_some());
+        let t = obs::trace::job_trace(id.0).expect("no stored trace for job");
+        assert_eq!(t.step_gaps.len(), 6, "one closing gap per grid point");
+        assert!(!t.gaps.is_empty(), "dynamic job recorded no checkpoints");
+        assert!(
+            t.spans.iter().any(|sp| sp.name == "path_step"),
+            "job capture collected no spans"
+        );
+        pool.shutdown();
     }
 
     #[test]

@@ -121,6 +121,28 @@
 //! `benches/logistic.rs` enforces the screened-beats-unscreened
 //! `iters x width` work bar.
 //!
+//! ## Observability
+//!
+//! [`obs`] is the unified telemetry layer every subsystem reports through:
+//! a process-wide metrics registry ([`obs::metrics`] — named counters,
+//! gauges, and fixed-bucket histograms with exact bucket-edge p50/p95/p99,
+//! written to per-thread shards and folded into name-ordered snapshots)
+//! plus span tracing ([`obs::trace`] — scoped timers with nested parent
+//! ids, a JSONL sink, and a bounded per-job trace store). Instrumented
+//! seams: CD/FISTA solves, every dynamic and logistic re-screen checkpoint
+//! (gap value, dropped count, surviving width), working-set outer
+//! iterations, the job pool (queue depth, wait/run latency, jobs in
+//! flight), and the server request loop (per-verb latency + error
+//! counters). Surfaces: server verbs `METRICS` (Prometheus-style text
+//! exposition) and `TRACE <job-id>` (per-job span/gap timeline), per-step
+//! gap histories on `RESULT`/`LPATH`, the CLI's global `--trace-json
+//! <path>` flag and `metrics` subcommand, and the `[observability]`
+//! config section. Determinism contract: instrumentation is
+//! observation-only — enabling it never perturbs the bit-identical solver
+//! results, and the deterministic slice of a snapshot (event counts, gap
+//! histograms) is itself bit-identical across thread counts
+//! (`rust/tests/determinism.rs`).
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -142,6 +164,7 @@ pub mod data;
 pub mod linalg;
 pub mod logistic;
 pub mod metrics;
+pub mod obs;
 pub mod rng;
 pub mod runtime;
 pub mod screening;

@@ -369,6 +369,20 @@ pub fn logistic_rescreen(
     let (survivors, dropped) = par::partition_indexed(active, |j| {
         (s[j] * scale).abs() + col_norms_sq[j].sqrt() * radius >= thr
     });
+    crate::obs::metrics::counter_inc("sasvi_logistic_checkpoints_total");
+    crate::obs::metrics::counter_add(
+        "sasvi_logistic_checkpoint_dropped_total",
+        dropped.len() as u64,
+    );
+    crate::obs::metrics::observe(
+        "sasvi_logistic_checkpoint_gap",
+        gap,
+        crate::obs::metrics::GAP_BUCKETS,
+    );
+    crate::obs::metrics::gauge_set(
+        "sasvi_logistic_checkpoint_width",
+        survivors.len() as f64,
+    );
     Rescreen { survivors, dropped, gap, infeas }
 }
 
@@ -393,6 +407,7 @@ pub fn solve_logistic_active(
     dynamic: &DynamicOptions,
     trace: &mut DynamicTrace,
 ) -> usize {
+    let _sp = crate::obs::trace::span("logistic_solve");
     let n = prob.n();
     let p = prob.p();
     assert_eq!(beta.len(), p);
@@ -468,6 +483,8 @@ pub fn solve_logistic_active(
             last = obj;
         }
     }
+    crate::obs::metrics::counter_inc("sasvi_logistic_solves_total");
+    crate::obs::metrics::counter_add("sasvi_logistic_iters_total", iters as u64);
     iters
 }
 

@@ -59,12 +59,16 @@ impl Accumulator {
         }
     }
 
-    pub fn min(&self) -> f64 {
-        self.min
+    /// Smallest value pushed, or `None` before the first push (the field
+    /// default would otherwise report a spurious `0.0` for all-positive
+    /// or all-negative series).
+    pub fn min(&self) -> Option<f64> {
+        (self.n > 0).then_some(self.min)
     }
 
-    pub fn max(&self) -> f64 {
-        self.max
+    /// Largest value pushed, or `None` before the first push.
+    pub fn max(&self) -> Option<f64> {
+        (self.n > 0).then_some(self.max)
     }
 }
 
@@ -88,7 +92,6 @@ impl Table {
     }
 
     pub fn render(&self) -> String {
-        let ncols = self.headers.len();
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
         for row in &self.rows {
             for (w, c) in widths.iter_mut().zip(row.iter()) {
@@ -115,7 +118,6 @@ impl Table {
         for row in &self.rows {
             out.push_str(&fmt_row(row, &widths));
         }
-        let _ = ncols;
         out
     }
 }
@@ -162,8 +164,19 @@ mod tests {
         assert_eq!(a.n, 4);
         assert!((a.mean() - 2.5).abs() < 1e-12);
         assert!((a.std() - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
-        assert_eq!(a.min(), 1.0);
-        assert_eq!(a.max(), 4.0);
+        assert_eq!(a.min(), Some(1.0));
+        assert_eq!(a.max(), Some(4.0));
+    }
+
+    #[test]
+    fn empty_accumulator_has_no_extrema() {
+        let a = Accumulator::default();
+        assert_eq!(a.min(), None);
+        assert_eq!(a.max(), None);
+        let mut b = Accumulator::default();
+        b.push(-3.0);
+        assert_eq!(b.min(), Some(-3.0));
+        assert_eq!(b.max(), Some(-3.0));
     }
 
     #[test]

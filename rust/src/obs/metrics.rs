@@ -1,0 +1,401 @@
+//! Process-wide metrics registry: named counters, gauges, and fixed-bucket
+//! histograms with exact bucket-edge quantiles.
+//!
+//! Counter and histogram writes land in a per-thread shard (one uncontended
+//! mutex acquisition per write — no global lock on the hot path). Gauges are
+//! last-write-wins and live in a single global map. [`snapshot`] folds every
+//! shard into `BTreeMap`s keyed by metric name, so iteration order — and the
+//! rendered [`render_prometheus`] text — is deterministic no matter which
+//! threads emitted the samples.
+//!
+//! Labels are encoded in the metric name itself, Prometheus-style:
+//! `sasvi_server_requests_total{verb="PATH"}`. The renderer splices
+//! histogram `le` labels into any existing label set.
+//!
+//! A histogram name must always be observed with the same bucket edges
+//! (use the shared `*_BUCKETS` consts); shards with mismatched bucket
+//! layouts for one name are not merged.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Latency buckets (seconds) — microseconds through tens of seconds.
+pub const LATENCY_BUCKETS: &[f64] = &[
+    1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0,
+];
+
+/// Duality-gap buckets — log-spaced from solver tolerance to divergence.
+pub const GAP_BUCKETS: &[f64] = &[
+    1e-12, 1e-10, 1e-8, 1e-6, 1e-4, 1e-2, 1.0, 1e2, 1e4,
+];
+
+#[derive(Clone)]
+struct Hist {
+    edges: &'static [f64],
+    /// one per edge plus a final overflow bucket
+    buckets: Vec<u64>,
+    count: u64,
+    sum: f64,
+}
+
+impl Hist {
+    fn new(edges: &'static [f64]) -> Self {
+        Self { edges, buckets: vec![0; edges.len() + 1], count: 0, sum: 0.0 }
+    }
+
+    fn observe(&mut self, v: f64) {
+        let i = self
+            .edges
+            .iter()
+            .position(|&e| v <= e)
+            .unwrap_or(self.edges.len());
+        self.buckets[i] += 1;
+        self.count += 1;
+        self.sum += v;
+    }
+}
+
+#[derive(Default)]
+struct Shard {
+    counters: BTreeMap<String, u64>,
+    hists: BTreeMap<String, Hist>,
+}
+
+fn shards() -> &'static Mutex<Vec<Arc<Mutex<Shard>>>> {
+    static SHARDS: OnceLock<Mutex<Vec<Arc<Mutex<Shard>>>>> = OnceLock::new();
+    SHARDS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn gauges() -> &'static Mutex<BTreeMap<String, f64>> {
+    static GAUGES: OnceLock<Mutex<BTreeMap<String, f64>>> = OnceLock::new();
+    GAUGES.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+thread_local! {
+    static LOCAL: RefCell<Option<Arc<Mutex<Shard>>>> = const { RefCell::new(None) };
+}
+
+fn with_shard<R>(f: impl FnOnce(&mut Shard) -> R) -> R {
+    LOCAL.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        if slot.is_none() {
+            let shard = Arc::new(Mutex::new(Shard::default()));
+            shards().lock().unwrap().push(Arc::clone(&shard));
+            *slot = Some(shard);
+        }
+        let mut guard = slot.as_ref().unwrap().lock().unwrap();
+        f(&mut guard)
+    })
+}
+
+/// Add `v` to the named counter.
+pub fn counter_add(name: &str, v: u64) {
+    with_shard(|s| {
+        *s.counters.entry(name.to_string()).or_insert(0) += v;
+    });
+}
+
+/// Increment the named counter by one.
+pub fn counter_inc(name: &str) {
+    counter_add(name, 1);
+}
+
+/// Set the named gauge (last write wins, process-wide).
+pub fn gauge_set(name: &str, v: f64) {
+    *gauges().lock().unwrap().entry(name.to_string()).or_insert(0.0) = v;
+}
+
+/// Add `dv` (possibly negative) to the named gauge.
+pub fn gauge_add(name: &str, dv: f64) {
+    *gauges().lock().unwrap().entry(name.to_string()).or_insert(0.0) += dv;
+}
+
+/// Record `v` into the named histogram with the given bucket edges. The
+/// same name must always be observed with the same edges.
+pub fn observe(name: &str, v: f64, edges: &'static [f64]) {
+    with_shard(|s| {
+        s.hists
+            .entry(name.to_string())
+            .or_insert_with(|| Hist::new(edges))
+            .observe(v);
+    });
+}
+
+/// Folded view of one histogram.
+#[derive(Clone, Debug, Default)]
+pub struct HistogramSnapshot {
+    pub edges: Vec<f64>,
+    /// per-edge counts plus a final overflow bucket (not cumulative)
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum: f64,
+}
+
+impl HistogramSnapshot {
+    /// Quantile as the smallest bucket upper edge whose cumulative count
+    /// reaches `ceil(q * count)` — exact whenever observations sit on
+    /// bucket edges; `+inf` for ranks in the overflow bucket; NaN when
+    /// empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            cum += b;
+            if cum >= rank {
+                return self.edges.get(i).copied().unwrap_or(f64::INFINITY);
+            }
+        }
+        f64::INFINITY
+    }
+}
+
+/// A deterministic, name-ordered view of the whole registry.
+#[derive(Clone, Debug, Default)]
+pub struct Snapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, f64>,
+    pub histograms: BTreeMap<String, HistogramSnapshot>,
+}
+
+impl Snapshot {
+    /// Counters and histograms as deltas since `before` (names absent from
+    /// `before` keep their full value); gauges carried over as-is.
+    pub fn delta_since(&self, before: &Snapshot) -> Snapshot {
+        let mut out = Snapshot { gauges: self.gauges.clone(), ..Default::default() };
+        for (name, &v) in &self.counters {
+            let prev = before.counters.get(name).copied().unwrap_or(0);
+            out.counters.insert(name.clone(), v.saturating_sub(prev));
+        }
+        for (name, h) in &self.histograms {
+            let mut d = h.clone();
+            if let Some(prev) = before.histograms.get(name) {
+                if prev.buckets.len() == d.buckets.len() {
+                    for (a, b) in d.buckets.iter_mut().zip(prev.buckets.iter()) {
+                        *a = a.saturating_sub(*b);
+                    }
+                    d.count = d.count.saturating_sub(prev.count);
+                    d.sum -= prev.sum;
+                }
+            }
+            out.histograms.insert(name.clone(), d);
+        }
+        out
+    }
+}
+
+/// Fold every shard into a name-ordered snapshot. Counters and bucket
+/// counts are `u64` sums, so the result is independent of shard (thread)
+/// enumeration order.
+pub fn snapshot() -> Snapshot {
+    let list: Vec<Arc<Mutex<Shard>>> = shards().lock().unwrap().clone();
+    let mut snap = Snapshot::default();
+    for shard in list {
+        let shard = shard.lock().unwrap();
+        for (name, &v) in &shard.counters {
+            *snap.counters.entry(name.clone()).or_insert(0) += v;
+        }
+        for (name, h) in &shard.hists {
+            let e = snap.histograms.entry(name.clone()).or_insert_with(|| {
+                HistogramSnapshot {
+                    edges: h.edges.to_vec(),
+                    buckets: vec![0; h.buckets.len()],
+                    count: 0,
+                    sum: 0.0,
+                }
+            });
+            if e.buckets.len() == h.buckets.len() {
+                for (a, &b) in e.buckets.iter_mut().zip(h.buckets.iter()) {
+                    *a += b;
+                }
+                e.count += h.count;
+                e.sum += h.sum;
+            }
+        }
+    }
+    snap.gauges = gauges().lock().unwrap().clone();
+    snap
+}
+
+/// Zero every counter, histogram, and gauge (test/diagnostic support).
+pub fn reset() {
+    let list: Vec<Arc<Mutex<Shard>>> = shards().lock().unwrap().clone();
+    for shard in list {
+        let mut shard = shard.lock().unwrap();
+        shard.counters.clear();
+        shard.hists.clear();
+    }
+    gauges().lock().unwrap().clear();
+}
+
+fn base_name(name: &str) -> &str {
+    match name.find('{') {
+        Some(i) => &name[..i],
+        None => name,
+    }
+}
+
+/// `name{a="b"}` + `_sum` -> `name_sum{a="b"}`.
+fn with_suffix(name: &str, suffix: &str) -> String {
+    match name.find('{') {
+        Some(i) => format!("{}{}{}", &name[..i], suffix, &name[i..]),
+        None => format!("{name}{suffix}"),
+    }
+}
+
+/// `name{a="b"}` -> `name_bucket{a="b",le="<edge>"}`.
+fn bucket_name(name: &str, le: &str) -> String {
+    match name.find('{') {
+        Some(i) => {
+            let inner = &name[i + 1..name.len() - 1];
+            if inner.is_empty() {
+                format!("{}_bucket{{le=\"{le}\"}}", &name[..i])
+            } else {
+                format!("{}_bucket{{{inner},le=\"{le}\"}}", &name[..i])
+            }
+        }
+        None => format!("{name}_bucket{{le=\"{le}\"}}"),
+    }
+}
+
+/// Prometheus text exposition of a snapshot: `# TYPE` comments, counter
+/// and gauge samples, and cumulative `_bucket`/`_sum`/`_count` lines per
+/// histogram. Deterministic: names are already sorted in the snapshot.
+pub fn render_prometheus(snap: &Snapshot) -> String {
+    let mut out = String::new();
+    let mut typed: Vec<String> = Vec::new();
+    let mut type_line = |out: &mut String, name: &str, kind: &str| {
+        let base = base_name(name);
+        if !typed.iter().any(|t| t == base) {
+            out.push_str(&format!("# TYPE {base} {kind}\n"));
+            typed.push(base.to_string());
+        }
+    };
+    for (name, v) in &snap.counters {
+        type_line(&mut out, name, "counter");
+        out.push_str(&format!("{name} {v}\n"));
+    }
+    for (name, v) in &snap.gauges {
+        type_line(&mut out, name, "gauge");
+        out.push_str(&format!("{name} {v}\n"));
+    }
+    for (name, h) in &snap.histograms {
+        type_line(&mut out, name, "histogram");
+        let mut cum = 0u64;
+        for (i, &b) in h.buckets.iter().enumerate() {
+            cum += b;
+            let le = match h.edges.get(i) {
+                Some(e) => format!("{e}"),
+                None => "+Inf".to_string(),
+            };
+            out.push_str(&format!("{} {}\n", bucket_name(name, &le), cum));
+        }
+        out.push_str(&format!("{} {}\n", with_suffix(name, "_sum"), h.sum));
+        out.push_str(&format!("{} {}\n", with_suffix(name, "_count"), h.count));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TEST_EDGES: &[f64] = &[1.0, 2.0, 5.0, 10.0];
+
+    #[test]
+    fn counters_fold_across_threads() {
+        let before = snapshot();
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                std::thread::spawn(|| {
+                    for _ in 0..100 {
+                        counter_inc("obs_test_fold_total");
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        counter_add("obs_test_fold_total", 7);
+        let delta = snapshot().delta_since(&before);
+        assert_eq!(delta.counters["obs_test_fold_total"], 407);
+    }
+
+    #[test]
+    fn histogram_quantiles_exact_on_bucket_edges() {
+        let before = snapshot();
+        for v in [1.0, 2.0, 2.0, 5.0, 5.0, 5.0, 10.0, 10.0, 10.0, 10.0] {
+            observe("obs_test_quantiles", v, TEST_EDGES);
+        }
+        let delta = snapshot().delta_since(&before);
+        let h = &delta.histograms["obs_test_quantiles"];
+        assert_eq!(h.count, 10);
+        assert_eq!(h.buckets, vec![1, 2, 3, 4, 0]);
+        assert_eq!(h.quantile(0.5), 5.0);
+        assert_eq!(h.quantile(0.95), 10.0);
+        assert_eq!(h.quantile(0.99), 10.0);
+        assert_eq!(h.quantile(0.1), 1.0);
+        assert!((h.sum - 60.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overflow_and_empty_quantiles() {
+        let before = snapshot();
+        observe("obs_test_overflow", 99.0, TEST_EDGES);
+        let delta = snapshot().delta_since(&before);
+        let h = &delta.histograms["obs_test_overflow"];
+        assert_eq!(h.buckets, vec![0, 0, 0, 0, 1]);
+        assert!(h.quantile(0.5).is_infinite());
+        assert!(HistogramSnapshot::default().quantile(0.5).is_nan());
+    }
+
+    #[test]
+    fn gauges_set_and_add() {
+        gauge_set("obs_test_gauge", 3.0);
+        gauge_add("obs_test_gauge", -1.5);
+        let snap = snapshot();
+        assert_eq!(snap.gauges["obs_test_gauge"], 1.5);
+    }
+
+    #[test]
+    fn prometheus_rendering_splices_labels() {
+        let mut snap = Snapshot::default();
+        snap.counters
+            .insert("sasvi_requests_total{verb=\"PATH\"}".into(), 3);
+        snap.gauges.insert("sasvi_depth".into(), 2.0);
+        snap.histograms.insert(
+            "sasvi_lat{verb=\"PATH\"}".into(),
+            HistogramSnapshot {
+                edges: vec![0.5, 1.0],
+                buckets: vec![1, 2, 1],
+                count: 4,
+                sum: 2.5,
+            },
+        );
+        let text = render_prometheus(&snap);
+        assert!(text.contains("# TYPE sasvi_requests_total counter"));
+        assert!(text.contains("sasvi_requests_total{verb=\"PATH\"} 3"));
+        assert!(text.contains("# TYPE sasvi_depth gauge"));
+        assert!(text.contains("sasvi_lat_bucket{verb=\"PATH\",le=\"0.5\"} 1"));
+        assert!(text.contains("sasvi_lat_bucket{verb=\"PATH\",le=\"1\"} 3"));
+        assert!(text.contains("sasvi_lat_bucket{verb=\"PATH\",le=\"+Inf\"} 4"));
+        assert!(text.contains("sasvi_lat_sum{verb=\"PATH\"} 2.5"));
+        assert!(text.contains("sasvi_lat_count{verb=\"PATH\"} 4"));
+    }
+
+    #[test]
+    fn delta_since_subtracts_only_prior_samples() {
+        let t0 = snapshot();
+        counter_add("obs_test_delta_total", 5);
+        let t1 = snapshot();
+        counter_add("obs_test_delta_total", 2);
+        let d = snapshot().delta_since(&t1);
+        assert_eq!(d.counters["obs_test_delta_total"], 2);
+        let full = snapshot().delta_since(&t0);
+        assert_eq!(full.counters["obs_test_delta_total"], 7);
+    }
+}

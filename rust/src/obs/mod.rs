@@ -1,0 +1,31 @@
+//! Unified observability layer: a process-wide metrics registry and
+//! lightweight span tracing, both dependency-free.
+//!
+//! The layer has two halves with different cost models:
+//!
+//! * [`metrics`] — always-on named counters, gauges, and fixed-bucket
+//!   histograms. Writes go to per-thread shards behind uncontended locks;
+//!   [`metrics::snapshot`] folds the shards into name-ordered maps
+//!   (`BTreeMap`), so two snapshots taken after the same sequence of
+//!   events render identically regardless of which threads emitted them.
+//! * [`trace`] — scoped span timers ([`trace::span`]) that cost one atomic
+//!   load when tracing is off. When on, spans nest via per-thread parent
+//!   stacks and stream JSONL events to a configurable sink
+//!   ([`trace::set_json_sink`]); the job pool additionally captures spans
+//!   per job so the server's `TRACE <job-id>` verb can replay a job's
+//!   span/gap timeline after the fact.
+//!
+//! ## Determinism contract
+//!
+//! Instrumentation is observation-only: no solver arithmetic reads a
+//! metric or a span, so enabling either half cannot perturb the
+//! bit-identical parallel results pinned in `tests/determinism.rs`.
+//! Event *counts* (checkpoints run, features dropped, epochs used) are
+//! themselves deterministic across `SASVI_THREADS`, and counter/bucket
+//! folds are `u64` sums — so the deterministic slice of a snapshot is
+//! bit-identical across thread counts too. Wall-clock histograms (pool
+//! and server latencies) are the only nondeterministic values and are
+//! excluded from that contract.
+
+pub mod metrics;
+pub mod trace;

@@ -1,0 +1,306 @@
+//! Lightweight span tracing: scoped timers with nested parent ids, a
+//! JSONL sink behind a runtime switch, and a bounded per-job trace store
+//! the server's `TRACE <job-id>` verb reads from.
+//!
+//! [`span`] costs one atomic load plus a thread-local check when tracing
+//! is off and no capture is active — no clock read, no allocation. When
+//! on, each span gets a per-thread monotone id and the id of the
+//! innermost enclosing span as its parent; on drop it is appended to the
+//! active job capture (if any) and written as one JSONL line to the sink
+//! (if configured):
+//!
+//! ```text
+//! {"name":"cd_solve","id":3,"parent":1,"start_us":120,"dur_us":4512,"thread":"ThreadId(7)"}
+//! ```
+//!
+//! `start_us` is measured from the first use of the tracing layer in the
+//! process. The job pool wraps each job in [`begin_job_capture`] /
+//! [`end_job_capture`] and files the result (plus the job's duality-gap
+//! timeline) under its job id via [`store_job_trace`]; the store keeps
+//! the most recent [`MAX_STORED_TRACES`] jobs.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Jobs retained by the per-job trace store.
+pub const MAX_STORED_TRACES: usize = 64;
+
+/// Spans retained per job capture (a runaway solve cannot grow unbounded).
+pub const MAX_SPANS_PER_JOB: usize = 10_000;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Serializes tests (here and in the CLI) that flip the process-wide
+/// `ENABLED` switch or attach/detach the JSONL sink.
+#[cfg(test)]
+pub(crate) static ENABLED_TEST_LOCK: Mutex<()> = Mutex::new(());
+
+/// Switch span tracing on or off process-wide.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::SeqCst);
+}
+
+/// True when span tracing is on.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+fn epoch() -> &'static Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now)
+}
+
+fn sink() -> &'static Mutex<Option<File>> {
+    static SINK: OnceLock<Mutex<Option<File>>> = OnceLock::new();
+    SINK.get_or_init(|| Mutex::new(None))
+}
+
+/// Append span events as JSONL to `path` and switch tracing on.
+pub fn set_json_sink(path: &Path) -> std::io::Result<()> {
+    let f = OpenOptions::new().create(true).append(true).open(path)?;
+    *sink().lock().unwrap() = Some(f);
+    set_enabled(true);
+    Ok(())
+}
+
+/// Detach the JSONL sink (tracing stays in whatever state it was).
+pub fn clear_json_sink() {
+    *sink().lock().unwrap() = None;
+}
+
+/// One completed span.
+#[derive(Clone, Debug)]
+pub struct SpanEvent {
+    /// per-thread monotone id (1-based)
+    pub id: u64,
+    /// id of the innermost enclosing span, 0 for roots
+    pub parent: u64,
+    pub name: &'static str,
+    /// microseconds since the tracing layer's first use
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+/// One dynamic-screening checkpoint in a job's gap timeline.
+#[derive(Clone, Debug)]
+pub struct GapEvent {
+    /// path step (grid point) the checkpoint ran in
+    pub step: usize,
+    /// solver epoch/iteration at the checkpoint
+    pub epoch: usize,
+    /// restricted duality gap at the checkpoint's dual point
+    pub gap: f64,
+    /// surviving active width after the checkpoint
+    pub width: usize,
+    /// features discarded at the checkpoint
+    pub dropped: usize,
+}
+
+/// Everything `TRACE <job-id>` replays for one job.
+#[derive(Clone, Debug, Default)]
+pub struct JobTrace {
+    pub spans: Vec<SpanEvent>,
+    pub gaps: Vec<GapEvent>,
+    /// closing duality gap per path step
+    pub step_gaps: Vec<f64>,
+}
+
+struct Ctx {
+    next_id: u64,
+    stack: Vec<u64>,
+    capture: Option<Vec<SpanEvent>>,
+}
+
+thread_local! {
+    static CTX: RefCell<Ctx> = const {
+        RefCell::new(Ctx { next_id: 1, stack: Vec::new(), capture: None })
+    };
+}
+
+/// Start collecting this thread's spans for a job (pool worker scope).
+pub fn begin_job_capture() {
+    CTX.with(|c| c.borrow_mut().capture = Some(Vec::new()));
+}
+
+/// Stop collecting and return the spans gathered since
+/// [`begin_job_capture`]; empty if no capture was active.
+pub fn end_job_capture() -> Vec<SpanEvent> {
+    CTX.with(|c| c.borrow_mut().capture.take().unwrap_or_default())
+}
+
+fn store() -> &'static Mutex<VecDeque<(u64, JobTrace)>> {
+    static STORE: OnceLock<Mutex<VecDeque<(u64, JobTrace)>>> = OnceLock::new();
+    STORE.get_or_init(|| Mutex::new(VecDeque::new()))
+}
+
+/// File a job's trace under its pool job id, evicting the oldest entry
+/// past [`MAX_STORED_TRACES`].
+pub fn store_job_trace(job: u64, trace: JobTrace) {
+    let mut s = store().lock().unwrap();
+    s.retain(|(id, _)| *id != job);
+    if s.len() >= MAX_STORED_TRACES {
+        s.pop_front();
+    }
+    s.push_back((job, trace));
+}
+
+/// The stored trace for a pool job id, if still retained.
+pub fn job_trace(job: u64) -> Option<JobTrace> {
+    store()
+        .lock()
+        .unwrap()
+        .iter()
+        .rev()
+        .find(|(id, _)| *id == job)
+        .map(|(_, t)| t.clone())
+}
+
+struct SpanInner {
+    name: &'static str,
+    id: u64,
+    parent: u64,
+    start: Instant,
+    start_us: u64,
+}
+
+/// Scoped span timer; records on drop. Inert (`None` inner) when tracing
+/// is off and no job capture is active on this thread.
+pub struct Span {
+    inner: Option<SpanInner>,
+}
+
+/// Open a span. Keep the returned guard alive for the timed scope:
+/// `let _sp = obs::trace::span("cd_solve");`
+pub fn span(name: &'static str) -> Span {
+    let capturing = CTX.with(|c| c.borrow().capture.is_some());
+    if !enabled() && !capturing {
+        return Span { inner: None };
+    }
+    let start_us = epoch().elapsed().as_micros() as u64;
+    let (id, parent) = CTX.with(|c| {
+        let mut c = c.borrow_mut();
+        let id = c.next_id;
+        c.next_id += 1;
+        let parent = c.stack.last().copied().unwrap_or(0);
+        c.stack.push(id);
+        (id, parent)
+    });
+    Span {
+        inner: Some(SpanInner { name, id, parent, start: Instant::now(), start_us }),
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(inner) = self.inner.take() else { return };
+        let dur_us = inner.start.elapsed().as_micros() as u64;
+        let ev = SpanEvent {
+            id: inner.id,
+            parent: inner.parent,
+            name: inner.name,
+            start_us: inner.start_us,
+            dur_us,
+        };
+        CTX.with(|c| {
+            let mut c = c.borrow_mut();
+            if c.stack.last() == Some(&inner.id) {
+                c.stack.pop();
+            }
+            if let Some(cap) = c.capture.as_mut() {
+                if cap.len() < MAX_SPANS_PER_JOB {
+                    cap.push(ev.clone());
+                }
+            }
+        });
+        if enabled() {
+            if let Some(f) = sink().lock().unwrap().as_mut() {
+                let line = format!(
+                    "{{\"name\":\"{}\",\"id\":{},\"parent\":{},\"start_us\":{},\"dur_us\":{},\"thread\":\"{:?}\"}}\n",
+                    ev.name, ev.id, ev.parent, ev.start_us, ev.dur_us,
+                    std::thread::current().id(),
+                );
+                let _ = f.write_all(line.as_bytes());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_spans_are_inert() {
+        let _guard = ENABLED_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(false);
+        let sp = span("noop");
+        assert!(sp.inner.is_none());
+    }
+
+    #[test]
+    fn capture_collects_nested_spans_with_parent_ids() {
+        begin_job_capture();
+        {
+            let _outer = span("outer");
+            let _inner = span("inner");
+        }
+        {
+            let _root = span("root2");
+        }
+        let events = end_job_capture();
+        assert_eq!(events.len(), 3);
+        // drop order: inner first, then outer, then root2
+        let inner = &events[0];
+        let outer = &events[1];
+        let root2 = &events[2];
+        assert_eq!(inner.name, "inner");
+        assert_eq!(inner.parent, outer.id);
+        assert_eq!(outer.parent, 0);
+        assert_eq!(root2.parent, 0);
+        assert!(end_job_capture().is_empty(), "capture already taken");
+    }
+
+    #[test]
+    fn job_store_is_bounded_and_replaces_duplicates() {
+        for i in 0..(MAX_STORED_TRACES as u64 + 8) {
+            store_job_trace(1_000_000 + i, JobTrace::default());
+        }
+        assert!(job_trace(1_000_000).is_none(), "oldest evicted");
+        assert!(job_trace(1_000_000 + MAX_STORED_TRACES as u64 + 7).is_some());
+        let t = JobTrace { step_gaps: vec![0.5], ..Default::default() };
+        store_job_trace(2_000_000, JobTrace::default());
+        store_job_trace(2_000_000, t);
+        assert_eq!(job_trace(2_000_000).unwrap().step_gaps, vec![0.5]);
+    }
+
+    #[test]
+    fn json_sink_writes_one_line_per_span() {
+        let _guard = ENABLED_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!(
+            "sasvi_trace_test_{}.jsonl",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        set_json_sink(&path).unwrap();
+        {
+            let _sp = span("sink_test");
+        }
+        clear_json_sink();
+        set_enabled(false);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text
+            .lines()
+            .filter(|l| l.contains("\"name\":\"sink_test\""))
+            .collect();
+        assert_eq!(lines.len(), 1);
+        assert!(lines[0].contains("\"dur_us\":"));
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -200,6 +200,17 @@ pub fn rescreen(
         let um = -xt + 0.5 * (xn * bnorm - xjb);
         gap_bound.min(up.max(um)) >= thr
     });
+    crate::obs::metrics::counter_inc("sasvi_checkpoints_total");
+    crate::obs::metrics::counter_add(
+        "sasvi_checkpoint_dropped_total",
+        dropped.len() as u64,
+    );
+    crate::obs::metrics::observe(
+        "sasvi_checkpoint_gap",
+        gap,
+        crate::obs::metrics::GAP_BUCKETS,
+    );
+    crate::obs::metrics::gauge_set("sasvi_checkpoint_width", survivors.len() as f64);
     Rescreen { survivors, dropped, gap, infeas }
 }
 

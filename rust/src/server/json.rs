@@ -84,6 +84,32 @@ impl JsonWriter {
         self.buf.push(']');
     }
 
+    pub fn field_u64_array(&mut self, k: &str, vs: &[u64]) {
+        self.key(k);
+        self.buf.push('[');
+        for (i, v) in vs.iter().enumerate() {
+            if i > 0 {
+                self.buf.push_str(", ");
+            }
+            self.buf.push_str(&v.to_string());
+        }
+        self.buf.push(']');
+    }
+
+    pub fn field_str_array(&mut self, k: &str, vs: &[&str]) {
+        self.key(k);
+        self.buf.push('[');
+        for (i, v) in vs.iter().enumerate() {
+            if i > 0 {
+                self.buf.push_str(", ");
+            }
+            self.buf.push('"');
+            escape_into(&mut self.buf, v);
+            self.buf.push('"');
+        }
+        self.buf.push(']');
+    }
+
     pub fn finish(mut self) -> String {
         self.buf.push('}');
         self.buf
@@ -113,6 +139,17 @@ mod tests {
         let mut w = JsonWriter::object();
         w.field_str("s", "a\"b\\c\nd");
         assert_eq!(w.finish(), r#"{"s": "a\"b\\c\nd"}"#);
+    }
+
+    #[test]
+    fn typed_arrays_render_like_their_scalars() {
+        let mut w = JsonWriter::object();
+        w.field_u64_array("ns", &[3, 0, 12]);
+        w.field_str_array("names", &["cd_solve", "path \"x\""]);
+        assert_eq!(
+            w.finish(),
+            r#"{"ns": [3, 0, 12], "names": ["cd_solve", "path \"x\""]}"#
+        );
     }
 
     #[test]

@@ -13,6 +13,8 @@
 //! LPATH <preset> <seed> <scale> <rule> [k] [min_frac] [dynamic [recheck] | static]
 //!                                         -> {"rejection": [...], ...}
 //! SUREREMOVAL <dataset-id> <lam1-frac> <j> -> {"lam_s": ...}
+//! METRICS                                 -> {"metrics": "<Prometheus text>"}
+//! TRACE <job-id>                          -> {"span_name": [...], "gap": [...], ...}
 //! QUIT
 //! ```
 //!
@@ -53,6 +55,28 @@
 //! fraction per step, `kkt_violations` / `kkt_resolves`,
 //! `dynamic_dropped` + per-step `dynamic_rejection`, `nnz`, and the
 //! `iters x width` `work` integral.
+//!
+//! Both `RESULT` and `LPATH` additionally report the convergence
+//! diagnostics the coordinators record: `gap` (closing duality gap per
+//! path step), `final_gap`, and — when the job ran with dynamic
+//! checkpoints — the flattened per-checkpoint timeline `ckpt_step` /
+//! `ckpt_epoch` / `ckpt_gap` / `ckpt_width` / `ckpt_dropped`.
+//!
+//! `METRICS` replies with the process-wide [`crate::obs::metrics`]
+//! snapshot rendered in Prometheus text exposition, carried as one
+//! escaped JSON string so the one-line-per-reply protocol holds. Every
+//! request increments `sasvi_server_requests_total{verb="..."}` (plus
+//! `sasvi_server_errors_total` on error replies) and lands in the
+//! `sasvi_server_latency_seconds` histogram for its verb.
+//!
+//! `TRACE <job-id>` replays a finished `PATH` job's observability record
+//! from the bounded [`crate::obs::trace`] store: the spans captured on
+//! the worker thread (`span_name`/`span_id`/`span_parent`/
+//! `span_start_us`/`span_dur_us` parallel arrays), the per-step closing
+//! gaps (`gap`), and the dynamic checkpoint timeline (`ckpt_*` arrays as
+//! in `RESULT`). The store keeps the most recent
+//! [`crate::obs::trace::MAX_STORED_TRACES`] jobs; asking for an
+//! unfinished or evicted job is an error, not a crash.
 
 pub mod json;
 
@@ -148,12 +172,13 @@ fn handle_conn(stream: TcpStream, state: Arc<ServerState>) -> Result<()> {
             return Ok(()); // connection closed
         }
         let parts: Vec<&str> = line.trim().split_whitespace().collect();
+        if parts.is_empty() {
+            continue;
+        }
+        let verb = verb_label(parts[0]);
+        let started = std::time::Instant::now();
         let reply = match parts.as_slice() {
-            [] => continue,
-            ["QUIT"] => {
-                writeln!(out, "{}", ok_msg("bye"))?;
-                return Ok(());
-            }
+            ["QUIT"] => ok_msg("bye"),
             ["PING"] => ok_msg("pong"),
             ["GEN", preset, seed, scale] => cmd_gen(&state, preset, seed, scale, None),
             ["GEN", preset, seed, scale, threads] => {
@@ -172,10 +197,47 @@ fn handle_conn(stream: TcpStream, state: Arc<ServerState>) -> Result<()> {
             ["RESULT", job] => cmd_result(&state, job),
             ["LPATH", args @ ..] => cmd_lpath(args),
             ["SUREREMOVAL", ds, frac, j] => cmd_sure_removal(&state, ds, frac, j),
+            ["METRICS"] => cmd_metrics(),
+            ["TRACE", job] => cmd_trace(&state, job),
             other => err_msg(&format!("unknown command: {other:?}")),
         };
+        record_request(verb, &reply, started.elapsed());
         writeln!(out, "{reply}")?;
+        if parts.as_slice() == ["QUIT"] {
+            return Ok(());
+        }
     }
+}
+
+/// Metric label for a request verb. Unknown input collapses to one
+/// label so arbitrary garbage on the wire cannot grow the registry.
+fn verb_label(verb: &str) -> &'static str {
+    match verb {
+        "PING" => "PING",
+        "GEN" => "GEN",
+        "PATH" => "PATH",
+        "STATUS" => "STATUS",
+        "RESULT" => "RESULT",
+        "LPATH" => "LPATH",
+        "SUREREMOVAL" => "SUREREMOVAL",
+        "METRICS" => "METRICS",
+        "TRACE" => "TRACE",
+        "QUIT" => "QUIT",
+        _ => "UNKNOWN",
+    }
+}
+
+fn record_request(verb: &str, reply: &str, elapsed: std::time::Duration) {
+    use crate::obs::metrics;
+    metrics::counter_inc(&format!("sasvi_server_requests_total{{verb=\"{verb}\"}}"));
+    if reply.starts_with("{\"error\"") {
+        metrics::counter_inc(&format!("sasvi_server_errors_total{{verb=\"{verb}\"}}"));
+    }
+    metrics::observe(
+        &format!("sasvi_server_latency_seconds{{verb=\"{verb}\"}}"),
+        elapsed.as_secs_f64(),
+        metrics::LATENCY_BUCKETS,
+    );
 }
 
 fn ok_msg(msg: &str) -> String {
@@ -372,6 +434,11 @@ fn cmd_result(state: &ServerState, job: &str) -> String {
             w.field_u64("ws_outer", res.total_ws_outer() as u64);
             let ws_w: Vec<f64> = res.steps.iter().map(|s| s.ws_final as f64).collect();
             w.field_f64_array("ws_width", &ws_w);
+            // convergence diagnostics: closing gap per step + the dynamic
+            // checkpoint timeline (empty arrays for static jobs)
+            w.field_f64_array("gap", &res.gap_history());
+            w.field_f64("final_gap", res.final_gap());
+            write_checkpoints(&mut w, &res.checkpoint_history());
             w.finish()
         }
         None => err_msg("job failed or already consumed"),
@@ -478,6 +545,85 @@ fn cmd_lpath(args: &[&str]) -> String {
     w.field_f64_array("dynamic_rejection", &dyn_rej);
     w.field_u64("nnz", res.steps.last().map(|s| s.nnz).unwrap_or(0) as u64);
     w.field_u64("work", res.solver_work());
+    w.field_f64_array("gap", &res.gap_history());
+    w.field_f64("final_gap", res.final_gap());
+    write_checkpoints(&mut w, &res.checkpoint_history());
+    w.finish()
+}
+
+/// Flatten a `(step, epoch, gap, width, dropped)` checkpoint timeline
+/// into the parallel `ckpt_*` arrays `RESULT`/`LPATH`/`TRACE` share.
+fn write_checkpoints(w: &mut JsonWriter, ck: &[(usize, usize, f64, usize, usize)]) {
+    w.field_u64_array(
+        "ckpt_step",
+        &ck.iter().map(|c| c.0 as u64).collect::<Vec<_>>(),
+    );
+    w.field_u64_array(
+        "ckpt_epoch",
+        &ck.iter().map(|c| c.1 as u64).collect::<Vec<_>>(),
+    );
+    w.field_f64_array("ckpt_gap", &ck.iter().map(|c| c.2).collect::<Vec<_>>());
+    w.field_u64_array(
+        "ckpt_width",
+        &ck.iter().map(|c| c.3 as u64).collect::<Vec<_>>(),
+    );
+    w.field_u64_array(
+        "ckpt_dropped",
+        &ck.iter().map(|c| c.4 as u64).collect::<Vec<_>>(),
+    );
+}
+
+fn cmd_metrics() -> String {
+    let snap = crate::obs::metrics::snapshot();
+    let mut w = JsonWriter::object();
+    w.field_u64("counters", snap.counters.len() as u64);
+    w.field_u64("gauges", snap.gauges.len() as u64);
+    w.field_u64("histograms", snap.histograms.len() as u64);
+    w.field_str("metrics", &crate::obs::metrics::render_prometheus(&snap));
+    w.finish()
+}
+
+fn cmd_trace(state: &ServerState, job: &str) -> String {
+    let id: u64 = match job.parse() {
+        Ok(v) => v,
+        Err(_) => return err_msg("bad job id"),
+    };
+    let jid = match state.jobs.lock().unwrap().get(&id) {
+        Some(j) => *j,
+        None => return err_msg(&format!("no job {id}")),
+    };
+    let trace = match crate::obs::trace::job_trace(jid.0) {
+        Some(t) => t,
+        None => return err_msg(&format!("no trace for job {id} (not finished, or evicted)")),
+    };
+    let mut w = JsonWriter::object();
+    w.field_u64("job", id);
+    w.field_u64("spans", trace.spans.len() as u64);
+    let names: Vec<&str> = trace.spans.iter().map(|s| s.name).collect();
+    w.field_str_array("span_name", &names);
+    w.field_u64_array(
+        "span_id",
+        &trace.spans.iter().map(|s| s.id).collect::<Vec<_>>(),
+    );
+    w.field_u64_array(
+        "span_parent",
+        &trace.spans.iter().map(|s| s.parent).collect::<Vec<_>>(),
+    );
+    w.field_u64_array(
+        "span_start_us",
+        &trace.spans.iter().map(|s| s.start_us).collect::<Vec<_>>(),
+    );
+    w.field_u64_array(
+        "span_dur_us",
+        &trace.spans.iter().map(|s| s.dur_us).collect::<Vec<_>>(),
+    );
+    w.field_f64_array("gap", &trace.step_gaps);
+    let ck: Vec<(usize, usize, f64, usize, usize)> = trace
+        .gaps
+        .iter()
+        .map(|g| (g.step, g.epoch, g.gap, g.width, g.dropped))
+        .collect();
+    write_checkpoints(&mut w, &ck);
     w.finish()
 }
 
@@ -764,6 +910,85 @@ mod tests {
         for r in &replies[3..8] {
             assert!(r.contains("error"), "{r}");
         }
+        stop.store(true, Ordering::Relaxed);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn metrics_and_trace_round_trip_over_the_socket() {
+        let _guard = crate::linalg::par::test_knob_guard();
+        let server = Server::bind("127.0.0.1:0", 1).unwrap();
+        let addr = server.local_addr().unwrap();
+        let stop = server.stop_handle();
+        let h = std::thread::spawn(move || server.serve().unwrap());
+        let replies = send(
+            addr,
+            &[
+                "GEN synthetic100 3 0.01",
+                "PATH 1 sasvi 6 0.1 dynamic 3",
+                "RESULT 1",
+                "TRACE 1",
+                "METRICS",
+                "QUIT",
+            ],
+        );
+        // RESULT reports the closing gap per step + the checkpoint timeline
+        assert!(replies[2].contains("\"gap\": ["), "{}", replies[2]);
+        assert!(!replies[2].contains("\"gap\": []"), "{}", replies[2]);
+        assert!(replies[2].contains("\"final_gap\": "), "{}", replies[2]);
+        assert!(
+            !replies[2].contains("\"ckpt_gap\": []"),
+            "dynamic job recorded no checkpoints: {}",
+            replies[2]
+        );
+        // TRACE still replays the job after RESULT consumed it: worker
+        // spans plus the same gap timeline
+        assert!(replies[3].contains("\"span_name\": ["), "{}", replies[3]);
+        assert!(replies[3].contains("path_step"), "{}", replies[3]);
+        assert!(!replies[3].contains("\"gap\": []"), "{}", replies[3]);
+        assert!(
+            !replies[3].contains("\"ckpt_gap\": []"),
+            "{}",
+            replies[3]
+        );
+        // METRICS carries the Prometheus exposition: per-verb request
+        // counters and latency histograms, and the checkpoint telemetry
+        // the path job emitted (quotes arrive JSON-escaped)
+        assert!(
+            replies[4].contains("sasvi_server_requests_total{verb=\\\"PATH\\\"}"),
+            "{}",
+            replies[4]
+        );
+        assert!(
+            replies[4].contains("sasvi_server_latency_seconds_bucket"),
+            "{}",
+            replies[4]
+        );
+        assert!(replies[4].contains("sasvi_checkpoints_total"), "{}", replies[4]);
+        stop.store(true, Ordering::Relaxed);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn obs_verbs_reject_malformed_requests() {
+        let server = Server::bind("127.0.0.1:0", 1).unwrap();
+        let addr = server.local_addr().unwrap();
+        let stop = server.stop_handle();
+        let h = std::thread::spawn(move || server.serve().unwrap());
+        let replies = send(
+            addr,
+            &[
+                "TRACE",
+                "TRACE notanumber",
+                "TRACE 999",
+                "METRICS now",
+                "QUIT",
+            ],
+        );
+        for r in &replies[..4] {
+            assert!(r.contains("error"), "{r}");
+        }
+        assert!(replies[4].contains("bye"));
         stop.store(true, Ordering::Relaxed);
         h.join().unwrap();
     }

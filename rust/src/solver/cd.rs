@@ -11,7 +11,15 @@
 //! tail of the optimization cheap — a standard glmnet-style trick.
 
 use crate::linalg::{ops, DesignMatrix};
+use crate::obs;
 use crate::screening::dynamic::{self, DynamicOptions, DynamicTrace};
+
+/// Fold one finished solve into the process metrics registry.
+fn record_cd_metrics(stats: &CdStats) {
+    obs::metrics::counter_inc("sasvi_cd_solves_total");
+    obs::metrics::counter_add("sasvi_cd_epochs_total", stats.epochs as u64);
+    obs::metrics::counter_add("sasvi_cd_updates_total", stats.coord_updates);
+}
 
 #[derive(Clone, Copy, Debug)]
 pub struct CdOptions {
@@ -58,6 +66,7 @@ pub fn solve_cd(
     resid: &mut [f64],
     opts: &CdOptions,
 ) -> CdStats {
+    let _sp = obs::trace::span("cd_solve");
     let mut stats = CdStats::default();
     let y_scale = ops::inf_norm(y).max(1.0);
     let tol = opts.tol * y_scale;
@@ -124,6 +133,7 @@ pub fn solve_cd(
     if stats.final_gap.is_none() && opts.gap_check_every > 0 {
         stats.final_gap = Some(restricted_gap(x, y, lambda, active, beta, resid));
     }
+    record_cd_metrics(&stats);
     stats
 }
 
@@ -192,6 +202,7 @@ pub fn solve_cd_dynamic(
     opts: &CdOptions,
     dyn_opts: &DynamicOptions,
 ) -> (CdStats, DynamicTrace) {
+    let _sp = obs::trace::span("cd_solve_dynamic");
     let mut stats = CdStats::default();
     let mut trace = DynamicTrace::new(active.len());
     let y_scale = ops::inf_norm(y).max(1.0);
@@ -225,6 +236,7 @@ pub fn solve_cd_dynamic(
             stats.final_gap = Some(gap);
             if gap <= opts.gap_tol * gap_scale {
                 stats.converged = true;
+                record_cd_metrics(&stats);
                 return (stats, trace);
             }
         }
@@ -301,6 +313,7 @@ pub fn solve_cd_dynamic(
     if stats.final_gap.is_none() && opts.gap_check_every > 0 {
         stats.final_gap = Some(restricted_gap(x, y, lambda, active, beta, resid));
     }
+    record_cd_metrics(&stats);
     (stats, trace)
 }
 

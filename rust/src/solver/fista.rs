@@ -5,7 +5,14 @@
 //! the whole solve should run inside XLA artifacts.
 
 use crate::linalg::{ops, DesignMatrix};
+use crate::obs;
 use crate::screening::dynamic::{self, DynamicOptions, DynamicTrace};
+
+/// Fold one finished FISTA solve into the process metrics registry.
+fn record_fista_metrics(iters: usize) {
+    obs::metrics::counter_inc("sasvi_fista_solves_total");
+    obs::metrics::counter_add("sasvi_fista_iters_total", iters as u64);
+}
 
 #[derive(Clone, Copy, Debug)]
 pub struct FistaOptions {
@@ -48,6 +55,7 @@ pub fn solve_fista_warm(
     beta0: Vec<f64>,
     opts: &FistaOptions,
 ) -> (Vec<f64>, usize) {
+    let _sp = obs::trace::span("fista_solve");
     let n = x.nrows();
     let p = x.ncols();
     assert_eq!(mask.len(), p);
@@ -109,6 +117,7 @@ pub fn solve_fista_warm(
         }
         last_obj = obj;
     }
+    record_fista_metrics(iters);
     (beta, iters)
 }
 
@@ -141,6 +150,7 @@ pub fn solve_fista_dynamic(
     opts: &FistaOptions,
     dyn_opts: &DynamicOptions,
 ) -> (Vec<f64>, usize, DynamicTrace) {
+    let _sp = obs::trace::span("fista_solve_dynamic");
     let n = x.nrows();
     let k0 = x.ncols();
     assert_eq!(beta0.len(), k0);
@@ -279,6 +289,7 @@ pub fn solve_fista_dynamic(
     for (c, &orig) in live.iter().enumerate() {
         out[orig] = beta[c];
     }
+    record_fista_metrics(iters);
     (out, iters, trace)
 }
 

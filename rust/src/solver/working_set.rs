@@ -278,6 +278,8 @@ where
     let mut exit_gap_fresh = false;
 
     for outer in 0..ws_opts.max_outer {
+        let _sp = crate::obs::trace::span("ws_outer");
+        crate::obs::metrics::counter_inc("sasvi_ws_outer_iters_total");
         // ---- shared checkpoint: one |X_A^T r| pass over the candidates --
         let rs = dynamic::rescreen(
             x, y, lambda, xty, col_norms_sq, active, beta, resid, &mut xt_r,
@@ -335,6 +337,8 @@ where
             in_ws[j] = true;
             ws.push(j);
         }
+        crate::obs::metrics::counter_add("sasvi_ws_expanded_total", batch as u64);
+        crate::obs::metrics::counter_add("sasvi_ws_pruned_total", pruned.len() as u64);
 
         // No violators, nothing pruned, nothing evicted, and still above
         // tolerance: the inner solve stopped on its coefficient-change

@@ -12,6 +12,8 @@
 //!   * a whole screened path run,
 //!   * dynamically screened and working-set paths (checkpoint decisions,
 //!     prunes, expansions),
+//!   * a path with span tracing and the metrics registry live
+//!     (observability never perturbs results or event counts),
 //!
 //! comparing against genuinely serial references (the storage backends'
 //! own loops, or the pool pinned to one lane) with `f64::to_bits`
@@ -503,6 +505,103 @@ fn logistic_path_bit_identical_across_thread_counts() {
             );
         }
     }
+    par::set_threads(before);
+}
+
+/// The observability contract: observation never perturbs computation.
+/// With span tracing enabled and the metrics registry live, a dynamically
+/// screened path still produces bit-identical betas to the untraced
+/// serial run at every thread count — and the solver-event metrics
+/// (step/checkpoint/epoch counters, gap-histogram bucket counts: exact
+/// event counts, not wall-clock) are identical deltas on every lane.
+#[test]
+fn observability_leaves_results_and_event_counts_bit_identical() {
+    use sasvi::obs;
+
+    let _guard = THREAD_KNOB.lock().unwrap();
+    let before = par::threads();
+    let ds = SyntheticSpec {
+        n: 50,
+        p: 600,
+        nnz: 20,
+        density: 0.08,
+        ..Default::default()
+    }
+    .generate(19);
+    let plan = PathPlan::linear_spaced(&ds, 8, 0.2);
+    let opts = PathOptions {
+        dynamic: DynamicOptions::enabled_every(3),
+        ..Default::default()
+    };
+    // untraced serial reference (every path-running test in this binary
+    // holds THREAD_KNOB, so the metric deltas below are exclusively ours)
+    obs::trace::set_enabled(false);
+    par::set_threads(1);
+    let m0 = obs::metrics::snapshot();
+    let reference = run_path_keep_betas(&ds, &plan, RuleKind::Sasvi, opts);
+    let base = obs::metrics::snapshot().delta_since(&m0);
+    assert_eq!(
+        base.counters.get("sasvi_path_steps_total").copied().unwrap_or(0),
+        plan.len() as u64,
+        "every path step lands in the registry"
+    );
+    assert!(
+        base.counters.get("sasvi_checkpoints_total").copied().unwrap_or(0) > 0,
+        "dynamic run recorded no checkpoints — vacuous"
+    );
+    let base_gap = base
+        .histograms
+        .get("sasvi_checkpoint_gap")
+        .cloned()
+        .unwrap_or_default();
+    assert!(base_gap.count > 0, "no checkpoint gaps observed");
+    let tracked = [
+        "sasvi_path_steps_total",
+        "sasvi_checkpoints_total",
+        "sasvi_checkpoint_dropped_total",
+        "sasvi_cd_solves_total",
+        "sasvi_cd_epochs_total",
+        "sasvi_cd_updates_total",
+    ];
+    obs::trace::set_enabled(true);
+    for lanes in LANES {
+        par::set_threads(lanes);
+        let m1 = obs::metrics::snapshot();
+        let traced = run_path_keep_betas(&ds, &plan, RuleKind::Sasvi, opts);
+        let delta = obs::metrics::snapshot().delta_since(&m1);
+        let a = reference.betas.as_ref().unwrap();
+        let b = traced.betas.as_ref().unwrap();
+        for (k, (sa, sb)) in a.iter().zip(b.iter()).enumerate() {
+            assert_bits_eq(sa, sb, &format!("traced path step {k} lanes {lanes}"));
+        }
+        for name in tracked {
+            assert_eq!(
+                delta.counters.get(name).copied().unwrap_or(0),
+                base.counters.get(name).copied().unwrap_or(0),
+                "{name} diverged at lanes {lanes}"
+            );
+        }
+        let gap = delta
+            .histograms
+            .get("sasvi_checkpoint_gap")
+            .cloned()
+            .unwrap_or_default();
+        assert_eq!(
+            gap.buckets, base_gap.buckets,
+            "gap-histogram buckets diverged at lanes {lanes}"
+        );
+        assert_eq!(gap.count, base_gap.count, "gap count diverged at lanes {lanes}");
+        // the same gap values were observed; only the shard's running f64
+        // accumulator differs between sequential runs, so the sum delta
+        // matches to rounding rather than bitwise
+        assert!(
+            (gap.sum - base_gap.sum).abs() <= 1e-9 * (1.0 + base_gap.sum.abs()),
+            "gap sum diverged at lanes {lanes}: {} vs {}",
+            gap.sum,
+            base_gap.sum
+        );
+    }
+    obs::trace::set_enabled(false);
     par::set_threads(before);
 }
 

@@ -1,0 +1,76 @@
+#!/usr/bin/env python3
+"""Warn-only bench-trajectory diff.
+
+Compares the BENCH_*.json telemetry files of the current run against the
+previous run's `bench-telemetry` artifact and prints per-metric deltas.
+Numeric fields get old -> new with absolute and percent change; swings of
+10% or more are flagged. This is advisory only — wall-clock on shared CI
+runners is noisy — so the script always exits 0.
+
+Usage: bench_diff.py <previous-dir> <current-dir>
+"""
+
+import json
+import sys
+from pathlib import Path
+
+
+def load(directory):
+    out = {}
+    for path in sorted(Path(directory).glob("BENCH_*.json")):
+        try:
+            out[path.name] = json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError) as exc:
+            print(f"bench-diff: {path}: unreadable ({exc})")
+    return out
+
+
+def diff_file(name, old, new):
+    print(f"{name}:")
+    for key in sorted(new):
+        nv = new[key]
+        if isinstance(nv, bool) or not isinstance(nv, (int, float)):
+            continue
+        ov = old.get(key)
+        if isinstance(ov, bool) or not isinstance(ov, (int, float)):
+            print(f"  {key}: {nv} (no baseline)")
+            continue
+        delta = nv - ov
+        if ov != 0:
+            pct = f"{delta / ov * 100.0:+.1f}%"
+            flagged = abs(delta / ov) >= 0.10
+        else:
+            pct = "n/a"
+            flagged = delta != 0
+        marker = "  <-- changed >=10%" if flagged else ""
+        print(f"  {key}: {ov} -> {nv} ({delta:+g}, {pct}){marker}")
+    for key in sorted(set(old) - set(new)):
+        if not isinstance(old[key], bool) and isinstance(old[key], (int, float)):
+            print(f"  {key}: dropped (was {old[key]})")
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(__doc__.strip())
+        return 0
+    prev = load(sys.argv[1])
+    cur = load(sys.argv[2])
+    if not cur:
+        print("bench-diff: no current telemetry found")
+        return 0
+    if not prev:
+        print("bench-diff: no previous telemetry — nothing to compare "
+              "(first run, or the artifact expired)")
+        return 0
+    for name, new in sorted(cur.items()):
+        old = prev.get(name)
+        if old is None:
+            print(f"{name}: new bench, no baseline")
+        else:
+            diff_file(name, old, new)
+    print("bench-diff: warn-only — deltas above are advisory, build not failed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
