@@ -1,0 +1,234 @@
+//! Bench: the screening service under concurrent mixed load.
+//!
+//! Drives the real TCP server with many concurrent clients issuing a mix
+//! of `PATH` (Lasso) and `LPATH` (logistic) jobs whose λ-grids overlap
+//! dyadically (k=17/mf=0.5 vs k=25/mf=0.25 step the frac axis by exactly
+//! 1/32, so the first 16 λs are bit-equal and share shards; k=9/mf=0.5 vs
+//! k=13/mf=0.25 likewise for the logistic pair). Records per-request
+//! latency percentiles, throughput, and the shard-cache counters to
+//! `BENCH_server.json`.
+//!
+//! Correctness is enforced before any number is written:
+//! * every cache-served `RESULT` reply is byte-identical to the miss
+//!   reply that populated the cache (`total_secs` included);
+//! * `nocache` recomputation agrees with the cached answer on everything
+//!   but timing;
+//! * the cache must have cut measurable work (shard hits > 0,
+//!   `sasvi_pool_shard_steps_saved_total` > 0).
+//!
+//! Env: SASVI_BENCH_CLIENTS (default 120), SASVI_BENCH_SCALE (default
+//! 0.01), SASVI_BENCH_WORKERS (default available parallelism).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::time::Instant;
+
+use sasvi::server::json::extract_u64;
+use sasvi::server::{Server, ServerOptions};
+
+#[path = "common.rs"]
+mod common;
+use common::{env_f64, env_usize, BenchJson};
+
+/// One client connection speaking the line protocol.
+struct Client {
+    w: TcpStream,
+    r: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Self {
+        let w = TcpStream::connect(addr).unwrap();
+        let r = BufReader::new(w.try_clone().unwrap());
+        Self { w, r }
+    }
+
+    fn roundtrip(&mut self, cmd: &str) -> String {
+        writeln!(self.w, "{cmd}").unwrap();
+        let mut line = String::new();
+        self.r.read_line(&mut line).unwrap();
+        line.trim().to_string()
+    }
+
+    /// Submit a job verb, block on its RESULT, return (reply, latency s).
+    fn job(&mut self, cmd: &str) -> (String, f64) {
+        let t0 = Instant::now();
+        let submitted = self.roundtrip(cmd);
+        let id = extract_u64(&submitted, "job")
+            .unwrap_or_else(|| panic!("no job id in reply to {cmd}: {submitted}"));
+        let reply = self.roundtrip(&format!("RESULT {id}"));
+        (reply, t0.elapsed().as_secs_f64())
+    }
+}
+
+/// Read a counter/gauge value out of a `METRICS` reply (the Prometheus
+/// text rides inside the one-line JSON with `\n` escaped, so sample lines
+/// look like `\nname value\n`).
+fn metric_value(metrics_reply: &str, name: &str) -> f64 {
+    let needle = format!("\\n{name} ");
+    let Some(i) = metrics_reply.find(&needle) else {
+        return 0.0;
+    };
+    let rest = &metrics_reply[i + needle.len()..];
+    let end = rest.find('\\').unwrap_or(rest.len());
+    rest[..end].parse().unwrap_or(0.0)
+}
+
+/// Everything after the timing field — the recomputation-invariant part
+/// of a RESULT reply.
+fn after_secs(reply: &str) -> &str {
+    let i = reply.find("\"steps\"").unwrap_or_else(|| panic!("no steps in {reply}"));
+    &reply[i..]
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = (q * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx]
+}
+
+fn main() {
+    let clients = env_usize("SASVI_BENCH_CLIENTS", 120);
+    let scale = env_f64("SASVI_BENCH_SCALE", 0.01);
+    let workers = env_usize(
+        "SASVI_BENCH_WORKERS",
+        std::thread::available_parallelism().map_or(4, |n| n.get()),
+    );
+    println!("== server under load (clients={clients}, scale={scale}, workers={workers}) ==\n");
+
+    let server = Server::bind_with(
+        "127.0.0.1:0",
+        ServerOptions { workers, queue_cap: 64, ..ServerOptions::default() },
+    )
+    .unwrap();
+    let addr = server.local_addr().unwrap();
+    let stop = server.stop_handle();
+    let server_thread = std::thread::spawn(move || server.serve().unwrap());
+
+    // the four job shapes; the dyadic (k, min_frac) pairs make the short
+    // grid a bitwise prefix of the long one, so they share cache shards
+    let lpath_base = format!("LPATH synthetic100 3 {scale} sasviq");
+    let shapes: Vec<String> = vec![
+        "PATH 1 sasvi 17 0.5".into(),
+        "PATH 1 sasvi 25 0.25".into(),
+        format!("{lpath_base} 9 0.5"),
+        format!("{lpath_base} 13 0.25"),
+    ];
+
+    // warm pass: generate the shared dataset and populate the cache,
+    // recording the miss replies every later reply must match bitwise
+    let mut warm = Client::connect(addr);
+    let gen = warm.roundtrip(&format!("GEN synthetic100 3 {scale}"));
+    assert!(gen.contains("\"dataset\": 1"), "{gen}");
+    let canonical: Vec<String> = shapes.iter().map(|s| warm.job(s).0).collect();
+    for (s, c) in shapes.iter().zip(&canonical) {
+        assert!(!c.contains("error"), "warm {s} failed: {c}");
+    }
+
+    // the storm: every client runs all four shapes, order rotated by
+    // client index so PATH and LPATH interleave on the wire
+    let t0 = Instant::now();
+    let joined: Vec<(Vec<f64>, usize)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let shapes = &shapes;
+                let canonical = &canonical;
+                scope.spawn(move || {
+                    let mut cl = Client::connect(addr);
+                    let mut lats = Vec::with_capacity(shapes.len());
+                    let mut mismatches = 0usize;
+                    for k in 0..shapes.len() {
+                        let i = (k + c) % shapes.len();
+                        let (reply, dt) = cl.job(&shapes[i]);
+                        lats.push(dt);
+                        if reply != canonical[i] {
+                            eprintln!(
+                                "client {c} shape {i}: cached reply diverged\n \
+                                 got:  {reply}\n want: {}",
+                                canonical[i]
+                            );
+                            mismatches += 1;
+                        }
+                    }
+                    (lats, mismatches)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mismatches: usize = joined.iter().map(|(_, m)| m).sum();
+    assert_eq!(mismatches, 0, "cache-served replies must match the miss replies bitwise");
+
+    // nocache baseline: recomputes, so only timing may differ
+    for (s, c) in shapes.iter().zip(&canonical) {
+        let (reply, _) = warm.job(&format!("{s} nocache"));
+        assert_eq!(after_secs(&reply), after_secs(c), "nocache recomputation diverged for {s}");
+    }
+
+    let metrics = warm.roundtrip("METRICS");
+    let hits = metric_value(&metrics, "sasvi_path_cache_hits_total");
+    let misses = metric_value(&metrics, "sasvi_path_cache_misses_total");
+    let evictions = metric_value(&metrics, "sasvi_path_cache_evictions_total");
+    let steps_saved = metric_value(&metrics, "sasvi_pool_shard_steps_saved_total");
+    let bypass = metric_value(&metrics, "sasvi_path_cache_bypass_total");
+    let status_entries = metric_value(&metrics, "sasvi_pool_status_entries");
+    warm.roundtrip("QUIT");
+    stop.store(true, Ordering::Relaxed);
+    server_thread.join().unwrap();
+
+    // the cache must have cut measurable work under the storm
+    assert!(hits > 0.0, "expected shard-cache hits, got {hits}");
+    assert!(steps_saved > 0.0, "expected sasvi_pool_shard_steps_saved_total > 0");
+    assert_eq!(bypass, 4.0, "the four nocache jobs bypass the cache");
+    assert_eq!(status_entries, 0.0, "the status map must drain once every RESULT is in");
+
+    let mut lats: Vec<f64> = joined.iter().flat_map(|(l, _)| l.iter().copied()).collect();
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let requests = lats.len();
+    let mean = lats.iter().sum::<f64>() / requests.max(1) as f64;
+    let (p50, p95, p99) = (
+        percentile(&lats, 0.50),
+        percentile(&lats, 0.95),
+        percentile(&lats, 0.99),
+    );
+    let throughput = requests as f64 / wall.max(1e-9);
+
+    println!(
+        "{requests} jobs over {clients} clients in {wall:.3}s \
+         ({throughput:.1} jobs/s)"
+    );
+    println!(
+        "latency ms: mean {:.2}  p50 {:.2}  p95 {:.2}  p99 {:.2}",
+        mean * 1e3,
+        p50 * 1e3,
+        p95 * 1e3,
+        p99 * 1e3
+    );
+    println!(
+        "shard cache: {hits} hits / {misses} misses / {evictions} evictions, \
+         {steps_saved} path steps served from cache"
+    );
+    println!("cache-hit replies bit-identical to miss replies — OK");
+
+    let mut json = BenchJson::new("server");
+    json.int("clients", clients as u64)
+        .int("workers", workers as u64)
+        .num("scale", scale)
+        .int("requests", requests as u64)
+        .num("wall_secs", wall)
+        .num("throughput_jobs_per_sec", throughput)
+        .num("latency_mean_ms", mean * 1e3)
+        .arr("latency_pcts_ms", &[p50 * 1e3, p95 * 1e3, p99 * 1e3])
+        .num("cache_hits", hits)
+        .num("cache_misses", misses)
+        .num("cache_evictions", evictions)
+        .num("shard_steps_saved", steps_saved)
+        .num("cache_bypass", bypass)
+        .flag("hit_replies_bit_identical", true);
+    json.write();
+}

@@ -108,7 +108,11 @@ COMMANDS:
   table1        regenerate Table 1 (--scale --trials --grid)
   fig5          regenerate Fig 5 rejection curves (--scale --grid [--csv dir])
   sure-removal  Theorem-4 report (--preset --lam1-frac --top)
-  serve         screening service (--addr --workers)
+  serve         screening service (--addr --workers --queue-cap --cache-cap
+                --retain-cap; or --config FILE with a [server] section, CLI
+                flags win). PATH and LPATH both run async through the job
+                pool with a cross-request shard cache; append `nocache` to
+                either verb to bypass it.
   runtime-info  list + warm PJRT artifacts (--artifacts DIR)
   run           run an experiment config (--config FILE)
   metrics       run a small path workload and print the process metrics
@@ -536,10 +540,27 @@ fn cmd_metrics(flags: &Flags) -> Result<i32> {
 }
 
 fn cmd_serve(flags: &Flags) -> Result<i32> {
-    let addr = flags.get_or("addr", "127.0.0.1:7878");
-    let workers = flags.usize_or("workers", 2)?.max(1);
-    let server = crate::server::Server::bind(&addr, workers)?;
-    println!("sasvi screening service on {}", server.local_addr()?);
+    // config file first (if any), explicit CLI flags win knob-by-knob
+    let base = match flags.get("config") {
+        Some(path) => crate::config::ServerConfig::from_config(&Config::load(path)?),
+        None => crate::config::ServerConfig::default(),
+    };
+    let addr = flags.get_or("addr", &base.addr);
+    let opts = crate::server::ServerOptions {
+        workers: flags.usize_or("workers", base.workers)?.max(1),
+        queue_cap: flags.usize_or("queue-cap", base.queue_cap)?.max(1),
+        cache_cap: flags.usize_or("cache-cap", base.cache_cap)?,
+        retain_cap: flags.usize_or("retain-cap", base.retain_cap)?.max(1),
+    };
+    let server = crate::server::Server::bind_with(&addr, opts)?;
+    println!(
+        "sasvi screening service on {} ({} workers, queue {}, cache {}, retain {})",
+        server.local_addr()?,
+        opts.workers,
+        opts.queue_cap,
+        opts.cache_cap,
+        opts.retain_cap
+    );
     server.serve()?;
     Ok(0)
 }

@@ -366,6 +366,60 @@ impl ObservabilityConfig {
     }
 }
 
+/// The `[server]` section: knobs for `sasvi serve` (explicit CLI flags
+/// win — see `cmd_serve`'s precedence rules).
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// `server.addr`: listen address (port 0 = ephemeral)
+    pub addr: String,
+    /// `server.workers`: pool worker threads
+    pub workers: usize,
+    /// `server.queue_cap`: bounded job-queue depth (submission blocks
+    /// past it — backpressure)
+    pub queue_cap: usize,
+    /// `server.cache_cap`: shard-cache capacity (0 disables result
+    /// retention while keeping in-flight dedup)
+    pub cache_cap: usize,
+    /// `server.retain_cap`: cap on unobserved terminal job statuses
+    pub retain_cap: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        let o = crate::server::ServerOptions::default();
+        Self {
+            addr: "127.0.0.1:7878".into(),
+            workers: o.workers,
+            queue_cap: o.queue_cap,
+            cache_cap: o.cache_cap,
+            retain_cap: o.retain_cap,
+        }
+    }
+}
+
+impl ServerConfig {
+    pub fn from_config(c: &Config) -> Self {
+        let d = Self::default();
+        Self {
+            addr: c.get_str("server.addr", &d.addr),
+            workers: c.get_usize("server.workers", d.workers).max(1),
+            queue_cap: c.get_usize("server.queue_cap", d.queue_cap).max(1),
+            cache_cap: c.get_usize("server.cache_cap", d.cache_cap),
+            retain_cap: c.get_usize("server.retain_cap", d.retain_cap).max(1),
+        }
+    }
+
+    /// The pool knobs as [`crate::server::ServerOptions`].
+    pub fn server_options(&self) -> crate::server::ServerOptions {
+        crate::server::ServerOptions {
+            workers: self.workers,
+            queue_cap: self.queue_cap,
+            cache_cap: self.cache_cap,
+            retain_cap: self.retain_cap,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -496,6 +550,30 @@ trials = 3
         assert!(!d.trace);
         assert!(d.trace_json.is_none());
         assert!(!d.print_metrics);
+    }
+
+    #[test]
+    fn server_knobs_parse_with_defaults() {
+        let c = Config::parse(
+            "[server]\naddr = \"127.0.0.1:0\"\nworkers = 4\nqueue_cap = 32\n\
+             cache_cap = 64\nretain_cap = 100\n",
+        )
+        .unwrap();
+        let s = ServerConfig::from_config(&c);
+        assert_eq!(s.addr, "127.0.0.1:0");
+        assert_eq!(s.workers, 4);
+        assert_eq!(s.queue_cap, 32);
+        assert_eq!(s.cache_cap, 64);
+        assert_eq!(s.retain_cap, 100);
+        let o = s.server_options();
+        assert_eq!((o.workers, o.queue_cap, o.cache_cap, o.retain_cap), (4, 32, 64, 100));
+        // defaults mirror ServerOptions; caps that must be >= 1 are clamped
+        let d = ServerConfig::from_config(&Config::parse("").unwrap());
+        assert_eq!(d.addr, "127.0.0.1:7878");
+        assert_eq!(d.workers, crate::server::ServerOptions::default().workers);
+        let c = Config::parse("[server]\nworkers = 0\nqueue_cap = 0\n").unwrap();
+        let s = ServerConfig::from_config(&c);
+        assert_eq!((s.workers, s.queue_cap), (1, 1));
     }
 
     #[test]

@@ -1,0 +1,324 @@
+//! Cross-request shard cache: the memoization layer the job pool puts in
+//! front of path solves.
+//!
+//! A path job's λ-grid is chunked into shards
+//! ([`super::pool::SHARD_POINTS`] grid points each); every shard is keyed
+//! by the *complete* set of inputs that determine its output bit-for-bit —
+//! workload kind, dataset identity (preset/seed/scale), screening rule,
+//! every solver knob (the `Debug` rendering of the options struct, which
+//! lists all fields), the grid's `lambda_max` bit pattern, the shard
+//! index, and an FNV-1a hash over the bit patterns of **all λ values up
+//! to and including this shard**. The λ-prefix keying is what makes
+//! *overlapping* grids share work: two clients whose grids agree on the
+//! first m·[`super::pool::SHARD_POINTS`] λ values (bitwise) share those m
+//! shards, because a shard's output depends only on the λ-prefix that
+//! produced its warm-start carry — the segmented runner is bit-identical
+//! to the full one (`segmented_run_is_bit_identical_to_full_run`).
+//! Grids that merely *approximately* overlap hash to different keys and
+//! simply miss: the cache can under-share, never corrupt.
+//!
+//! Concurrency: a `get_or_compute` that misses publishes an `InFlight`
+//! marker and computes outside the lock; concurrent requests for the same
+//! shard block on a condvar instead of duplicating the solve (this is how
+//! a second client "rides behind" the first, shard by shard). Shard
+//! dependencies point strictly backward along the λ-grid, so waiting can
+//! never deadlock. A panicking compute clears its marker and wakes
+//! waiters, one of which recomputes.
+//!
+//! Retention: bounded LRU over *ready* entries (in-flight markers are
+//! never evicted — someone is blocked on them). Hits, misses, and
+//! evictions are exported through [`crate::obs::metrics`]
+//! (`sasvi_path_cache_{hits,misses,evictions}_total`, entry-count gauge
+//! `sasvi_path_cache_entries`) and mirrored in per-cache atomics so tests
+//! can assert against one pool without cross-test interference.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::coordinator::logistic::{LogiCarry, LogiStepRecord};
+use crate::coordinator::path::{PathCarry, StepRecord};
+use crate::obs::metrics;
+use crate::screening::dynamic::DynamicTrace;
+use crate::solver::working_set::WorkingSetTrace;
+
+/// One cached Lasso shard: the per-step records and traces of a λ-slice
+/// plus the carry that warm-starts the next slice.
+#[derive(Clone, Debug)]
+pub struct LassoShard {
+    pub steps: Vec<StepRecord>,
+    pub dynamic: Option<Vec<DynamicTrace>>,
+    pub working_set: Option<Vec<WorkingSetTrace>>,
+    pub carry: PathCarry,
+}
+
+/// One cached logistic shard.
+#[derive(Clone, Debug)]
+pub struct LogiShard {
+    pub steps: Vec<LogiStepRecord>,
+    pub dynamic: Option<Vec<DynamicTrace>>,
+    pub carry: LogiCarry,
+}
+
+/// A cached shard of either workload. Keys carry a workload prefix
+/// (`L|` / `G|`), so a key can never resolve to the wrong variant.
+#[derive(Clone, Debug)]
+pub enum Shard {
+    Lasso(LassoShard),
+    Logistic(LogiShard),
+}
+
+enum Slot {
+    /// someone is computing this shard; wait on the condvar
+    InFlight,
+    Ready(Arc<Shard>),
+}
+
+struct Inner {
+    map: HashMap<String, Slot>,
+    /// ready keys in recency order (front = coldest); in-flight keys are
+    /// not listed and thus never evicted
+    lru: Vec<String>,
+}
+
+/// Point-in-time counters of one cache instance.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub entries: usize,
+}
+
+pub struct ShardCache {
+    inner: Mutex<Inner>,
+    cond: Condvar,
+    cap: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl ShardCache {
+    /// `cap` bounds the number of *ready* shards retained (LRU eviction);
+    /// `cap == 0` disables retention entirely (every lookup misses) while
+    /// keeping in-flight deduplication.
+    pub fn new(cap: usize) -> Self {
+        Self {
+            inner: Mutex::new(Inner { map: HashMap::new(), lru: Vec::new() }),
+            cond: Condvar::new(),
+            cap,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Return the cached shard for `key`, or compute and publish it.
+    /// The bool is true on a hit (including waiting out another thread's
+    /// in-flight compute). `compute` runs outside the lock.
+    pub fn get_or_compute<F>(&self, key: &str, compute: F) -> (Arc<Shard>, bool)
+    where
+        F: FnOnce() -> Shard,
+    {
+        {
+            let mut g = self.inner.lock().unwrap();
+            loop {
+                match g.map.get(key) {
+                    Some(Slot::Ready(v)) => {
+                        let v = v.clone();
+                        // touch: move to the hot end
+                        if let Some(pos) = g.lru.iter().position(|k| k == key) {
+                            let k = g.lru.remove(pos);
+                            g.lru.push(k);
+                        }
+                        self.hits.fetch_add(1, Ordering::Relaxed);
+                        metrics::counter_inc("sasvi_path_cache_hits_total");
+                        return (v, true);
+                    }
+                    Some(Slot::InFlight) => {
+                        g = self.cond.wait(g).unwrap();
+                    }
+                    None => {
+                        g.map.insert(key.to_string(), Slot::InFlight);
+                        break;
+                    }
+                }
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        metrics::counter_inc("sasvi_path_cache_misses_total");
+        // If `compute` panics (a poisoned solve), clear the marker and wake
+        // waiters so one of them takes over instead of blocking forever.
+        let mut guard = InFlightGuard { cache: self, key, armed: true };
+        let value = Arc::new(compute());
+        let mut g = self.inner.lock().unwrap();
+        g.map.insert(key.to_string(), Slot::Ready(value.clone()));
+        g.lru.push(key.to_string());
+        while g.lru.len() > self.cap {
+            let cold = g.lru.remove(0);
+            g.map.remove(&cold);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+            metrics::counter_inc("sasvi_path_cache_evictions_total");
+        }
+        metrics::gauge_set("sasvi_path_cache_entries", g.lru.len() as f64);
+        drop(g);
+        self.cond.notify_all();
+        guard.armed = false;
+        (value, false)
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries: self.inner.lock().unwrap().lru.len(),
+        }
+    }
+}
+
+struct InFlightGuard<'a> {
+    cache: &'a ShardCache,
+    key: &'a str,
+    armed: bool,
+}
+
+impl Drop for InFlightGuard<'_> {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        let mut g = self.cache.inner.lock().unwrap();
+        if matches!(g.map.get(self.key), Some(Slot::InFlight)) {
+            g.map.remove(self.key);
+        }
+        drop(g);
+        self.cache.cond.notify_all();
+    }
+}
+
+/// FNV-1a over little-endian `u64` words — the λ-prefix hash. Hand-rolled
+/// (no external hasher dependency) and stable across platforms, so cache
+/// keys are reproducible in tests and logs.
+pub fn fnv1a_init() -> u64 {
+    0xcbf2_9ce4_8422_2325
+}
+
+pub fn fnv1a_u64(h: &mut u64, v: u64) {
+    for b in v.to_le_bytes() {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::DualState;
+
+    fn dummy_shard(tag: f64) -> Shard {
+        Shard::Lasso(LassoShard {
+            steps: Vec::new(),
+            dynamic: None,
+            working_set: None,
+            carry: PathCarry {
+                beta: vec![tag],
+                resid: vec![],
+                state: DualState { lambda: tag, theta: vec![], xt_theta: vec![] },
+                prev_ws: vec![],
+            },
+        })
+    }
+
+    fn carry_tag(s: &Shard) -> f64 {
+        match s {
+            Shard::Lasso(l) => l.carry.beta[0],
+            Shard::Logistic(_) => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn hit_returns_the_original_value() {
+        let c = ShardCache::new(8);
+        let (a, hit_a) = c.get_or_compute("k", || dummy_shard(1.0));
+        let (b, hit_b) = c.get_or_compute("k", || dummy_shard(2.0));
+        assert!(!hit_a);
+        assert!(hit_b);
+        assert_eq!(carry_tag(&a), 1.0);
+        assert!(Arc::ptr_eq(&a, &b), "hit must return the cached Arc");
+        let st = c.stats();
+        assert_eq!((st.hits, st.misses, st.entries), (1, 1, 1));
+    }
+
+    #[test]
+    fn lru_evicts_coldest_ready_entry() {
+        let c = ShardCache::new(2);
+        c.get_or_compute("a", || dummy_shard(1.0));
+        c.get_or_compute("b", || dummy_shard(2.0));
+        c.get_or_compute("a", || unreachable!()); // touch: a is now hot
+        c.get_or_compute("c", || dummy_shard(3.0)); // evicts b
+        assert_eq!(c.stats().evictions, 1);
+        let (_, hit_a) = c.get_or_compute("a", || dummy_shard(9.0));
+        assert!(hit_a, "recently-touched entry survived");
+        let (v, hit_b) = c.get_or_compute("b", || dummy_shard(4.0));
+        assert!(!hit_b, "coldest entry was evicted");
+        assert_eq!(carry_tag(&v), 4.0);
+    }
+
+    #[test]
+    fn concurrent_misses_compute_once() {
+        use std::sync::atomic::AtomicUsize;
+        let c = Arc::new(ShardCache::new(8));
+        let computes = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let c = c.clone();
+            let computes = computes.clone();
+            handles.push(std::thread::spawn(move || {
+                let (v, _) = c.get_or_compute("shared", || {
+                    computes.fetch_add(1, Ordering::SeqCst);
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                    dummy_shard(7.0)
+                });
+                carry_tag(&v).to_bits()
+            }));
+        }
+        let bits: Vec<u64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(computes.load(Ordering::SeqCst), 1, "in-flight dedup failed");
+        assert!(bits.iter().all(|&b| b == 7.0f64.to_bits()));
+        assert_eq!(c.stats().hits, 7);
+    }
+
+    #[test]
+    fn panicking_compute_unblocks_waiters() {
+        let c = Arc::new(ShardCache::new(8));
+        let c2 = c.clone();
+        let panicker = std::thread::spawn(move || {
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                c2.get_or_compute("k", || panic!("solver blew up"));
+            }));
+            assert!(r.is_err());
+        });
+        panicker.join().unwrap();
+        // the marker is gone: a later caller computes fresh, no deadlock
+        let (v, hit) = c.get_or_compute("k", || dummy_shard(5.0));
+        assert!(!hit);
+        assert_eq!(carry_tag(&v), 5.0);
+    }
+
+    #[test]
+    fn fnv_prefix_hash_is_order_sensitive() {
+        let mut a = fnv1a_init();
+        fnv1a_u64(&mut a, 1);
+        fnv1a_u64(&mut a, 2);
+        let mut b = fnv1a_init();
+        fnv1a_u64(&mut b, 2);
+        fnv1a_u64(&mut b, 1);
+        assert_ne!(a, b);
+        let mut c = fnv1a_init();
+        fnv1a_u64(&mut c, 1);
+        fnv1a_u64(&mut c, 2);
+        assert_eq!(a, c);
+    }
+}

@@ -180,6 +180,33 @@ impl LogisticPathResult {
     }
 }
 
+/// Everything the logistic pathwise loop carries from one grid point to
+/// the next: warm-start coefficients plus the dual state
+/// `(theta1, xt_theta1)` at the previous grid point `lam1`. The per-step
+/// `keep` mask is deliberately absent — every step's screen fully
+/// overwrites it — so a segmented run performs the same operations as an
+/// unsegmented one, bit-for-bit (the logistic twin of
+/// [`super::path::PathCarry`]).
+#[derive(Clone, Debug)]
+pub struct LogiCarry {
+    pub beta: Vec<f64>,
+    pub theta1: Vec<f64>,
+    pub xt_theta1: Vec<f64>,
+    pub lam1: f64,
+}
+
+/// Output of [`run_logistic_segment`]: per-step records and traces for one
+/// contiguous λ-slice, plus the carry that seeds the next slice.
+#[derive(Clone, Debug)]
+pub struct LogiSegment {
+    pub steps: Vec<LogiStepRecord>,
+    pub dynamic: Option<Vec<DynamicTrace>>,
+    /// per-step solutions when requested (full-path runners only; cached
+    /// shards never retain betas)
+    pub betas: Option<Vec<Vec<f64>>>,
+    pub carry: LogiCarry,
+}
+
 /// Run a full logistic regularization path with the given screening rule.
 pub fn run_logistic_path(
     prob: &LogisticProblem,
@@ -188,6 +215,25 @@ pub fn run_logistic_path(
     opts: LogisticPathOptions,
 ) -> LogisticPathResult {
     run_logistic_path_impl(prob, plan, rule, opts, false)
+}
+
+/// Run one contiguous slice of a logistic λ-grid (descending), resuming
+/// from `carry` (or from scratch at `grid_lambda_max` when `None`).
+/// `pre` must be the problem's precompute (or the caller-pinned Lipschitz
+/// variant) computed once per job, so every segment prices solves off the
+/// same constants. This is the pool's logistic shard unit — see
+/// [`super::path::run_path_segment`] for the caching story.
+#[allow(clippy::too_many_arguments)]
+pub fn run_logistic_segment(
+    prob: &LogisticProblem,
+    pre: &crate::logistic::LogisticPrecompute,
+    lambdas: &[f64],
+    grid_lambda_max: f64,
+    rule: LogiRule,
+    opts: &LogisticPathOptions,
+    carry: Option<LogiCarry>,
+) -> LogiSegment {
+    run_logistic_segment_impl(prob, pre, lambdas, grid_lambda_max, rule, opts, carry, false)
 }
 
 /// Same as [`run_logistic_path`], additionally retaining every solution
@@ -201,6 +247,22 @@ pub fn run_logistic_path_keep_betas(
     run_logistic_path_impl(prob, plan, rule, opts, true)
 }
 
+/// Precompute for a logistic path run: a caller-pinned Lipschitz constant
+/// skips the power iteration entirely (column norms are still needed for
+/// the checkpoint bounds).
+pub fn logistic_path_precompute(
+    prob: &LogisticProblem,
+    opts: &LogisticPathOptions,
+) -> crate::logistic::LogisticPrecompute {
+    match opts.solver.lipschitz {
+        Some(l) => crate::logistic::LogisticPrecompute {
+            col_norms_sq: prob.x.col_norms_sq(),
+            lipschitz: l,
+        },
+        None => prob.precompute(),
+    }
+}
+
 fn run_logistic_path_impl(
     prob: &LogisticProblem,
     plan: &crate::coordinator::PathPlan,
@@ -209,34 +271,58 @@ fn run_logistic_path_impl(
     keep_betas: bool,
 ) -> LogisticPathResult {
     let start = Instant::now();
+    let pre = logistic_path_precompute(prob, &opts);
+    let seg = run_logistic_segment_impl(
+        prob, &pre, &plan.lambdas, plan.lambda_max, rule, &opts, None, keep_betas,
+    );
+    LogisticPathResult {
+        rule,
+        steps: seg.steps,
+        total_time: start.elapsed(),
+        beta_final: seg.carry.beta,
+        betas: seg.betas,
+        dynamic: seg.dynamic,
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_logistic_segment_impl(
+    prob: &LogisticProblem,
+    pre: &crate::logistic::LogisticPrecompute,
+    lambdas: &[f64],
+    grid_lambda_max: f64,
+    rule: LogiRule,
+    opts: &LogisticPathOptions,
+    carry: Option<LogiCarry>,
+    keep_betas: bool,
+) -> LogiSegment {
     let p = prob.p();
-    // a caller-pinned Lipschitz constant skips the power iteration
-    // entirely (column norms are still needed for the checkpoint bounds)
-    let pre = match opts.solver.lipschitz {
-        Some(l) => crate::logistic::LogisticPrecompute {
-            col_norms_sq: prob.x.col_norms_sq(),
-            lipschitz: l,
-        },
-        None => prob.precompute(),
-    };
     let solver = LogisticOptions { lipschitz: Some(pre.lipschitz), ..opts.solver };
 
-    let mut beta = vec![0.0; p];
+    // resume from the carry, or start fresh at lambda_max — the fresh
+    // branch is exactly the full runner's initialization
+    let (mut beta, mut theta1, mut xt_theta1, mut lam1) = match carry {
+        Some(c) => (c.beta, c.theta1, c.xt_theta1, c.lam1),
+        None => {
+            let beta = vec![0.0; p];
+            let (theta1, xt_theta1) = prob.dual_point(&beta, grid_lambda_max);
+            (beta, theta1, xt_theta1, grid_lambda_max)
+        }
+    };
     let mut keep = vec![true; p];
     let mut grad = vec![0.0; p];
     let mut active: Vec<usize> = Vec::with_capacity(p);
-    let mut lam1 = plan.lambda_max;
-    let (mut theta1, mut xt_theta1) = prob.dual_point(&beta, lam1);
 
-    let mut steps = Vec::with_capacity(plan.len());
-    let mut betas = if keep_betas { Some(Vec::with_capacity(plan.len())) } else { None };
+    let mut steps = Vec::with_capacity(lambdas.len());
+    let mut betas =
+        if keep_betas { Some(Vec::with_capacity(lambdas.len())) } else { None };
     let mut dyn_traces = if opts.dynamic.active() {
-        Some(Vec::with_capacity(plan.len()))
+        Some(Vec::with_capacity(lambdas.len()))
     } else {
         None
     };
 
-    for &lambda in plan.lambdas.iter() {
+    for &lambda in lambdas.iter() {
         let _sp = crate::obs::trace::span("logistic_path_step");
         crate::obs::metrics::counter_inc("sasvi_logistic_path_steps_total");
         // ---- screen -----------------------------------------------------
@@ -269,7 +355,7 @@ fn run_logistic_path_impl(
         let width0 = active.len() as u64;
         let mut trace = DynamicTrace::new(active.len());
         let mut iters = solve_logistic_active(
-            prob, lambda, &mut active, &mut beta, &pre, &solver, &opts.dynamic,
+            prob, lambda, &mut active, &mut beta, pre, &solver, &opts.dynamic,
             &mut trace,
         );
         // work accounting per solve call, at the width the solve ran:
@@ -314,7 +400,7 @@ fn run_logistic_path_impl(
             let width2 = active.len() as u64;
             let mut t2 = DynamicTrace::new(active.len());
             let it2 = solve_logistic_active(
-                prob, lambda, &mut active, &mut beta, &pre, &solver, &opts.dynamic,
+                prob, lambda, &mut active, &mut beta, pre, &solver, &opts.dynamic,
                 &mut t2,
             );
             for ev in t2.events.iter() {
@@ -344,7 +430,7 @@ fn run_logistic_path_impl(
         let gap = trace.events.last().map(|e| e.gap).unwrap_or(f64::NAN);
         steps.push(LogiStepRecord {
             lambda,
-            frac: lambda / plan.lambda_max,
+            frac: lambda / grid_lambda_max,
             kept,
             screened,
             nnz: beta.iter().filter(|&&b| b != 0.0).count(),
@@ -366,13 +452,11 @@ fn run_logistic_path_impl(
         }
     }
 
-    LogisticPathResult {
-        rule,
+    LogiSegment {
         steps,
-        total_time: start.elapsed(),
-        beta_final: beta,
-        betas,
         dynamic: dyn_traces,
+        betas,
+        carry: LogiCarry { beta, theta1, xt_theta1, lam1 },
     }
 }
 
@@ -484,6 +568,51 @@ mod tests {
         let early = r.steps[1].rejection_ratio();
         let late = r.steps[9].rejection_ratio();
         assert!(early > late || early > 0.9, "early {early} late {late}");
+    }
+
+    #[test]
+    fn segmented_run_is_bit_identical_to_full_run() {
+        // the shard-cache contract, logistic edition: chunking the grid
+        // into segments and chaining carries reproduces the full run
+        // bit-for-bit (static and gap-safe-dynamic configurations)
+        let prob = tiny();
+        let plan = PathPlan::linear_from_lambda_max(prob.lambda_max(), 8, 0.15);
+        let dyn_opts = LogisticPathOptions {
+            dynamic: DynamicOptions::enabled_every(4),
+            ..tight()
+        };
+        for opts in [tight(), dyn_opts] {
+            for rule in [LogiRule::SasviQ, LogiRule::Strong] {
+                let full = run_logistic_path(&prob, &plan, rule, opts);
+                let pre = logistic_path_precompute(&prob, &opts);
+                let mut carry = None;
+                let mut steps = Vec::new();
+                for chunk in plan.lambdas.chunks(3) {
+                    let seg = run_logistic_segment(
+                        &prob, &pre, chunk, plan.lambda_max, rule, &opts, carry,
+                    );
+                    steps.extend(seg.steps);
+                    carry = Some(seg.carry);
+                }
+                let carry = carry.unwrap();
+                assert_eq!(full.beta_final, carry.beta, "{rule:?} beta diverged");
+                assert_eq!(full.steps.len(), steps.len());
+                for (a, b) in full.steps.iter().zip(steps.iter()) {
+                    assert_eq!(a.lambda.to_bits(), b.lambda.to_bits());
+                    assert_eq!(a.frac.to_bits(), b.frac.to_bits());
+                    assert_eq!(a.gap.to_bits(), b.gap.to_bits(), "{rule:?} gap");
+                    assert_eq!(a.kept, b.kept);
+                    assert_eq!(a.screened, b.screened);
+                    assert_eq!(a.nnz, b.nnz);
+                    assert_eq!(a.iters, b.iters);
+                    assert_eq!(a.kkt_violations, b.kkt_violations);
+                    assert_eq!(a.kkt_resolves, b.kkt_resolves);
+                    assert_eq!(a.dyn_rechecks, b.dyn_rechecks);
+                    assert_eq!(a.dyn_dropped, b.dyn_dropped);
+                    assert_eq!(a.work, b.work);
+                }
+            }
+        }
     }
 
     #[test]

@@ -3,23 +3,34 @@
 //! * [`planner`] — regularization grids (the paper's protocol: 100 values
 //!   equally spaced on the `lambda/lambda_max` scale from 0.05 to 1);
 //! * [`path`] — the sequential path runner: screen → restrict → warm-start
-//!   solve → (KKT-correct if the rule is unsafe) → next dual state;
-//! * [`logistic`] — the same loop for the §6 sparse-logistic workload
-//!   (SasviQ/Strong screens, gap-safe in-solver checkpoints, KKT-corrected
-//!   so the path is exact);
-//! * [`pool`] — a worker pool running many path jobs concurrently with
-//!   bounded queues and per-job result channels (the screening service and
-//!   the benches sit on top of it).
+//!   solve → (KKT-correct if the rule is unsafe) → next dual state; also
+//!   the segmented runner ([`path::run_path_segment`]) that resumes a path
+//!   from a carried warm start, bit-identical to the full run;
+//! * [`logistic`] — the same loop (and segment runner) for the §6
+//!   sparse-logistic workload (SasviQ/Strong screens, gap-safe in-solver
+//!   checkpoints, KKT-corrected so the path is exact);
+//! * [`cache`] — the cross-request shard cache: λ-grids chunk into shards
+//!   keyed by (workload, dataset, knobs, λ-prefix) so overlapping requests
+//!   share solves, with in-flight deduplication and bounded LRU retention;
+//! * [`pool`] — a worker pool running many path jobs (Lasso *and*
+//!   logistic, via the workload-generic [`pool::JobSpec`]) concurrently
+//!   with bounded queues, condvar-notified completion, bounded status
+//!   retention, and the shard cache in front of every solve (the screening
+//!   service and the benches sit on top of it).
 
+pub mod cache;
 pub mod logistic;
 pub mod path;
 pub mod planner;
 pub mod pool;
 
+pub use cache::{CacheStats, ShardCache};
 pub use logistic::{
     run_logistic_path, run_logistic_path_keep_betas, LogiStepRecord, LogisticPathOptions,
     LogisticPathResult,
 };
 pub use path::{run_path, run_path_keep_betas, PathOptions, PathResult, SolverKind, StepRecord};
 pub use planner::PathPlan;
-pub use pool::{JobPool, JobSpec, JobStatus};
+pub use pool::{
+    JobId, JobPool, JobResult, JobSpec, JobStatus, LassoJob, LogisticJob, SubmitError,
+};

@@ -286,6 +286,38 @@ impl PathResult {
     }
 }
 
+/// Everything the pathwise loop carries from one grid point to the next:
+/// warm-start coefficients, the matching residual, the dual state that
+/// drives the next screen, and (when working-set solving is on) the final
+/// working set used as the next seed. A [`PathSegment`] ends by packaging
+/// this state, so a later segment — possibly assembled by a different pool
+/// job that found the earlier segment in the shard cache — resumes the
+/// path exactly where the previous one stopped. The per-step `keep` mask
+/// is deliberately absent: every step's screen fully overwrites it before
+/// reading, so a segmented run performs the same operations as an
+/// unsegmented one and the results are bit-identical (pinned by
+/// `segmented_run_is_bit_identical_to_full_run`).
+#[derive(Clone, Debug)]
+pub struct PathCarry {
+    pub beta: Vec<f64>,
+    pub resid: Vec<f64>,
+    pub state: DualState,
+    pub prev_ws: Vec<usize>,
+}
+
+/// Output of [`run_path_segment`]: per-step records and traces for one
+/// contiguous λ-slice, plus the carry that seeds the next slice.
+#[derive(Clone, Debug)]
+pub struct PathSegment {
+    pub steps: Vec<StepRecord>,
+    pub dynamic: Option<Vec<DynamicTrace>>,
+    pub working_set: Option<Vec<WorkingSetTrace>>,
+    /// per-step solutions when requested (full-path runners only; cached
+    /// shards never retain betas)
+    pub betas: Option<Vec<Vec<f64>>>,
+    pub carry: PathCarry,
+}
+
 /// Run a full regularization path with the given screening rule.
 pub fn run_path(
     ds: &Dataset,
@@ -294,6 +326,28 @@ pub fn run_path(
     opts: PathOptions,
 ) -> PathResult {
     run_path_impl(ds, plan, rule_kind, opts, false)
+}
+
+/// Run one contiguous slice of a λ-grid (descending), resuming from
+/// `carry` (or from scratch at `lambda_max` when `None`), and return the
+/// slice's records plus the carry for the next slice. `grid_lambda_max` is
+/// the *grid's* λ-max, used only for the reported `frac` — the screen's
+/// keep-all branch keys off the carried dual state, exactly as the full
+/// runner does. This is the pool's shard unit: the job pool chunks a
+/// plan's grid into segments, caches each segment's output keyed by
+/// (dataset, knobs, λ-prefix), and chains carries so overlapping requests
+/// share solves.
+#[allow(clippy::too_many_arguments)]
+pub fn run_path_segment(
+    ds: &Dataset,
+    pre: &crate::data::dataset::PathPrecompute,
+    lambdas: &[f64],
+    grid_lambda_max: f64,
+    rule_kind: RuleKind,
+    opts: &PathOptions,
+    carry: Option<PathCarry>,
+) -> PathSegment {
+    run_segment_impl(ds, pre, lambdas, grid_lambda_max, rule_kind, opts, carry, false)
 }
 
 /// Same as [`run_path`], additionally retaining every solution (used by the
@@ -436,33 +490,67 @@ fn run_path_impl(
 ) -> PathResult {
     let start = Instant::now();
     let pre = ds.precompute();
-    let ctx = ScreenContext::new(&ds.x, &ds.y, &pre);
+    let seg = run_segment_impl(
+        ds, &pre, &plan.lambdas, plan.lambda_max, rule_kind, &opts, None, keep_betas,
+    );
+    PathResult {
+        rule: rule_kind,
+        dataset: ds.name.clone(),
+        steps: seg.steps,
+        total_time: start.elapsed(),
+        beta_final: seg.carry.beta,
+        betas: seg.betas,
+        dynamic: seg.dynamic,
+        working_set: seg.working_set,
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_segment_impl(
+    ds: &Dataset,
+    pre: &crate::data::dataset::PathPrecompute,
+    lambdas: &[f64],
+    grid_lambda_max: f64,
+    rule_kind: RuleKind,
+    opts: &PathOptions,
+    carry: Option<PathCarry>,
+    keep_betas: bool,
+) -> PathSegment {
+    let ctx = ScreenContext::new(&ds.x, &ds.y, pre);
     let rule = rule_kind.build();
     let p = ds.p();
     let n = ds.n();
 
-    let mut beta = vec![0.0; p];
-    let mut resid = ds.y.clone();
+    // resume from the carry, or start fresh at lambda_max — the fresh
+    // branch is exactly the full runner's initialization
+    let (mut beta, mut resid, mut state, mut prev_ws) = match carry {
+        Some(c) => (c.beta, c.resid, c.state, c.prev_ws),
+        None => (
+            vec![0.0; p],
+            ds.y.clone(),
+            DualState::at_lambda_max(&ds.x, &ds.y, pre.lambda_max, &pre.xty),
+            Vec::new(),
+        ),
+    };
     let mut keep = vec![true; p];
     let mut active: Vec<usize> = Vec::with_capacity(p);
     let mut xt_r = vec![0.0; p];
-    let mut state = DualState::at_lambda_max(&ds.x, &ds.y, pre.lambda_max, &pre.xty);
 
-    let mut steps = Vec::with_capacity(plan.len());
-    let mut betas = if keep_betas { Some(Vec::with_capacity(plan.len())) } else { None };
+    let mut steps = Vec::with_capacity(lambdas.len());
+    let mut betas =
+        if keep_betas { Some(Vec::with_capacity(lambdas.len())) } else { None };
     let ws_on = opts.working_set.active();
     // inner-solve dynamic work is folded into the working-set traces, so
     // per-step dynamic traces are only collected for plain dynamic runs
     let mut dyn_traces = if opts.dynamic.active() && !ws_on {
-        Some(Vec::with_capacity(plan.len()))
+        Some(Vec::with_capacity(lambdas.len()))
     } else {
         None
     };
-    let mut ws_traces = if ws_on { Some(Vec::with_capacity(plan.len())) } else { None };
-    // the previous step's final working set, carried as the next seed
-    let mut prev_ws: Vec<usize> = Vec::new();
+    let mut ws_traces =
+        if ws_on { Some(Vec::with_capacity(lambdas.len())) } else { None };
 
-    for &lambda in plan.lambdas.iter() {
+    for &lambda in lambdas.iter() {
         let _sp = crate::obs::trace::span("path_step");
         crate::obs::metrics::counter_inc("sasvi_path_steps_total");
         // ---- screen -----------------------------------------------------
@@ -531,7 +619,7 @@ fn run_path_impl(
             None
         };
         let (mut stats, mut dyn_trace, mut ws_trace) = run_solver(
-            ds, lambda, &mut active, &pre, &mut beta, &mut resid, &opts,
+            ds, lambda, &mut active, pre, &mut beta, &mut resid, opts,
             ws_seed.as_deref(),
         );
         // dynamically discarded / checkpoint-pruned features leave the kept
@@ -568,7 +656,7 @@ fn run_path_impl(
                     active.push(j);
                 }
                 let (s2, t2, w2) = run_solver(
-                    ds, lambda, &mut active, &pre, &mut beta, &mut resid, &opts,
+                    ds, lambda, &mut active, pre, &mut beta, &mut resid, opts,
                     ws_seed.as_deref(),
                 );
                 stats = s2;
@@ -611,7 +699,7 @@ fn run_path_impl(
             .unwrap_or((0, 0, 0));
         steps.push(StepRecord {
             lambda,
-            frac: lambda / plan.lambda_max,
+            frac: lambda / grid_lambda_max,
             kept: outcome.kept,
             screened: outcome.screened,
             nnz,
@@ -642,15 +730,12 @@ fn run_path_impl(
         debug_assert_eq!(resid.len(), n);
     }
 
-    PathResult {
-        rule: rule_kind,
-        dataset: ds.name.clone(),
+    PathSegment {
         steps,
-        total_time: start.elapsed(),
-        beta_final: beta,
-        betas,
         dynamic: dyn_traces,
         working_set: ws_traces,
+        betas,
+        carry: PathCarry { beta, resid, state, prev_ws },
     }
 }
 
@@ -1001,6 +1086,62 @@ mod tests {
                     "step {k} feature {j}: {} vs {}",
                     x[j], y[j]
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn segmented_run_is_bit_identical_to_full_run() {
+        // the shard-cache contract: chunking a grid into segments and
+        // chaining carries performs the same operations as one full run,
+        // so every numeric output matches bit-for-bit — static, dynamic,
+        // and working-set configurations alike
+        let ds = tiny();
+        let plan = PathPlan::linear_spaced(&ds, 14, 0.05);
+        let configs = [
+            PathOptions::default(),
+            PathOptions {
+                dynamic: crate::screening::dynamic::DynamicOptions::enabled_every(4),
+                ..Default::default()
+            },
+            PathOptions {
+                working_set:
+                    crate::solver::working_set::WorkingSetOptions::enabled_with_grow(8),
+                ..Default::default()
+            },
+        ];
+        for opts in configs {
+            for rule in [RuleKind::Sasvi, RuleKind::Strong] {
+                let full = run_path(&ds, &plan, rule, opts);
+                let pre = ds.precompute();
+                let mut carry = None;
+                let mut steps = Vec::new();
+                for chunk in plan.lambdas.chunks(5) {
+                    let seg = run_path_segment(
+                        &ds, &pre, chunk, plan.lambda_max, rule, &opts, carry,
+                    );
+                    steps.extend(seg.steps);
+                    carry = Some(seg.carry);
+                }
+                let carry = carry.unwrap();
+                assert_eq!(full.beta_final, carry.beta, "{rule:?} beta diverged");
+                assert_eq!(full.steps.len(), steps.len());
+                for (a, b) in full.steps.iter().zip(steps.iter()) {
+                    assert_eq!(a.lambda.to_bits(), b.lambda.to_bits());
+                    assert_eq!(a.frac.to_bits(), b.frac.to_bits());
+                    assert_eq!(a.gap.to_bits(), b.gap.to_bits(), "{rule:?} gap");
+                    assert_eq!(a.kept, b.kept);
+                    assert_eq!(a.screened, b.screened);
+                    assert_eq!(a.nnz, b.nnz);
+                    assert_eq!(a.epochs, b.epochs);
+                    assert_eq!(a.coord_updates, b.coord_updates);
+                    assert_eq!(a.kkt_violations, b.kkt_violations);
+                    assert_eq!(a.dyn_rechecks, b.dyn_rechecks);
+                    assert_eq!(a.dyn_dropped, b.dyn_dropped);
+                    assert_eq!(a.ws_outer, b.ws_outer);
+                    assert_eq!(a.ws_final, b.ws_final);
+                    assert_eq!(a.ws_pruned, b.ws_pruned);
+                }
             }
         }
     }

@@ -1,33 +1,196 @@
-//! Worker pool: run many path jobs concurrently.
+//! Worker pool: run many path jobs — Lasso *and* logistic — concurrently,
+//! with a cross-request shard cache.
 //!
-//! The screening service and the benchmark harness submit [`JobSpec`]s; a
+//! The screening service and the benchmark harness submit [`JobSpec`]s
+//! (an enum over the workloads, so the pool is generic over objectives); a
 //! fixed set of worker threads pulls them from a bounded queue (submission
 //! blocks when the queue is full — backpressure), runs the path, and posts
-//! a [`JobStatus`] transition stream that `wait()` consumes.
+//! [`JobStatus`] transitions on a condvar that `wait()` blocks on.
 //!
-//! No tokio offline — this is plain `std::thread` + `mpsc`, which is also
-//! the honest choice for a CPU-bound workload like pathwise Lasso.
+//! Rather than solving a job's whole λ-grid in one piece, the workers
+//! chunk it into shards of [`SHARD_POINTS`] grid points and route each
+//! through the pool's [`ShardCache`] (see [`crate::coordinator::cache`]):
+//! a shard found in the cache is spliced into the job's result without
+//! re-solving, and each shard's warm-start carry seeds the next. Two
+//! concurrent clients asking for overlapping (dataset, knobs, λ-grid)
+//! requests therefore share solves — the second rides the first's shards,
+//! waiting out in-flight computes instead of duplicating them. Warm-start
+//! reuse is safe because a cached coefficient vector is just a feasible
+//! starting point whose screen is re-certified by the usual checkpoints;
+//! bit-for-bit it is *exact* because the segmented runner performs the
+//! same operations as the full one (pinned in `path.rs` / `logistic.rs`
+//! segment tests). Pooled results' `total_time` is the *sum of per-step
+//! durations*, so a cache-hit answer is bit-identical to the miss answer
+//! that populated it, timing fields included.
+//!
+//! Job bookkeeping is bounded: terminal (Done/Failed) entries are evicted
+//! as soon as a waiter observes them, and at most `retain_cap` unobserved
+//! terminal entries are kept (FIFO eviction) so a server whose clients
+//! never collect results cannot leak. The `sasvi_pool_status_entries`
+//! gauge tracks the live map.
+//!
+//! No tokio offline — this is plain `std::thread` + `mpsc` + `Condvar`,
+//! which is also the honest choice for a CPU-bound workload like pathwise
+//! Lasso.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use crate::coordinator::path::{run_path, PathOptions, PathResult};
+use crate::coordinator::cache::{self, CacheStats, LassoShard, LogiShard, Shard, ShardCache};
+use crate::coordinator::logistic::{
+    logistic_path_precompute, run_logistic_segment, LogisticPathOptions, LogisticPathResult,
+};
+use crate::coordinator::path::{run_path_segment, PathOptions, PathResult};
 use crate::coordinator::planner::PathPlan;
 use crate::data::Dataset;
+use crate::logistic::{LogiRule, LogisticProblem};
 use crate::obs;
 use crate::screening::RuleKind;
 
-/// A unit of work: one dataset, one grid, one rule.
-pub struct JobSpec {
+/// λ grid points per cached shard. Small enough that partially-overlapping
+/// grids share their common prefix at useful granularity, large enough
+/// that per-shard key/bookkeeping cost stays negligible next to a solve.
+pub const SHARD_POINTS: usize = 4;
+
+/// Default bound on cached shards per pool (LRU eviction past it).
+pub const DEFAULT_CACHE_CAP: usize = 256;
+
+/// Default bound on unobserved terminal status entries (FIFO eviction).
+pub const DEFAULT_RETAIN_CAP: usize = 1024;
+
+/// A Lasso path job: one dataset, one grid, one rule.
+pub struct LassoJob {
     pub dataset: Arc<Dataset>,
     pub plan: PathPlan,
     pub rule: RuleKind,
     pub opts: PathOptions,
     pub tag: String,
+    /// Dataset identity for the shard cache (the server uses
+    /// `preset:seed:scale-bits`); `None` bypasses the cache entirely (the
+    /// protocol's `nocache` knob). The solver/screening knobs and the
+    /// λ-grid are folded into the shard keys by the runner itself.
+    pub cache_key: Option<String>,
+}
+
+/// A §6 logistic path job.
+pub struct LogisticJob {
+    pub prob: Arc<LogisticProblem>,
+    pub plan: PathPlan,
+    pub rule: LogiRule,
+    pub opts: LogisticPathOptions,
+    pub tag: String,
+    /// see [`LassoJob::cache_key`]
+    pub cache_key: Option<String>,
+}
+
+/// A unit of work, generic over the workloads the coordinator knows.
+pub enum JobSpec {
+    Lasso(LassoJob),
+    Logistic(LogisticJob),
+}
+
+impl JobSpec {
+    /// A Lasso job with the cache bypassed (no dataset identity known).
+    pub fn lasso(
+        dataset: Arc<Dataset>,
+        plan: PathPlan,
+        rule: RuleKind,
+        opts: PathOptions,
+        tag: impl Into<String>,
+    ) -> Self {
+        JobSpec::Lasso(LassoJob {
+            dataset,
+            plan,
+            rule,
+            opts,
+            tag: tag.into(),
+            cache_key: None,
+        })
+    }
+
+    /// A logistic job with the cache bypassed.
+    pub fn logistic(
+        prob: Arc<LogisticProblem>,
+        plan: PathPlan,
+        rule: LogiRule,
+        opts: LogisticPathOptions,
+        tag: impl Into<String>,
+    ) -> Self {
+        JobSpec::Logistic(LogisticJob {
+            prob,
+            plan,
+            rule,
+            opts,
+            tag: tag.into(),
+            cache_key: None,
+        })
+    }
+
+    /// Attach a dataset identity, opting the job into the shard cache.
+    pub fn with_cache_key(mut self, key: impl Into<String>) -> Self {
+        match &mut self {
+            JobSpec::Lasso(j) => j.cache_key = Some(key.into()),
+            JobSpec::Logistic(j) => j.cache_key = Some(key.into()),
+        }
+        self
+    }
+
+    pub fn tag(&self) -> &str {
+        match self {
+            JobSpec::Lasso(j) => &j.tag,
+            JobSpec::Logistic(j) => &j.tag,
+        }
+    }
+}
+
+/// What a finished job hands back, matching [`JobSpec`]'s variants.
+#[derive(Clone, Debug)]
+pub enum JobResult {
+    Lasso(PathResult),
+    Logistic(LogisticPathResult),
+}
+
+impl JobResult {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            JobResult::Lasso(_) => "lasso",
+            JobResult::Logistic(_) => "logistic",
+        }
+    }
+
+    pub fn into_lasso(self) -> Option<PathResult> {
+        match self {
+            JobResult::Lasso(r) => Some(r),
+            JobResult::Logistic(_) => None,
+        }
+    }
+
+    pub fn into_logistic(self) -> Option<LogisticPathResult> {
+        match self {
+            JobResult::Logistic(r) => Some(r),
+            JobResult::Lasso(_) => None,
+        }
+    }
+
+    /// Per-step closing duality gap — both workloads expose the series.
+    pub fn gap_history(&self) -> Vec<f64> {
+        match self {
+            JobResult::Lasso(r) => r.gap_history(),
+            JobResult::Logistic(r) => r.gap_history(),
+        }
+    }
+
+    /// Flattened per-checkpoint `(step, epoch, gap, width, dropped)`.
+    pub fn checkpoint_history(&self) -> Vec<(usize, usize, f64, usize, usize)> {
+        match self {
+            JobResult::Lasso(r) => r.checkpoint_history(),
+            JobResult::Logistic(r) => r.checkpoint_history(),
+        }
+    }
 }
 
 /// Lifecycle of a submitted job.
@@ -42,13 +205,96 @@ pub enum JobStatus {
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct JobId(pub u64);
 
+/// Why a submission was rejected (instead of panicking the caller).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// the pool is shutting down; no new work is accepted
+    ShuttingDown,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::ShuttingDown => write!(f, "pool is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// All job bookkeeping behind one mutex, paired with one condvar: every
+/// status transition notifies, so waiters block instead of polling.
+struct PoolState {
+    status: HashMap<JobId, JobStatus>,
+    results: HashMap<JobId, JobResult>,
+    /// terminal ids in completion order — the FIFO eviction window.
+    /// Consumed ids linger here as stale entries and are skipped (and
+    /// pruned) lazily; see [`Shared::post`].
+    retired: VecDeque<JobId>,
+    /// terminal entries still present in `status` (unobserved by waiters)
+    terminal_live: usize,
+}
+
 struct Shared {
-    status: Mutex<HashMap<JobId, JobStatus>>,
-    results: Mutex<HashMap<JobId, PathResult>>,
+    state: Mutex<PoolState>,
+    cond: Condvar,
     /// fast-shutdown flag: when set, workers mark still-queued jobs as
     /// `Failed` ("evicted") instead of running them, so waiters unblock
     /// promptly and no Done notification is ever lost or fabricated
     evict: AtomicBool,
+    cache: ShardCache,
+    retain_cap: usize,
+}
+
+impl Shared {
+    fn set_entries_gauge(&self, s: &PoolState) {
+        obs::metrics::gauge_set("sasvi_pool_status_entries", s.status.len() as f64);
+    }
+
+    /// Post a status transition (storing the result first for Done, under
+    /// the same lock — no observable gap), apply bounded retention to
+    /// terminal entries, and wake every waiter.
+    fn post(&self, id: JobId, st: JobStatus, res: Option<JobResult>) {
+        let mut s = self.state.lock().unwrap();
+        if let Some(r) = res {
+            s.results.insert(id, r);
+        }
+        let terminal = matches!(st, JobStatus::Done | JobStatus::Failed(_));
+        s.status.insert(id, st);
+        if terminal {
+            s.terminal_live += 1;
+            s.retired.push_back(id);
+            // FIFO cap on *unobserved* terminal entries: a server whose
+            // clients never call RESULT must not leak. Ids a waiter
+            // already consumed are stale here; skip them without counting.
+            while s.terminal_live > self.retain_cap {
+                match s.retired.pop_front() {
+                    Some(old) => {
+                        if matches!(
+                            s.status.get(&old),
+                            Some(JobStatus::Done | JobStatus::Failed(_))
+                        ) {
+                            s.status.remove(&old);
+                            s.results.remove(&old);
+                            s.terminal_live -= 1;
+                            obs::metrics::counter_inc("sasvi_pool_retired_evicted_total");
+                        }
+                    }
+                    None => break,
+                }
+            }
+            // prune the consumed prefix so the deque itself stays bounded
+            while let Some(front) = s.retired.front().copied() {
+                if s.status.contains_key(&front) {
+                    break;
+                }
+                s.retired.pop_front();
+            }
+        }
+        self.set_entries_gauge(&s);
+        drop(s);
+        self.cond.notify_all();
+    }
 }
 
 enum Msg {
@@ -56,7 +302,7 @@ enum Msg {
     Shutdown,
 }
 
-/// Fixed-size worker pool with a bounded job queue.
+/// Fixed-size worker pool with a bounded job queue and a shard cache.
 pub struct JobPool {
     tx: SyncSender<Msg>,
     workers: Vec<JoinHandle<()>>,
@@ -66,15 +312,34 @@ pub struct JobPool {
 
 impl JobPool {
     /// `workers` threads, queue bounded at `queue_cap` (submission past the
-    /// cap blocks).
+    /// cap blocks), default cache/retention bounds.
     pub fn new(workers: usize, queue_cap: usize) -> Self {
+        Self::with_limits(workers, queue_cap, DEFAULT_CACHE_CAP, DEFAULT_RETAIN_CAP)
+    }
+
+    /// Fully parameterized constructor: `cache_cap` bounds the shard cache
+    /// (0 disables result reuse while keeping in-flight dedup), and
+    /// `retain_cap` bounds unobserved terminal status entries.
+    pub fn with_limits(
+        workers: usize,
+        queue_cap: usize,
+        cache_cap: usize,
+        retain_cap: usize,
+    ) -> Self {
         assert!(workers >= 1);
         let (tx, rx) = sync_channel::<Msg>(queue_cap.max(1));
         let rx = Arc::new(Mutex::new(rx));
         let shared = Arc::new(Shared {
-            status: Mutex::new(HashMap::new()),
-            results: Mutex::new(HashMap::new()),
+            state: Mutex::new(PoolState {
+                status: HashMap::new(),
+                results: HashMap::new(),
+                retired: VecDeque::new(),
+                terminal_live: 0,
+            }),
+            cond: Condvar::new(),
             evict: AtomicBool::new(false),
+            cache: ShardCache::new(cache_cap),
+            retain_cap,
         });
         let handles = (0..workers)
             .map(|_| {
@@ -86,43 +351,81 @@ impl JobPool {
         Self { tx, workers: handles, shared, next_id: AtomicU64::new(1) }
     }
 
-    /// Submit a job; blocks if the queue is full. Returns its id.
-    pub fn submit(&self, spec: JobSpec) -> JobId {
+    /// Submit a job; blocks if the queue is full. Returns the job id, or
+    /// [`SubmitError::ShuttingDown`] when racing a shutdown — the caller
+    /// (e.g. the server's request thread) reports the error instead of
+    /// panicking, and the queue-depth gauge is rolled back so it cannot
+    /// drift on the rejected path.
+    pub fn submit(&self, spec: JobSpec) -> Result<JobId, SubmitError> {
+        if self.shared.evict.load(Ordering::SeqCst) {
+            return Err(SubmitError::ShuttingDown);
+        }
         let id = JobId(self.next_id.fetch_add(1, Ordering::Relaxed));
-        self.shared
-            .status
-            .lock()
-            .unwrap()
-            .insert(id, JobStatus::Queued);
+        {
+            let mut s = self.shared.state.lock().unwrap();
+            s.status.insert(id, JobStatus::Queued);
+            self.shared.set_entries_gauge(&s);
+        }
         obs::metrics::counter_inc("sasvi_pool_jobs_submitted_total");
         obs::metrics::gauge_add("sasvi_pool_queue_depth", 1.0);
-        self.tx
-            .send(Msg::Job(id, spec, Instant::now()))
-            .expect("pool shut down while submitting");
-        id
+        if self.tx.send(Msg::Job(id, spec, Instant::now())).is_err() {
+            // workers are gone: undo the accounting this submission did —
+            // the Queued entry would otherwise block a waiter forever and
+            // the queue-depth gauge would drift upward
+            obs::metrics::gauge_add("sasvi_pool_queue_depth", -1.0);
+            let mut s = self.shared.state.lock().unwrap();
+            s.status.remove(&id);
+            self.shared.set_entries_gauge(&s);
+            drop(s);
+            self.shared.cond.notify_all();
+            return Err(SubmitError::ShuttingDown);
+        }
+        Ok(id)
     }
 
     pub fn status(&self, id: JobId) -> Option<JobStatus> {
-        self.shared.status.lock().unwrap().get(&id).cloned()
+        self.shared.state.lock().unwrap().status.get(&id).cloned()
     }
 
     /// Blocking wait for completion; returns the result (consumes it).
-    pub fn wait(&self, id: JobId) -> Option<PathResult> {
+    /// Waits on the pool condvar — no polling. Observing a terminal status
+    /// evicts the entry, so a second `wait` (or `status`) on the same id
+    /// reports unknown.
+    pub fn wait(&self, id: JobId) -> Option<JobResult> {
+        let mut s = self.shared.state.lock().unwrap();
         loop {
-            match self.status(id)? {
-                JobStatus::Done => {
-                    return self.shared.results.lock().unwrap().remove(&id);
+            match s.status.get(&id) {
+                None => return None,
+                Some(JobStatus::Done) => {
+                    let res = s.results.remove(&id);
+                    s.status.remove(&id);
+                    s.terminal_live = s.terminal_live.saturating_sub(1);
+                    self.shared.set_entries_gauge(&s);
+                    return res;
                 }
-                JobStatus::Failed(_) => return None,
-                _ => std::thread::sleep(std::time::Duration::from_millis(2)),
+                Some(JobStatus::Failed(_)) => {
+                    s.status.remove(&id);
+                    s.terminal_live = s.terminal_live.saturating_sub(1);
+                    self.shared.set_entries_gauge(&s);
+                    return None;
+                }
+                Some(_) => s = self.shared.cond.wait(s).unwrap(),
             }
         }
     }
 
-    /// Submit a batch and wait for all, preserving order.
-    pub fn run_all(&self, specs: Vec<JobSpec>) -> Vec<Option<PathResult>> {
-        let ids: Vec<JobId> = specs.into_iter().map(|s| self.submit(s)).collect();
-        ids.into_iter().map(|id| self.wait(id)).collect()
+    /// Submit a batch and wait for all, preserving order. Jobs rejected at
+    /// submission resolve to `None`.
+    pub fn run_all(&self, specs: Vec<JobSpec>) -> Vec<Option<JobResult>> {
+        let ids: Vec<Option<JobId>> =
+            specs.into_iter().map(|s| self.submit(s).ok()).collect();
+        ids.into_iter().map(|id| id.and_then(|id| self.wait(id))).collect()
+    }
+
+    /// Counters of this pool's shard cache (per-instance, unlike the
+    /// process-wide `obs::metrics` mirror — tests assert on these).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.shared.cache.stats()
     }
 
     /// Graceful shutdown: drains the queue (queued jobs still run and post
@@ -140,8 +443,9 @@ impl JobPool {
     /// post Done), but jobs still queued are *evicted* — marked
     /// `Failed("evicted by shutdown")` without running — so a concurrent
     /// [`JobPool::wait`] on them returns `None` promptly instead of
-    /// blocking forever. Takes `&self` so callers holding job ids can still
-    /// `wait()` afterwards; the eventual drop joins the workers.
+    /// blocking forever. New submissions are rejected from this point on.
+    /// Takes `&self` so callers holding job ids can still `wait()`
+    /// afterwards; the eventual drop joins the workers.
     pub fn shutdown_now(&self) {
         self.shared.evict.store(true, Ordering::SeqCst);
         // best-effort wakeups: if the queue is full the workers are busy
@@ -167,11 +471,183 @@ impl Drop for JobPool {
     }
 }
 
+/// Run a job through the shard cache: chunk the λ-grid into
+/// [`SHARD_POINTS`]-sized segments, look each up by (workload, dataset,
+/// knobs, λ-prefix), compute misses via the segment runner, and splice the
+/// shards back into a full result. `total_time` is the sum of the steps'
+/// own durations — deterministic, so a hit-assembled result is
+/// bit-identical to the miss-assembled one.
+fn run_lasso_job(job: &LassoJob, cache: &ShardCache) -> PathResult {
+    let ds = &job.dataset;
+    let pre_val = ds.precompute();
+    let pre = &pre_val;
+    let base = job.cache_key.as_ref().map(|dk| {
+        format!(
+            "L|{dk}|{:?}|{:?}|{:016x}",
+            job.rule,
+            job.opts,
+            job.plan.lambda_max.to_bits()
+        )
+    });
+    if base.is_none() {
+        obs::metrics::counter_inc("sasvi_path_cache_bypass_total");
+    }
+    let ws_on = job.opts.working_set.active();
+    let dyn_on = job.opts.dynamic.active() && !ws_on;
+    let mut steps = Vec::with_capacity(job.plan.len());
+    let mut dyn_traces = if dyn_on { Some(Vec::new()) } else { None };
+    let mut ws_traces = if ws_on { Some(Vec::new()) } else { None };
+    let mut carry = None;
+    let mut prefix = cache::fnv1a_init();
+    for (idx, chunk) in job.plan.lambdas.chunks(SHARD_POINTS).enumerate() {
+        for &l in chunk {
+            cache::fnv1a_u64(&mut prefix, l.to_bits());
+        }
+        let prev = carry.take();
+        let compute = move || {
+            let seg = run_path_segment(
+                ds, pre, chunk, job.plan.lambda_max, job.rule, &job.opts, prev,
+            );
+            Shard::Lasso(LassoShard {
+                steps: seg.steps,
+                dynamic: seg.dynamic,
+                working_set: seg.working_set,
+                carry: seg.carry,
+            })
+        };
+        let shard = match &base {
+            Some(b) => {
+                let key = format!("{b}|s{idx}.{}|{prefix:016x}", chunk.len());
+                let (v, hit) = cache.get_or_compute(&key, compute);
+                if hit {
+                    obs::metrics::counter_add(
+                        "sasvi_pool_shard_steps_saved_total",
+                        chunk.len() as u64,
+                    );
+                }
+                v
+            }
+            None => Arc::new(compute()),
+        };
+        let Shard::Lasso(sh) = shard.as_ref() else {
+            unreachable!("workload prefix in key")
+        };
+        steps.extend_from_slice(&sh.steps);
+        if let (Some(ts), Some(d)) = (dyn_traces.as_mut(), sh.dynamic.as_ref()) {
+            ts.extend_from_slice(d);
+        }
+        if let (Some(ts), Some(w)) = (ws_traces.as_mut(), sh.working_set.as_ref()) {
+            ts.extend_from_slice(w);
+        }
+        carry = Some(sh.carry.clone());
+    }
+    let beta_final = match carry {
+        Some(c) => c.beta,
+        None => vec![0.0; ds.p()],
+    };
+    let total_time: Duration =
+        steps.iter().map(|s| s.screen_time + s.solve_time + s.stats_time).sum();
+    PathResult {
+        rule: job.rule,
+        dataset: ds.name.clone(),
+        steps,
+        total_time,
+        beta_final,
+        betas: None,
+        dynamic: dyn_traces,
+        working_set: ws_traces,
+    }
+}
+
+/// The logistic twin of [`run_lasso_job`]. The problem precompute (power-
+/// method Lipschitz) runs once per job; shard keys carry the `G|` prefix
+/// so the two workloads can never collide in the cache.
+fn run_logistic_job(job: &LogisticJob, cache: &ShardCache) -> LogisticPathResult {
+    let prob = &job.prob;
+    let pre_val = logistic_path_precompute(prob, &job.opts);
+    let pre = &pre_val;
+    let base = job.cache_key.as_ref().map(|dk| {
+        format!(
+            "G|{dk}|{:?}|{:?}|{:016x}",
+            job.rule,
+            job.opts,
+            job.plan.lambda_max.to_bits()
+        )
+    });
+    if base.is_none() {
+        obs::metrics::counter_inc("sasvi_path_cache_bypass_total");
+    }
+    let dyn_on = job.opts.dynamic.active();
+    let mut steps = Vec::with_capacity(job.plan.len());
+    let mut dyn_traces = if dyn_on { Some(Vec::new()) } else { None };
+    let mut carry = None;
+    let mut prefix = cache::fnv1a_init();
+    for (idx, chunk) in job.plan.lambdas.chunks(SHARD_POINTS).enumerate() {
+        for &l in chunk {
+            cache::fnv1a_u64(&mut prefix, l.to_bits());
+        }
+        let prev = carry.take();
+        let compute = move || {
+            let seg = run_logistic_segment(
+                prob, pre, chunk, job.plan.lambda_max, job.rule, &job.opts, prev,
+            );
+            Shard::Logistic(LogiShard {
+                steps: seg.steps,
+                dynamic: seg.dynamic,
+                carry: seg.carry,
+            })
+        };
+        let shard = match &base {
+            Some(b) => {
+                let key = format!("{b}|s{idx}.{}|{prefix:016x}", chunk.len());
+                let (v, hit) = cache.get_or_compute(&key, compute);
+                if hit {
+                    obs::metrics::counter_add(
+                        "sasvi_pool_shard_steps_saved_total",
+                        chunk.len() as u64,
+                    );
+                }
+                v
+            }
+            None => Arc::new(compute()),
+        };
+        let Shard::Logistic(sh) = shard.as_ref() else {
+            unreachable!("workload prefix in key")
+        };
+        steps.extend_from_slice(&sh.steps);
+        if let (Some(ts), Some(d)) = (dyn_traces.as_mut(), sh.dynamic.as_ref()) {
+            ts.extend_from_slice(d);
+        }
+        carry = Some(sh.carry.clone());
+    }
+    let beta_final = match carry {
+        Some(c) => c.beta,
+        None => vec![0.0; prob.p()],
+    };
+    let total_time: Duration =
+        steps.iter().map(|s| s.screen_time + s.solve_time).sum();
+    LogisticPathResult {
+        rule: job.rule,
+        steps,
+        total_time,
+        beta_final,
+        betas: None,
+        dynamic: dyn_traces,
+    }
+}
+
+fn run_job(spec: &JobSpec, cache: &ShardCache) -> JobResult {
+    match spec {
+        JobSpec::Lasso(j) => JobResult::Lasso(run_lasso_job(j, cache)),
+        JobSpec::Logistic(j) => JobResult::Logistic(run_logistic_job(j, cache)),
+    }
+}
+
 /// Snapshot a finished job's telemetry — the worker files this under the
 /// job id *before* handing the result to the (consuming) waiter, so
 /// `TRACE <job-id>` can replay the gap timeline after `RESULT` drained
-/// the `PathResult` itself.
-fn job_trace_of(res: &PathResult, spans: Vec<obs::trace::SpanEvent>) -> obs::trace::JobTrace {
+/// the result itself. Works for both workloads.
+fn job_trace_of(res: &JobResult, spans: Vec<obs::trace::SpanEvent>) -> obs::trace::JobTrace {
     let gaps = res
         .checkpoint_history()
         .into_iter()
@@ -203,22 +679,19 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Msg>>>, shared: Arc<Shared>) {
                 if shared.evict.load(Ordering::SeqCst) {
                     // fast shutdown: don't run queued work, just unblock
                     // any waiter with a terminal status
-                    shared.status.lock().unwrap().insert(
+                    shared.post(
                         id,
                         JobStatus::Failed("evicted by shutdown".to_string()),
+                        None,
                     );
                     continue;
                 }
-                shared
-                    .status
-                    .lock()
-                    .unwrap()
-                    .insert(id, JobStatus::Running);
+                shared.post(id, JobStatus::Running, None);
                 obs::metrics::gauge_add("sasvi_pool_jobs_in_flight", 1.0);
                 obs::trace::begin_job_capture();
                 let t0 = Instant::now();
                 let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    run_path(&spec.dataset, &spec.plan, spec.rule, spec.opts)
+                    run_job(&spec, &shared.cache)
                 }));
                 obs::metrics::observe(
                     "sasvi_pool_run_seconds",
@@ -231,8 +704,7 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Msg>>>, shared: Arc<Shared>) {
                     Ok(res) => {
                         obs::metrics::counter_inc("sasvi_pool_jobs_done_total");
                         obs::trace::store_job_trace(id.0, job_trace_of(&res, spans));
-                        shared.results.lock().unwrap().insert(id, res);
-                        shared.status.lock().unwrap().insert(id, JobStatus::Done);
+                        shared.post(id, JobStatus::Done, Some(res));
                     }
                     Err(_) => {
                         obs::metrics::counter_inc("sasvi_pool_jobs_failed_total");
@@ -240,9 +712,10 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Msg>>>, shared: Arc<Shared>) {
                             id.0,
                             obs::trace::JobTrace { spans, ..Default::default() },
                         );
-                        shared.status.lock().unwrap().insert(
+                        shared.post(
                             id,
-                            JobStatus::Failed(format!("job {:?} panicked", id)),
+                            JobStatus::Failed(format!("job {id:?} panicked")),
+                            None,
                         );
                     }
                 }
@@ -255,23 +728,44 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Msg>>>, shared: Arc<Shared>) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::path::run_path;
     use crate::data::synthetic::SyntheticSpec;
 
+    fn dataset(seed: u64) -> Arc<Dataset> {
+        Arc::new(
+            SyntheticSpec { n: 20, p: 60, nnz: 6, ..Default::default() }.generate(seed),
+        )
+    }
+
     fn spec(ds: &Arc<Dataset>, rule: RuleKind, k: usize) -> JobSpec {
-        JobSpec {
-            dataset: Arc::clone(ds),
-            plan: PathPlan::linear_spaced(ds, k, 0.1),
+        JobSpec::lasso(
+            Arc::clone(ds),
+            PathPlan::linear_spaced(ds, k, 0.1),
             rule,
-            opts: PathOptions::default(),
-            tag: format!("{rule:?}"),
+            PathOptions::default(),
+            format!("{rule:?}"),
+        )
+    }
+
+    fn assert_lasso_results_bit_identical(a: &PathResult, b: &PathResult) {
+        assert_eq!(a.total_time, b.total_time, "timing fields must match too");
+        assert_eq!(a.beta_final, b.beta_final);
+        assert_eq!(a.steps.len(), b.steps.len());
+        for (x, y) in a.steps.iter().zip(b.steps.iter()) {
+            assert_eq!(x.lambda.to_bits(), y.lambda.to_bits());
+            assert_eq!(x.gap.to_bits(), y.gap.to_bits());
+            assert_eq!(x.kept, y.kept);
+            assert_eq!(x.nnz, y.nnz);
+            assert_eq!(x.epochs, y.epochs);
+            assert_eq!(x.screen_time, y.screen_time);
+            assert_eq!(x.solve_time, y.solve_time);
+            assert_eq!(x.stats_time, y.stats_time);
         }
     }
 
     #[test]
     fn pool_runs_jobs_and_returns_results() {
-        let ds = Arc::new(
-            SyntheticSpec { n: 20, p: 60, nnz: 6, ..Default::default() }.generate(1),
-        );
+        let ds = dataset(1);
         let pool = JobPool::new(2, 4);
         let results = pool.run_all(vec![
             spec(&ds, RuleKind::Sasvi, 8),
@@ -280,7 +774,7 @@ mod tests {
         ]);
         assert_eq!(results.len(), 3);
         for r in results {
-            let r = r.expect("job failed");
+            let r = r.expect("job failed").into_lasso().expect("lasso job");
             assert_eq!(r.steps.len(), 8);
         }
         pool.shutdown();
@@ -293,7 +787,7 @@ mod tests {
         );
         let pool = JobPool::new(3, 2);
         let ids: Vec<JobId> = (0..6)
-            .map(|_| pool.submit(spec(&ds, RuleKind::Sasvi, 5)))
+            .map(|_| pool.submit(spec(&ds, RuleKind::Sasvi, 5)).unwrap())
             .collect();
         // ids must be unique & ordered
         for w in ids.windows(2) {
@@ -301,10 +795,16 @@ mod tests {
         }
         for id in ids {
             assert!(pool.wait(id).is_some());
-            // result consumed: second wait yields None via missing result
-            assert_eq!(pool.status(id), Some(JobStatus::Done));
+            // observing a terminal status evicts the entry: a second wait
+            // (or status probe) reports unknown instead of leaking
+            assert_eq!(pool.status(id), None);
             assert!(pool.wait(id).is_none());
         }
+        // nothing retained once every waiter has observed its job
+        let s = pool.shared.state.lock().unwrap();
+        assert_eq!(s.status.len(), 0);
+        assert_eq!(s.results.len(), 0);
+        assert_eq!(s.terminal_live, 0);
     }
 
     #[test]
@@ -312,39 +812,38 @@ mod tests {
         // Dropping (or gracefully shutting down) a pool with a full queue
         // must neither hang nor lose Done notifications: the Shutdown
         // messages queue *behind* the jobs, so workers drain everything
-        // first. Statuses are checked through a clone of the shared maps
+        // first. Statuses are checked through a clone of the shared state
         // taken before the drop.
-        let ds = Arc::new(
-            SyntheticSpec { n: 20, p: 60, nnz: 6, ..Default::default() }.generate(4),
-        );
+        let ds = dataset(4);
         let pool = JobPool::new(1, 8);
         let ids: Vec<JobId> = (0..5)
-            .map(|_| pool.submit(spec(&ds, RuleKind::Sasvi, 6)))
+            .map(|_| pool.submit(spec(&ds, RuleKind::Sasvi, 6)).unwrap())
             .collect();
         let shared = Arc::clone(&pool.shared);
         drop(pool); // must return (drain + join), not deadlock
-        let status = shared.status.lock().unwrap();
+        let s = shared.state.lock().unwrap();
         for id in &ids {
             assert_eq!(
-                status.get(id),
+                s.status.get(id),
                 Some(&JobStatus::Done),
                 "queued job {id:?} lost its Done notification"
             );
         }
-        assert_eq!(shared.results.lock().unwrap().len(), ids.len());
+        assert_eq!(s.results.len(), ids.len());
     }
 
     #[test]
-    fn shutdown_now_evicts_queued_jobs_and_unblocks_wait() {
+    fn shutdown_now_evicts_queued_jobs_and_rejects_new_submissions() {
         // Fast shutdown under load: the running job still completes (its
-        // Done is not lost), queued jobs are evicted, and wait() on an
-        // evicted job returns None instead of blocking forever.
+        // Done is not lost), queued jobs are evicted, wait() on an evicted
+        // job returns None instead of blocking forever, and submissions
+        // racing the shutdown get an error instead of a panic.
         let ds = Arc::new(
             SyntheticSpec { n: 40, p: 200, nnz: 20, ..Default::default() }.generate(6),
         );
         let pool = JobPool::new(1, 8);
         // a job meaty enough to still be running when we pull the plug
-        let running = pool.submit(spec(&ds, RuleKind::None, 25));
+        let running = pool.submit(spec(&ds, RuleKind::None, 25)).unwrap();
         // wait until the single worker has actually picked it up, so the
         // next submissions are guaranteed to sit in the queue behind it
         loop {
@@ -357,17 +856,18 @@ mod tests {
             }
         }
         let queued: Vec<JobId> = (0..3)
-            .map(|_| pool.submit(spec(&ds, RuleKind::Sasvi, 6)))
+            .map(|_| pool.submit(spec(&ds, RuleKind::Sasvi, 6)).unwrap())
             .collect();
         pool.shutdown_now();
-        // evicted jobs resolve to None promptly (Failed, result absent)
+        // the submit/shutdown race resolves to an error, not a panic
+        assert_eq!(
+            pool.submit(spec(&ds, RuleKind::Sasvi, 6)).unwrap_err(),
+            SubmitError::ShuttingDown
+        );
+        // evicted jobs resolve to None promptly (Failed, then consumed)
         for id in &queued {
             assert!(pool.wait(*id).is_none(), "evicted job {id:?} produced a result");
-            assert!(
-                matches!(pool.status(*id), Some(JobStatus::Failed(_))),
-                "evicted job {id:?} not marked failed: {:?}",
-                pool.status(*id)
-            );
+            assert_eq!(pool.status(*id), None, "terminal entry not evicted");
         }
         // the in-flight job still posts its Done notification
         assert!(
@@ -385,8 +885,10 @@ mod tests {
         );
         let pool = JobPool::new(1, 2);
         let mut s = spec(&ds, RuleKind::Sasvi, 6);
-        s.opts.dynamic = crate::screening::dynamic::DynamicOptions::enabled_every(2);
-        let id = pool.submit(s);
+        if let JobSpec::Lasso(j) = &mut s {
+            j.opts.dynamic = crate::screening::dynamic::DynamicOptions::enabled_every(2);
+        }
+        let id = pool.submit(s).unwrap();
         assert!(pool.wait(id).is_some());
         let t = obs::trace::job_trace(id.0).expect("no stored trace for job");
         assert_eq!(t.step_gaps.len(), 6, "one closing gap per grid point");
@@ -408,11 +910,184 @@ mod tests {
             let r = pool
                 .run_all(vec![spec(&ds, RuleKind::Sasvi, 6)])
                 .remove(0)
+                .unwrap()
+                .into_lasso()
                 .unwrap();
             r.beta_final
         };
         let a = run(1);
         let b = run(4);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sharded_pool_run_matches_direct_run() {
+        // pooled execution (shard chunking + carry chaining, cache on or
+        // off) must reproduce the plain run_path numerics bit-for-bit
+        let ds = dataset(11);
+        let plan = PathPlan::linear_spaced(&ds, 9, 0.1);
+        let direct = run_path(&ds, &plan, RuleKind::Sasvi, PathOptions::default());
+        let pool = JobPool::new(2, 4);
+        let cached = pool
+            .submit(spec(&ds, RuleKind::Sasvi, 9).with_cache_key("ds11"))
+            .ok()
+            .and_then(|id| pool.wait(id))
+            .and_then(JobResult::into_lasso)
+            .expect("cached job");
+        let bypass = pool
+            .submit(spec(&ds, RuleKind::Sasvi, 9))
+            .ok()
+            .and_then(|id| pool.wait(id))
+            .and_then(JobResult::into_lasso)
+            .expect("bypass job");
+        for r in [&cached, &bypass] {
+            assert_eq!(direct.beta_final, r.beta_final);
+            assert_eq!(direct.steps.len(), r.steps.len());
+            for (a, b) in direct.steps.iter().zip(r.steps.iter()) {
+                assert_eq!(a.lambda.to_bits(), b.lambda.to_bits());
+                assert_eq!(a.gap.to_bits(), b.gap.to_bits());
+                assert_eq!(a.kept, b.kept);
+                assert_eq!(a.nnz, b.nnz);
+                assert_eq!(a.epochs, b.epochs);
+                assert_eq!(a.coord_updates, b.coord_updates);
+            }
+        }
+    }
+
+    #[test]
+    fn cache_hits_return_bit_identical_results() {
+        let ds = dataset(12);
+        let pool = JobPool::new(1, 4);
+        let make = || spec(&ds, RuleKind::Sasvi, 10).with_cache_key("ds12");
+        let a = pool
+            .submit(make())
+            .ok()
+            .and_then(|id| pool.wait(id))
+            .and_then(JobResult::into_lasso)
+            .unwrap();
+        let before = pool.cache_stats();
+        assert!(before.misses > 0 && before.hits == 0);
+        let b = pool
+            .submit(make())
+            .ok()
+            .and_then(|id| pool.wait(id))
+            .and_then(JobResult::into_lasso)
+            .unwrap();
+        let after = pool.cache_stats();
+        assert_eq!(after.misses, before.misses, "second job re-solved shards");
+        assert!(after.hits >= 3, "10 points / {SHARD_POINTS} per shard");
+        assert_lasso_results_bit_identical(&a, &b);
+    }
+
+    #[test]
+    fn overlapping_grids_share_prefix_shards() {
+        // two grids with bitwise-equal λ prefixes (dyadic spacings: k=17 @
+        // min_frac 0.5 and k=25 @ min_frac 0.25 both step by 1/32) share
+        // their common shards; the longer grid re-solves only its tail
+        let ds = dataset(13);
+        let pool = JobPool::new(1, 4);
+        let job = |k, mf: f64| {
+            JobSpec::lasso(
+                Arc::clone(&ds),
+                PathPlan::linear_spaced(&ds, k, mf),
+                RuleKind::Sasvi,
+                PathOptions::default(),
+                "overlap",
+            )
+            .with_cache_key("ds13")
+        };
+        let a = pool
+            .submit(job(17, 0.5))
+            .ok()
+            .and_then(|id| pool.wait(id))
+            .and_then(JobResult::into_lasso)
+            .unwrap();
+        let s0 = pool.cache_stats();
+        assert_eq!((s0.hits, s0.misses), (0, 5), "17 points -> shards 4,4,4,4,1");
+        let b = pool
+            .submit(job(25, 0.25))
+            .ok()
+            .and_then(|id| pool.wait(id))
+            .and_then(JobResult::into_lasso)
+            .unwrap();
+        let s1 = pool.cache_stats();
+        assert_eq!(s1.hits, 4, "the 16-point λ prefix is shared");
+        assert_eq!(s1.misses, 5 + 3, "only the tail is re-solved");
+        // the shared prefix is not just cheap — it is the same answer
+        for (x, y) in a.steps.iter().take(16).zip(b.steps.iter()) {
+            assert_eq!(x.lambda.to_bits(), y.lambda.to_bits());
+            assert_eq!(x.gap.to_bits(), y.gap.to_bits());
+            assert_eq!(x.nnz, y.nnz);
+        }
+    }
+
+    #[test]
+    fn logistic_jobs_run_through_the_pool_and_cache() {
+        let ds = SyntheticSpec {
+            n: 30,
+            p: 80,
+            nnz: 10,
+            classification: true,
+            ..Default::default()
+        }
+        .generate(17);
+        let prob = Arc::new(LogisticProblem::from_labels(&ds).expect("labels"));
+        let plan = PathPlan::linear_from_lambda_max(prob.lambda_max(), 6, 0.2);
+        let pool = JobPool::new(2, 4);
+        let make = || {
+            JobSpec::logistic(
+                Arc::clone(&prob),
+                plan.clone(),
+                LogiRule::SasviQ,
+                LogisticPathOptions::default(),
+                "logi",
+            )
+            .with_cache_key("cls17")
+        };
+        let id = pool.submit(make()).unwrap();
+        let a = pool.wait(id).unwrap().into_logistic().expect("logistic result");
+        assert_eq!(a.steps.len(), 6);
+        let t = obs::trace::job_trace(id.0).expect("trace stored for logistic job");
+        assert_eq!(t.step_gaps.len(), 6);
+        let b = pool
+            .submit(make())
+            .ok()
+            .and_then(|id| pool.wait(id))
+            .and_then(JobResult::into_logistic)
+            .unwrap();
+        assert!(pool.cache_stats().hits >= 2, "6 points -> shards 4,2");
+        assert_eq!(a.total_time, b.total_time);
+        assert_eq!(a.beta_final, b.beta_final);
+        for (x, y) in a.steps.iter().zip(b.steps.iter()) {
+            assert_eq!(x.lambda.to_bits(), y.lambda.to_bits());
+            assert_eq!(x.iters, y.iters);
+            assert_eq!(x.work, y.work);
+        }
+    }
+
+    #[test]
+    fn retention_caps_unobserved_terminal_entries() {
+        // clients that never collect results must not leak the status map:
+        // with retain_cap = 3, only the 3 newest terminal entries survive
+        let ds = Arc::new(
+            SyntheticSpec { n: 15, p: 30, nnz: 3, ..Default::default() }.generate(21),
+        );
+        let pool = JobPool::with_limits(1, 8, 16, 3);
+        let ids: Vec<JobId> = (0..6)
+            .map(|_| pool.submit(spec(&ds, RuleKind::Sasvi, 5)).unwrap())
+            .collect();
+        let shared = Arc::clone(&pool.shared);
+        drop(pool); // drains all six jobs in order
+        let s = shared.state.lock().unwrap();
+        assert_eq!(s.status.len(), 3, "FIFO cap not applied");
+        assert_eq!(s.terminal_live, 3);
+        assert!(s.retired.len() <= 3, "retired deque not pruned");
+        for id in &ids[..3] {
+            assert!(s.status.get(id).is_none(), "oldest entry {id:?} retained");
+        }
+        for id in &ids[3..] {
+            assert_eq!(s.status.get(id), Some(&JobStatus::Done));
+            assert!(s.results.contains_key(id));
+        }
     }
 }

@@ -116,10 +116,37 @@
 //! (`rust/tests/logistic_path.rs`). Surfaces: CLI `solve-logistic`
 //! (`--rule none|strong|sasviq` plus the global `--threads` /
 //! `--dynamic` / `--recheck-every` flags), the `[logistic]` config
-//! section, and the server's synchronous `LPATH <preset> <seed> <scale>
-//! <rule> ...` verb (per-step rejection + KKT re-solve telemetry).
-//! `benches/logistic.rs` enforces the screened-beats-unscreened
-//! `iters x width` work bar.
+//! section, and the server's `LPATH <preset> <seed> <scale> <rule> ...`
+//! verb — asynchronous like `PATH`, riding the same job pool and shard
+//! cache, answered via `STATUS`/`RESULT` (per-step rejection + KKT
+//! re-solve telemetry). `benches/logistic.rs` enforces the
+//! screened-beats-unscreened `iters x width` work bar.
+//!
+//! ## Serving at scale
+//!
+//! The TCP service routes *every* path solve — Lasso `PATH` and logistic
+//! `LPATH` alike — through one workload-generic job pool
+//! ([`coordinator::pool::JobSpec`] is an enum over both workloads): verbs
+//! reply `{"job": id}` immediately, progress is polled with `STATUS`, and
+//! `RESULT` blocks on a condvar (no busy-wait) and *consumes* the job.
+//! Pool bookkeeping is bounded — terminal entries are evicted once
+//! observed, unobserved ones FIFO-capped (`retain_cap`), and submission
+//! racing shutdown is a typed error reply, never a panic. In front of
+//! every solve sits the cross-request shard cache
+//! ([`coordinator::cache::ShardCache`]): λ-grids are chunked into shards
+//! keyed on the complete reply-determining inputs (workload, dataset
+//! identity, rule, knobs, bitwise λ-prefix), warm starts flow between
+//! shards through the segment runners, in-flight shards are awaited
+//! rather than recomputed, and retention is a bounded LRU. Cache-hit
+//! answers are **bit-identical** to the miss answers that populated them
+//! (the per-checkpoint safety / objective-exactness / thread-count
+//! determinism contracts extend to the cached path); the `nocache` knob
+//! bypasses the cache per job. Knobs: `serve --workers --queue-cap
+//! --cache-cap --retain-cap` (or the `[server]` config section);
+//! `benches/server.rs` drives the full TCP stack with 100+ concurrent
+//! mixed clients and records latency percentiles, throughput, and the
+//! cache counters; `rust/tests/server_concurrency.rs` pins termination,
+//! hit≡miss bit-identity, and drained bookkeeping.
 //!
 //! ## Observability
 //!
@@ -132,8 +159,9 @@
 //! seams: CD/FISTA solves, every dynamic and logistic re-screen checkpoint
 //! (gap value, dropped count, surviving width), working-set outer
 //! iterations, the job pool (queue depth, wait/run latency, jobs in
-//! flight), and the server request loop (per-verb latency + error
-//! counters). Surfaces: server verbs `METRICS` (Prometheus-style text
+//! flight, live status entries, shard-cache hits/misses/evictions and
+//! steps served from cache), and the server request loop (per-verb
+//! latency + error counters). Surfaces: server verbs `METRICS` (Prometheus-style text
 //! exposition) and `TRACE <job-id>` (per-job span/gap timeline), per-step
 //! gap histories on `RESULT`/`LPATH`, the CLI's global `--trace-json
 //! <path>` flag and `metrics` subcommand, and the `[observability]`

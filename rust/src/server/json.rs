@@ -116,6 +116,22 @@ impl JsonWriter {
     }
 }
 
+/// Pull an unsigned integer field out of a flat one-line JSON object
+/// (`{"job": 3, ...}` → `extract_u64(s, "job") == Some(3)`). The inverse
+/// of [`JsonWriter::field_u64`] for the few fields clients need to read
+/// back — the concurrency tests and the server bench use it to chase
+/// `{"job": id}` replies without a JSON parser.
+pub fn extract_u64(json: &str, key: &str) -> Option<u64> {
+    let needle = format!("\"{key}\": ");
+    let start = json.find(&needle)? + needle.len();
+    let rest = &json[start..];
+    let end = rest.find(|c: char| !c.is_ascii_digit()).unwrap_or(rest.len());
+    if end == 0 {
+        return None;
+    }
+    rest[..end].parse().ok()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -157,5 +173,18 @@ mod tests {
         let mut w = JsonWriter::object();
         w.field_f64("x", f64::NAN);
         assert_eq!(w.finish(), r#"{"x": null}"#);
+    }
+
+    #[test]
+    fn extract_u64_round_trips_field_u64() {
+        let mut w = JsonWriter::object();
+        w.field_str("kind", "lasso");
+        w.field_u64("job", 42);
+        w.field_u64("steps", 6);
+        let s = w.finish();
+        assert_eq!(extract_u64(&s, "job"), Some(42));
+        assert_eq!(extract_u64(&s, "steps"), Some(6));
+        assert_eq!(extract_u64(&s, "missing"), None);
+        assert_eq!(extract_u64(r#"{"job": "oops"}"#, "job"), None);
     }
 }

@@ -6,17 +6,57 @@
 //! ```text
 //! PING
 //! GEN <preset> <seed> <scale> [threads]  -> {"dataset": id, ...}
-//! PATH <dataset-id> <rule> <k> <min_frac> [dynamic|static [recheck] | ws [grow]]
+//! PATH <dataset-id> <rule> <k> <min_frac> [dynamic|static [recheck] | ws [grow]] [nocache]
+//!                                         -> {"job": id}
+//! LPATH <preset> <seed> <scale> <rule> [k] [min_frac] [dynamic [recheck] | static] [nocache]
 //!                                         -> {"job": id}
 //! STATUS <job-id>                         -> {"status": "..."}
-//! RESULT <job-id>                         -> {"steps": [...], ...} (blocks)
-//! LPATH <preset> <seed> <scale> <rule> [k] [min_frac] [dynamic [recheck] | static]
-//!                                         -> {"rejection": [...], ...}
+//! RESULT <job-id>                         -> {"kind": "lasso"|"logistic", ...} (blocks, consumes)
 //! SUREREMOVAL <dataset-id> <lam1-frac> <j> -> {"lam_s": ...}
 //! METRICS                                 -> {"metrics": "<Prometheus text>"}
 //! TRACE <job-id>                          -> {"span_name": [...], "gap": [...], ...}
 //! QUIT
 //! ```
+//!
+//! ## Job lifecycle (PATH *and* LPATH)
+//!
+//! Both path verbs are asynchronous: they submit a job to the worker pool
+//! and reply `{"job": id}` immediately — no solve ever runs on a request
+//! thread. Progress is polled with `STATUS` (`queued` → `running` →
+//! `done`/`failed`) and the answer collected with `RESULT`, which blocks
+//! until the job terminates and **consumes** it: the pool evicts the
+//! terminal entry once observed, so a second `RESULT` (or `STATUS`) for
+//! the same id reports an unknown job. Unobserved terminal entries are
+//! retained up to a FIFO cap, and the live map size is exported as the
+//! `sasvi_pool_status_entries` gauge — a client that never collects
+//! results cannot leak the server. A submission racing server shutdown
+//! is answered with an `{"error": "shutting down"}` reply, never a
+//! request-thread panic.
+//!
+//! `RESULT` dispatches on the job's kind: Lasso jobs report the `PATH`
+//! telemetry (screening `rejection` per step, `dynamic_*`, `ws_*`),
+//! logistic jobs the `LPATH` telemetry (`kkt_violations`/`kkt_resolves`,
+//! `work`, `nnz`); both carry a `"kind"` discriminator, the shared
+//! convergence diagnostics (`gap` per step, `final_gap`, the flattened
+//! `ckpt_*` checkpoint timeline), and `total_secs`.
+//!
+//! ## The cross-request shard cache
+//!
+//! The pool chunks every job's λ-grid into small shards and memoizes them
+//! in a bounded LRU keyed on the *complete* reply-determining inputs:
+//! workload kind, dataset identity (`preset:seed:scale-bits` — attached
+//! by `GEN` for `PATH` jobs and derived per-request for `LPATH`),
+//! screening rule, every solver/screening knob, and the bitwise λ-grid
+//! prefix. Concurrent clients asking for overlapping grids share solves
+//! (in-flight shards are awaited, not recomputed), and cache-hit answers
+//! are **bit-identical** to the miss answers that populated them —
+//! `total_secs` included, because pooled jobs report the sum of per-step
+//! durations rather than wall-clock. Grids that only approximately
+//! overlap simply miss: the cache can under-share, never corrupt. The
+//! trailing `nocache` token on either verb bypasses the cache for that
+//! job (benchmark baseline); hits/misses/evictions are exported through
+//! `sasvi_path_cache_*` metrics and shard hits counted in
+//! `sasvi_pool_shard_steps_saved_total`.
 //!
 //! `GEN` accepts every registry preset — including the sparse ones
 //! (`sparse1`, `sparse5`, ...) — and reports the backend (`storage`,
@@ -37,30 +77,20 @@
 //! mode (and turns working-set solving off for the job, so its dynamic
 //! telemetry is real), `static` the plain solver, `ws [grow]` the
 //! working-set driver (composing with the dynamic default for its inner
-//! solves). The `GEN` reply reports the
-//! defaults in effect (`dynamic`, `working_set`); `RESULT` reports the
-//! in-solver rejection (`dynamic_dropped` total, `dynamic_rejection` per
-//! step) and the working-set telemetry (`ws_outer` outer-iteration total,
-//! `ws_width` final working-set width per step).
+//! solves). The `GEN` reply reports the defaults in effect (`dynamic`,
+//! `working_set`); `RESULT` reports the in-solver rejection
+//! (`dynamic_dropped` total, `dynamic_rejection` per step) and the
+//! working-set telemetry (`ws_outer` outer-iteration total, `ws_width`
+//! final working-set width per step).
 //!
 //! `LPATH` is the §6 classification workload: it generates the preset,
 //! builds labels via the auto-detecting entry point (binary responses are
 //! validated/coerced, regression responses median-split into balanced ±1
-//! classes), and runs the logistic λ-path through the same coordinator
-//! runner the CLI `solve-logistic` command uses (rules `none` / `strong` / `sasviq`,
-//! KKT-corrected; the optional trailing mode adds or suppresses the
-//! gap-safe in-solver checkpoint exactly like `PATH`'s `dynamic`/`static`
-//! modes, defaulting to the process-wide dynamic setting). The path is
-//! synchronous — the single reply carries the full telemetry: `rejection`
-//! fraction per step, `kkt_violations` / `kkt_resolves`,
-//! `dynamic_dropped` + per-step `dynamic_rejection`, `nnz`, and the
-//! `iters x width` `work` integral.
-//!
-//! Both `RESULT` and `LPATH` additionally report the convergence
-//! diagnostics the coordinators record: `gap` (closing duality gap per
-//! path step), `final_gap`, and — when the job ran with dynamic
-//! checkpoints — the flattened per-checkpoint timeline `ckpt_step` /
-//! `ckpt_epoch` / `ckpt_gap` / `ckpt_width` / `ckpt_dropped`.
+//! classes), and submits the logistic λ-path to the same pool `PATH` uses
+//! (rules `none` / `strong` / `sasviq`, KKT-corrected; the optional
+//! trailing mode adds or suppresses the gap-safe in-solver checkpoint
+//! exactly like `PATH`'s `dynamic`/`static` modes, defaulting to the
+//! process-wide dynamic setting).
 //!
 //! `METRICS` replies with the process-wide [`crate::obs::metrics`]
 //! snapshot rendered in Prometheus text exposition, carried as one
@@ -69,14 +99,16 @@
 //! `sasvi_server_errors_total` on error replies) and lands in the
 //! `sasvi_server_latency_seconds` histogram for its verb.
 //!
-//! `TRACE <job-id>` replays a finished `PATH` job's observability record
-//! from the bounded [`crate::obs::trace`] store: the spans captured on
-//! the worker thread (`span_name`/`span_id`/`span_parent`/
+//! `TRACE <job-id>` replays a finished job's observability record (both
+//! workloads) from the bounded [`crate::obs::trace`] store: the spans
+//! captured on the worker thread (`span_name`/`span_id`/`span_parent`/
 //! `span_start_us`/`span_dur_us` parallel arrays), the per-step closing
 //! gaps (`gap`), and the dynamic checkpoint timeline (`ckpt_*` arrays as
 //! in `RESULT`). The store keeps the most recent
 //! [`crate::obs::trace::MAX_STORED_TRACES`] jobs; asking for an
-//! unfinished or evicted job is an error, not a crash.
+//! unfinished or evicted job is an error, not a crash. `TRACE` works
+//! after `RESULT` consumed the job — the trace store is separate from the
+//! pool's status map.
 
 pub mod json;
 
@@ -88,19 +120,53 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
-use crate::coordinator::{JobPool, JobSpec, JobStatus, PathOptions, PathPlan};
+use crate::coordinator::pool::{DEFAULT_CACHE_CAP, DEFAULT_RETAIN_CAP};
+use crate::coordinator::{
+    JobPool, JobResult, JobSpec, JobStatus, LogisticPathResult, PathOptions, PathPlan,
+    PathResult,
+};
 use crate::data::{Dataset, Preset};
 use crate::screening::sure_removal::SureRemovalAnalysis;
 use crate::screening::{RuleKind, ScreenContext};
 use crate::server::json::JsonWriter;
 use crate::solver::DualState;
 
+/// A registered dataset plus its shard-cache identity.
+struct DatasetEntry {
+    ds: Arc<Dataset>,
+    /// `name:seed:scale-bits` — what `PATH` jobs key cached shards on
+    cache_key: String,
+}
+
 struct ServerState {
-    datasets: Mutex<HashMap<u64, Arc<Dataset>>>,
+    datasets: Mutex<HashMap<u64, DatasetEntry>>,
     next_dataset: AtomicU64,
     pool: JobPool,
     jobs: Mutex<HashMap<u64, crate::coordinator::pool::JobId>>,
     next_job: AtomicU64,
+}
+
+/// Pool sizing knobs for [`Server::bind_with`].
+#[derive(Clone, Copy, Debug)]
+pub struct ServerOptions {
+    pub workers: usize,
+    /// bounded job-queue depth (submission blocks past it — backpressure)
+    pub queue_cap: usize,
+    /// shard-cache capacity (0 keeps in-flight dedup but retains nothing)
+    pub cache_cap: usize,
+    /// cap on unobserved terminal status entries (FIFO eviction)
+    pub retain_cap: usize,
+}
+
+impl Default for ServerOptions {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            queue_cap: 16,
+            cache_cap: DEFAULT_CACHE_CAP,
+            retain_cap: DEFAULT_RETAIN_CAP,
+        }
+    }
 }
 
 /// The screening service. Binds a listener and serves until `stop()`.
@@ -111,8 +177,14 @@ pub struct Server {
 }
 
 impl Server {
-    /// Bind on an address like "127.0.0.1:0" (port 0 = ephemeral).
+    /// Bind on an address like "127.0.0.1:0" (port 0 = ephemeral) with
+    /// default pool limits.
     pub fn bind(addr: &str, workers: usize) -> Result<Self> {
+        Self::bind_with(addr, ServerOptions { workers, ..ServerOptions::default() })
+    }
+
+    /// Bind with explicit pool limits (see [`ServerOptions`]).
+    pub fn bind_with(addr: &str, opts: ServerOptions) -> Result<Self> {
         let listener = TcpListener::bind(addr)?;
         listener.set_nonblocking(true)?;
         Ok(Self {
@@ -120,7 +192,12 @@ impl Server {
             state: Arc::new(ServerState {
                 datasets: Mutex::new(HashMap::new()),
                 next_dataset: AtomicU64::new(1),
-                pool: JobPool::new(workers, 16),
+                pool: JobPool::with_limits(
+                    opts.workers.max(1),
+                    opts.queue_cap.max(1),
+                    opts.cache_cap,
+                    opts.retain_cap.max(1),
+                ),
                 jobs: Mutex::new(HashMap::new()),
                 next_job: AtomicU64::new(1),
             }),
@@ -171,10 +248,21 @@ fn handle_conn(stream: TcpStream, state: Arc<ServerState>) -> Result<()> {
         if reader.read_line(&mut line)? == 0 {
             return Ok(()); // connection closed
         }
-        let parts: Vec<&str> = line.trim().split_whitespace().collect();
+        let mut parts: Vec<&str> = line.trim().split_whitespace().collect();
         if parts.is_empty() {
             continue;
         }
+        // the trailing `nocache` token is a cross-cutting knob on the job
+        // verbs; strip it before dispatch so the positional matches stay
+        // simple
+        let use_cache = if matches!(parts.first(), Some(&"PATH" | &"LPATH"))
+            && parts.last() == Some(&"nocache")
+        {
+            parts.pop();
+            false
+        } else {
+            true
+        };
         let verb = verb_label(parts[0]);
         let started = std::time::Instant::now();
         let reply = match parts.as_slice() {
@@ -185,17 +273,17 @@ fn handle_conn(stream: TcpStream, state: Arc<ServerState>) -> Result<()> {
                 cmd_gen(&state, preset, seed, scale, Some(threads))
             }
             ["PATH", ds, rule, k, min_frac] => {
-                cmd_path(&state, ds, rule, k, min_frac, None, None)
+                cmd_path(&state, ds, rule, k, min_frac, None, None, use_cache)
             }
             ["PATH", ds, rule, k, min_frac, mode] => {
-                cmd_path(&state, ds, rule, k, min_frac, Some(mode), None)
+                cmd_path(&state, ds, rule, k, min_frac, Some(mode), None, use_cache)
             }
             ["PATH", ds, rule, k, min_frac, mode, recheck] => {
-                cmd_path(&state, ds, rule, k, min_frac, Some(mode), Some(recheck))
+                cmd_path(&state, ds, rule, k, min_frac, Some(mode), Some(recheck), use_cache)
             }
             ["STATUS", job] => cmd_status(&state, job),
             ["RESULT", job] => cmd_result(&state, job),
-            ["LPATH", args @ ..] => cmd_lpath(args),
+            ["LPATH", args @ ..] => cmd_lpath(&state, args, use_cache),
             ["SUREREMOVAL", ds, frac, j] => cmd_sure_removal(&state, ds, frac, j),
             ["METRICS"] => cmd_metrics(),
             ["TRACE", job] => cmd_trace(&state, job),
@@ -252,6 +340,21 @@ fn err_msg(msg: &str) -> String {
     w.finish()
 }
 
+/// Register a submitted job under a public id and reply `{"job": id}`.
+fn submitted(state: &ServerState, spec: JobSpec) -> String {
+    match state.pool.submit(spec) {
+        Ok(job_id) => {
+            let id = state.next_job.fetch_add(1, Ordering::Relaxed);
+            state.jobs.lock().unwrap().insert(id, job_id);
+            let mut w = JsonWriter::object();
+            w.field_u64("job", id);
+            w.finish()
+        }
+        // racing shutdown_now: an error reply, never a request-thread panic
+        Err(e) => err_msg(&format!("shutting down: {e}")),
+    }
+}
+
 fn cmd_gen(
     state: &ServerState,
     preset: &str,
@@ -282,7 +385,13 @@ fn cmd_gen(
             let id = state.next_dataset.fetch_add(1, Ordering::Relaxed);
             let (n, p, name) = (ds.n(), ds.p(), ds.name.clone());
             let (storage, density) = (ds.x.storage(), ds.x.density());
-            state.datasets.lock().unwrap().insert(id, Arc::new(ds));
+            state.datasets.lock().unwrap().insert(
+                id,
+                DatasetEntry {
+                    ds: Arc::new(ds),
+                    cache_key: dataset_cache_key(&name, seed, scale),
+                },
+            );
             let mut w = JsonWriter::object();
             w.field_u64("dataset", id);
             w.field_str("name", &name);
@@ -302,6 +411,14 @@ fn cmd_gen(
     }
 }
 
+/// Shard-cache dataset identity: generation is deterministic in
+/// (preset, seed, scale), so this triple *is* the dataset. The scale goes
+/// in by bit pattern — near-equal floats must not collide.
+fn dataset_cache_key(name: &str, seed: u64, scale: f64) -> String {
+    format!("{name}:{seed}:{:016x}", scale.to_bits())
+}
+
+#[allow(clippy::too_many_arguments)]
 fn cmd_path(
     state: &ServerState,
     ds: &str,
@@ -310,13 +427,14 @@ fn cmd_path(
     min_frac: &str,
     mode: Option<&str>,
     recheck: Option<&str>,
+    use_cache: bool,
 ) -> String {
     let ds_id: u64 = match ds.parse() {
         Ok(v) => v,
         Err(_) => return err_msg("bad dataset id"),
     };
-    let dataset = match state.datasets.lock().unwrap().get(&ds_id) {
-        Some(d) => Arc::clone(d),
+    let (dataset, cache_key) = match state.datasets.lock().unwrap().get(&ds_id) {
+        Some(e) => (Arc::clone(&e.ds), e.cache_key.clone()),
         None => return err_msg(&format!("no dataset {ds_id}")),
     };
     let rule = match RuleKind::parse(rule) {
@@ -366,18 +484,17 @@ fn cmd_path(
         return err_msg("ws requested but the expansion batch is 0");
     }
     let plan = PathPlan::linear_spaced(&dataset, k.max(2), min_frac.clamp(0.001, 0.99));
-    let job_id = state.pool.submit(JobSpec {
+    let mut spec = JobSpec::lasso(
         dataset,
         plan,
         rule,
-        opts: PathOptions { dynamic, working_set, ..PathOptions::from_process_defaults() },
-        tag: format!("svc-{rule:?}"),
-    });
-    let id = state.next_job.fetch_add(1, Ordering::Relaxed);
-    state.jobs.lock().unwrap().insert(id, job_id);
-    let mut w = JsonWriter::object();
-    w.field_u64("job", id);
-    w.finish()
+        PathOptions { dynamic, working_set, ..PathOptions::from_process_defaults() },
+        format!("svc-{rule:?}"),
+    );
+    if use_cache {
+        spec = spec.with_cache_key(cache_key);
+    }
+    submitted(state, spec)
 }
 
 fn cmd_status(state: &ServerState, job: &str) -> String {
@@ -394,6 +511,7 @@ fn cmd_status(state: &ServerState, job: &str) -> String {
         Some(JobStatus::Running) => "running",
         Some(JobStatus::Done) => "done",
         Some(JobStatus::Failed(_)) => "failed",
+        // terminal entries are consumed by RESULT (or FIFO-evicted)
         None => "unknown",
     };
     let mut w = JsonWriter::object();
@@ -410,48 +528,87 @@ fn cmd_result(state: &ServerState, job: &str) -> String {
         Some(j) => *j,
         None => return err_msg(&format!("no job {id}")),
     };
-    match state.pool.wait(jid) {
-        Some(res) => {
-            let mut w = JsonWriter::object();
-            w.field_str("rule", res.rule.name());
-            w.field_f64("total_secs", res.total_time.as_secs_f64());
-            w.field_u64("steps", res.steps.len() as u64);
-            let rej: Vec<f64> = res.steps.iter().map(|s| s.rejection_ratio()).collect();
-            w.field_f64_array("rejection", &rej);
-            let fr: Vec<f64> = res.steps.iter().map(|s| s.frac).collect();
-            w.field_f64_array("frac", &fr);
-            // in-solver rejection: dropped dynamically / post-screen width,
-            // clamped to 1 (strong-rule KKT re-admissions can make drops
-            // exceed the original kept set)
-            w.field_u64("dynamic_dropped", res.total_dynamic_dropped() as u64);
-            let dyn_rej: Vec<f64> = res
-                .steps
-                .iter()
-                .map(|s| (s.dyn_dropped as f64 / s.kept.max(1) as f64).min(1.0))
-                .collect();
-            w.field_f64_array("dynamic_rejection", &dyn_rej);
-            // working-set telemetry: outer iterations + final width per step
-            w.field_u64("ws_outer", res.total_ws_outer() as u64);
-            let ws_w: Vec<f64> = res.steps.iter().map(|s| s.ws_final as f64).collect();
-            w.field_f64_array("ws_width", &ws_w);
-            // convergence diagnostics: closing gap per step + the dynamic
-            // checkpoint timeline (empty arrays for static jobs)
-            w.field_f64_array("gap", &res.gap_history());
-            w.field_f64("final_gap", res.final_gap());
-            write_checkpoints(&mut w, &res.checkpoint_history());
-            w.finish()
-        }
+    let res = state.pool.wait(jid);
+    // the job is terminal and consumed either way: drop the public mapping
+    // so the server's own id map stays bounded alongside the pool's
+    state.jobs.lock().unwrap().remove(&id);
+    match res {
+        Some(JobResult::Lasso(r)) => lasso_result_json(&r),
+        Some(JobResult::Logistic(r)) => logistic_result_json(&r),
         None => err_msg("job failed or already consumed"),
     }
 }
 
+/// The `RESULT` payload for a Lasso path job.
+fn lasso_result_json(res: &PathResult) -> String {
+    let mut w = JsonWriter::object();
+    w.field_str("kind", "lasso");
+    w.field_str("rule", res.rule.name());
+    w.field_f64("total_secs", res.total_time.as_secs_f64());
+    w.field_u64("steps", res.steps.len() as u64);
+    let rej: Vec<f64> = res.steps.iter().map(|s| s.rejection_ratio()).collect();
+    w.field_f64_array("rejection", &rej);
+    let fr: Vec<f64> = res.steps.iter().map(|s| s.frac).collect();
+    w.field_f64_array("frac", &fr);
+    // in-solver rejection: dropped dynamically / post-screen width,
+    // clamped to 1 (strong-rule KKT re-admissions can make drops
+    // exceed the original kept set)
+    w.field_u64("dynamic_dropped", res.total_dynamic_dropped() as u64);
+    let dyn_rej: Vec<f64> = res
+        .steps
+        .iter()
+        .map(|s| (s.dyn_dropped as f64 / s.kept.max(1) as f64).min(1.0))
+        .collect();
+    w.field_f64_array("dynamic_rejection", &dyn_rej);
+    // working-set telemetry: outer iterations + final width per step
+    w.field_u64("ws_outer", res.total_ws_outer() as u64);
+    let ws_w: Vec<f64> = res.steps.iter().map(|s| s.ws_final as f64).collect();
+    w.field_f64_array("ws_width", &ws_w);
+    // convergence diagnostics: closing gap per step + the dynamic
+    // checkpoint timeline (empty arrays for static jobs)
+    w.field_f64_array("gap", &res.gap_history());
+    w.field_f64("final_gap", res.final_gap());
+    write_checkpoints(&mut w, &res.checkpoint_history());
+    w.finish()
+}
+
+/// The `RESULT` payload for a §6 logistic path job.
+fn logistic_result_json(res: &LogisticPathResult) -> String {
+    let mut w = JsonWriter::object();
+    w.field_str("kind", "logistic");
+    w.field_str("rule", res.rule.name());
+    w.field_f64("total_secs", res.total_time.as_secs_f64());
+    w.field_u64("steps", res.steps.len() as u64);
+    let rej: Vec<f64> = res.steps.iter().map(|s| s.rejection_ratio()).collect();
+    w.field_f64_array("rejection", &rej);
+    let fr: Vec<f64> = res.steps.iter().map(|s| s.frac).collect();
+    w.field_f64_array("frac", &fr);
+    w.field_u64("kkt_violations", res.total_kkt_violations() as u64);
+    w.field_u64("kkt_resolves", res.total_kkt_resolves() as u64);
+    w.field_u64("dynamic_dropped", res.total_dynamic_dropped() as u64);
+    let dyn_rej: Vec<f64> = res
+        .steps
+        .iter()
+        .map(|s| (s.dyn_dropped as f64 / s.kept.max(1) as f64).min(1.0))
+        .collect();
+    w.field_f64_array("dynamic_rejection", &dyn_rej);
+    w.field_u64("nnz", res.steps.last().map(|s| s.nnz).unwrap_or(0) as u64);
+    w.field_u64("work", res.solver_work());
+    w.field_f64_array("gap", &res.gap_history());
+    w.field_f64("final_gap", res.final_gap());
+    write_checkpoints(&mut w, &res.checkpoint_history());
+    w.finish()
+}
+
 /// `LPATH <preset> <seed> <scale> <rule> [k] [min_frac] [mode [recheck]]`
-/// — the synchronous logistic-path verb (see the module docs).
-fn cmd_lpath(args: &[&str]) -> String {
-    use crate::coordinator::logistic::{run_logistic_path, LogisticPathOptions};
+/// — the asynchronous logistic-path verb: validates, generates, submits to
+/// the pool, and replies `{"job": id}` (see the module docs for the
+/// lifecycle).
+fn cmd_lpath(state: &ServerState, args: &[&str], use_cache: bool) -> String {
+    use crate::coordinator::logistic::LogisticPathOptions;
     use crate::logistic::{LogiRule, LogisticProblem};
     let [preset, seed, scale, rule, rest @ ..] = args else {
-        return err_msg("usage: LPATH <preset> <seed> <scale> <rule> [k] [min_frac] [dynamic [recheck] | static]");
+        return err_msg("usage: LPATH <preset> <seed> <scale> <rule> [k] [min_frac] [dynamic [recheck] | static] [nocache]");
     };
     let preset = match Preset::parse(preset) {
         Some(p) => p,
@@ -516,6 +673,7 @@ fn cmd_lpath(args: &[&str]) -> String {
         Ok(p) => p,
         Err(e) => return err_msg(&format!("classification split failed: {e}")),
     };
+    let cache_key = dataset_cache_key(&ds.name, seed, scale);
     let plan = PathPlan::linear_from_lambda_max(
         prob.lambda_max(),
         k.max(2),
@@ -525,34 +683,21 @@ fn cmd_lpath(args: &[&str]) -> String {
         dynamic,
         ..LogisticPathOptions::from_process_defaults()
     };
-    let res = run_logistic_path(&prob, &plan, rule, opts);
-    let mut w = JsonWriter::object();
-    w.field_str("rule", res.rule.name());
-    w.field_f64("total_secs", res.total_time.as_secs_f64());
-    w.field_u64("steps", res.steps.len() as u64);
-    let rej: Vec<f64> = res.steps.iter().map(|s| s.rejection_ratio()).collect();
-    w.field_f64_array("rejection", &rej);
-    let fr: Vec<f64> = res.steps.iter().map(|s| s.frac).collect();
-    w.field_f64_array("frac", &fr);
-    w.field_u64("kkt_violations", res.total_kkt_violations() as u64);
-    w.field_u64("kkt_resolves", res.total_kkt_resolves() as u64);
-    w.field_u64("dynamic_dropped", res.total_dynamic_dropped() as u64);
-    let dyn_rej: Vec<f64> = res
-        .steps
-        .iter()
-        .map(|s| (s.dyn_dropped as f64 / s.kept.max(1) as f64).min(1.0))
-        .collect();
-    w.field_f64_array("dynamic_rejection", &dyn_rej);
-    w.field_u64("nnz", res.steps.last().map(|s| s.nnz).unwrap_or(0) as u64);
-    w.field_u64("work", res.solver_work());
-    w.field_f64_array("gap", &res.gap_history());
-    w.field_f64("final_gap", res.final_gap());
-    write_checkpoints(&mut w, &res.checkpoint_history());
-    w.finish()
+    let mut spec = JobSpec::logistic(
+        Arc::new(prob),
+        plan,
+        rule,
+        opts,
+        format!("svc-l{rule:?}"),
+    );
+    if use_cache {
+        spec = spec.with_cache_key(cache_key);
+    }
+    submitted(state, spec)
 }
 
 /// Flatten a `(step, epoch, gap, width, dropped)` checkpoint timeline
-/// into the parallel `ckpt_*` arrays `RESULT`/`LPATH`/`TRACE` share.
+/// into the parallel `ckpt_*` arrays `RESULT`/`TRACE` share.
 fn write_checkpoints(w: &mut JsonWriter, ck: &[(usize, usize, f64, usize, usize)]) {
     w.field_u64_array(
         "ckpt_step",
@@ -633,7 +778,7 @@ fn cmd_sure_removal(state: &ServerState, ds: &str, frac: &str, j: &str) -> Strin
         Err(_) => return err_msg("bad dataset id"),
     };
     let dataset = match state.datasets.lock().unwrap().get(&ds_id) {
-        Some(d) => Arc::clone(d),
+        Some(e) => Arc::clone(&e.ds),
         None => return err_msg(&format!("no dataset {ds_id}")),
     };
     let frac: f64 = frac.parse().unwrap_or(0.8);
@@ -710,6 +855,7 @@ mod tests {
         assert!(replies[0].contains("pong"));
         assert!(replies[1].contains("\"dataset\": 1"), "{}", replies[1]);
         assert!(replies[2].contains("\"job\": 1"), "{}", replies[2]);
+        assert!(replies[3].contains("\"kind\": \"lasso\""), "{}", replies[3]);
         assert!(replies[3].contains("rejection"), "{}", replies[3]);
         assert!(replies[4].contains("lam_s"), "{}", replies[4]);
         assert!(replies[5].contains("error"), "{}", replies[5]);
@@ -867,7 +1013,7 @@ mod tests {
     }
 
     #[test]
-    fn lpath_runs_the_logistic_workload() {
+    fn lpath_runs_the_logistic_workload_through_the_pool() {
         let _guard = crate::linalg::par::test_knob_guard();
         let server = Server::bind("127.0.0.1:0", 1).unwrap();
         let addr = server.local_addr().unwrap();
@@ -877,8 +1023,13 @@ mod tests {
             addr,
             &[
                 "LPATH synthetic100 3 0.01 sasviq 5 0.2",
+                "STATUS 1",
+                "RESULT 1",
+                "STATUS 1",
                 "LPATH synthetic100 3 0.01 sasviq 5 0.2 dynamic 3",
+                "RESULT 2",
                 "LPATH synthetic100 3 0.01 none 4 0.2 static",
+                "RESULT 3",
                 "LPATH synthetic100 3 0.01 bogus",
                 "LPATH nope 3 0.01 sasviq",
                 "LPATH synthetic100 3 0.01 sasviq 5 0.2 dynamic 0",
@@ -887,29 +1038,82 @@ mod tests {
                 "QUIT",
             ],
         );
-        // a sasviq path reports per-step rejection + the KKT telemetry
-        assert!(replies[0].contains("\"rejection\": ["), "{}", replies[0]);
-        assert!(replies[0].contains("\"kkt_resolves\": "), "{}", replies[0]);
-        assert!(replies[0].contains("\"dynamic_dropped\": 0"), "{}", replies[0]);
-        // the dynamic mode drops features inside the solver
+        // LPATH is async: it replies with a job id, not a payload
+        assert!(replies[0].contains("\"job\": 1"), "{}", replies[0]);
         assert!(
-            replies[1].contains("\"dynamic_rejection\": ["),
+            ["queued", "running", "done"].iter().any(|s| replies[1].contains(s)),
             "{}",
             replies[1]
         );
+        // RESULT dispatches on the job kind and carries the §6 telemetry
+        assert!(replies[2].contains("\"kind\": \"logistic\""), "{}", replies[2]);
+        assert!(replies[2].contains("\"rejection\": ["), "{}", replies[2]);
+        assert!(replies[2].contains("\"kkt_resolves\": "), "{}", replies[2]);
+        assert!(replies[2].contains("\"work\": "), "{}", replies[2]);
+        assert!(replies[2].contains("\"dynamic_dropped\": 0"), "{}", replies[2]);
+        // RESULT consumed the job: the id is gone afterwards
+        assert!(replies[3].contains("error"), "{}", replies[3]);
+        // the dynamic mode drops features inside the solver
         assert!(
-            !replies[1].contains("\"dynamic_dropped\": 0,"),
+            replies[5].contains("\"dynamic_rejection\": ["),
+            "{}",
+            replies[5]
+        );
+        assert!(
+            !replies[5].contains("\"dynamic_dropped\": 0,"),
             "dynamic lpath dropped nothing: {}",
-            replies[1]
+            replies[5]
         );
         // static + rule none still runs and reports zero screening
-        assert!(replies[2].contains("\"rule\": \"none\""), "{}", replies[2]);
-        assert!(replies[2].contains("\"dynamic_dropped\": 0"), "{}", replies[2]);
+        assert!(replies[7].contains("\"rule\": \"none\""), "{}", replies[7]);
+        assert!(replies[7].contains("\"dynamic_dropped\": 0"), "{}", replies[7]);
         // bad rule / preset / cadence-0 / bad mode / misplaced mode token
         // (`dynamic` in the k slot must not silently become grid 30)
-        for r in &replies[3..8] {
+        for r in &replies[8..13] {
             assert!(r.contains("error"), "{r}");
         }
+        stop.store(true, Ordering::Relaxed);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn cache_hit_replies_are_bit_identical_and_nocache_is_accepted() {
+        let _guard = crate::linalg::par::test_knob_guard();
+        let server = Server::bind("127.0.0.1:0", 1).unwrap();
+        let addr = server.local_addr().unwrap();
+        let stop = server.stop_handle();
+        let h = std::thread::spawn(move || server.serve().unwrap());
+        let replies = send(
+            addr,
+            &[
+                "GEN synthetic100 3 0.01",
+                "PATH 1 sasvi 6 0.1",
+                "RESULT 1",
+                "PATH 1 sasvi 6 0.1",
+                "RESULT 2",
+                "PATH 1 sasvi 6 0.1 nocache",
+                "RESULT 3",
+                "LPATH synthetic100 3 0.01 sasviq 5 0.2",
+                "RESULT 4",
+                "LPATH synthetic100 3 0.01 sasviq 5 0.2",
+                "RESULT 5",
+                "LPATH synthetic100 3 0.01 sasviq 5 0.2 nocache",
+                "RESULT 6",
+                "QUIT",
+            ],
+        );
+        // the cache-miss answer (job 1 populated the cache) and the
+        // cache-hit answer (job 2 rode it) are byte-for-byte identical —
+        // total_secs included, since pooled jobs report deterministic
+        // summed step durations
+        assert!(replies[2].contains("\"kind\": \"lasso\""), "{}", replies[2]);
+        assert_eq!(replies[2], replies[4], "lasso hit reply != miss reply");
+        assert_eq!(replies[8], replies[10], "logistic hit reply != miss reply");
+        // a nocache job re-solves (timings differ) but every deterministic
+        // field after total_secs matches the cached answer exactly
+        let after_secs = |s: &String| s[s.find("\"steps\"").unwrap()..].to_string();
+        assert_eq!(after_secs(&replies[2]), after_secs(&replies[6]));
+        assert_eq!(after_secs(&replies[8]), after_secs(&replies[12]));
         stop.store(true, Ordering::Relaxed);
         h.join().unwrap();
     }

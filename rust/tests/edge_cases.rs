@@ -187,13 +187,14 @@ fn pool_bounded_queue_no_deadlock() {
     let pool = JobPool::new(1, 1);
     let mut ids = Vec::new();
     for _ in 0..8 {
-        ids.push(pool.submit(JobSpec {
-            dataset: Arc::clone(&ds),
-            plan: PathPlan::linear_spaced(&ds, 4, 0.2),
-            rule: RuleKind::Sasvi,
-            opts: PathOptions::default(),
-            tag: "burst".into(),
-        }));
+        let spec = JobSpec::lasso(
+            Arc::clone(&ds),
+            PathPlan::linear_spaced(&ds, 4, 0.2),
+            RuleKind::Sasvi,
+            PathOptions::default(),
+            "burst".into(),
+        );
+        ids.push(pool.submit(spec).expect("pool is live"));
     }
     for id in ids {
         assert!(pool.wait(id).is_some());

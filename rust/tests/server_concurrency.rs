@@ -1,0 +1,142 @@
+//! Concurrent mixed-workload test against the real TCP server: many
+//! clients interleave PATH (Lasso) and LPATH (logistic) jobs with STATUS
+//! polls and METRICS scrapes on live sockets. Every job must terminate,
+//! cache-served replies must be byte-identical to the miss replies that
+//! populated the cache, consumed jobs must become unknown, and the pool's
+//! status map must be fully drained at the end (`sasvi_pool_status_entries`
+//! gauge reads 0).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+
+use sasvi::server::json::extract_u64;
+use sasvi::server::{Server, ServerOptions};
+
+struct Client {
+    w: TcpStream,
+    r: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Self {
+        let w = TcpStream::connect(addr).unwrap();
+        let r = BufReader::new(w.try_clone().unwrap());
+        Self { w, r }
+    }
+
+    fn roundtrip(&mut self, cmd: &str) -> String {
+        writeln!(self.w, "{cmd}").unwrap();
+        let mut line = String::new();
+        self.r.read_line(&mut line).unwrap();
+        line.trim().to_string()
+    }
+}
+
+/// Read a sample value out of a METRICS reply; the Prometheus text rides
+/// inside one-line JSON, so sample lines look like `\nname value\n` with
+/// the newlines escaped.
+fn metric_value(metrics_reply: &str, name: &str) -> f64 {
+    let needle = format!("\\n{name} ");
+    let Some(i) = metrics_reply.find(&needle) else {
+        return f64::NAN;
+    };
+    let rest = &metrics_reply[i + needle.len()..];
+    let end = rest.find('\\').unwrap_or(rest.len());
+    rest[..end].parse().unwrap_or(f64::NAN)
+}
+
+#[test]
+fn concurrent_mixed_workloads_terminate_bit_identically_and_drain() {
+    const CLIENTS: usize = 8;
+
+    let server = Server::bind_with(
+        "127.0.0.1:0",
+        ServerOptions { workers: 2, queue_cap: 4, cache_cap: 64, retain_cap: 8 },
+    )
+    .unwrap();
+    let addr = server.local_addr().unwrap();
+    let stop = server.stop_handle();
+    let server_thread = std::thread::spawn(move || server.serve().unwrap());
+
+    // dyadic (k, min_frac) pairs: both grids step the frac axis by an
+    // exact power of two (1/16 for the Lasso pair, 1/8 for the logistic
+    // pair), so the short grid is a bitwise prefix of the long one and
+    // the two share cache shards
+    let shapes = [
+        "PATH 1 sasvi 9 0.5",
+        "PATH 1 sasvi 13 0.25",
+        "LPATH synthetic100 3 0.01 sasviq 5 0.5",
+        "LPATH synthetic100 3 0.01 sasviq 7 0.25",
+    ];
+
+    // warm pass: generate the shared dataset, run each shape once (the
+    // cache misses), and keep the replies as the canonical answers
+    let mut warm = Client::connect(addr);
+    let gen = warm.roundtrip("GEN synthetic100 3 0.01");
+    assert!(gen.contains("\"dataset\": 1"), "{gen}");
+    let canonical: Vec<String> = shapes
+        .iter()
+        .map(|s| {
+            let submitted = warm.roundtrip(s);
+            let id = extract_u64(&submitted, "job")
+                .unwrap_or_else(|| panic!("no job id for {s}: {submitted}"));
+            let reply = warm.roundtrip(&format!("RESULT {id}"));
+            assert!(!reply.contains("error"), "warm {s} failed: {reply}");
+            reply
+        })
+        .collect();
+
+    std::thread::scope(|scope| {
+        for c in 0..CLIENTS {
+            let shapes = &shapes;
+            let canonical = &canonical;
+            scope.spawn(move || {
+                let mut cl = Client::connect(addr);
+                for j in 0..shapes.len() {
+                    let i = (j + c) % shapes.len();
+                    let submitted = cl.roundtrip(shapes[i]);
+                    let id = extract_u64(&submitted, "job")
+                        .unwrap_or_else(|| panic!("client {c}: no job id in {submitted}"));
+
+                    // interleave non-job verbs on the same socket while
+                    // the job is in flight
+                    let status = cl.roundtrip(&format!("STATUS {id}"));
+                    assert!(
+                        ["queued", "running", "done"].iter().any(|s| status.contains(s)),
+                        "client {c}: unexpected status {status}"
+                    );
+                    let metrics = cl.roundtrip("METRICS");
+                    assert!(metrics.contains("sasvi_server_requests_total"));
+
+                    // RESULT blocks until the job terminates: this is the
+                    // every-job-terminates assertion, and the reply must
+                    // be byte-identical to the canonical (miss) answer
+                    let reply = cl.roundtrip(&format!("RESULT {id}"));
+                    assert_eq!(
+                        reply,
+                        canonical[i],
+                        "client {c} shape {i}: cache-served reply diverged"
+                    );
+
+                    // RESULT consumed the job — it is now unknown
+                    let gone = cl.roundtrip(&format!("STATUS {id}"));
+                    assert!(
+                        gone.contains("error"),
+                        "client {c}: consumed job {id} still visible: {gone}"
+                    );
+                }
+            });
+        }
+    });
+
+    // every terminal entry was observed via RESULT, so the pool's status
+    // map must be fully drained — bounded retention left nothing behind
+    let metrics = warm.roundtrip("METRICS");
+    let entries = metric_value(&metrics, "sasvi_pool_status_entries");
+    assert_eq!(entries, 0.0, "status map must drain after every RESULT is collected");
+
+    warm.roundtrip("QUIT");
+    stop.store(true, Ordering::Relaxed);
+    server_thread.join().unwrap();
+}

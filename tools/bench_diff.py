@@ -25,10 +25,36 @@ def load(directory):
     return out
 
 
+def numeric_summary(value):
+    """Collapse a numeric array to (len, mean) so latency-percentile and
+    rejection-curve arrays participate in the diff; returns None for
+    non-numeric or empty arrays."""
+    if (isinstance(value, list) and value
+            and all(isinstance(v, (int, float)) and not isinstance(v, bool)
+                    for v in value)):
+        return len(value), sum(value) / len(value)
+    return None
+
+
 def diff_file(name, old, new):
     print(f"{name}:")
     for key in sorted(new):
         nv = new[key]
+        summary = numeric_summary(nv)
+        if summary is not None:
+            n, mean = summary
+            old_summary = numeric_summary(old.get(key))
+            if old_summary is None:
+                print(f"  {key}: len {n}, mean {mean:g} (no baseline)")
+            else:
+                on, omean = old_summary
+                if omean != 0:
+                    pct = f"{(mean - omean) / omean * 100.0:+.1f}%"
+                else:
+                    pct = "n/a"
+                shape = "" if on == n else f" (len {on} -> {n})"
+                print(f"  {key}: mean {omean:g} -> {mean:g} ({pct}){shape}")
+            continue
         if isinstance(nv, bool) or not isinstance(nv, (int, float)):
             continue
         ov = old.get(key)
