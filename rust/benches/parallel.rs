@@ -13,6 +13,9 @@
 //! Env: SASVI_BENCH_DENSITY (default 0.05), SASVI_BENCH_MIN_SECS (default
 //! 0.4 per measurement).
 
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
 use sasvi::data::synthetic::SyntheticSpec;
 use sasvi::linalg::{par, DesignMatrix, ThreadPool};
 use sasvi::metrics::Table;
@@ -25,6 +28,14 @@ mod common;
 use common::{bench, env_f64, BenchJson};
 
 const THREAD_SWEEP: [usize; 4] = [1, 2, 4, 8];
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = (q * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx]
+}
 
 struct Case {
     label: &'static str,
@@ -161,6 +172,91 @@ fn main() {
     }
     par::set_threads(par::hardware_threads());
     println!("{}", rule_table.render());
+
+    // ---- mixed-size concurrency: tiny dispatches under a big storm -------
+    // The work-stealing scheduler's reason to exist: a tiny multi-block
+    // dispatch issued while a huge dispatch saturates the pool must not
+    // queue behind the huge job's backlog. Measure the tiny `X^T r`
+    // latency solo, then with a background thread hammering the shared
+    // pool with full-width dispatches, and record both percentiles —
+    // plus bit-identity of every output either way.
+    let tiny_p = 1024usize; // 4 blocks: enough to exercise the scheduler
+    let tiny_x: DesignMatrix = SyntheticSpec { n, p: tiny_p, nnz: 20, ..Default::default() }
+        .generate(11)
+        .x
+        .to_dense()
+        .into();
+    let mut tiny_ref = vec![0.0; tiny_p];
+    match &tiny_x {
+        DesignMatrix::Dense(m) => m.t_matvec(&sparse_ds.y, &mut tiny_ref),
+        DesignMatrix::Sparse(m) => m.t_matvec(&sparse_ds.y, &mut tiny_ref),
+    }
+    let big_x = &cases[0].x;
+    let y = &sparse_ds.y;
+    let mut serial_big_ref = vec![0.0; p];
+    match big_x {
+        DesignMatrix::Dense(m) => m.t_matvec(y, &mut serial_big_ref),
+        DesignMatrix::Sparse(m) => m.t_matvec(y, &mut serial_big_ref),
+    }
+    let storm_pool = ThreadPool::new(4);
+    let reps = 400usize;
+    let mut solo = Vec::with_capacity(reps);
+    let mut under_storm = Vec::with_capacity(reps);
+    {
+        let mut out = vec![0.0; tiny_p];
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            par::t_matvec_with(&storm_pool, 4, &tiny_x, y, &mut out);
+            solo.push(t0.elapsed().as_secs_f64());
+        }
+        for (k, (a, b)) in out.iter().zip(tiny_ref.iter()).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "tiny solo diverged at index {k}");
+        }
+    }
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        let storm = scope.spawn(|| {
+            let mut big_out = vec![0.0; p];
+            let mut dispatches = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                par::t_matvec_with(&storm_pool, 4, big_x, y, &mut big_out);
+                dispatches += 1;
+            }
+            (big_out, dispatches)
+        });
+        let mut out = vec![0.0; tiny_p];
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            par::t_matvec_with(&storm_pool, 4, &tiny_x, y, &mut out);
+            under_storm.push(t0.elapsed().as_secs_f64());
+        }
+        stop.store(true, Ordering::Relaxed);
+        for (k, (a, b)) in out.iter().zip(tiny_ref.iter()).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "tiny under storm diverged at index {k}");
+        }
+        let (big_out, dispatches) = storm.join().unwrap();
+        assert!(dispatches > 0, "the storm thread never dispatched");
+        for (k, (a, b)) in big_out.iter().zip(serial_big_ref.iter()).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "storm output diverged at index {k}");
+        }
+    });
+    solo.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    under_storm.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let (solo_p95, storm_p95, storm_p99) = (
+        percentile(&solo, 0.95) * 1e3,
+        percentile(&under_storm, 0.95) * 1e3,
+        percentile(&under_storm, 0.99) * 1e3,
+    );
+    println!(
+        "\ntiny dispatch ({tiny_p} cols) p95: {solo_p95:.4} ms solo, \
+         {storm_p95:.4} ms under full-width storm (p99 {storm_p99:.4} ms); \
+         {} blocks stolen by helper lanes",
+        storm_pool.steal_count()
+    );
+    json.num("tiny_solo_p95_ms", solo_p95)
+        .num("tiny_storm_p95_ms", storm_p95)
+        .num("tiny_storm_p99_ms", storm_p99)
+        .int("storm_steals", storm_pool.steal_count());
 
     println!(
         "\ndense X^T r speedup at 8 threads vs serial: {dense_speedup_at_8:.2}x"

@@ -6,7 +6,11 @@
 //! 1/32, so the first 16 λs are bit-equal and share shards; k=9/mf=0.5 vs
 //! k=13/mf=0.25 likewise for the logistic pair). Records per-request
 //! latency percentiles, throughput, and the shard-cache counters to
-//! `BENCH_server.json`.
+//! `BENCH_server.json`. A mixed-size phase then races tiny `nocache`
+//! solves against big `nocache` solves and records the tiny jobs'
+//! p50/p95/p99 (`tiny_latency_*_ms`) — the head-of-line-blocking signal
+//! the work-stealing block scheduler and fair lane leases exist to cut —
+//! plus `sasvi_par_steals_total`.
 //!
 //! Correctness is enforced before any number is written:
 //! * every cache-served `RESULT` reply is byte-identical to the miss
@@ -170,6 +174,59 @@ fn main() {
         assert_eq!(after_secs(&reply), after_secs(c), "nocache recomputation diverged for {s}");
     }
 
+    // mixed-size phase: tiny real solves racing big real solves. All jobs
+    // run `nocache` so every latency below is a genuine solve riding the
+    // steal scheduler + fair lane leases — the head-of-line scenario the
+    // scheduler exists for — not a cache lookup. Replies stay pinned:
+    // every tiny reply must match the first one bit-for-bit past the
+    // timing field.
+    let tiny_shape = "PATH 1 sasvi 2 0.5 nocache";
+    let big_shape = "PATH 1 sasvi 17 0.5 nocache";
+    const BIG_CLIENTS: usize = 2;
+    const BIG_REPS: usize = 3;
+    const TINY_CLIENTS: usize = 4;
+    const TINY_REPS: usize = 8;
+    let (tiny_canonical, _) = warm.job(tiny_shape);
+    assert!(!tiny_canonical.contains("error"), "tiny warm failed: {tiny_canonical}");
+    let mut tiny_lats: Vec<f64> = std::thread::scope(|scope| {
+        let big_handles: Vec<_> = (0..BIG_CLIENTS)
+            .map(|_| {
+                scope.spawn(move || {
+                    let mut cl = Client::connect(addr);
+                    for _ in 0..BIG_REPS {
+                        let (reply, _) = cl.job(big_shape);
+                        assert!(!reply.contains("error"), "big mixed job failed: {reply}");
+                    }
+                })
+            })
+            .collect();
+        let tiny_handles: Vec<_> = (0..TINY_CLIENTS)
+            .map(|_| {
+                let tiny_canonical = &tiny_canonical;
+                scope.spawn(move || {
+                    let mut cl = Client::connect(addr);
+                    let mut lats = Vec::with_capacity(TINY_REPS);
+                    for _ in 0..TINY_REPS {
+                        let (reply, dt) = cl.job(tiny_shape);
+                        assert_eq!(
+                            after_secs(&reply),
+                            after_secs(tiny_canonical),
+                            "tiny recomputation diverged under mixed load"
+                        );
+                        lats.push(dt);
+                    }
+                    lats
+                })
+            })
+            .collect();
+        for h in big_handles {
+            h.join().unwrap();
+        }
+        tiny_handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+    tiny_lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mixed_nocache_jobs = 1 + BIG_CLIENTS * BIG_REPS + TINY_CLIENTS * TINY_REPS;
+
     let metrics = warm.roundtrip("METRICS");
     let hits = metric_value(&metrics, "sasvi_path_cache_hits_total");
     let misses = metric_value(&metrics, "sasvi_path_cache_misses_total");
@@ -177,6 +234,7 @@ fn main() {
     let steps_saved = metric_value(&metrics, "sasvi_pool_shard_steps_saved_total");
     let bypass = metric_value(&metrics, "sasvi_path_cache_bypass_total");
     let status_entries = metric_value(&metrics, "sasvi_pool_status_entries");
+    let par_steals = metric_value(&metrics, "sasvi_par_steals_total");
     warm.roundtrip("QUIT");
     stop.store(true, Ordering::Relaxed);
     server_thread.join().unwrap();
@@ -184,7 +242,11 @@ fn main() {
     // the cache must have cut measurable work under the storm
     assert!(hits > 0.0, "expected shard-cache hits, got {hits}");
     assert!(steps_saved > 0.0, "expected sasvi_pool_shard_steps_saved_total > 0");
-    assert_eq!(bypass, 4.0, "the four nocache jobs bypass the cache");
+    assert_eq!(
+        bypass,
+        (4 + mixed_nocache_jobs) as f64,
+        "every nocache job (baseline + mixed phase) bypasses the cache"
+    );
     assert_eq!(status_entries, 0.0, "the status map must drain once every RESULT is in");
 
     let mut lats: Vec<f64> = joined.iter().flat_map(|(l, _)| l.iter().copied()).collect();
@@ -209,6 +271,20 @@ fn main() {
         p95 * 1e3,
         p99 * 1e3
     );
+    let (tiny_p50, tiny_p95, tiny_p99) = (
+        percentile(&tiny_lats, 0.50),
+        percentile(&tiny_lats, 0.95),
+        percentile(&tiny_lats, 0.99),
+    );
+    println!(
+        "tiny-job latency under mixed load ms: p50 {:.2}  p95 {:.2}  p99 {:.2} \
+         ({} tiny solves beside {} big solves; {par_steals} blocks stolen)",
+        tiny_p50 * 1e3,
+        tiny_p95 * 1e3,
+        tiny_p99 * 1e3,
+        TINY_CLIENTS * TINY_REPS,
+        BIG_CLIENTS * BIG_REPS,
+    );
     println!(
         "shard cache: {hits} hits / {misses} misses / {evictions} evictions, \
          {steps_saved} path steps served from cache"
@@ -224,6 +300,12 @@ fn main() {
         .num("throughput_jobs_per_sec", throughput)
         .num("latency_mean_ms", mean * 1e3)
         .arr("latency_pcts_ms", &[p50 * 1e3, p95 * 1e3, p99 * 1e3])
+        .num("latency_p95_ms", p95 * 1e3)
+        .num("latency_p99_ms", p99 * 1e3)
+        .num("tiny_latency_p50_ms", tiny_p50 * 1e3)
+        .num("tiny_latency_p95_ms", tiny_p95 * 1e3)
+        .num("tiny_latency_p99_ms", tiny_p99 * 1e3)
+        .num("par_steals", par_steals)
         .num("cache_hits", hits)
         .num("cache_misses", misses)
         .num("cache_evictions", evictions)

@@ -34,7 +34,7 @@
 //! Lasso.
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -47,6 +47,7 @@ use crate::coordinator::logistic::{
 use crate::coordinator::path::{run_path_segment, PathOptions, PathResult};
 use crate::coordinator::planner::PathPlan;
 use crate::data::Dataset;
+use crate::linalg::par;
 use crate::logistic::{LogiRule, LogisticProblem};
 use crate::obs;
 use crate::screening::RuleKind;
@@ -244,6 +245,12 @@ struct Shared {
     evict: AtomicBool,
     cache: ShardCache,
     retain_cap: usize,
+    /// jobs currently executing on workers — the denominator of the fair
+    /// lane lease ([`par::fair_lease`]) each worker takes around its solve,
+    /// so `serve --workers W` with `threads` lanes never *requests*
+    /// W x threads lanes at once; the steal scheduler rebalances within
+    /// the leases when some jobs go idle
+    running: AtomicUsize,
 }
 
 impl Shared {
@@ -340,6 +347,7 @@ impl JobPool {
             evict: AtomicBool::new(false),
             cache: ShardCache::new(cache_cap),
             retain_cap,
+            running: AtomicUsize::new(0),
         });
         let handles = (0..workers)
             .map(|_| {
@@ -690,9 +698,22 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Msg>>>, shared: Arc<Shared>) {
                 obs::metrics::gauge_add("sasvi_pool_jobs_in_flight", 1.0);
                 obs::trace::begin_job_capture();
                 let t0 = Instant::now();
+                // Fair lane lease: with J jobs mid-solve, each *requests*
+                // ~threads()/J lanes from the steal scheduler instead of
+                // all of them. Purely a scheduling cap — per-lane results
+                // are bit-identical at any lane count by the determinism
+                // contract, so leases can never change a reply.
+                let concurrent = shared.running.fetch_add(1, Ordering::SeqCst) + 1;
+                let lease = par::fair_lease(concurrent);
+                obs::metrics::observe(
+                    "sasvi_pool_lane_lease",
+                    lease as f64,
+                    obs::metrics::LANE_BUCKETS,
+                );
                 let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    run_job(&spec, &shared.cache)
+                    par::with_lane_budget(lease, || run_job(&spec, &shared.cache))
                 }));
+                shared.running.fetch_sub(1, Ordering::SeqCst);
                 obs::metrics::observe(
                     "sasvi_pool_run_seconds",
                     t0.elapsed().as_secs_f64(),

@@ -34,23 +34,48 @@
 //! statistics pass, column norms/normalization, all four rules' batched
 //! per-feature evaluation, the KKT correction sweep, the Theorem-4
 //! sure-removal batch — dispatches through [`linalg::par`]: a persistent
-//! hand-rolled worker pool (std threads + a channel; no rayon) spawned
-//! once per process and shared by both storage backends.
+//! hand-rolled **work-stealing** lane pool (std threads + a shared
+//! dispatch registry; no rayon) spawned once per process and shared by
+//! both storage backends. Every in-flight dispatch registers its
+//! `BlockJob` in the registry; idle helper lanes pick the *least-served*
+//! live job (ties broken newest-first) and steal fixed-size blocks from
+//! it, re-evaluating that choice at block granularity whenever a dispatch
+//! is registered — so a 4-column re-screen issued mid-flight gets helper
+//! lanes within one block's latency instead of queueing behind a
+//! 10^4-column `t_matvec`'s backlog. The dispatching thread always
+//! participates as a lane of its own job (guaranteed progress, worst case
+//! serial), and a panicking block kernel stops only its own job and
+//! re-raises on its own caller — concurrent dispatches are untouched.
 //!
 //! **The determinism contract:** parallel results are *bit-identical* to
-//! serial execution at every thread count. Work is cut into fixed-size
-//! column blocks (never derived from the thread count), each block runs
-//! the backends' serial kernels, and block outputs land in disjoint output
-//! regions or are folded in block order — never atomically-accumulated
-//! floats. `rust/tests/determinism.rs` pins this down for
-//! `threads ∈ {1, 2, 4, 8}` on both backends.
+//! serial execution at every thread count and under any schedule. Work is
+//! cut into fixed-size column blocks (never derived from the thread
+//! count), each block runs the backends' serial kernels, and block
+//! outputs land in disjoint output regions or are folded in block order —
+//! never atomically-accumulated floats. Stealing therefore changes only
+//! *which lane* runs a block, a quantity no output bit depends on.
+//! `rust/tests/determinism.rs` pins this down for `threads ∈ {1, 2, 4,
+//! 8}` on both backends, including a concurrent-dispatch battery
+//! (overlapping dispatches and path solves from many threads), and
+//! `rust/tests/pool_fairness.rs` pins the no-starvation and
+//! panic-isolation guarantees.
 //!
 //! The thread count is one process-wide knob ([`linalg::par::set_threads`])
 //! exposed as the CLI `--threads` flag (any command), the
 //! `experiment.threads` config key, the optional trailing argument of the
 //! server's `GEN` command, and the `SASVI_THREADS` env var; the default is
-//! all available cores. `benches/parallel.rs` measures the serial-vs-pool
-//! scaling of the statistics pass and the full-rule screens.
+//! all available cores. Per thread, a lane *lease*
+//! ([`linalg::par::with_lane_budget`]) caps what a dispatch may request:
+//! the job pool's workers wrap each solve in a fair share
+//! ([`linalg::par::fair_lease`]) of the configured width, so `serve
+//! --workers W` composes with the block engine instead of
+//! oversubscribing it W-fold. Scheduler visibility rides the [`obs`]
+//! registry: `sasvi_par_steals_total` counts blocks run by helper lanes
+//! and the `sasvi_par_dispatch_wait_seconds` histogram records how long
+//! each dispatch waited for its first helper. `benches/parallel.rs`
+//! measures serial-vs-pool scaling plus tiny-dispatch latency under a
+//! full-width storm; `benches/server.rs` records tiny-job p95/p99 under
+//! mixed solve load.
 //!
 //! ## Dynamic screening
 //!

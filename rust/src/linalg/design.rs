@@ -127,30 +127,30 @@ impl DesignMatrix {
 
     /// `y = X * beta` (row-parallel for dense storage).
     pub fn matvec(&self, beta: &[f64], out: &mut [f64]) {
-        par::matvec_with(par::global(), par::threads(), self, beta, out);
+        par::matvec_with(par::global(), par::dispatch_lanes(), self, beta, out);
     }
 
     /// `out[j] = <x_j, v>` for every column (the statistics pass), run in
     /// parallel column blocks; bit-identical to the serial backends.
     pub fn t_matvec(&self, v: &[f64], out: &mut [f64]) {
-        par::t_matvec_with(par::global(), par::threads(), self, v, out);
+        par::t_matvec_with(par::global(), par::dispatch_lanes(), self, v, out);
     }
 
     /// Active-set variant of [`DesignMatrix::t_matvec`]. `idx` must be
     /// duplicate-free (active sets are).
     pub fn t_matvec_subset(&self, v: &[f64], idx: &[usize], out: &mut [f64]) {
-        par::t_matvec_subset_with(par::global(), par::threads(), self, v, idx, out);
+        par::t_matvec_subset_with(par::global(), par::dispatch_lanes(), self, v, idx, out);
     }
 
     /// Squared norms of every column (parallel column blocks).
     pub fn col_norms_sq(&self) -> Vec<f64> {
-        par::col_norms_sq_with(par::global(), par::threads(), self)
+        par::col_norms_sq_with(par::global(), par::dispatch_lanes(), self)
     }
 
     /// Normalize columns in place to unit norm; returns the original norms
     /// (parallel column blocks, bit-identical to the serial backends).
     pub fn normalize_columns(&mut self) -> Vec<f64> {
-        par::normalize_columns_with(par::global(), par::threads(), self)
+        par::normalize_columns_with(par::global(), par::dispatch_lanes(), self)
     }
 
     pub fn fro_norm_sq(&self) -> f64 {
@@ -187,7 +187,7 @@ impl DesignMatrix {
     /// (the compaction step of the FISTA path solver), copied in parallel
     /// column blocks.
     pub fn gather_columns(&self, idx: &[usize]) -> DenseMatrix {
-        par::gather_columns_with(par::global(), par::threads(), self, idx)
+        par::gather_columns_with(par::global(), par::dispatch_lanes(), self, idx)
     }
 
     /// Dense expansion (copies for a dense backend).

@@ -1,38 +1,74 @@
-//! Parallel column-block engine: a hand-rolled persistent worker pool plus
+//! Parallel column-block engine: a work-stealing helper-lane scheduler plus
 //! the block kernels the screening hot path runs on it.
 //!
 //! Design constraints, in priority order:
 //!
 //! 1. **Determinism.** Parallel results are *bit-identical* to serial
-//!    execution at every thread count. Work is split into fixed-size column
-//!    blocks ([`COL_BLOCK`] — independent of the thread count), each block
-//!    runs the same serial kernel the storage backends expose
-//!    (`t_matvec_block`, `col_norms_sq_block`, ...), and block outputs
-//!    either land in disjoint regions of one output buffer or are returned
-//!    per-block and folded in block order ([`ThreadPool::map_blocks`]).
-//!    There are no atomically-accumulated floats anywhere, so scheduling
-//!    can never reorder a floating-point reduction.
-//! 2. **No dependencies.** rayon is unavailable offline; this is std
-//!    threads + a channel, the same substrate as the job-level
+//!    execution at every thread count and under any schedule. Work is split
+//!    into fixed-size column blocks ([`COL_BLOCK`] — independent of the
+//!    thread count), each block runs the same serial kernel the storage
+//!    backends expose (`t_matvec_block`, `col_norms_sq_block`, ...), and
+//!    block outputs either land in disjoint regions of one output buffer
+//!    or are returned per-block and folded in block order
+//!    ([`ThreadPool::map_blocks`]). There are no atomically-accumulated
+//!    floats anywhere, so *which lane* runs a block — the only thing the
+//!    scheduler ever decides — can never change a bit of the result.
+//! 2. **No cross-job head-of-line blocking.** Helper lanes are not bound
+//!    to a dispatch up front. Every in-flight dispatch registers a
+//!    [`BlockJob`] in a shared registry, and each idle helper picks the
+//!    *least-served* live job (ties broken newest-first) and steals blocks
+//!    from it, re-evaluating its choice at block granularity whenever the
+//!    registry changes. A 4-column re-screen issued while a 10^4-column
+//!    `t_matvec` is mid-flight therefore gets helper lanes within one
+//!    block's latency instead of queueing behind the big job's backlog.
+//! 3. **No dependencies.** rayon is unavailable offline; this is std
+//!    threads + mutex/condvar, the same substrate as the job-level
 //!    [`crate::coordinator::pool`].
-//! 3. **One pool per process.** Workers are spawned lazily once
-//!    ([`global`]) and live for the process; a dispatch costs one channel
-//!    send per helper lane. The *effective* parallelism is a runtime knob
-//!    ([`set_threads`], the `SASVI_THREADS` env var, CLI `--threads`,
-//!    config `experiment.threads`, server `GEN ... [threads]`) consulted
-//!    per call, so it can be retuned without respawning anything.
+//! 4. **One pool per process.** Helpers are spawned lazily once
+//!    ([`global`]) and live for the process. The *effective* parallelism
+//!    is a runtime knob ([`set_threads`], the `SASVI_THREADS` env var, CLI
+//!    `--threads`, config `experiment.threads`, server `GEN ... [threads]`)
+//!    consulted per dispatch, optionally capped per thread by a lane
+//!    *lease* ([`with_lane_budget`]) so concurrent path jobs share the
+//!    lanes instead of each requesting all of them.
 //!
-//! The calling thread always participates as one lane, so a dispatch can
-//! never deadlock even when every helper is busy with another caller's
-//! blocks — at worst it degrades to serial execution plus queue latency.
+//! The calling thread always participates as one lane **of its own
+//! dispatch only**, so a dispatch can never deadlock or starve even when
+//! every helper is serving other jobs — at worst it degrades to serial
+//! execution. Helpers never run more than [`BlockJob::max_helpers`] strong
+//! on one job, so a lane budget of 1 means strictly serial execution.
+//!
+//! **Why determinism survives scheduling:** the registry decides *where*
+//! lanes go, never *what* a block computes or *where* its output lands.
+//! Block boundaries are a pure function of `(n, block)`; each block index
+//! is claimed exactly once via an atomic cursor; outputs are disjoint per
+//! block or folded in block order by the dispatcher. Stealing reshuffles
+//! the lane→block assignment only — a quantity no output bit depends on.
+//!
+//! **Panic containment:** a panicking block kernel stops further claims on
+//! *its own* job only, is captured into that job's payload slot, and is
+//! re-raised on the dispatching thread after every attached lane has left
+//! the job. Concurrent dispatches on other jobs keep their helpers and
+//! never observe the panic; the scheduler itself holds no lock while a
+//! kernel runs, so nothing gets poisoned. (The old single-queue design's
+//! `expect("sasvi-par pool disconnected")` send path is gone with the
+//! queue itself: registration is a registry push, which cannot fail.)
+//!
+//! Observability: helpers count stolen blocks into
+//! `sasvi_par_steals_total`, and every multi-lane dispatch records how
+//! long it waited for its first helper (or, if none ever came, its whole
+//! duration) in the `sasvi_par_dispatch_wait_seconds` histogram — the
+//! direct measurement of scheduler-induced queueing.
 
+use std::cell::Cell;
 use std::ops::Range;
 use std::panic::AssertUnwindSafe;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::mpsc::Sender;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Instant;
 
 use crate::linalg::{DenseMatrix, DesignMatrix};
+use crate::obs;
 
 /// Columns per parallel block. Fixed (never derived from the thread count)
 /// so the block decomposition — and therefore every result bit — is
@@ -48,36 +84,145 @@ pub const ROW_BLOCK: usize = 1024;
 /// parameter).
 pub const MAX_THREADS: usize = 256;
 
-type Task = Box<dyn FnOnce() + Send + 'static>;
-
-/// A persistent pool of helper threads executing block ranges.
+/// Shared state of one in-flight `for_blocks` dispatch, registered in the
+/// scheduler so helper lanes can steal blocks from it.
 ///
-/// `lanes` is the *total* parallelism including the calling thread, so
-/// `ThreadPool::new(1)` spawns nothing and runs every dispatch inline —
-/// which is also the bit-exact reference the determinism tests compare
-/// against.
-pub struct ThreadPool {
-    tx: Mutex<Sender<Task>>,
-    lanes: usize,
-}
-
-/// Shared state of one `for_blocks` dispatch. `remaining` counts *lanes*
-/// (not blocks): the dispatcher returns only after every lane has exited,
-/// which is what makes handing lanes a reference to a stack closure sound.
+/// Lifetime-soundness invariant (`f` borrows the dispatcher's stack): a
+/// helper may only touch this job between *attaching* and *detaching*, and
+/// it may only attach while the job is still in the registry — both under
+/// the registry lock. The dispatcher deregisters the job and then waits for
+/// `attached` to drain before returning or unwinding, so no helper can
+/// observe `f` after the dispatch frame dies.
 struct BlockJob {
+    /// block claim cursor; each fetch_add hands out one block exactly once
     next: AtomicUsize,
     n: usize,
     block: usize,
     nblocks: usize,
+    /// helper-lane budget: the dispatch's lane count minus the caller
+    max_helpers: usize,
     panicked: AtomicBool,
     /// first panic payload, re-raised on the dispatching thread
     payload: Mutex<Option<Box<dyn std::any::Any + Send>>>,
-    remaining: Mutex<usize>,
-    done: Condvar,
+    /// helpers currently attached + when the first one arrived
+    attached: Mutex<AttachState>,
+    /// signalled by the last detaching helper; the dispatcher's completion
+    /// wait blocks on it
+    detached: Condvar,
+    /// registration time, for the dispatch-wait histogram
+    registered: Instant,
     f: &'static (dyn Fn(usize, Range<usize>) + Sync),
 }
 
-fn run_lane(job: &BlockJob) {
+#[derive(Default)]
+struct AttachState {
+    /// helpers currently inside the job (the caller is not counted)
+    helpers: usize,
+    /// seconds from registration to the first helper attach, if any came
+    first_join_secs: Option<f64>,
+}
+
+impl BlockJob {
+    /// Can a helper still usefully join? (Racy by nature — re-checked
+    /// under the job lock in [`try_attach`].)
+    fn steal_worthy(&self) -> bool {
+        !self.panicked.load(Ordering::Relaxed)
+            && self.next.load(Ordering::Relaxed) < self.nblocks
+    }
+}
+
+/// The live-dispatch registry all helpers of one pool serve from.
+struct Registry {
+    /// in-flight jobs, registration order (oldest first)
+    jobs: Vec<Arc<BlockJob>>,
+    shutdown: bool,
+}
+
+/// One pool's scheduler: the registry, the helpers' wakeup condvar, and a
+/// generation counter bumped on every registration so helpers re-evaluate
+/// their job choice at block granularity.
+struct Scheduler {
+    registry: Mutex<Registry>,
+    work_avail: Condvar,
+    generation: AtomicU64,
+    /// blocks executed by helper lanes (stolen work), for tests; the
+    /// process-global mirror is `sasvi_par_steals_total`
+    steals: AtomicU64,
+}
+
+impl Scheduler {
+    /// Pick the least-served eligible job (ties → newest) and attach to
+    /// it. Called with the registry lock held, which is what makes the
+    /// attach atomic with respect to the dispatcher's deregistration.
+    /// Returns `None` when no job can take a helper right now.
+    fn pick_and_attach(&self, reg: &Registry) -> Option<Arc<BlockJob>> {
+        loop {
+            let mut best: Option<(&Arc<BlockJob>, usize)> = None;
+            for job in reg.jobs.iter().rev() {
+                if !job.steal_worthy() {
+                    continue;
+                }
+                let helpers = job.attached.lock().unwrap().helpers;
+                if helpers >= job.max_helpers {
+                    continue;
+                }
+                // strict `<` keeps the first-seen (newest) job on ties
+                let better = match best {
+                    None => true,
+                    Some((_, h)) => helpers < h,
+                };
+                if better {
+                    best = Some((job, helpers));
+                    if helpers == 0 {
+                        break; // an unserved job cannot be beaten
+                    }
+                }
+            }
+            let (job, _) = best?;
+            if try_attach(job) {
+                return Some(Arc::clone(job));
+            }
+            // lost a race with exhaustion/panic on that job; it is now
+            // ineligible, so the rescan terminates
+        }
+    }
+}
+
+/// Attach a helper to `job`. Must be called with the registry lock held
+/// and the job still registered. Fails if the job meanwhile panicked,
+/// ran out of blocks, or is at its helper budget.
+fn try_attach(job: &BlockJob) -> bool {
+    if !job.steal_worthy() {
+        return false;
+    }
+    let mut a = job.attached.lock().unwrap();
+    if a.helpers >= job.max_helpers {
+        return false;
+    }
+    a.helpers += 1;
+    if a.first_join_secs.is_none() {
+        a.first_join_secs = Some(job.registered.elapsed().as_secs_f64());
+    }
+    true
+}
+
+/// Detach a helper from `job`, waking the dispatcher if it was the last.
+fn detach(job: &BlockJob) {
+    let mut a = job.attached.lock().unwrap();
+    a.helpers -= 1;
+    let drained = a.helpers == 0;
+    drop(a);
+    if drained {
+        job.detached.notify_all();
+    }
+}
+
+/// Claim and run blocks of `job` until it is exhausted or panicked; as a
+/// helper (`reschedule = Some(..)`), also stop as soon as the registry
+/// generation moves, so the lane can re-decide where it is most useful.
+/// Returns the number of blocks this lane executed.
+fn run_blocks(job: &BlockJob, reschedule: Option<(&Scheduler, u64)>) -> usize {
+    let mut executed = 0usize;
     loop {
         if job.panicked.load(Ordering::Relaxed) {
             break;
@@ -97,12 +242,58 @@ fn run_lane(job: &BlockJob) {
             job.panicked.store(true, Ordering::Relaxed);
             break;
         }
+        executed += 1;
+        if let Some((sched, gen)) = reschedule {
+            if sched.generation.load(Ordering::Relaxed) != gen {
+                break;
+            }
+        }
     }
-    let mut left = job.remaining.lock().unwrap();
-    *left -= 1;
-    if *left == 0 {
-        job.done.notify_all();
+    executed
+}
+
+/// A helper lane: forever pick the job most in need, steal blocks from it,
+/// repeat. Exits when the owning pool shuts down.
+fn helper_loop(sched: Arc<Scheduler>) {
+    loop {
+        let job = {
+            let mut reg = sched.registry.lock().unwrap();
+            loop {
+                if reg.shutdown {
+                    return;
+                }
+                if let Some(job) = sched.pick_and_attach(&reg) {
+                    break job;
+                }
+                reg = sched.work_avail.wait(reg).unwrap();
+            }
+        };
+        let gen = sched.generation.load(Ordering::Relaxed);
+        let stolen = run_blocks(&job, Some((&sched, gen)));
+        if stolen > 0 {
+            sched.steals.fetch_add(stolen as u64, Ordering::Relaxed);
+            obs::metrics::counter_add("sasvi_par_steals_total", stolen as u64);
+        }
+        let still_live = job.steal_worthy();
+        detach(&job);
+        if still_live {
+            // this lane is moving on (registry changed) but the job could
+            // still use a helper — offer the freed slot to a parked lane
+            sched.work_avail.notify_one();
+        }
     }
+}
+
+/// A persistent pool of helper lanes serving block dispatches through a
+/// shared work-stealing registry.
+///
+/// `lanes` is the *total* parallelism including the calling thread, so
+/// `ThreadPool::new(1)` spawns nothing and runs every dispatch inline —
+/// which is also the bit-exact reference the determinism tests compare
+/// against.
+pub struct ThreadPool {
+    sched: Arc<Scheduler>,
+    lanes: usize,
 }
 
 impl ThreadPool {
@@ -110,27 +301,20 @@ impl ThreadPool {
     /// are spawned (the calling thread is the last lane).
     pub fn new(lanes: usize) -> Self {
         let lanes = lanes.clamp(1, MAX_THREADS);
-        let (tx, rx) = std::sync::mpsc::channel::<Task>();
-        let rx = Arc::new(Mutex::new(rx));
+        let sched = Arc::new(Scheduler {
+            registry: Mutex::new(Registry { jobs: Vec::new(), shutdown: false }),
+            work_avail: Condvar::new(),
+            generation: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
+        });
         for i in 0..lanes - 1 {
-            let rx = Arc::clone(&rx);
+            let sched = Arc::clone(&sched);
             std::thread::Builder::new()
                 .name(format!("sasvi-par-{i}"))
-                .spawn(move || loop {
-                    // Hold the lock only while receiving, never while
-                    // running a task.
-                    let task = {
-                        let guard = rx.lock().unwrap();
-                        guard.recv()
-                    };
-                    match task {
-                        Ok(t) => t(),
-                        Err(_) => break, // pool dropped
-                    }
-                })
+                .spawn(move || helper_loop(sched))
                 .expect("spawn sasvi-par worker");
         }
-        Self { tx: Mutex::new(tx), lanes }
+        Self { sched, lanes }
     }
 
     /// Total lanes (helper threads + the calling thread).
@@ -138,34 +322,46 @@ impl ThreadPool {
         self.lanes
     }
 
+    /// Blocks executed by helper lanes since the pool was created — i.e.
+    /// work the scheduler moved off dispatching threads. Tests assert on
+    /// this per pool; the process-wide mirror is the
+    /// `sasvi_par_steals_total` counter.
+    pub fn steal_count(&self) -> u64 {
+        self.sched.steals.load(Ordering::Relaxed)
+    }
+
     /// Run `f(block_index, column_range)` for every fixed-size block of
-    /// `0..n`, on up to `max_lanes` lanes. Blocks are claimed dynamically,
-    /// but `f` must be a pure function of the block it is given (writing
-    /// only to per-block-disjoint state), so the schedule can never change
-    /// the result. Blocks on `n = 0` are a no-op.
+    /// `0..n`, on up to `max_lanes` lanes (the caller plus stolen helper
+    /// lanes). Blocks are claimed dynamically, but `f` must be a pure
+    /// function of the block it is given (writing only to
+    /// per-block-disjoint state), so the schedule can never change the
+    /// result. Blocks on `n = 0` are a no-op.
     ///
-    /// Panics in `f` are contained: all lanes stop claiming blocks, the
-    /// dispatch completes, and the panic is re-raised on the caller.
+    /// Panics in `f` are contained to this dispatch: all of *its* lanes
+    /// stop claiming blocks, concurrent dispatches are untouched, and the
+    /// panic is re-raised on the caller once every helper has left.
     pub fn for_blocks<F>(&self, n: usize, block: usize, max_lanes: usize, f: F)
     where
         F: Fn(usize, Range<usize>) + Sync,
     {
         let block = block.max(1);
-        let nblocks = (n + block - 1) / block;
+        let nblocks = n.div_ceil(block);
         let lanes = self.lanes.min(max_lanes).min(nblocks).max(1);
         if lanes == 1 {
-            // Serial fast path: same blocks, same kernel, zero dispatch.
+            // Serial fast path: same blocks, same kernel, zero scheduling.
             for b in 0..nblocks {
                 f(b, b * block..((b + 1) * block).min(n));
             }
             return;
         }
         // Erase the closure's lifetime. SAFETY: this function does not
-        // return (or unwind) until `remaining` — which counts lanes, and
-        // which every lane decrements exactly once on exit — reaches zero,
-        // so no lane can observe `f` after it dies. A helper that dequeues
-        // its lane task late (after the blocks are exhausted) exits without
-        // ever touching `f`.
+        // return (or unwind) until the job is deregistered AND its
+        // attached-helper count has drained to zero. Helpers attach only
+        // under the registry lock while the job is registered, so after
+        // deregistration the attach set can only shrink; once it is empty
+        // no lane other than this one can ever call `f` again. A helper
+        // that still holds the `Arc<BlockJob>` after detaching may drop
+        // it, but dropping never dereferences `f`.
         let f_obj: &(dyn Fn(usize, Range<usize>) + Sync) = &f;
         let f_static: &'static (dyn Fn(usize, Range<usize>) + Sync) =
             unsafe { std::mem::transmute(f_obj) };
@@ -174,26 +370,44 @@ impl ThreadPool {
             n,
             block,
             nblocks,
+            max_helpers: lanes - 1,
             panicked: AtomicBool::new(false),
             payload: Mutex::new(None),
-            remaining: Mutex::new(lanes),
-            done: Condvar::new(),
+            attached: Mutex::new(AttachState::default()),
+            detached: Condvar::new(),
+            registered: Instant::now(),
             f: f_static,
         });
         {
-            let tx = self.tx.lock().unwrap();
-            for _ in 0..lanes - 1 {
-                let j = Arc::clone(&job);
-                tx.send(Box::new(move || run_lane(&j)))
-                    .expect("sasvi-par pool disconnected");
+            let mut reg = self.sched.registry.lock().unwrap();
+            reg.jobs.push(Arc::clone(&job));
+            // helpers re-pick at the next block boundary: a fresh job with
+            // zero helpers outranks any half-served one
+            self.sched.generation.fetch_add(1, Ordering::Relaxed);
+        }
+        self.sched.work_avail.notify_all();
+        // the caller is a lane of its own dispatch (and only its own):
+        // guaranteed progress even when every helper serves other jobs
+        run_blocks(&job, None);
+        {
+            let mut reg = self.sched.registry.lock().unwrap();
+            reg.jobs.retain(|j| !Arc::ptr_eq(j, &job));
+        }
+        // completion wait: every attached helper must leave before `f`
+        // (and the caller's stack) may die
+        let wait_secs = {
+            let mut a = job.attached.lock().unwrap();
+            while a.helpers > 0 {
+                a = job.detached.wait(a).unwrap();
             }
-        }
-        run_lane(&job);
-        let mut left = job.remaining.lock().unwrap();
-        while *left > 0 {
-            left = job.done.wait(left).unwrap();
-        }
-        drop(left);
+            a.first_join_secs
+                .unwrap_or_else(|| job.registered.elapsed().as_secs_f64())
+        };
+        obs::metrics::observe(
+            "sasvi_par_dispatch_wait_seconds",
+            wait_secs,
+            obs::metrics::LATENCY_BUCKETS,
+        );
         if job.panicked.load(Ordering::Relaxed) {
             // re-raise the block kernel's own panic on the dispatcher
             let payload = job
@@ -215,7 +429,7 @@ impl ThreadPool {
         F: Fn(usize, Range<usize>) -> T + Sync,
     {
         let block = block.max(1);
-        let nblocks = (n + block - 1) / block;
+        let nblocks = n.div_ceil(block);
         let mut slots: Vec<Option<T>> = Vec::with_capacity(nblocks);
         slots.resize_with(nblocks, || None);
         {
@@ -230,6 +444,15 @@ impl ThreadPool {
             .into_iter()
             .map(|s| s.expect("block result missing"))
             .collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        // No dispatch can be in flight here (dispatches borrow &self), so
+        // the registry is empty; helpers wake, see the flag, and exit.
+        self.sched.registry.lock().unwrap().shutdown = true;
+        self.sched.work_avail.notify_all();
     }
 }
 
@@ -255,10 +478,15 @@ impl<T> SendPtr<T> {
 }
 
 // ---------------------------------------------------------------------------
-// process-wide pool + effective-thread knob
+// process-wide pool + effective-thread knob + per-thread lane leases
 // ---------------------------------------------------------------------------
 
 static EFFECTIVE_THREADS: AtomicUsize = AtomicUsize::new(0); // 0 = unset
+
+thread_local! {
+    /// Per-thread lane lease; 0 = no override. See [`with_lane_budget`].
+    static LANE_BUDGET: Cell<usize> = const { Cell::new(0) };
+}
 
 /// Set the process-wide effective parallelism (clamped to
 /// `1..=MAX_THREADS`). Takes effect on the next dispatch; results are
@@ -274,6 +502,54 @@ pub fn threads() -> usize {
         0 => default_threads(),
         t => t,
     }
+}
+
+/// Run `f` with this thread's dispatches capped at `budget` total lanes
+/// (caller included; clamped to at least 1 = serial). This is the per-job
+/// lane *lease* the [`crate::coordinator::pool`] workers use so that N
+/// concurrent path jobs request ~`threads()/N` lanes each instead of N
+/// full pools' worth — the steal scheduler then moves lanes between jobs
+/// dynamically within those caps. Restored on unwind; nests (innermost
+/// wins); results are unchanged by construction.
+pub fn with_lane_budget<R>(budget: usize, f: impl FnOnce() -> R) -> R {
+    struct Reset(usize);
+    impl Drop for Reset {
+        fn drop(&mut self) {
+            LANE_BUDGET.with(|c| c.set(self.0));
+        }
+    }
+    let prev = LANE_BUDGET.with(|c| c.get());
+    LANE_BUDGET.with(|c| c.set(budget.clamp(1, MAX_THREADS)));
+    let _reset = Reset(prev);
+    f()
+}
+
+/// This thread's lane lease, if one is in effect.
+pub fn lane_budget() -> Option<usize> {
+    match LANE_BUDGET.with(|c| c.get()) {
+        0 => None,
+        b => Some(b),
+    }
+}
+
+/// The lane count a dispatch issued from this thread will request: the
+/// process-wide [`threads`] knob capped by the thread's lease. This is
+/// what every `DesignMatrix` kernel and [`for_columns`]/[`map_columns`]
+/// pass as `max_lanes`.
+pub fn dispatch_lanes() -> usize {
+    let t = threads();
+    match LANE_BUDGET.with(|c| c.get()) {
+        0 => t,
+        b => t.min(b),
+    }
+}
+
+/// A fair lane lease for one of `concurrent` jobs running side by side:
+/// an even split of the configured width, never below 1 (the caller lane).
+/// The split caps *requests*; the steal scheduler still rebalances lanes
+/// dynamically when some jobs have no blocks in flight.
+pub fn fair_lease(concurrent: usize) -> usize {
+    (threads() / concurrent.max(1)).max(1)
 }
 
 /// The env/hardware default, computed once — `threads()` sits on the hot
@@ -331,22 +607,22 @@ pub(crate) fn test_knob_guard() -> std::sync::MutexGuard<'static, ()> {
 }
 
 /// Dispatch fixed-size column blocks of `0..n` on the global pool at the
-/// configured effective parallelism.
+/// configured effective parallelism (lease-capped per thread).
 pub fn for_columns<F>(n: usize, f: F)
 where
     F: Fn(usize, Range<usize>) + Sync,
 {
-    global().for_blocks(n, COL_BLOCK, threads(), f);
+    global().for_blocks(n, COL_BLOCK, dispatch_lanes(), f);
 }
 
 /// [`ThreadPool::map_blocks`] on the global pool at the configured
-/// effective parallelism.
+/// effective parallelism (lease-capped per thread).
 pub fn map_columns<T, F>(n: usize, f: F) -> Vec<T>
 where
     T: Send,
     F: Fn(usize, Range<usize>) -> T + Sync,
 {
-    global().map_blocks(n, COL_BLOCK, threads(), f)
+    global().map_blocks(n, COL_BLOCK, dispatch_lanes(), f)
 }
 
 /// Parallel fill of `out[j] = f(j)` — the shape every screening rule's
@@ -436,7 +712,8 @@ where
 // ---------------------------------------------------------------------------
 // design-matrix kernels (the `_with` variants take an explicit pool + lane
 // budget so the determinism tests can drive pools of any width; the
-// `DesignMatrix` methods call them on the global pool)
+// `DesignMatrix` methods call them on the global pool at
+// [`dispatch_lanes`])
 // ---------------------------------------------------------------------------
 
 /// Parallel `out[j] = <x_j, v>` over column blocks — the screening
@@ -626,6 +903,7 @@ pub fn gather_columns_with(
 mod tests {
     use super::*;
     use crate::linalg::CscMatrix;
+    use std::sync::atomic::AtomicU32;
 
     fn matrices(n: usize, p: usize) -> (DesignMatrix, DesignMatrix) {
         let dense = DenseMatrix::from_fn(n, p, |i, j| {
@@ -756,6 +1034,118 @@ mod tests {
         // pool is still usable afterwards
         let sums: Vec<usize> = pool.map_blocks(100, 10, 4, |_, r| r.len());
         assert_eq!(sums.iter().sum::<usize>(), 100);
+    }
+
+    #[test]
+    fn panic_in_one_dispatch_leaves_concurrent_dispatch_untouched() {
+        // Panic containment under concurrency: dispatch A's kernel panics
+        // while dispatch B runs on the same scheduler. A's caller gets the
+        // panic; B completes with a correct result; the pool stays usable.
+        let pool = ThreadPool::new(4);
+        std::thread::scope(|scope| {
+            let a = scope.spawn(|| {
+                std::panic::catch_unwind(AssertUnwindSafe(|| {
+                    pool.for_blocks(4000, 8, 4, |b, _| {
+                        std::thread::sleep(std::time::Duration::from_micros(100));
+                        if b == 40 {
+                            panic!("contained boom");
+                        }
+                    });
+                }))
+            });
+            let b = scope.spawn(|| {
+                let mut out = vec![0u32; 200];
+                let base = SendPtr(out.as_mut_ptr());
+                pool.for_blocks(200, 4, 4, |_, r| {
+                    std::thread::sleep(std::time::Duration::from_micros(100));
+                    for i in r {
+                        unsafe { *base.get().add(i) = (i * 3 + 1) as u32 };
+                    }
+                });
+                out
+            });
+            let a_res = a.join().expect("dispatcher thread itself must not die");
+            assert!(a_res.is_err(), "panic must re-raise on its own caller");
+            let b_out = b.join().expect("concurrent dispatch poisoned by foreign panic");
+            for (i, v) in b_out.iter().enumerate() {
+                assert_eq!(*v, (i * 3 + 1) as u32, "index {i}");
+            }
+        });
+        // scheduler is intact: a fresh dispatch still completes
+        let sums: Vec<usize> = pool.map_blocks(100, 10, 4, |_, r| r.len());
+        assert_eq!(sums.iter().sum::<usize>(), 100);
+    }
+
+    #[test]
+    fn helpers_steal_blocks_from_a_foreign_dispatch() {
+        // A dispatch with enough slow blocks must get helper-lane service:
+        // at least one block runs on a thread that is not the caller.
+        let pool = ThreadPool::new(4);
+        let caller = std::thread::current().id();
+        let foreign = AtomicU32::new(0);
+        pool.for_blocks(64, 1, 4, |_, _| {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            if std::thread::current().id() != caller {
+                foreign.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(
+            foreign.load(Ordering::Relaxed) > 0,
+            "no helper lane ever stole a block"
+        );
+        assert!(pool.steal_count() > 0, "steal counter did not move");
+    }
+
+    #[test]
+    fn concurrent_dispatches_all_complete_correctly() {
+        // Many threads hammering one scheduler with overlapping dispatches
+        // of different sizes: every output must be exact.
+        let pool = ThreadPool::new(4);
+        std::thread::scope(|scope| {
+            for t in 0..6usize {
+                let pool = &pool;
+                scope.spawn(move || {
+                    for round in 0..20usize {
+                        let n = 37 + 101 * ((t + round) % 5);
+                        let out = pool.map_blocks(n, 8, 4, |_, r| {
+                            r.map(|i| i * 2 + t).sum::<usize>()
+                        });
+                        let got: usize = out.into_iter().sum();
+                        let want: usize = (0..n).map(|i| i * 2 + t).sum();
+                        assert_eq!(got, want, "thread {t} round {round}");
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn lane_budget_nests_and_restores_on_unwind() {
+        assert_eq!(lane_budget(), None);
+        with_lane_budget(3, || {
+            assert_eq!(lane_budget(), Some(3));
+            with_lane_budget(1, || assert_eq!(lane_budget(), Some(1)));
+            assert_eq!(lane_budget(), Some(3));
+            assert!(dispatch_lanes() <= 3);
+        });
+        assert_eq!(lane_budget(), None);
+        let caught = std::panic::catch_unwind(|| {
+            with_lane_budget(2, || panic!("unwind through the lease"));
+        });
+        assert!(caught.is_err());
+        assert_eq!(lane_budget(), None, "lease must restore on unwind");
+    }
+
+    #[test]
+    fn fair_lease_splits_the_width() {
+        let _guard = test_knob_guard();
+        let before = threads();
+        set_threads(8);
+        assert_eq!(fair_lease(1), 8);
+        assert_eq!(fair_lease(2), 4);
+        assert_eq!(fair_lease(3), 2);
+        assert_eq!(fair_lease(100), 1, "never below the caller lane");
+        set_threads(before.max(1));
     }
 
     #[test]

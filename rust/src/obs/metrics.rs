@@ -30,6 +30,9 @@ pub const GAP_BUCKETS: &[f64] = &[
     1e-12, 1e-10, 1e-8, 1e-6, 1e-4, 1e-2, 1.0, 1e2, 1e4,
 ];
 
+/// Lane-count buckets — powers of two up to [`crate::linalg::par::MAX_THREADS`].
+pub const LANE_BUCKETS: &[f64] = &[1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0];
+
 #[derive(Clone)]
 struct Hist {
     edges: &'static [f64],

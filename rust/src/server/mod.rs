@@ -69,6 +69,29 @@
 //! Results are bit-identical at every thread count (the pool's determinism
 //! contract), so the knob only trades wall-clock.
 //!
+//! ## Lane scheduling across concurrent jobs
+//!
+//! Concurrent path jobs of wildly different sizes share one process-wide
+//! block engine, scheduled by **work stealing**: every whole-matrix pass
+//! registers its dispatch in a shared registry, and idle helper lanes
+//! serve the least-served live dispatch (ties to the newest),
+//! re-deciding at block granularity — so a tiny re-screen submitted while
+//! a huge job's statistics pass is mid-flight is served within one
+//! block's latency rather than queueing behind it (no head-of-line
+//! blocking). On top, each pool worker wraps its solve in a *fair lane
+//! lease* (`threads / running-jobs`, never below 1), so `serve --workers
+//! W` requests at most the configured width in aggregate instead of
+//! oversubscribing it W-fold; the steal scheduler rebalances lanes
+//! within those caps whenever a job goes idle. Determinism survives
+//! scheduling by construction — blocks are fixed-size with disjoint
+//! outputs or block-ordered folds, so which lane runs a block can never
+//! change a reply bit (`tests/determinism.rs` concurrent battery;
+//! fairness and panic isolation in `tests/pool_fairness.rs`). Scheduler
+//! telemetry rides `METRICS`: `sasvi_par_steals_total` (blocks run by
+//! helper lanes), the `sasvi_par_dispatch_wait_seconds` histogram
+//! (delay until a dispatch's first helper), and the
+//! `sasvi_pool_lane_lease` histogram (lease widths granted).
+//!
 //! `PATH` jobs default to the process-wide dynamic-screening and
 //! working-set settings ([`crate::screening::dynamic::process_default`] /
 //! [`crate::solver::working_set::process_default`], e.g. from `serve

@@ -14,6 +14,10 @@
 //!     prunes, expansions),
 //!   * a path with span tracing and the metrics registry live
 //!     (observability never perturbs results or event counts),
+//!   * the concurrent-dispatch battery: overlapping `for_blocks` /
+//!     `map_blocks` / path solves from many threads through the steal
+//!     scheduler, with and without lane leases — the schedule is the one
+//!     thing concurrency adds, and no result bit may depend on it,
 //!
 //! comparing against genuinely serial references (the storage backends'
 //! own loops, or the pool pinned to one lane) with `f64::to_bits`
@@ -602,6 +606,116 @@ fn observability_leaves_results_and_event_counts_bit_identical() {
         );
     }
     obs::trace::set_enabled(false);
+    par::set_threads(before);
+}
+
+/// The steal-scheduler battery (ISSUE 8): several threads issue
+/// overlapping `for_blocks` / `map_blocks` dispatches and whole path
+/// solves *concurrently* — on one shared explicit pool and on the global
+/// one — at every lane count, and every result must be bit-identical to
+/// its serial reference. Concurrency adds exactly one degree of freedom,
+/// the lane→block schedule (who steals which block from whom), and the
+/// contract says no output bit may depend on it: blocks are fixed-size,
+/// outputs disjoint or folded in block order.
+#[test]
+fn concurrent_dispatch_battery_bit_identical_to_serial() {
+    let _guard = THREAD_KNOB.lock().unwrap();
+    let before = par::threads();
+    let (dense, sparse) = pair();
+    let n = dense.nrows();
+    let p = dense.ncols();
+    let v: Vec<f64> = (0..n).map(|i| ((i * 11) % 9) as f64 * 0.41 - 1.3).collect();
+
+    // serial references, no pool involved
+    let mut ref_dense = vec![0.0; p];
+    let mut ref_sparse = vec![0.0; p];
+    match &dense {
+        DesignMatrix::Dense(m) => m.t_matvec(&v, &mut ref_dense),
+        _ => unreachable!(),
+    }
+    match &sparse {
+        DesignMatrix::Sparse(m) => m.t_matvec(&v, &mut ref_sparse),
+        _ => unreachable!(),
+    }
+    let ref_sums: Vec<f64> = (0..p)
+        .map(|j| (j as f64 * 0.003).sin())
+        .collect::<Vec<f64>>()
+        .chunks(par::COL_BLOCK)
+        .map(|c| c.iter().sum::<f64>())
+        .collect();
+    let ds = SyntheticSpec { n: 40, p: 500, nnz: 15, ..Default::default() }.generate(31);
+    let plan = PathPlan::linear_spaced(&ds, 6, 0.2);
+    par::set_threads(1);
+    let ref_path = run_path_keep_betas(&ds, &plan, RuleKind::Sasvi, PathOptions::default());
+
+    for lanes in LANES {
+        par::set_threads(lanes);
+        // an explicit pool shared by all dispatching threads, so their
+        // jobs genuinely coexist in one steal registry
+        let pool = ThreadPool::new(lanes);
+        std::thread::scope(|scope| {
+            for rep in 0..2usize {
+                // overlapping kernel dispatches on the shared pool
+                scope.spawn(|| {
+                    for _ in 0..4 {
+                        let mut out = vec![f64::NAN; p];
+                        par::t_matvec_with(&pool, lanes, &dense, &v, &mut out);
+                        assert_bits_eq(&out, &ref_dense, &format!("conc dense lanes {lanes}"));
+                    }
+                });
+                scope.spawn(|| {
+                    for _ in 0..4 {
+                        let mut out = vec![f64::NAN; p];
+                        par::t_matvec_with(&pool, lanes, &sparse, &v, &mut out);
+                        assert_bits_eq(&out, &ref_sparse, &format!("conc sparse lanes {lanes}"));
+                    }
+                });
+                // block-ordered fold racing the kernels on the same pool
+                scope.spawn(|| {
+                    for _ in 0..4 {
+                        let sums = pool.map_blocks(p, par::COL_BLOCK, lanes, |_, r| {
+                            r.map(|j| (j as f64 * 0.003).sin()).sum::<f64>()
+                        });
+                        assert_bits_eq(&sums, &ref_sums, &format!("conc fold lanes {lanes}"));
+                    }
+                });
+                // whole path solves on the *global* pool, concurrently with
+                // each other and with the explicit-pool traffic above —
+                // the multi-job serving scenario
+                let (ds, plan, ref_path) = (&ds, &plan, &ref_path);
+                scope.spawn(move || {
+                    let got =
+                        run_path_keep_betas(ds, plan, RuleKind::Sasvi, PathOptions::default());
+                    let a = ref_path.betas.as_ref().unwrap();
+                    let b = got.betas.as_ref().unwrap();
+                    for (k, (sa, sb)) in a.iter().zip(b.iter()).enumerate() {
+                        assert_bits_eq(
+                            sa,
+                            sb,
+                            &format!("conc path rep {rep} step {k} lanes {lanes}"),
+                        );
+                    }
+                });
+                // a lease-capped path solve: the coordinator pool wraps
+                // solves in lane budgets, which must never change a bit
+                let (ds2, plan2, ref2) = (&ds, &plan, &ref_path);
+                scope.spawn(move || {
+                    let got = par::with_lane_budget(2, || {
+                        run_path_keep_betas(ds2, plan2, RuleKind::Sasvi, PathOptions::default())
+                    });
+                    let a = ref2.betas.as_ref().unwrap();
+                    let b = got.betas.as_ref().unwrap();
+                    for (k, (sa, sb)) in a.iter().zip(b.iter()).enumerate() {
+                        assert_bits_eq(
+                            sa,
+                            sb,
+                            &format!("leased path rep {rep} step {k} lanes {lanes}"),
+                        );
+                    }
+                });
+            }
+        });
+    }
     par::set_threads(before);
 }
 

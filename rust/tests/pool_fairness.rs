@@ -1,0 +1,217 @@
+//! Fairness and starvation battery for the work-stealing block scheduler
+//! and the job pool above it.
+//!
+//! The scenario the scheduler exists for (ISSUE 8 / the ROADMAP's
+//! "remaining leg of serving at scale"): the paper's serving story —
+//! "one needs to try several regularization parameters" — means many
+//! concurrent path jobs of wildly different sizes share one process-wide
+//! lane pool. Under the old single-queue dispatch, a huge job's queued
+//! lane tasks could strand a tiny job's behind them (head-of-line
+//! blocking). With the steal registry, helper lanes re-pick the
+//! least-served live dispatch at block granularity, so tiny dispatches
+//! get helper service while a huge dispatch is mid-flight, no dispatch
+//! starves, and a panicking kernel poisons nothing but its own caller.
+//!
+//! These tests run in the CI threads matrix (`SASVI_THREADS` 1 and 4):
+//! every bound below must hold at any lane count, so wall-clock bounds
+//! are deliberately generous — the sharp assertions are structural
+//! (helper participation, termination, exactness), not timing.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use sasvi::coordinator::pool::{JobPool, JobSpec};
+use sasvi::coordinator::{PathOptions, PathPlan};
+use sasvi::data::synthetic::SyntheticSpec;
+use sasvi::data::Dataset;
+use sasvi::linalg::par::ThreadPool;
+use sasvi::screening::RuleKind;
+
+/// Wall-clock ceiling for work that should take milliseconds. Generous
+/// enough for a loaded 2-core CI runner; small enough that a genuine
+/// head-of-line stall (which scales with the *big* job's runtime) trips it.
+const TINY_BOUND: Duration = Duration::from_secs(10);
+
+fn dataset(seed: u64, n: usize, p: usize, nnz: usize) -> Arc<Dataset> {
+    Arc::new(SyntheticSpec { n, p, nnz, ..Default::default() }.generate(seed))
+}
+
+fn lasso_job(ds: &Arc<Dataset>, k: usize, tag: &str) -> JobSpec {
+    JobSpec::lasso(
+        Arc::clone(ds),
+        PathPlan::linear_spaced(ds, k, 0.1),
+        RuleKind::Sasvi,
+        PathOptions::default(),
+        tag,
+    )
+}
+
+/// Scheduler level: while one huge dispatch occupies the pool, a stream of
+/// tiny dispatches issued from another thread must (a) each finish inside
+/// a bound that does *not* scale with the huge job's runtime, and (b)
+/// collectively receive helper-lane service — blocks of tiny dispatches
+/// executed by threads other than their caller — which is exactly what the
+/// single-queue design could not deliver.
+#[test]
+fn tiny_dispatches_are_served_while_a_huge_dispatch_runs() {
+    let pool = ThreadPool::new(4);
+    let steals_before = pool.steal_count();
+
+    std::thread::scope(|scope| {
+        // the huge job: 600 blocks x ~1ms, enough runway that the tiny
+        // stream below runs entirely in its shadow
+        let big = scope.spawn(|| {
+            let done = AtomicU64::new(0);
+            pool.for_blocks(600, 1, 4, |_, _| {
+                std::thread::sleep(Duration::from_millis(1));
+                done.fetch_add(1, Ordering::Relaxed);
+            });
+            done.load(Ordering::Relaxed)
+        });
+        // give the huge dispatch a head start so its helpers are attached
+        std::thread::sleep(Duration::from_millis(30));
+
+        // the tiny stream: 25 dispatches x 12 blocks x ~1ms each
+        let caller = std::thread::current().id();
+        let mut foreign_blocks = 0u64;
+        for round in 0..25u64 {
+            let t0 = Instant::now();
+            let owners = pool.map_blocks(12, 1, 4, |_, _| {
+                std::thread::sleep(Duration::from_millis(1));
+                std::thread::current().id()
+            });
+            let dt = t0.elapsed();
+            assert!(
+                dt < TINY_BOUND,
+                "tiny dispatch {round} took {dt:?} — starved behind the huge job"
+            );
+            foreign_blocks +=
+                owners.iter().filter(|&&id| id != caller).count() as u64;
+        }
+        assert!(
+            foreign_blocks > 0,
+            "no tiny-dispatch block ever ran on a helper lane: \
+             the scheduler never rebalanced away from the huge job"
+        );
+
+        // the huge job was not sacrificed: every one of its blocks ran
+        assert_eq!(big.join().unwrap(), 600);
+    });
+
+    assert!(
+        pool.steal_count() > steals_before,
+        "steal counter must account helper-lane blocks"
+    );
+}
+
+/// A dispatch whose lane budget is 1 must run strictly serial — on the
+/// calling thread only — even with helpers idling. This is the lease
+/// floor `coordinator::pool` relies on under worker oversubscription.
+#[test]
+fn lane_budget_of_one_runs_on_the_caller_only() {
+    let pool = ThreadPool::new(4);
+    let caller = std::thread::current().id();
+    let owners = pool.map_blocks(40, 1, 1, |_, _| {
+        std::thread::sleep(Duration::from_micros(200));
+        std::thread::current().id()
+    });
+    assert!(owners.iter().all(|&id| id == caller));
+}
+
+/// Panic isolation under concurrency, via the public API only: dispatch
+/// A's kernel panics mid-flight while dispatch B shares the scheduler.
+/// The panic must re-raise on A's caller alone; B must complete with an
+/// exact result; the pool must stay usable. (The old single-queue pool's
+/// `expect("sasvi-par pool disconnected")` send path is structurally gone
+/// — registration is a registry push that cannot fail — so dispatching
+/// after a foreign panic must also never panic spuriously.)
+#[test]
+fn panicking_dispatch_poisons_nothing_but_its_own_caller() {
+    let pool = ThreadPool::new(4);
+    std::thread::scope(|scope| {
+        let a = scope.spawn(|| {
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                pool.for_blocks(2000, 4, 4, |b, _| {
+                    std::thread::sleep(Duration::from_micros(100));
+                    assert!(b != 30, "kernel bug under concurrency");
+                });
+            }))
+        });
+        let b = scope.spawn(|| {
+            let sums = pool.map_blocks(300, 4, 4, |_, r| {
+                std::thread::sleep(Duration::from_micros(100));
+                r.map(|i| i as u64).sum::<u64>()
+            });
+            sums.into_iter().sum::<u64>()
+        });
+        assert!(
+            a.join().expect("dispatcher thread must survive").is_err(),
+            "the kernel panic must re-raise on its own dispatcher"
+        );
+        assert_eq!(
+            b.join().expect("concurrent dispatch was poisoned"),
+            (0..300u64).sum::<u64>(),
+            "concurrent dispatch must still be exact"
+        );
+    });
+    // the scheduler survives: a fresh dispatch on the same pool completes
+    let total: usize = pool.map_blocks(500, 16, 4, |_, r| r.len()).into_iter().sum();
+    assert_eq!(total, 500);
+}
+
+/// Job-pool level: one long PATH job saturating a worker plus a stream of
+/// tiny jobs on the other. Every tiny job must terminate well before the
+/// long job's horizon (the lane leases keep the long job from hoarding the
+/// block engine), and every job — long one included — must terminate.
+#[test]
+fn tiny_jobs_terminate_promptly_beside_a_long_path_job() {
+    let big_ds = dataset(7, 60, 1500, 20);
+    let tiny_ds = dataset(8, 15, 40, 4);
+
+    let pool = JobPool::new(2, 32);
+    let long_id = pool.submit(lasso_job(&big_ds, 40, "long")).unwrap();
+
+    let mut tiny_waits = Vec::new();
+    for i in 0..10 {
+        let id = pool.submit(lasso_job(&tiny_ds, 2, &format!("tiny{i}"))).unwrap();
+        let t0 = Instant::now();
+        let res = pool.wait(id);
+        let dt = t0.elapsed();
+        assert!(res.is_some(), "tiny job {i} lost");
+        assert!(
+            res.unwrap().into_lasso().is_some(),
+            "tiny job {i} came back as the wrong workload"
+        );
+        assert!(dt < TINY_BOUND, "tiny job {i} starved: {dt:?}");
+        tiny_waits.push(dt);
+    }
+
+    let long_res = pool.wait(long_id);
+    assert!(long_res.is_some(), "the long job must terminate too");
+    assert_eq!(long_res.unwrap().into_lasso().unwrap().steps.len(), 40);
+    pool.shutdown();
+}
+
+/// Saturation: more concurrent jobs than workers than lanes. All must
+/// terminate, and the pool must drain — no deadlock between the fair
+/// lane leases and the steal scheduler under full oversubscription.
+#[test]
+fn oversubscribed_pool_drains_completely() {
+    let ds = dataset(11, 20, 80, 6);
+    let pool = JobPool::new(4, 8);
+    let specs: Vec<JobSpec> =
+        (0..12).map(|i| lasso_job(&ds, 4, &format!("j{i}"))).collect();
+    let t0 = Instant::now();
+    let results = pool.run_all(specs);
+    assert_eq!(results.len(), 12);
+    for (i, r) in results.into_iter().enumerate() {
+        let r = r.unwrap_or_else(|| panic!("job {i} failed or was lost"));
+        assert_eq!(r.into_lasso().unwrap().steps.len(), 4);
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(120),
+        "oversubscribed drain took implausibly long"
+    );
+    pool.shutdown();
+}

@@ -1,18 +1,49 @@
 #!/usr/bin/env python3
-"""Warn-only bench-trajectory diff.
+"""Bench-trajectory diff, with an optional CI regression gate.
 
 Compares the BENCH_*.json telemetry files of the current run against the
 previous run's `bench-telemetry` artifact and prints per-metric deltas.
 Numeric fields get old -> new with absolute and percent change; swings of
-10% or more are flagged. This is advisory only — wall-clock on shared CI
-runners is noisy — so the script always exits 0.
+10% or more are flagged. The full diff is always advisory — wall-clock on
+shared CI runners is noisy.
 
-Usage: bench_diff.py <previous-dir> <current-dir>
+With `--gate`, a curated set of tracked keys additionally *fails* the run
+(exit 1) when they regress by more than the threshold (default 15%).
+Tracked keys are the ones the repo treats as ratchets: tail latencies
+(p95/p99, lower is better), throughput and parallel speedup (higher is
+better), and the screening work-cut ratios (lower is better). Keys or
+files absent on either side are skipped, never failed — a brand-new bench
+has no baseline to regress against.
+
+Setting the environment variable BENCH_DIFF_OVERRIDE (to anything
+non-empty) downgrades gate failures to loud warnings — the escape hatch CI
+exposes via the `bench-regression-ok` PR label for intentional trade-offs.
+
+Usage: bench_diff.py [--gate] [--threshold PCT] <previous-dir> <current-dir>
 """
 
+import argparse
+import fnmatch
 import json
+import os
 import sys
 from pathlib import Path
+
+# (file name, key pattern, direction) — fnmatch patterns on both sides.
+# direction "lower" gates increases (latency, work ratios); "higher" gates
+# decreases (throughput, speedup).
+TRACKED = [
+    ("BENCH_server.json", "latency_p95_ms", "lower"),
+    ("BENCH_server.json", "latency_p99_ms", "lower"),
+    ("BENCH_server.json", "tiny_latency_p95_ms", "lower"),
+    ("BENCH_server.json", "tiny_latency_p99_ms", "lower"),
+    ("BENCH_server.json", "throughput_jobs_per_sec", "higher"),
+    ("BENCH_parallel.json", "tiny_storm_p95_ms", "lower"),
+    ("BENCH_parallel.json", "tiny_storm_p99_ms", "lower"),
+    ("BENCH_parallel.json", "dense_speedup_at_8", "higher"),
+    ("BENCH_working_set.json", "*_ws_over_dyn", "lower"),
+    ("BENCH_logistic.json", "*_work_ratio", "lower"),
+]
 
 
 def load(directory):
@@ -75,12 +106,47 @@ def diff_file(name, old, new):
             print(f"  {key}: dropped (was {old[key]})")
 
 
+def gate_regressions(prev, cur, threshold):
+    """Return a list of human-readable regression strings for tracked keys
+    whose change exceeds `threshold` (a fraction) in the bad direction."""
+    regressions = []
+    for fname, pattern, direction in TRACKED:
+        new_doc = cur.get(fname)
+        old_doc = prev.get(fname)
+        if new_doc is None or old_doc is None:
+            continue
+        for key in sorted(new_doc):
+            if not fnmatch.fnmatch(key, pattern):
+                continue
+            nv, ov = new_doc.get(key), old_doc.get(key)
+            if any(isinstance(v, bool) or not isinstance(v, (int, float))
+                   for v in (nv, ov)):
+                continue
+            if ov == 0:
+                continue
+            rel = (nv - ov) / abs(ov)
+            bad = rel > threshold if direction == "lower" else rel < -threshold
+            if bad:
+                arrow = "rose" if direction == "lower" else "fell"
+                regressions.append(
+                    f"{fname}:{key} {arrow} {abs(rel) * 100.0:.1f}% "
+                    f"({ov:g} -> {nv:g}, {direction}-is-better, "
+                    f"threshold {threshold * 100.0:.0f}%)")
+    return regressions
+
+
 def main():
-    if len(sys.argv) != 3:
+    ap = argparse.ArgumentParser(add_help=False)
+    ap.add_argument("--gate", action="store_true")
+    ap.add_argument("--threshold", type=float, default=15.0,
+                    help="gate threshold in percent (default 15)")
+    ap.add_argument("dirs", nargs="*")
+    args = ap.parse_args()
+    if len(args.dirs) != 2:
         print(__doc__.strip())
         return 0
-    prev = load(sys.argv[1])
-    cur = load(sys.argv[2])
+    prev = load(args.dirs[0])
+    cur = load(args.dirs[1])
     if not cur:
         print("bench-diff: no current telemetry found")
         return 0
@@ -94,8 +160,25 @@ def main():
             print(f"{name}: new bench, no baseline")
         else:
             diff_file(name, old, new)
-    print("bench-diff: warn-only — deltas above are advisory, build not failed")
-    return 0
+    if not args.gate:
+        print("bench-diff: warn-only — deltas above are advisory, build not failed")
+        return 0
+    regressions = gate_regressions(prev, cur, args.threshold / 100.0)
+    if not regressions:
+        print(f"bench-gate: all tracked keys within "
+              f"{args.threshold:.0f}% of the previous run")
+        return 0
+    print(f"bench-gate: {len(regressions)} tracked key(s) regressed:")
+    for r in regressions:
+        print(f"  REGRESSION {r}")
+    if os.environ.get("BENCH_DIFF_OVERRIDE"):
+        print("bench-gate: BENCH_DIFF_OVERRIDE set — regression(s) "
+              "acknowledged, build not failed")
+        return 0
+    print("bench-gate: failing the build (set the bench-regression-ok "
+          "label / BENCH_DIFF_OVERRIDE to acknowledge an intentional "
+          "trade-off)")
+    return 1
 
 
 if __name__ == "__main__":
