@@ -51,6 +51,27 @@ fn main() {
         0.2,
     );
 
+    // event-bus publish costs: with nothing attached a publish must be
+    // one relaxed atomic load (the closure never runs); with one
+    // subscriber it pays the queue handoff
+    assert_eq!(
+        obs::events::subscriber_count(),
+        0,
+        "bench requires an idle bus"
+    );
+    let publish_0sub = bench(
+        || obs::events::publish(|| obs::events::EventKind::Steal { stolen: 1 }),
+        0.2,
+    );
+    let sub = obs::events::subscribe();
+    let publish_1sub = bench(
+        || obs::events::publish(|| obs::events::EventKind::Steal { stolen: 1 }),
+        0.2,
+    );
+    // keep the subscriber queue from accumulating between timings
+    while sub.try_recv().is_some() {}
+    drop(sub);
+
     // end-to-end: the same dynamically screened path, tracing off vs on
     let ds = SyntheticSpec { n, p, nnz: 30, density: 0.05, ..Default::default() }
         .generate(11);
@@ -67,30 +88,59 @@ fn main() {
     let traced = run_path_keep_betas(&ds, &plan, RuleKind::Sasvi, opts);
     let t_traced = t1.elapsed().as_secs_f64();
     obs::trace::set_enabled(false);
+    // same path again with the event bus live (one attached subscriber,
+    // every solver publish site active)
+    let sub = obs::events::subscribe();
+    let t2 = Instant::now();
+    let evented = run_path_keep_betas(&ds, &plan, RuleKind::Sasvi, opts);
+    let t_evented = t2.elapsed().as_secs_f64();
+    let mut events_seen = 0u64;
+    while sub.try_recv().is_some() {
+        events_seen += 1;
+    }
+    // drop-oldest backpressure: total published = delivered + dropped
+    let events_published = events_seen + sub.dropped();
+    drop(sub);
 
     // correctness before any number: observing must not change the solve
     let a = plain.betas.as_ref().unwrap();
     let b = traced.betas.as_ref().unwrap();
-    for (k, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+    let c = evented.betas.as_ref().unwrap();
+    for (k, ((x, y), z)) in a.iter().zip(b.iter()).zip(c.iter()).enumerate() {
         for j in 0..ds.p() {
             assert_eq!(
                 x[j].to_bits(),
                 y[j].to_bits(),
                 "step {k} feature {j}: tracing changed the solve"
             );
+            assert_eq!(
+                x[j].to_bits(),
+                z[j].to_bits(),
+                "step {k} feature {j}: an event subscriber changed the solve"
+            );
         }
     }
 
     let ratio = t_traced / t_plain.max(1e-9);
+    let evented_ratio = t_evented / t_plain.max(1e-9);
     let mut table = Table::new(&["primitive", "ns/op"]);
     table.row(vec!["span (disabled)".into(), format!("{:.1}", span_off * 1e9)]);
     table.row(vec!["span (enabled)".into(), format!("{:.1}", span_on * 1e9)]);
     table.row(vec!["counter_inc".into(), format!("{:.1}", counter * 1e9)]);
     table.row(vec!["histogram observe".into(), format!("{:.1}", hist * 1e9)]);
+    table.row(vec![
+        "event publish (0 subs)".into(),
+        format!("{:.1}", publish_0sub * 1e9),
+    ]);
+    table.row(vec![
+        "event publish (1 sub)".into(),
+        format!("{:.1}", publish_1sub * 1e9),
+    ]);
     println!("{}", table.render());
     println!(
         "dynamic path: untraced {t_plain:.3}s, traced {t_traced:.3}s \
-         (ratio {ratio:.3}); betas bit-identical — OK"
+         (ratio {ratio:.3}), evented {t_evented:.3}s (ratio {evented_ratio:.3}, \
+         {events_published} events); betas bit-identical — OK"
     );
 
     let mut json = BenchJson::new("obs");
@@ -101,9 +151,14 @@ fn main() {
         .num("span_enabled_ns", span_on * 1e9)
         .num("counter_inc_ns", counter * 1e9)
         .num("observe_ns", hist * 1e9)
+        .num("publish_0sub_ns", publish_0sub * 1e9)
+        .num("publish_1sub_ns", publish_1sub * 1e9)
         .num("path_untraced_secs", t_plain)
         .num("path_traced_secs", t_traced)
         .num("traced_ratio", ratio)
+        .num("path_evented_secs", t_evented)
+        .num("evented_ratio", evented_ratio)
+        .int("evented_events", events_published)
         .flag("betas_bit_identical", true);
     json.write();
 }

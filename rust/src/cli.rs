@@ -109,10 +109,16 @@ COMMANDS:
   fig5          regenerate Fig 5 rejection curves (--scale --grid [--csv dir])
   sure-removal  Theorem-4 report (--preset --lam1-frac --top)
   serve         screening service (--addr --workers --queue-cap --cache-cap
-                --retain-cap; or --config FILE with a [server] section, CLI
-                flags win). PATH and LPATH both run async through the job
-                pool with a cross-request shard cache; append `nocache` to
-                either verb to bypass it.
+                --retain-cap --watchdog-secs; or --config FILE with a
+                [server] section, CLI flags win). PATH and LPATH both run
+                async through the job pool with a cross-request shard
+                cache; append `nocache` to either verb to bypass it.
+                --watchdog-secs N flags running jobs with no progress
+                event for N seconds (0 disables; see HEALTH).
+  watch         stream a server job's live events (--addr HOST:PORT
+                --job ID): one JSON object per line — shard starts,
+                dynamic checkpoints, per-step summaries — until the
+                job's terminal event.
   runtime-info  list + warm PJRT artifacts (--artifacts DIR)
   run           run an experiment config (--config FILE)
   metrics       run a small path workload and print the process metrics
@@ -143,6 +149,10 @@ GLOBAL:  --threads N sets the column-block worker-pool width for any
          --trace-json FILE switches span tracing on and appends one JSONL
          line per solver/path span to FILE, for any command. Observing
          never changes results: outputs stay bit-identical.
+         --progress (solve-path, solve-logistic) attaches an in-process
+         event-bus subscriber and renders live per-step screening and
+         gap lines (plus dynamic checkpoints) to stderr while the solve
+         runs. Same contract: results stay bit-identical.
 ";
 
 /// Entry point. Returns the process exit code.
@@ -218,6 +228,7 @@ pub fn run(args: &[String]) -> Result<i32> {
         "fig5" => cmd_fig5(&flags),
         "sure-removal" => cmd_sure_removal(&flags),
         "serve" => cmd_serve(&flags),
+        "watch" => cmd_watch(&flags),
         "runtime-info" => cmd_runtime_info(&flags),
         "run" => cmd_run_config(&flags),
         "metrics" => cmd_metrics(&flags),
@@ -254,6 +265,80 @@ fn cmd_gen_data(flags: &Flags) -> Result<i32> {
     Ok(0)
 }
 
+/// The `--progress` printer: an in-process event-bus subscriber on its
+/// own thread, rendering per-step screening/gap lines (and dynamic
+/// checkpoints) to stderr while a solve runs. Subscribing is what turns
+/// event publishing on for the process — without it every publish site
+/// stays one atomic load — and results are bit-identical either way
+/// (the determinism battery pins this).
+struct ProgressPrinter {
+    stop: Arc<std::sync::atomic::AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ProgressPrinter {
+    /// Render the events worth a live line; the rest stay silent.
+    fn render(ev: &crate::obs::events::Event) -> Option<String> {
+        use crate::obs::events::EventKind;
+        match &ev.kind {
+            EventKind::Step { workload, step, lambda, kept, screened, nnz, gap } => {
+                let rej = *screened as f64 / (kept + screened).max(1) as f64;
+                Some(format!(
+                    "[{workload}] step {step}: lambda={lambda:.5} kept={kept} \
+                     screened={screened} (rejection {rej:.3}) nnz={nnz} gap={gap:.3e}"
+                ))
+            }
+            EventKind::Checkpoint { workload, gap, width, dropped } => Some(format!(
+                "[{workload}] checkpoint: gap={gap:.3e} width={width} dropped={dropped}"
+            )),
+            EventKind::WsOuter { outer, width, gap } => Some(format!(
+                "[ws] outer {outer}: width={width} gap={gap:.3e}"
+            )),
+            EventKind::Watchdog { idle_ms } => {
+                Some(format!("[watchdog] no progress for {idle_ms}ms"))
+            }
+            _ => None,
+        }
+    }
+
+    /// Subscribe on the caller's thread (so no early event is missed),
+    /// then print from a helper until [`ProgressPrinter::finish`].
+    fn start() -> Self {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let sub = crate::obs::events::subscribe();
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&stop);
+        let handle = std::thread::spawn(move || {
+            loop {
+                match sub.recv_timeout(std::time::Duration::from_millis(50)) {
+                    Some(ev) => {
+                        if let Some(line) = Self::render(&ev) {
+                            eprintln!("{line}");
+                        }
+                    }
+                    None if flag.load(Ordering::Relaxed) => break,
+                    None => {}
+                }
+            }
+            // drain what the solve published after the last wake-up
+            while let Some(ev) = sub.try_recv() {
+                if let Some(line) = Self::render(&ev) {
+                    eprintln!("{line}");
+                }
+            }
+        });
+        Self { stop, handle: Some(handle) }
+    }
+
+    /// Stop the printer after draining everything published so far.
+    fn finish(mut self) {
+        self.stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
 fn cmd_solve_path(flags: &Flags) -> Result<i32> {
     let ds = load_dataset(flags)?;
     let rule_name = flags.get_or("rule", "sasvi");
@@ -263,7 +348,14 @@ fn cmd_solve_path(flags: &Flags) -> Result<i32> {
     let min_frac = flags.f64_or("min-frac", 0.05)?;
     let plan = PathPlan::linear_spaced(&ds, grid, min_frac);
     println!("dataset {}: {}", ds.name, ds.summary());
+    let progress = match flags.bool_flag("progress")? {
+        Some(true) => Some(ProgressPrinter::start()),
+        _ => None,
+    };
     let res = run_path(&ds, &plan, rule, PathOptions::from_process_defaults());
+    if let Some(p) = progress {
+        p.finish();
+    }
     let mut t = Table::new(&[
         "lam/lmax", "kept", "screened", "dyn-drop", "ws", "nnz", "epochs",
         "kkt-fix", "solve(s)", "screen(s)",
@@ -340,9 +432,16 @@ fn cmd_solve_logistic(flags: &Flags) -> Result<i32> {
         prob.p(),
         plan.lambda_max
     );
+    let progress = match flags.bool_flag("progress")? {
+        Some(true) => Some(ProgressPrinter::start()),
+        _ => None,
+    };
     let res = run_logistic_path(
         &prob, &plan, rule, LogisticPathOptions::from_process_defaults(),
     );
+    if let Some(p) = progress {
+        p.finish();
+    }
     let mut t = Table::new(&[
         "lam/lmax", "kept", "screened", "rej", "dyn-drop", "nnz", "iters",
         "kkt-fix", "solve(s)", "screen(s)",
@@ -551,18 +650,59 @@ fn cmd_serve(flags: &Flags) -> Result<i32> {
         queue_cap: flags.usize_or("queue-cap", base.queue_cap)?.max(1),
         cache_cap: flags.usize_or("cache-cap", base.cache_cap)?,
         retain_cap: flags.usize_or("retain-cap", base.retain_cap)?.max(1),
+        watchdog_secs: flags.usize_or("watchdog-secs", base.watchdog_secs as usize)? as u64,
     };
     let server = crate::server::Server::bind_with(&addr, opts)?;
     println!(
-        "sasvi screening service on {} ({} workers, queue {}, cache {}, retain {})",
+        "sasvi screening service on {} ({} workers, queue {}, cache {}, retain {}, \
+         watchdog {})",
         server.local_addr()?,
         opts.workers,
         opts.queue_cap,
         opts.cache_cap,
-        opts.retain_cap
+        opts.retain_cap,
+        if opts.watchdog_secs == 0 {
+            "off".to_string()
+        } else {
+            format!("{}s", opts.watchdog_secs)
+        }
     );
     server.serve()?;
     Ok(0)
+}
+
+/// `watch`: stream a server job's live event lines over the wire
+/// (`WATCH <job-id>`) until its terminal event. Prints each JSON line
+/// as-is — the offline reporter (`tools/obs_report.py`) consumes the
+/// same shape.
+fn cmd_watch(flags: &Flags) -> Result<i32> {
+    use std::io::{BufRead, BufReader, Write};
+    let addr = flags.get_or("addr", "127.0.0.1:7878");
+    let job = flags.get("job").context("--job ID is required")?;
+    let _: u64 = job.parse().with_context(|| format!("--job {job}"))?;
+    let mut s = std::net::TcpStream::connect(&addr)
+        .with_context(|| format!("connect {addr}"))?;
+    let mut r = BufReader::new(s.try_clone()?);
+    writeln!(s, "WATCH {job}")?;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if r.read_line(&mut line)? == 0 {
+            // server closed mid-stream: surface it, don't spin
+            bail!("connection closed before the terminal event");
+        }
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        println!("{line}");
+        if line.starts_with("{\"error\"") {
+            return Ok(1);
+        }
+        if line.contains("\"type\":\"terminal\"") {
+            return Ok(0);
+        }
+    }
 }
 
 fn cmd_runtime_info(flags: &Flags) -> Result<i32> {
@@ -1077,6 +1217,40 @@ mod tests {
             "solve-path", "--trace-json", "/nonexistent-dir/x/trace.jsonl",
         ]))
         .is_err());
+    }
+
+    #[test]
+    fn solve_path_progress_flag_smoke() {
+        // --progress attaches a live subscriber; the run must still
+        // complete cleanly (bit-identity is pinned in tests/determinism.rs)
+        let code = run(&s(&[
+            "solve-path", "--preset", "synthetic100", "--scale", "0.01",
+            "--grid", "4", "--rule", "sasvi", "--progress",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+        let code = run(&s(&[
+            "solve-logistic", "--preset", "synthetic100", "--scale", "0.01",
+            "--grid", "4", "--rule", "sasviq", "--progress",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn watch_command_validates_and_reports_errors() {
+        // --job is required and must be numeric (checked before connecting)
+        assert!(run(&s(&["watch"])).is_err());
+        assert!(run(&s(&["watch", "--job", "abc"])).is_err());
+        // an unknown job gets the server's one-line error and exit code 1
+        let server = crate::server::Server::bind("127.0.0.1:0", 1).unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let stop = server.stop_handle();
+        let h = std::thread::spawn(move || server.serve().unwrap());
+        let code = run(&s(&["watch", "--addr", &addr, "--job", "99"])).unwrap();
+        assert_eq!(code, 1);
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        h.join().unwrap();
     }
 
     #[test]

@@ -382,6 +382,10 @@ pub struct ServerConfig {
     pub cache_cap: usize,
     /// `server.retain_cap`: cap on unobserved terminal job statuses
     pub retain_cap: usize,
+    /// `server.watchdog_secs`: stuck-job threshold — a running job with
+    /// no progress event for this long is flagged by the watchdog
+    /// (0 disables the watchdog thread)
+    pub watchdog_secs: u64,
 }
 
 impl Default for ServerConfig {
@@ -393,6 +397,7 @@ impl Default for ServerConfig {
             queue_cap: o.queue_cap,
             cache_cap: o.cache_cap,
             retain_cap: o.retain_cap,
+            watchdog_secs: o.watchdog_secs,
         }
     }
 }
@@ -406,6 +411,8 @@ impl ServerConfig {
             queue_cap: c.get_usize("server.queue_cap", d.queue_cap).max(1),
             cache_cap: c.get_usize("server.cache_cap", d.cache_cap),
             retain_cap: c.get_usize("server.retain_cap", d.retain_cap).max(1),
+            watchdog_secs: c.get_usize("server.watchdog_secs", d.watchdog_secs as usize)
+                as u64,
         }
     }
 
@@ -416,6 +423,7 @@ impl ServerConfig {
             queue_cap: self.queue_cap,
             cache_cap: self.cache_cap,
             retain_cap: self.retain_cap,
+            watchdog_secs: self.watchdog_secs,
         }
     }
 }
@@ -556,7 +564,7 @@ trials = 3
     fn server_knobs_parse_with_defaults() {
         let c = Config::parse(
             "[server]\naddr = \"127.0.0.1:0\"\nworkers = 4\nqueue_cap = 32\n\
-             cache_cap = 64\nretain_cap = 100\n",
+             cache_cap = 64\nretain_cap = 100\nwatchdog_secs = 7\n",
         )
         .unwrap();
         let s = ServerConfig::from_config(&c);
@@ -565,15 +573,24 @@ trials = 3
         assert_eq!(s.queue_cap, 32);
         assert_eq!(s.cache_cap, 64);
         assert_eq!(s.retain_cap, 100);
+        assert_eq!(s.watchdog_secs, 7);
         let o = s.server_options();
         assert_eq!((o.workers, o.queue_cap, o.cache_cap, o.retain_cap), (4, 32, 64, 100));
+        assert_eq!(o.watchdog_secs, 7);
         // defaults mirror ServerOptions; caps that must be >= 1 are clamped
         let d = ServerConfig::from_config(&Config::parse("").unwrap());
         assert_eq!(d.addr, "127.0.0.1:7878");
         assert_eq!(d.workers, crate::server::ServerOptions::default().workers);
-        let c = Config::parse("[server]\nworkers = 0\nqueue_cap = 0\n").unwrap();
+        assert_eq!(
+            d.watchdog_secs,
+            crate::server::ServerOptions::default().watchdog_secs
+        );
+        // 0 is meaningful for the watchdog (disabled), so it is NOT clamped
+        let c = Config::parse("[server]\nworkers = 0\nqueue_cap = 0\nwatchdog_secs = 0\n")
+            .unwrap();
         let s = ServerConfig::from_config(&c);
         assert_eq!((s.workers, s.queue_cap), (1, 1));
+        assert_eq!(s.watchdog_secs, 0);
     }
 
     #[test]

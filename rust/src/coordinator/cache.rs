@@ -38,7 +38,7 @@ use std::sync::{Arc, Condvar, Mutex};
 
 use crate::coordinator::logistic::{LogiCarry, LogiStepRecord};
 use crate::coordinator::path::{PathCarry, StepRecord};
-use crate::obs::metrics;
+use crate::obs::{events, metrics};
 use crate::screening::dynamic::DynamicTrace;
 use crate::solver::working_set::WorkingSetTrace;
 
@@ -134,6 +134,9 @@ impl ShardCache {
                         }
                         self.hits.fetch_add(1, Ordering::Relaxed);
                         metrics::counter_inc("sasvi_path_cache_hits_total");
+                        events::publish(|| events::EventKind::CacheHit {
+                            key: key.to_string(),
+                        });
                         return (v, true);
                     }
                     Some(Slot::InFlight) => {
@@ -148,6 +151,7 @@ impl ShardCache {
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
         metrics::counter_inc("sasvi_path_cache_misses_total");
+        events::publish(|| events::EventKind::CacheMiss { key: key.to_string() });
         // If `compute` panics (a poisoned solve), clear the marker and wake
         // waiters so one of them takes over instead of blocking forever.
         let mut guard = InFlightGuard { cache: self, key, armed: true };
@@ -160,6 +164,7 @@ impl ShardCache {
             g.map.remove(&cold);
             self.evictions.fetch_add(1, Ordering::Relaxed);
             metrics::counter_inc("sasvi_path_cache_evictions_total");
+            events::publish(|| events::EventKind::CacheEvict { key: cold.clone() });
         }
         metrics::gauge_set("sasvi_path_cache_entries", g.lru.len() as f64);
         drop(g);

@@ -428,6 +428,15 @@ fn run_logistic_segment_impl(
         lam1 = lambda;
 
         let gap = trace.events.last().map(|e| e.gap).unwrap_or(f64::NAN);
+        crate::obs::events::publish(|| crate::obs::events::EventKind::Step {
+            workload: "logistic",
+            step: steps.len(),
+            lambda,
+            kept,
+            screened,
+            nnz: beta.iter().filter(|&&b| b != 0.0).count(),
+            gap,
+        });
         steps.push(LogiStepRecord {
             lambda,
             frac: lambda / grid_lambda_max,

@@ -697,6 +697,15 @@ fn run_segment_impl(
             .as_ref()
             .map(|t| (t.outer_iters(), t.final_width(), t.pruned_total()))
             .unwrap_or((0, 0, 0));
+        crate::obs::events::publish(|| crate::obs::events::EventKind::Step {
+            workload: "lasso",
+            step: steps.len(),
+            lambda,
+            kept: outcome.kept,
+            screened: outcome.screened,
+            nnz,
+            gap: stats.final_gap.unwrap_or(f64::NAN),
+        });
         steps.push(StepRecord {
             lambda,
             frac: lambda / grid_lambda_max,

@@ -376,6 +376,9 @@ impl JobPool {
         }
         obs::metrics::counter_inc("sasvi_pool_jobs_submitted_total");
         obs::metrics::gauge_add("sasvi_pool_queue_depth", 1.0);
+        obs::events::publish_for_job(id.0, || obs::events::EventKind::Queued {
+            tag: spec.tag().to_string(),
+        });
         if self.tx.send(Msg::Job(id, spec, Instant::now())).is_err() {
             // workers are gone: undo the accounting this submission did —
             // the Queued entry would otherwise block a waiter forever and
@@ -508,6 +511,10 @@ fn run_lasso_job(job: &LassoJob, cache: &ShardCache) -> PathResult {
     let mut carry = None;
     let mut prefix = cache::fnv1a_init();
     for (idx, chunk) in job.plan.lambdas.chunks(SHARD_POINTS).enumerate() {
+        obs::events::publish(|| obs::events::EventKind::ShardStart {
+            shard: idx,
+            points: chunk.len(),
+        });
         for &l in chunk {
             cache::fnv1a_u64(&mut prefix, l.to_bits());
         }
@@ -591,6 +598,10 @@ fn run_logistic_job(job: &LogisticJob, cache: &ShardCache) -> LogisticPathResult
     let mut carry = None;
     let mut prefix = cache::fnv1a_init();
     for (idx, chunk) in job.plan.lambdas.chunks(SHARD_POINTS).enumerate() {
+        obs::events::publish(|| obs::events::EventKind::ShardStart {
+            shard: idx,
+            points: chunk.len(),
+        });
         for &l in chunk {
             cache::fnv1a_u64(&mut prefix, l.to_bits());
         }
@@ -692,9 +703,20 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Msg>>>, shared: Arc<Shared>) {
                         JobStatus::Failed("evicted by shutdown".to_string()),
                         None,
                     );
+                    obs::events::publish_for_job(id.0, || {
+                        obs::events::EventKind::Terminal { ok: false }
+                    });
                     continue;
                 }
                 shared.post(id, JobStatus::Running, None);
+                obs::events::publish_for_job(id.0, || obs::events::EventKind::Started {
+                    tag: spec.tag().to_string(),
+                });
+                // attribute everything published under the solve (shards,
+                // checkpoints, steps) to this job; the guard survives the
+                // catch_unwind below, so a panicking job cannot leak its
+                // id onto the worker thread
+                let _job_scope = obs::events::enter_job(id.0);
                 obs::metrics::gauge_add("sasvi_pool_jobs_in_flight", 1.0);
                 obs::trace::begin_job_capture();
                 let t0 = Instant::now();
@@ -710,6 +732,10 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Msg>>>, shared: Arc<Shared>) {
                     lease as f64,
                     obs::metrics::LANE_BUCKETS,
                 );
+                obs::events::publish(|| obs::events::EventKind::Lease {
+                    lanes: lease,
+                    concurrent,
+                });
                 let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                     par::with_lane_budget(lease, || run_job(&spec, &shared.cache))
                 }));
@@ -726,6 +752,9 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Msg>>>, shared: Arc<Shared>) {
                         obs::metrics::counter_inc("sasvi_pool_jobs_done_total");
                         obs::trace::store_job_trace(id.0, job_trace_of(&res, spans));
                         shared.post(id, JobStatus::Done, Some(res));
+                        obs::events::publish_for_job(id.0, || {
+                            obs::events::EventKind::Terminal { ok: true }
+                        });
                     }
                     Err(_) => {
                         obs::metrics::counter_inc("sasvi_pool_jobs_failed_total");
@@ -738,6 +767,9 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Msg>>>, shared: Arc<Shared>) {
                             JobStatus::Failed(format!("job {id:?} panicked")),
                             None,
                         );
+                        obs::events::publish_for_job(id.0, || {
+                            obs::events::EventKind::Terminal { ok: false }
+                        });
                     }
                 }
             }

@@ -196,6 +196,33 @@
 //! histograms) is itself bit-identical across thread counts
 //! (`rust/tests/determinism.rs`).
 //!
+//! ## Live observability
+//!
+//! [`obs::events`] is the *push* half of the telemetry layer: a
+//! process-wide structured event bus. Typed events — job
+//! queued/started/terminal, shard starts, dynamic re-screen checkpoints,
+//! working-set outer iterations, per-step summaries, scheduler lease
+//! grants and helper-lane steals, shard-cache hits/misses/evictions, and
+//! watchdog warnings — are published from the same seams the metrics
+//! counters ride, fanned out to bounded condvar-notified subscriber
+//! queues (drop-oldest under backpressure, counted in
+//! `sasvi_events_dropped_total`) and, in serving processes, into a
+//! bounded global ring. When nothing is attached, publishing is **one
+//! relaxed atomic load** — the event value is never even constructed —
+//! so the observation-never-perturbs contract extends to the bus
+//! (`tests/determinism.rs` runs the battery with a live subscriber; the
+//! zero-/one-subscriber publish costs are tracked in `benches/obs.rs`).
+//! Surfaces: the streaming server verb `WATCH <job-id>` (one JSON line
+//! per event until the job's terminal event), `EVENTS [n]` (ring tail),
+//! `HEALTH` (queue depth vs. cap, running-job ages, subscriber drops,
+//! watchdog stalls), the stuck-job watchdog thread (`serve
+//! --watchdog-secs`, flagging running jobs with no progress event once
+//! per stall episode), the CLI's `watch` subcommand and `--progress`
+//! flag (live per-step rejection/gap lines from an in-process
+//! subscriber), and the offline timeline reporter
+//! `tools/obs_report.py` (span flamegraph + screening funnel from a
+//! `--trace-json` dump and an `EVENTS` capture).
+//!
 //! ## Quickstart
 //!
 //! ```no_run

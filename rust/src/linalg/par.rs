@@ -273,6 +273,11 @@ fn helper_loop(sched: Arc<Scheduler>) {
         if stolen > 0 {
             sched.steals.fetch_add(stolen as u64, Ordering::Relaxed);
             obs::metrics::counter_add("sasvi_par_steals_total", stolen as u64);
+            // helper lanes are not pool workers, so this publishes with
+            // job 0 — steals are lane-level, not job-level
+            obs::events::publish(|| obs::events::EventKind::Steal {
+                stolen,
+            });
         }
         let still_live = job.steal_worthy();
         detach(&job);

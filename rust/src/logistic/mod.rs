@@ -383,6 +383,12 @@ pub fn logistic_rescreen(
         "sasvi_logistic_checkpoint_width",
         survivors.len() as f64,
     );
+    crate::obs::events::publish(|| crate::obs::events::EventKind::Checkpoint {
+        workload: "logistic",
+        gap,
+        width: survivors.len(),
+        dropped: dropped.len(),
+    });
     Rescreen { survivors, dropped, gap, infeas }
 }
 

@@ -1,0 +1,697 @@
+//! Process-wide structured event bus: the *push* half of the
+//! observability layer (metrics and traces are pull-only snapshots).
+//!
+//! Solvers, the job pool, the shard cache, and the steal scheduler
+//! [`publish`] typed [`Event`]s. Events land in a bounded global ring
+//! buffer (the `EVENTS` verb's tail) and fan out to any number of
+//! attached [`Subscriber`]s, each with its own bounded queue and condvar.
+//! A slow reader can never stall a solver: when a subscriber's queue is
+//! full the oldest event is dropped and its `dropped` counter (plus the
+//! `sasvi_events_dropped_total` metric) is incremented.
+//!
+//! ## Cost model — observation never perturbs
+//!
+//! [`publish`] takes a closure so the event is never even constructed on
+//! the fast path: when nothing is attached (no subscriber, ring disabled)
+//! the call is **one relaxed atomic load** and returns. This preserves
+//! the determinism contract pinned in `tests/determinism.rs` — a solve
+//! with the bus idle does exactly the same work as one with the module
+//! compiled out. The server enables the ring at bind time
+//! ([`set_ring_enabled`]), so the slow path (and the per-job activity
+//! table the stuck-job watchdog scans) only ever runs in serving
+//! processes or under an explicit in-process subscriber (`--progress`).
+//!
+//! ## Job attribution
+//!
+//! Events carry the pool job id of the publishing thread: the pool's
+//! worker loop installs it with [`enter_job`] for the duration of a
+//! solve, so everything published underneath (shards, checkpoints,
+//! steps) is attributed without threading ids through solver signatures.
+//! Helper-lane steals and direct CLI solves publish with job `0`.
+
+use std::cell::Cell;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use super::metrics;
+
+/// Events retained by the global ring buffer.
+pub const RING_CAP: usize = 1024;
+
+/// Default per-subscriber queue capacity.
+pub const SUBSCRIBER_CAP: usize = 256;
+
+/// Attach points on the bus: subscriber count plus one when the ring is
+/// enabled. `publish` reads exactly this and nothing else on the fast
+/// path.
+static ACTIVE: AtomicUsize = AtomicUsize::new(0);
+
+/// Total events dropped across all subscribers (process lifetime).
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+
+/// Total watchdog stall flags raised (process lifetime).
+static STALLS: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    static CURRENT_JOB: Cell<u64> = const { Cell::new(0) };
+}
+
+/// The pool job id solver-level publishes are attributed to on this
+/// thread; `0` outside any job scope.
+pub fn current_job() -> u64 {
+    CURRENT_JOB.with(|c| c.get())
+}
+
+/// Restores the previous job id on drop, so nested scopes (and
+/// `catch_unwind` exits) unwind cleanly.
+pub struct JobScope {
+    prev: u64,
+}
+
+/// Attribute this thread's publishes to `job` until the guard drops.
+pub fn enter_job(job: u64) -> JobScope {
+    let prev = CURRENT_JOB.with(|c| c.replace(job));
+    JobScope { prev }
+}
+
+impl Drop for JobScope {
+    fn drop(&mut self) {
+        CURRENT_JOB.with(|c| c.set(self.prev));
+    }
+}
+
+/// What happened; one variant per instrumented site.
+#[derive(Clone, Debug)]
+pub enum EventKind {
+    /// Job accepted into the pool queue.
+    Queued { tag: String },
+    /// A worker picked the job up.
+    Started { tag: String },
+    /// Fair-share lane lease granted to the job for its solve.
+    Lease { lanes: usize, concurrent: usize },
+    /// A λ-grid shard is about to be solved (or served from cache).
+    ShardStart { shard: usize, points: usize },
+    /// Shard cache hit.
+    CacheHit { key: String },
+    /// Shard cache miss (this thread computes).
+    CacheMiss { key: String },
+    /// Shard cache LRU eviction.
+    CacheEvict { key: String },
+    /// Dynamic-screening checkpoint (`workload` is `lasso` or `logistic`).
+    Checkpoint { workload: &'static str, gap: f64, width: usize, dropped: usize },
+    /// Working-set outer iteration completed.
+    WsOuter { outer: usize, width: usize, gap: f64 },
+    /// One λ-grid step finished.
+    Step {
+        workload: &'static str,
+        step: usize,
+        lambda: f64,
+        kept: usize,
+        screened: usize,
+        nnz: usize,
+        gap: f64,
+    },
+    /// Helper lane stole blocks from a live dispatch (job `0`: steals are
+    /// lane-level, not job-level).
+    Steal { stolen: usize },
+    /// Job reached a terminal state.
+    Terminal { ok: bool },
+    /// Watchdog: the job has published no progress for `idle_ms`.
+    Watchdog { idle_ms: u64 },
+}
+
+/// One published event: a global sequence number, microseconds since the
+/// tracing epoch, the publishing thread's job id, and the payload.
+#[derive(Clone, Debug)]
+pub struct Event {
+    pub seq: u64,
+    pub t_us: u64,
+    pub job: u64,
+    pub kind: EventKind,
+}
+
+/// Minimal JSON string escape (quotes, backslashes, control bytes).
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// `f64` as a JSON value (`null` for non-finite, which JSON cannot carry).
+fn jf(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+impl Event {
+    /// Render as one line of JSON (no trailing newline).
+    pub fn to_json(&self) -> String {
+        let head = format!(
+            "{{\"seq\":{},\"t_us\":{},\"job\":{},\"type\":",
+            self.seq, self.t_us, self.job
+        );
+        let body = match &self.kind {
+            EventKind::Queued { tag } => format!("\"queued\",\"tag\":\"{}\"", escape(tag)),
+            EventKind::Started { tag } => format!("\"started\",\"tag\":\"{}\"", escape(tag)),
+            EventKind::Lease { lanes, concurrent } => {
+                format!("\"lease\",\"lanes\":{lanes},\"concurrent\":{concurrent}")
+            }
+            EventKind::ShardStart { shard, points } => {
+                format!("\"shard_start\",\"shard\":{shard},\"points\":{points}")
+            }
+            EventKind::CacheHit { key } => {
+                format!("\"cache_hit\",\"key\":\"{}\"", escape(key))
+            }
+            EventKind::CacheMiss { key } => {
+                format!("\"cache_miss\",\"key\":\"{}\"", escape(key))
+            }
+            EventKind::CacheEvict { key } => {
+                format!("\"cache_evict\",\"key\":\"{}\"", escape(key))
+            }
+            EventKind::Checkpoint { workload, gap, width, dropped } => format!(
+                "\"checkpoint\",\"workload\":\"{workload}\",\"gap\":{},\"width\":{width},\"dropped\":{dropped}",
+                jf(*gap)
+            ),
+            EventKind::WsOuter { outer, width, gap } => format!(
+                "\"ws_outer\",\"outer\":{outer},\"width\":{width},\"gap\":{}",
+                jf(*gap)
+            ),
+            EventKind::Step { workload, step, lambda, kept, screened, nnz, gap } => format!(
+                "\"step\",\"workload\":\"{workload}\",\"step\":{step},\"lambda\":{},\"kept\":{kept},\"screened\":{screened},\"nnz\":{nnz},\"gap\":{}",
+                jf(*lambda),
+                jf(*gap)
+            ),
+            EventKind::Steal { stolen } => format!("\"steal\",\"stolen\":{stolen}"),
+            EventKind::Terminal { ok } => format!("\"terminal\",\"ok\":{ok}"),
+            EventKind::Watchdog { idle_ms } => {
+                format!("\"watchdog\",\"idle_ms\":{idle_ms}")
+            }
+        };
+        format!("{head}{body}}}")
+    }
+
+    /// True for the events that end a `WATCH` stream.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self.kind, EventKind::Terminal { .. })
+    }
+}
+
+struct SubState {
+    buf: VecDeque<Event>,
+    dropped: u64,
+}
+
+struct SubQueue {
+    state: Mutex<SubState>,
+    cond: Condvar,
+}
+
+struct SubEntry {
+    /// deliver only events for this job when set
+    job: Option<u64>,
+    cap: usize,
+    q: Arc<SubQueue>,
+}
+
+/// Per-running-job liveness record the watchdog and `HEALTH` scan.
+struct Activity {
+    tag: String,
+    started: Instant,
+    last_progress: Instant,
+    flagged: bool,
+}
+
+/// `HEALTH`'s view of one running job.
+#[derive(Clone, Debug)]
+pub struct JobActivity {
+    pub job: u64,
+    pub tag: String,
+    /// time since the job started running
+    pub age: Duration,
+    /// time since its last progress event
+    pub idle: Duration,
+    /// currently flagged by the watchdog
+    pub flagged: bool,
+}
+
+struct BusInner {
+    ring: VecDeque<Event>,
+    /// ring holders (refcount): each bound server takes one reference,
+    /// so concurrent servers in one process share the ring and it clears
+    /// only when the last holder releases
+    ring_refs: usize,
+    subs: Vec<SubEntry>,
+    next_seq: u64,
+    activity: HashMap<u64, Activity>,
+}
+
+fn bus() -> &'static Mutex<BusInner> {
+    static BUS: OnceLock<Mutex<BusInner>> = OnceLock::new();
+    BUS.get_or_init(|| {
+        Mutex::new(BusInner {
+            ring: VecDeque::new(),
+            ring_refs: 0,
+            subs: Vec::new(),
+            next_seq: 1,
+            activity: HashMap::new(),
+        })
+    })
+}
+
+/// Publish an event attributed to this thread's job scope. The closure
+/// runs only when something is attached — otherwise this is one relaxed
+/// atomic load.
+#[inline]
+pub fn publish(make: impl FnOnce() -> EventKind) {
+    if ACTIVE.load(Ordering::Relaxed) == 0 {
+        return;
+    }
+    publish_slow(current_job(), make());
+}
+
+/// Publish with an explicit job id (watchdog and pool sites that know
+/// the id without a thread-local scope).
+#[inline]
+pub fn publish_for_job(job: u64, make: impl FnOnce() -> EventKind) {
+    if ACTIVE.load(Ordering::Relaxed) == 0 {
+        return;
+    }
+    publish_slow(job, make());
+}
+
+fn publish_slow(job: u64, kind: EventKind) {
+    let t_us = super::trace::now_us();
+    let mut b = bus().lock().unwrap();
+    let seq = b.next_seq;
+    b.next_seq += 1;
+    let ev = Event { seq, t_us, job, kind };
+    if b.ring_refs > 0 {
+        // liveness table: started/progress/terminal transitions
+        match &ev.kind {
+            EventKind::Started { tag } if job != 0 => {
+                let now = Instant::now();
+                b.activity.insert(
+                    job,
+                    Activity {
+                        tag: tag.clone(),
+                        started: now,
+                        last_progress: now,
+                        flagged: false,
+                    },
+                );
+            }
+            EventKind::ShardStart { .. }
+            | EventKind::Checkpoint { .. }
+            | EventKind::WsOuter { .. }
+            | EventKind::Step { .. }
+                if job != 0 =>
+            {
+                if let Some(a) = b.activity.get_mut(&job) {
+                    a.last_progress = Instant::now();
+                    a.flagged = false;
+                }
+            }
+            EventKind::Terminal { .. } if job != 0 => {
+                b.activity.remove(&job);
+            }
+            _ => {}
+        }
+        if b.ring.len() >= RING_CAP {
+            b.ring.pop_front();
+        }
+        b.ring.push_back(ev.clone());
+    }
+    let mut dropped_now = 0u64;
+    for sub in &b.subs {
+        if let Some(want) = sub.job {
+            if want != ev.job {
+                continue;
+            }
+        }
+        let mut st = sub.q.state.lock().unwrap();
+        if st.buf.len() >= sub.cap {
+            st.buf.pop_front();
+            st.dropped += 1;
+            dropped_now += 1;
+        }
+        st.buf.push_back(ev.clone());
+        drop(st);
+        sub.q.cond.notify_one();
+    }
+    drop(b);
+    if dropped_now > 0 {
+        DROPPED.fetch_add(dropped_now, Ordering::Relaxed);
+        metrics::counter_add("sasvi_events_dropped_total", dropped_now);
+    }
+}
+
+/// A bounded, condvar-notified event reader. Dropping it detaches from
+/// the bus.
+pub struct Subscriber {
+    q: Arc<SubQueue>,
+}
+
+impl Subscriber {
+    /// Next event, waiting up to `timeout`; `None` on timeout.
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<Event> {
+        let mut st = self.q.state.lock().unwrap();
+        let deadline = Instant::now() + timeout;
+        loop {
+            if let Some(ev) = st.buf.pop_front() {
+                return Some(ev);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (next, res) = self.q.cond.wait_timeout(st, deadline - now).unwrap();
+            st = next;
+            if res.timed_out() && st.buf.is_empty() {
+                return None;
+            }
+        }
+    }
+
+    /// Next event without blocking.
+    pub fn try_recv(&self) -> Option<Event> {
+        self.q.state.lock().unwrap().buf.pop_front()
+    }
+
+    /// Events this subscriber lost to drop-oldest backpressure.
+    pub fn dropped(&self) -> u64 {
+        self.q.state.lock().unwrap().dropped
+    }
+}
+
+impl Drop for Subscriber {
+    fn drop(&mut self) {
+        let mut b = bus().lock().unwrap();
+        b.subs.retain(|s| !Arc::ptr_eq(&s.q, &self.q));
+        drop(b);
+        ACTIVE.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Attach a subscriber. `job` filters delivery to one pool job id;
+/// `cap` bounds the queue (oldest events dropped past it).
+pub fn subscribe_filtered(cap: usize, job: Option<u64>) -> Subscriber {
+    let q = Arc::new(SubQueue {
+        state: Mutex::new(SubState { buf: VecDeque::new(), dropped: 0 }),
+        cond: Condvar::new(),
+    });
+    let mut b = bus().lock().unwrap();
+    b.subs.push(SubEntry { job, cap: cap.max(1), q: Arc::clone(&q) });
+    drop(b);
+    ACTIVE.fetch_add(1, Ordering::SeqCst);
+    Subscriber { q }
+}
+
+/// Attach an unfiltered subscriber with the default queue capacity.
+pub fn subscribe() -> Subscriber {
+    subscribe_filtered(SUBSCRIBER_CAP, None)
+}
+
+/// Take (`true`) or release (`false`) a reference on the global ring and
+/// the watchdog's activity table. Each bound server holds one reference
+/// for its lifetime; solo CLI runs hold none, so `publish` stays one
+/// atomic load. The ring and activity table clear when the last holder
+/// releases; a release with no holders is a no-op.
+pub fn set_ring_enabled(on: bool) {
+    let mut b = bus().lock().unwrap();
+    if on {
+        b.ring_refs += 1;
+        if b.ring_refs == 1 {
+            drop(b);
+            ACTIVE.fetch_add(1, Ordering::SeqCst);
+        }
+    } else if b.ring_refs > 0 {
+        b.ring_refs -= 1;
+        if b.ring_refs == 0 {
+            b.ring.clear();
+            b.activity.clear();
+            drop(b);
+            ACTIVE.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+}
+
+/// Current ring holder count (tests tolerate concurrent holders with it).
+#[cfg(test)]
+pub(crate) fn ring_refs() -> usize {
+    bus().lock().unwrap().ring_refs
+}
+
+/// The most recent `n` ring events, oldest first.
+pub fn ring_tail(n: usize) -> Vec<Event> {
+    let b = bus().lock().unwrap();
+    let skip = b.ring.len().saturating_sub(n);
+    b.ring.iter().skip(skip).cloned().collect()
+}
+
+/// Attached subscriber count.
+pub fn subscriber_count() -> usize {
+    bus().lock().unwrap().subs.len()
+}
+
+/// Events lost to subscriber backpressure, process-wide.
+pub fn total_dropped() -> u64 {
+    DROPPED.load(Ordering::Relaxed)
+}
+
+/// Watchdog stall flags raised, process-wide.
+pub fn total_stalls() -> u64 {
+    STALLS.load(Ordering::Relaxed)
+}
+
+/// Snapshot of every running job's liveness, ordered by job id.
+pub fn running_jobs() -> Vec<JobActivity> {
+    let b = bus().lock().unwrap();
+    let mut out: Vec<JobActivity> = b
+        .activity
+        .iter()
+        .map(|(&job, a)| JobActivity {
+            job,
+            tag: a.tag.clone(),
+            age: a.started.elapsed(),
+            idle: a.last_progress.elapsed(),
+            flagged: a.flagged,
+        })
+        .collect();
+    out.sort_by_key(|a| a.job);
+    out
+}
+
+/// One watchdog sweep: flag every running job idle longer than
+/// `threshold` (once per stall episode — progress clears the flag),
+/// publish a [`EventKind::Watchdog`] warning for each, bump
+/// `sasvi_watchdog_stalls_total`, and return the newly flagged job ids.
+pub fn watchdog_scan(threshold: Duration) -> Vec<u64> {
+    let mut stalled: Vec<(u64, u64)> = Vec::new();
+    {
+        let mut b = bus().lock().unwrap();
+        for (&job, a) in b.activity.iter_mut() {
+            if !a.flagged && a.last_progress.elapsed() >= threshold {
+                a.flagged = true;
+                stalled.push((job, a.last_progress.elapsed().as_millis() as u64));
+            }
+        }
+    }
+    stalled.sort_by_key(|&(job, _)| job);
+    for &(job, idle_ms) in &stalled {
+        STALLS.fetch_add(1, Ordering::Relaxed);
+        metrics::counter_inc("sasvi_watchdog_stalls_total");
+        publish_for_job(job, || EventKind::Watchdog { idle_ms });
+    }
+    stalled.into_iter().map(|(job, _)| job).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Serializes tests that enable the process-wide ring.
+    static RING_TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn idle_bus_retains_nothing() {
+        // no subscriber, ring off: publish is inert and the closure must
+        // not even run
+        let ran = std::cell::Cell::new(false);
+        if ACTIVE.load(Ordering::SeqCst) == 0 {
+            publish(|| {
+                ran.set(true);
+                EventKind::Steal { stolen: 1 }
+            });
+            assert!(!ran.get(), "closure ran with nothing attached");
+        }
+    }
+
+    #[test]
+    fn fan_out_delivers_in_order_to_every_subscriber() {
+        let job = 900_001u64;
+        let _scope = enter_job(job);
+        let s1 = subscribe_filtered(16, Some(job));
+        let s2 = subscribe_filtered(16, Some(job));
+        for i in 0..4usize {
+            publish(|| EventKind::ShardStart { shard: i, points: 4 });
+        }
+        for s in [&s1, &s2] {
+            for i in 0..4usize {
+                let ev = s.recv_timeout(Duration::from_secs(2)).expect("event");
+                assert_eq!(ev.job, job);
+                match ev.kind {
+                    EventKind::ShardStart { shard, .. } => assert_eq!(shard, i),
+                    other => panic!("unexpected {other:?}"),
+                }
+            }
+        }
+        assert_eq!(s1.dropped(), 0);
+    }
+
+    #[test]
+    fn slow_subscriber_drops_oldest_and_counts() {
+        let job = 900_002u64;
+        let _scope = enter_job(job);
+        let s = subscribe_filtered(2, Some(job));
+        for i in 0..5usize {
+            publish(|| EventKind::ShardStart { shard: i, points: 1 });
+        }
+        assert_eq!(s.dropped(), 3);
+        // the two newest survive
+        for want in [3usize, 4] {
+            match s.try_recv().expect("event").kind {
+                EventKind::ShardStart { shard, .. } => assert_eq!(shard, want),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert!(s.try_recv().is_none());
+    }
+
+    #[test]
+    fn job_filter_excludes_other_jobs() {
+        let s = subscribe_filtered(16, Some(900_003));
+        {
+            let _scope = enter_job(900_004);
+            publish(|| EventKind::Terminal { ok: true });
+        }
+        {
+            let _scope = enter_job(900_003);
+            publish(|| EventKind::Terminal { ok: true });
+        }
+        let ev = s.recv_timeout(Duration::from_secs(2)).expect("event");
+        assert_eq!(ev.job, 900_003);
+        assert!(ev.is_terminal());
+        assert!(s.try_recv().is_none());
+    }
+
+    #[test]
+    fn ring_keeps_a_bounded_tail() {
+        let _guard = RING_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_ring_enabled(true);
+        let job = 900_005u64;
+        let _scope = enter_job(job);
+        for i in 0..6usize {
+            publish(|| EventKind::ShardStart { shard: i, points: 1 });
+        }
+        let ours: Vec<Event> =
+            ring_tail(RING_CAP).into_iter().filter(|e| e.job == job).collect();
+        assert_eq!(ours.len(), 6);
+        let mut prev = 0u64;
+        for (i, ev) in ours.iter().enumerate() {
+            assert!(ev.seq > prev, "seq must be strictly increasing");
+            prev = ev.seq;
+            match ev.kind {
+                EventKind::ShardStart { shard, .. } => assert_eq!(shard, i),
+                ref other => panic!("unexpected {other:?}"),
+            }
+        }
+        set_ring_enabled(false);
+        // release clears the ring only when we were the last holder — a
+        // concurrently bound test server legitimately keeps it alive
+        if ring_refs() == 0 {
+            assert!(
+                ring_tail(RING_CAP).iter().all(|e| e.job != job),
+                "release of the last holder must clear the ring"
+            );
+        }
+    }
+
+    #[test]
+    fn watchdog_flags_idle_jobs_once_per_episode() {
+        let _guard = RING_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_ring_enabled(true);
+        let job = 900_006u64;
+        let s = subscribe_filtered(16, Some(job));
+        publish_for_job(job, || EventKind::Started { tag: "wd-test".into() });
+        // everything is idle relative to a zero threshold
+        let flagged = watchdog_scan(Duration::ZERO);
+        assert!(flagged.contains(&job), "idle job must be flagged");
+        let again = watchdog_scan(Duration::ZERO);
+        assert!(!again.contains(&job), "no re-flag without progress");
+        // progress clears the episode; the next sweep flags again
+        publish_for_job(job, || EventKind::Checkpoint {
+            workload: "lasso",
+            gap: 1e-8,
+            width: 10,
+            dropped: 2,
+        });
+        let reflagged = watchdog_scan(Duration::ZERO);
+        assert!(reflagged.contains(&job), "progress re-arms the watchdog");
+        // terminal removes the job from the activity table
+        publish_for_job(job, || EventKind::Terminal { ok: true });
+        assert!(running_jobs().iter().all(|a| a.job != job));
+        // the subscriber saw the warning events
+        let mut saw_watchdog = false;
+        while let Some(ev) = s.try_recv() {
+            if matches!(ev.kind, EventKind::Watchdog { .. }) {
+                saw_watchdog = true;
+            }
+        }
+        assert!(saw_watchdog, "watchdog warning must be published");
+        set_ring_enabled(false);
+    }
+
+    #[test]
+    fn json_rendering_is_one_object_per_event() {
+        let ev = Event {
+            seq: 7,
+            t_us: 1234,
+            job: 3,
+            kind: EventKind::Step {
+                workload: "lasso",
+                step: 2,
+                lambda: 0.5,
+                kept: 10,
+                screened: 90,
+                nnz: 4,
+                gap: f64::NAN,
+            },
+        };
+        let j = ev.to_json();
+        assert!(j.starts_with("{\"seq\":7,"));
+        assert!(j.contains("\"type\":\"step\""));
+        assert!(j.contains("\"gap\":null"), "NaN must render as null: {j}");
+        let quoted = Event {
+            seq: 8,
+            t_us: 0,
+            job: 0,
+            kind: EventKind::Queued { tag: "a\"b\\c".into() },
+        };
+        assert!(quoted.to_json().contains("a\\\"b\\\\c"));
+    }
+}

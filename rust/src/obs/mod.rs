@@ -1,7 +1,8 @@
-//! Unified observability layer: a process-wide metrics registry and
-//! lightweight span tracing, both dependency-free.
+//! Unified observability layer: a process-wide metrics registry,
+//! lightweight span tracing, and a structured event bus — all
+//! dependency-free.
 //!
-//! The layer has two halves with different cost models:
+//! The layer has three halves with different cost models:
 //!
 //! * [`metrics`] — always-on named counters, gauges, and fixed-bucket
 //!   histograms. Writes go to per-thread shards behind uncontended locks;
@@ -14,6 +15,12 @@
 //!   ([`trace::set_json_sink`]); the job pool additionally captures spans
 //!   per job so the server's `TRACE <job-id>` verb can replay a job's
 //!   span/gap timeline after the fact.
+//! * [`events`] — the push half: typed solver/pool/cache events published
+//!   into a bounded global ring with condvar-notified subscriber fan-out
+//!   (bounded queues, drop-oldest backpressure). [`events::publish`]
+//!   costs one relaxed atomic load when nothing is attached; the
+//!   server's `WATCH`/`EVENTS`/`HEALTH` verbs, the CLI `--progress`
+//!   renderer, and the stuck-job watchdog all read from this bus.
 //!
 //! ## Determinism contract
 //!
@@ -27,5 +34,6 @@
 //! and server latencies) are the only nondeterministic values and are
 //! excluded from that contract.
 
+pub mod events;
 pub mod metrics;
 pub mod trace;

@@ -22,7 +22,7 @@
 use std::cell::RefCell;
 use std::collections::VecDeque;
 use std::fs::{File, OpenOptions};
-use std::io::Write;
+use std::io::{BufWriter, Write};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Mutex, OnceLock};
@@ -56,22 +56,34 @@ fn epoch() -> &'static Instant {
     EPOCH.get_or_init(Instant::now)
 }
 
-fn sink() -> &'static Mutex<Option<File>> {
-    static SINK: OnceLock<Mutex<Option<File>>> = OnceLock::new();
+/// Microseconds since the tracing layer's first use — the shared
+/// timebase for spans and bus events.
+pub(crate) fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+fn sink() -> &'static Mutex<Option<BufWriter<File>>> {
+    static SINK: OnceLock<Mutex<Option<BufWriter<File>>>> = OnceLock::new();
     SINK.get_or_init(|| Mutex::new(None))
 }
 
-/// Append span events as JSONL to `path` and switch tracing on.
+/// Append span events as JSONL to `path` and switch tracing on. Writes
+/// are buffered; [`clear_json_sink`] flushes.
 pub fn set_json_sink(path: &Path) -> std::io::Result<()> {
     let f = OpenOptions::new().create(true).append(true).open(path)?;
-    *sink().lock().unwrap() = Some(f);
+    *sink().lock().unwrap() = Some(BufWriter::new(f));
     set_enabled(true);
     Ok(())
 }
 
-/// Detach the JSONL sink (tracing stays in whatever state it was).
+/// Flush and detach the JSONL sink (tracing stays in whatever state it
+/// was).
 pub fn clear_json_sink() {
-    *sink().lock().unwrap() = None;
+    let mut s = sink().lock().unwrap();
+    if let Some(w) = s.as_mut() {
+        let _ = w.flush();
+    }
+    *s = None;
 }
 
 /// One completed span.
@@ -209,8 +221,11 @@ impl Drop for Span {
         };
         CTX.with(|c| {
             let mut c = c.borrow_mut();
-            if c.stack.last() == Some(&inner.id) {
-                c.stack.pop();
+            // guards may drop out of nesting order (`drop(outer)` while an
+            // inner guard lives on): remove this span's id from wherever
+            // it sits, or later spans inherit a stale parent
+            if let Some(pos) = c.stack.iter().rposition(|&id| id == inner.id) {
+                c.stack.remove(pos);
             }
             if let Some(cap) = c.capture.as_mut() {
                 if cap.len() < MAX_SPANS_PER_JOB {
@@ -225,7 +240,12 @@ impl Drop for Span {
                     ev.name, ev.id, ev.parent, ev.start_us, ev.dur_us,
                     std::thread::current().id(),
                 );
-                let _ = f.write_all(line.as_bytes());
+                if f.write_all(line.as_bytes()).is_ok() {
+                    super::metrics::counter_add(
+                        "sasvi_trace_sink_bytes_total",
+                        line.len() as u64,
+                    );
+                }
             }
         }
     }
@@ -267,6 +287,29 @@ mod tests {
     }
 
     #[test]
+    fn interleaved_guard_drops_keep_parent_attribution_clean() {
+        begin_job_capture();
+        let a = span("ileave_a");
+        let b = span("ileave_b"); // nested under a
+        drop(a); // out of nesting order: a closes while b lives on
+        let c = span("ileave_c"); // innermost live span is b
+        drop(c);
+        drop(b);
+        // with a's id scrubbed from the stack, a fresh span is a root
+        {
+            let _d = span("ileave_d");
+        }
+        let events = end_job_capture();
+        assert_eq!(events.len(), 4);
+        // drop order: a, c, b, d
+        let (ea, ec, eb, ed) = (&events[0], &events[1], &events[2], &events[3]);
+        assert_eq!(ea.name, "ileave_a");
+        assert_eq!(eb.parent, ea.id, "b opened under a");
+        assert_eq!(ec.parent, eb.id, "c must attach to b, the innermost live span");
+        assert_eq!(ed.parent, 0, "stale ids must not linger on the stack");
+    }
+
+    #[test]
     fn job_store_is_bounded_and_replaces_duplicates() {
         for i in 0..(MAX_STORED_TRACES as u64 + 8) {
             store_job_trace(1_000_000 + i, JobTrace::default());
@@ -288,10 +331,12 @@ mod tests {
             std::process::id()
         ));
         let _ = std::fs::remove_file(&path);
+        let m0 = super::super::metrics::snapshot();
         set_json_sink(&path).unwrap();
         {
             let _sp = span("sink_test");
         }
+        // the write is buffered; clear_json_sink must flush it out
         clear_json_sink();
         set_enabled(false);
         let text = std::fs::read_to_string(&path).unwrap();
@@ -301,6 +346,16 @@ mod tests {
             .collect();
         assert_eq!(lines.len(), 1);
         assert!(lines[0].contains("\"dur_us\":"));
+        let delta = super::super::metrics::snapshot().delta_since(&m0);
+        assert!(
+            delta
+                .counters
+                .get("sasvi_trace_sink_bytes_total")
+                .copied()
+                .unwrap_or(0)
+                >= lines[0].len() as u64,
+            "sink byte counter must cover the written line"
+        );
         let _ = std::fs::remove_file(&path);
     }
 }

@@ -211,6 +211,12 @@ pub fn rescreen(
         crate::obs::metrics::GAP_BUCKETS,
     );
     crate::obs::metrics::gauge_set("sasvi_checkpoint_width", survivors.len() as f64);
+    crate::obs::events::publish(|| crate::obs::events::EventKind::Checkpoint {
+        workload: "lasso",
+        gap,
+        width: survivors.len(),
+        dropped: dropped.len(),
+    });
     Rescreen { survivors, dropped, gap, infeas }
 }
 

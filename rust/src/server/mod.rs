@@ -15,6 +15,10 @@
 //! SUREREMOVAL <dataset-id> <lam1-frac> <j> -> {"lam_s": ...}
 //! METRICS                                 -> {"metrics": "<Prometheus text>"}
 //! TRACE <job-id>                          -> {"span_name": [...], "gap": [...], ...}
+//! WATCH <job-id>                          -> *streams* one JSON event line per
+//!                                            bus event until the job's terminal event
+//! EVENTS [n]                              -> {"count": k, "events": ["...", ...]}
+//! HEALTH                                  -> {"queue_depth": ..., "running": ..., ...}
 //! QUIT
 //! ```
 //!
@@ -132,6 +136,50 @@
 //! unfinished or evicted job is an error, not a crash. `TRACE` works
 //! after `RESULT` consumed the job — the trace store is separate from the
 //! pool's status map.
+//!
+//! ## Live observability: WATCH / EVENTS / HEALTH
+//!
+//! The three live verbs read the process-wide [`crate::obs::events`] bus,
+//! which every pool worker, solver checkpoint, working-set outer loop,
+//! shard cache, and helper-lane scheduler publishes into. Binding a
+//! server enables the bus's bounded ring buffer; publishing stays one
+//! relaxed atomic load when nothing is attached, so observation never
+//! perturbs solves (the determinism battery pins this).
+//!
+//! `WATCH <job-id>` is the one *streaming* verb in the protocol: instead
+//! of a single reply line it writes **one JSON object per line, one line
+//! per event** for that job — queued/started, per-shard starts, dynamic
+//! re-screen checkpoints, working-set outer iterations, per-step
+//! summaries — and returns to request/reply mode after writing the
+//! job's `terminal` event. Each connection runs on its own thread, so a
+//! blocked WATCHer never delays other clients. The watcher subscribes
+//! *before* checking job status: a job that races to completion still
+//! yields a terminal line (synthesized from pool status if the live
+//! event was published before the subscription attached, e.g. for an
+//! already-consumed id). Subscriber queues are bounded
+//! ([`crate::obs::events::SUBSCRIBER_CAP`]); a slow WATCHer has its
+//! **oldest** events dropped, counted in `sasvi_events_dropped_total`
+//! and the HEALTH reply — the terminal event still arrives because the
+//! stream also polls pool status, so backpressure can cost history but
+//! never a hang.
+//!
+//! `EVENTS [n]` replies with the newest `n` (default 64) events from the
+//! global ring (capacity [`crate::obs::events::RING_CAP`], oldest
+//! evicted first), each carried as one escaped JSON string so the
+//! one-line-per-reply protocol holds.
+//!
+//! `HEALTH` is the liveness summary: job-queue depth vs. its cap,
+//! retained-status entries vs. their cap, currently running jobs with
+//! the oldest start age and the longest progress-idle time, attached
+//! subscriber count and total dropped events, and the stuck-job
+//! watchdog's stall count. The watchdog is a server thread that scans
+//! every second for running jobs with no progress event (shard start,
+//! checkpoint, working-set iteration, or step completion) for
+//! `watchdog_secs` (see [`ServerOptions`]; 0 disables it), flags each
+//! stall **once per episode** (a progress event re-arms the flag),
+//! publishes a `watchdog` warning event onto the bus — so an attached
+//! WATCHer sees the stall inline — and bumps
+//! `sasvi_watchdog_stalls_total`.
 
 pub mod json;
 
@@ -167,6 +215,9 @@ struct ServerState {
     pool: JobPool,
     jobs: Mutex<HashMap<u64, crate::coordinator::pool::JobId>>,
     next_job: AtomicU64,
+    /// the (clamped) knobs this server was built with — HEALTH reports
+    /// depths against these caps
+    opts: ServerOptions,
 }
 
 /// Pool sizing knobs for [`Server::bind_with`].
@@ -179,6 +230,10 @@ pub struct ServerOptions {
     pub cache_cap: usize,
     /// cap on unobserved terminal status entries (FIFO eviction)
     pub retain_cap: usize,
+    /// stuck-job watchdog threshold: a running job with no progress event
+    /// for this long is flagged once per stall episode (0 disables the
+    /// watchdog thread)
+    pub watchdog_secs: u64,
 }
 
 impl Default for ServerOptions {
@@ -188,6 +243,7 @@ impl Default for ServerOptions {
             queue_cap: 16,
             cache_cap: DEFAULT_CACHE_CAP,
             retain_cap: DEFAULT_RETAIN_CAP,
+            watchdog_secs: 30,
         }
     }
 }
@@ -210,19 +266,30 @@ impl Server {
     pub fn bind_with(addr: &str, opts: ServerOptions) -> Result<Self> {
         let listener = TcpListener::bind(addr)?;
         listener.set_nonblocking(true)?;
+        let opts = ServerOptions {
+            workers: opts.workers.max(1),
+            queue_cap: opts.queue_cap.max(1),
+            retain_cap: opts.retain_cap.max(1),
+            ..opts
+        };
+        // a serving process keeps the event ring (and with it the
+        // watchdog's activity map) live; solo CLI solves leave it off so
+        // publishing stays one atomic load
+        crate::obs::events::set_ring_enabled(true);
         Ok(Self {
             listener,
             state: Arc::new(ServerState {
                 datasets: Mutex::new(HashMap::new()),
                 next_dataset: AtomicU64::new(1),
                 pool: JobPool::with_limits(
-                    opts.workers.max(1),
-                    opts.queue_cap.max(1),
+                    opts.workers,
+                    opts.queue_cap,
                     opts.cache_cap,
-                    opts.retain_cap.max(1),
+                    opts.retain_cap,
                 ),
                 jobs: Mutex::new(HashMap::new()),
                 next_job: AtomicU64::new(1),
+                opts,
             }),
             stop: Arc::new(AtomicBool::new(false)),
         })
@@ -240,6 +307,26 @@ impl Server {
     /// Accept loop; one thread per connection. Returns when stopped.
     pub fn serve(&self) -> Result<()> {
         let mut handles = Vec::new();
+        // stuck-job watchdog: scan every second for running jobs idle past
+        // the threshold; flag-once-per-episode semantics live in the bus,
+        // so scanning far more often than the threshold is cheap and safe
+        let watchdog = if self.state.opts.watchdog_secs > 0 {
+            let threshold = std::time::Duration::from_secs(self.state.opts.watchdog_secs);
+            let stop = Arc::clone(&self.stop);
+            Some(std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    for _ in 0..5 {
+                        if stop.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        std::thread::sleep(std::time::Duration::from_millis(200));
+                    }
+                    let _ = crate::obs::events::watchdog_scan(threshold);
+                }
+            }))
+        } else {
+            None
+        };
         while !self.stop.load(Ordering::Relaxed) {
             match self.listener.accept() {
                 Ok((stream, _)) => {
@@ -254,10 +341,22 @@ impl Server {
                 Err(e) => return Err(e.into()),
             }
         }
+        if let Some(h) = watchdog {
+            let _ = h.join();
+        }
         for h in handles {
             let _ = h.join();
         }
         Ok(())
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        // release this server's ring reference: the bus clears its ring
+        // and activity table when the last holder goes away, returning
+        // publish to the one-atomic-load idle path
+        crate::obs::events::set_ring_enabled(false);
     }
 }
 
@@ -288,6 +387,17 @@ fn handle_conn(stream: TcpStream, state: Arc<ServerState>) -> Result<()> {
         };
         let verb = verb_label(parts[0]);
         let started = std::time::Instant::now();
+        // WATCH is the one streaming verb: it writes many event lines on
+        // this connection before its closing line, so it cannot go
+        // through the one-reply dispatch below. Each connection owns a
+        // thread, so blocking here never delays other clients.
+        if parts[0] == "WATCH" {
+            // writes every line itself (events then terminal, or one
+            // error line); returns the last line for request accounting
+            let last = cmd_watch(&state, &parts[1..], &mut out)?;
+            record_request(verb, &last, started.elapsed());
+            continue;
+        }
         let reply = match parts.as_slice() {
             ["QUIT"] => ok_msg("bye"),
             ["PING"] => ok_msg("pong"),
@@ -310,6 +420,9 @@ fn handle_conn(stream: TcpStream, state: Arc<ServerState>) -> Result<()> {
             ["SUREREMOVAL", ds, frac, j] => cmd_sure_removal(&state, ds, frac, j),
             ["METRICS"] => cmd_metrics(),
             ["TRACE", job] => cmd_trace(&state, job),
+            ["EVENTS"] => cmd_events(None),
+            ["EVENTS", n] => cmd_events(Some(n)),
+            ["HEALTH"] => cmd_health(&state),
             other => err_msg(&format!("unknown command: {other:?}")),
         };
         record_request(verb, &reply, started.elapsed());
@@ -333,6 +446,9 @@ fn verb_label(verb: &str) -> &'static str {
         "SUREREMOVAL" => "SUREREMOVAL",
         "METRICS" => "METRICS",
         "TRACE" => "TRACE",
+        "WATCH" => "WATCH",
+        "EVENTS" => "EVENTS",
+        "HEALTH" => "HEALTH",
         "QUIT" => "QUIT",
         _ => "UNKNOWN",
     }
@@ -795,6 +911,131 @@ fn cmd_trace(state: &ServerState, job: &str) -> String {
     w.finish()
 }
 
+/// `WATCH <job-id>` — the streaming verb. Writes one JSON line per bus
+/// event for the job, ending with its `terminal` event, then returns the
+/// connection to request/reply mode. Returns the last line written (for
+/// request accounting). See the module docs for the race and
+/// backpressure semantics.
+fn cmd_watch(state: &ServerState, args: &[&str], out: &mut TcpStream) -> Result<String> {
+    use crate::obs::events;
+    let mut fail = |line: String| -> Result<String> {
+        writeln!(out, "{line}")?;
+        Ok(line)
+    };
+    let [job] = args else {
+        return fail(err_msg("usage: WATCH <job-id>"));
+    };
+    let id: u64 = match job.parse() {
+        Ok(v) => v,
+        Err(_) => return fail(err_msg("bad job id")),
+    };
+    let jid = match state.jobs.lock().unwrap().get(&id) {
+        Some(j) => *j,
+        None => return fail(err_msg(&format!("no job {id}"))),
+    };
+    // subscribe BEFORE looking at job state: a job terminating between a
+    // status check and the subscription would lose its terminal event.
+    // The filter keys on the *pool* job id — every streamed line's "job"
+    // field carries it, not the public id.
+    let sub = events::subscribe_filtered(events::SUBSCRIBER_CAP, Some(jid.0));
+    let mut last = String::new();
+    loop {
+        match sub.recv_timeout(std::time::Duration::from_millis(100)) {
+            Some(ev) => {
+                last = ev.to_json();
+                writeln!(out, "{last}")?;
+                if ev.is_terminal() {
+                    break;
+                }
+            }
+            None => {
+                // no event for 100ms: if the pool no longer reports the
+                // job as live, its terminal event was published before
+                // our subscription attached (or RESULT already consumed
+                // it) — drain what did arrive, then synthesize the
+                // terminal line so the stream always closes. status() is
+                // a non-consuming peek, so polling here can never steal
+                // a racing RESULT's answer.
+                let status = state.pool.status(jid);
+                if matches!(status, Some(JobStatus::Queued) | Some(JobStatus::Running)) {
+                    continue;
+                }
+                let mut saw_terminal = false;
+                while let Some(ev) = sub.try_recv() {
+                    last = ev.to_json();
+                    writeln!(out, "{last}")?;
+                    if ev.is_terminal() {
+                        saw_terminal = true;
+                        break;
+                    }
+                }
+                if !saw_terminal {
+                    let ev = events::Event {
+                        seq: 0,
+                        t_us: crate::obs::trace::now_us(),
+                        job: jid.0,
+                        kind: events::EventKind::Terminal {
+                            ok: matches!(status, Some(JobStatus::Done)),
+                        },
+                    };
+                    last = ev.to_json();
+                    writeln!(out, "{last}")?;
+                }
+                break;
+            }
+        }
+    }
+    out.flush()?;
+    Ok(last)
+}
+
+/// `EVENTS [n]` — the newest `n` (default 64) events from the global
+/// ring, oldest first, each carried as one escaped JSON string.
+fn cmd_events(n: Option<&str>) -> String {
+    use crate::obs::events;
+    let n: usize = match n {
+        None => 64,
+        Some(v) => match v.parse() {
+            Ok(k) => k,
+            Err(_) => return err_msg(&format!("bad event count {v}")),
+        },
+    };
+    let tail = events::ring_tail(n.min(events::RING_CAP));
+    let lines: Vec<String> = tail.iter().map(|e| e.to_json()).collect();
+    let refs: Vec<&str> = lines.iter().map(|s| s.as_str()).collect();
+    let mut w = JsonWriter::object();
+    w.field_u64("count", lines.len() as u64);
+    w.field_str_array("events", &refs);
+    w.finish()
+}
+
+/// `HEALTH` — queue depth vs. cap, running jobs with the oldest age and
+/// longest progress-idle, subscriber/drop counts, and watchdog stalls.
+fn cmd_health(state: &ServerState) -> String {
+    use crate::obs::{events, metrics};
+    let snap = metrics::snapshot();
+    let gauge = |name: &str| snap.gauges.get(name).copied().unwrap_or(0.0);
+    let running = events::running_jobs();
+    let oldest_age_ms = running.iter().map(|j| j.age.as_millis() as u64).max().unwrap_or(0);
+    let max_idle_ms = running.iter().map(|j| j.idle.as_millis() as u64).max().unwrap_or(0);
+    let stalled = running.iter().filter(|j| j.flagged).count();
+    let mut w = JsonWriter::object();
+    w.field_u64("queue_depth", gauge("sasvi_pool_queue_depth").max(0.0) as u64);
+    w.field_u64("queue_cap", state.opts.queue_cap as u64);
+    w.field_u64("status_entries", gauge("sasvi_pool_status_entries").max(0.0) as u64);
+    w.field_u64("retain_cap", state.opts.retain_cap as u64);
+    w.field_u64("workers", state.opts.workers as u64);
+    w.field_u64("running", running.len() as u64);
+    w.field_u64("oldest_age_ms", oldest_age_ms);
+    w.field_u64("max_idle_ms", max_idle_ms);
+    w.field_u64("stalled", stalled as u64);
+    w.field_u64("subscribers", events::subscriber_count() as u64);
+    w.field_u64("dropped_events", events::total_dropped());
+    w.field_u64("watchdog_stalls", events::total_stalls());
+    w.field_u64("watchdog_secs", state.opts.watchdog_secs);
+    w.finish()
+}
+
 fn cmd_sure_removal(state: &ServerState, ds: &str, frac: &str, j: &str) -> String {
     let ds_id: u64 = match ds.parse() {
         Ok(v) => v,
@@ -1209,13 +1450,102 @@ mod tests {
                 "TRACE notanumber",
                 "TRACE 999",
                 "METRICS now",
+                // WATCH errors are single-line (the stream never starts)
+                "WATCH",
+                "WATCH notanumber",
+                "WATCH 999",
+                "EVENTS notanumber",
+                "HEALTH now",
                 "QUIT",
             ],
         );
-        for r in &replies[..4] {
+        for r in &replies[..9] {
             assert!(r.contains("error"), "{r}");
         }
-        assert!(replies[4].contains("bye"));
+        assert!(replies[9].contains("bye"));
+        stop.store(true, Ordering::Relaxed);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn watch_streams_checkpoints_and_closes_with_a_terminal_event() {
+        let _guard = crate::linalg::par::test_knob_guard();
+        // one worker: the first (long) job occupies it, so WATCH attaches
+        // to the second while it is still queued and misses nothing
+        let server = Server::bind("127.0.0.1:0", 1).unwrap();
+        let addr = server.local_addr().unwrap();
+        let stop = server.stop_handle();
+        let h = std::thread::spawn(move || server.serve().unwrap());
+
+        fn roundtrip(
+            s: &mut TcpStream,
+            r: &mut BufReader<TcpStream>,
+            cmd: &str,
+        ) -> String {
+            writeln!(s, "{cmd}").unwrap();
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            line.trim().to_string()
+        }
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        assert!(roundtrip(&mut s, &mut r, "GEN synthetic100 3 0.01")
+            .contains("\"dataset\": 1"));
+        assert!(roundtrip(&mut s, &mut r, "PATH 1 sasvi 80 0.02 dynamic 3")
+            .contains("\"job\": 1"));
+        assert!(roundtrip(&mut s, &mut r, "PATH 1 sasvi 6 0.1 dynamic 3 nocache")
+            .contains("\"job\": 2"));
+
+        // stream job 2: one JSON line per event, terminal last
+        writeln!(s, "WATCH 2").unwrap();
+        let mut lines = Vec::new();
+        loop {
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            let line = line.trim().to_string();
+            let terminal = line.contains("\"type\":\"terminal\"");
+            lines.push(line);
+            if terminal {
+                break;
+            }
+        }
+        let has = |needle: &str| lines.iter().any(|l| l.contains(needle));
+        assert!(has("\"type\":\"started\""), "no started event: {lines:?}");
+        assert!(has("\"type\":\"shard_start\""), "no shard events: {lines:?}");
+        // a dynamic job streams at least one checkpoint per re-screen
+        assert!(has("\"type\":\"checkpoint\""), "no checkpoint events: {lines:?}");
+        assert!(has("\"type\":\"step\""), "no step events: {lines:?}");
+        assert!(
+            lines.last().unwrap().contains("\"ok\":true"),
+            "terminal not ok: {lines:?}"
+        );
+
+        // WATCH consumed nothing: both RESULTs still answer
+        assert!(roundtrip(&mut s, &mut r, "RESULT 1").contains("\"kind\": \"lasso\""));
+        assert!(roundtrip(&mut s, &mut r, "RESULT 2").contains("\"kind\": \"lasso\""));
+        // a second WATCH on the consumed id errors in one line
+        assert!(roundtrip(&mut s, &mut r, "WATCH 2").contains("error"));
+
+        // HEALTH reports depths against the configured caps
+        let health = roundtrip(&mut s, &mut r, "HEALTH");
+        for key in [
+            "\"queue_depth\": ",
+            "\"queue_cap\": 16",
+            "\"running\": ",
+            "\"max_idle_ms\": ",
+            "\"subscribers\": ",
+            "\"dropped_events\": ",
+            "\"watchdog_stalls\": ",
+            "\"watchdog_secs\": 30",
+        ] {
+            assert!(health.contains(key), "missing {key}: {health}");
+        }
+
+        // EVENTS replays the ring tail as escaped one-line strings
+        let events = roundtrip(&mut s, &mut r, "EVENTS 32");
+        assert!(events.contains("\"count\": "), "{events}");
+        assert!(events.contains("\\\"type\\\":\\\""), "{events}");
+        assert!(roundtrip(&mut s, &mut r, "QUIT").contains("bye"));
         stop.store(true, Ordering::Relaxed);
         h.join().unwrap();
     }

@@ -285,6 +285,11 @@ where
             x, y, lambda, xty, col_norms_sq, active, beta, resid, &mut xt_r,
         );
         let pruned = rs.dropped;
+        crate::obs::events::publish(|| crate::obs::events::EventKind::WsOuter {
+            outer,
+            width: ws.len(),
+            gap: rs.gap,
+        });
         let mut evicted = false;
         if !pruned.is_empty() {
             for &j in &pruned {

@@ -14,6 +14,9 @@
 //!     prunes, expansions),
 //!   * a path with span tracing and the metrics registry live
 //!     (observability never perturbs results or event counts),
+//!   * a path with a live event-bus subscriber attached at threads 1 and
+//!     4 (the streamed step/checkpoint events themselves are identical
+//!     on every lane, and the solve stays bit-identical),
 //!   * the concurrent-dispatch battery: overlapping `for_blocks` /
 //!     `map_blocks` / path solves from many threads through the steal
 //!     scheduler, with and without lane leases — the schedule is the one
@@ -606,6 +609,96 @@ fn observability_leaves_results_and_event_counts_bit_identical() {
         );
     }
     obs::trace::set_enabled(false);
+    par::set_threads(before);
+}
+
+/// The event-bus half of the observability contract (ISSUE 9): with a
+/// live subscriber attached — so every solver publish site actually
+/// builds and enqueues its event — a dynamically screened path still
+/// produces bit-identical betas to the silent serial reference at
+/// threads 1 and 4, and the published step/checkpoint stream itself is
+/// deterministic: the same events, with the same payloads, in the same
+/// order on every lane. Scheduler `steal` events are the one kind whose
+/// count legitimately depends on the lane→block schedule; they are
+/// ignored here (the betas assertions already prove they don't leak into
+/// results).
+#[test]
+fn event_subscriber_leaves_betas_and_event_stream_bit_identical() {
+    use sasvi::obs::events::{self, EventKind};
+
+    let _guard = THREAD_KNOB.lock().unwrap();
+    let before = par::threads();
+    let ds = SyntheticSpec {
+        n: 50,
+        p: 600,
+        nnz: 20,
+        density: 0.08,
+        ..Default::default()
+    }
+    .generate(19);
+    let plan = PathPlan::linear_spaced(&ds, 8, 0.2);
+    let opts = PathOptions {
+        dynamic: DynamicOptions::enabled_every(3),
+        ..Default::default()
+    };
+
+    // silent serial reference: no subscriber attached, so the publish
+    // fast path (one relaxed atomic load) skips every event closure
+    par::set_threads(1);
+    let reference = run_path_keep_betas(&ds, &plan, RuleKind::Sasvi, opts);
+
+    // an event's seq/t_us head is wall-clock; only the payload from
+    // "type" onward is part of the determinism contract
+    let payload = |ev: &events::Event| -> String {
+        let json = ev.to_json();
+        let at = json.find("\"type\"").expect("event json has a type field");
+        json[at..].to_string()
+    };
+
+    let mut first_stream: Option<Vec<String>> = None;
+    for lanes in [1usize, 4] {
+        par::set_threads(lanes);
+        // a queue deep enough that nothing is dropped mid-run — a drop
+        // would make the stream-equality assertion depend on timing
+        let sub = events::subscribe_filtered(1 << 16, None);
+        let observed = run_path_keep_betas(&ds, &plan, RuleKind::Sasvi, opts);
+        let mut stream = Vec::new();
+        let mut steps = 0usize;
+        while let Some(ev) = sub.try_recv() {
+            match ev.kind {
+                EventKind::Step { .. } => {
+                    steps += 1;
+                    stream.push(payload(&ev));
+                }
+                EventKind::Checkpoint { .. } => stream.push(payload(&ev)),
+                _ => {}
+            }
+        }
+        assert_eq!(sub.dropped(), 0, "subscriber queue overflowed at lanes {lanes}");
+        drop(sub);
+
+        let a = reference.betas.as_ref().unwrap();
+        let b = observed.betas.as_ref().unwrap();
+        for (k, (sa, sb)) in a.iter().zip(b.iter()).enumerate() {
+            assert_bits_eq(sa, sb, &format!("evented path step {k} lanes {lanes}"));
+        }
+        assert_eq!(
+            steps,
+            plan.len(),
+            "one step event per grid point at lanes {lanes}"
+        );
+        assert!(
+            stream.len() > steps,
+            "dynamic run published no checkpoint events at lanes {lanes}"
+        );
+        match &first_stream {
+            None => first_stream = Some(stream),
+            Some(expected) => assert_eq!(
+                &stream, expected,
+                "step/checkpoint event stream diverged between lanes 1 and {lanes}"
+            ),
+        }
+    }
     par::set_threads(before);
 }
 

@@ -5,6 +5,12 @@
 //! populated the cache, consumed jobs must become unknown, and the pool's
 //! status map must be fully drained at the end (`sasvi_pool_status_entries`
 //! gauge reads 0).
+//!
+//! The WATCH battery adds the streaming verb to the mix: several WATCHers
+//! on one job race the RESULT consumers that collect (and thereby consume)
+//! it. Every watcher must see a terminal event, the stream must never
+//! deadlock a RESULT, and a watcher's connection must come back for plain
+//! single-reply verbs after its stream closes.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -52,7 +58,13 @@ fn concurrent_mixed_workloads_terminate_bit_identically_and_drain() {
 
     let server = Server::bind_with(
         "127.0.0.1:0",
-        ServerOptions { workers: 2, queue_cap: 4, cache_cap: 64, retain_cap: 8 },
+        ServerOptions {
+            workers: 2,
+            queue_cap: 4,
+            cache_cap: 64,
+            retain_cap: 8,
+            ..Default::default()
+        },
     )
     .unwrap();
     let addr = server.local_addr().unwrap();
@@ -137,6 +149,88 @@ fn concurrent_mixed_workloads_terminate_bit_identically_and_drain() {
     assert_eq!(entries, 0.0, "status map must drain after every RESULT is collected");
 
     warm.roundtrip("QUIT");
+    stop.store(true, Ordering::Relaxed);
+    server_thread.join().unwrap();
+}
+
+#[test]
+fn watchers_race_result_consumers_and_all_see_a_terminal_event() {
+    const WATCHERS: usize = 4;
+
+    // one worker: the heavy job pins it, so the watched job stays queued
+    // long enough for every watcher to attach before it can terminate
+    let server = Server::bind_with(
+        "127.0.0.1:0",
+        ServerOptions { workers: 1, queue_cap: 8, retain_cap: 8, ..Default::default() },
+    )
+    .unwrap();
+    let addr = server.local_addr().unwrap();
+    let stop = server.stop_handle();
+    let server_thread = std::thread::spawn(move || server.serve().unwrap());
+
+    let mut main_cl = Client::connect(addr);
+    let gen = main_cl.roundtrip("GEN synthetic100 3 0.01");
+    assert!(gen.contains("\"dataset\": 1"), "{gen}");
+    let heavy = extract_u64(&main_cl.roundtrip("PATH 1 sasvi 60 0.02 dynamic 3"), "job")
+        .expect("heavy job id");
+    let watched = extract_u64(
+        &main_cl.roundtrip("PATH 1 sasvi 7 0.25 dynamic 3 nocache"),
+        "job",
+    )
+    .expect("watched job id");
+
+    std::thread::scope(|scope| {
+        for w in 0..WATCHERS {
+            scope.spawn(move || {
+                let mut cl = Client::connect(addr);
+                writeln!(cl.w, "WATCH {watched}").unwrap();
+                let mut events = 0usize;
+                loop {
+                    let mut line = String::new();
+                    let nread = cl.r.read_line(&mut line).unwrap();
+                    assert!(nread > 0, "watcher {w}: stream closed before terminal");
+                    let line = line.trim();
+                    assert!(
+                        !line.starts_with("{\"error"),
+                        "watcher {w}: stream errored: {line}"
+                    );
+                    events += 1;
+                    if line.contains("\"type\":\"terminal\"") {
+                        break;
+                    }
+                }
+                assert!(events >= 1, "watcher {w}: empty stream");
+                // the connection reverts to one-reply-per-line verbs once
+                // the stream closes
+                let health = cl.roundtrip("HEALTH");
+                assert!(
+                    health.contains("\"queue_cap\""),
+                    "watcher {w}: connection unusable after stream: {health}"
+                );
+            });
+        }
+        // RESULT consumers race the watchers: each blocks until its job
+        // terminates, and consuming the watched job must not wedge or
+        // error any watcher's stream
+        scope.spawn(|| {
+            let mut cl = Client::connect(addr);
+            let reply = cl.roundtrip(&format!("RESULT {heavy}"));
+            assert!(reply.contains("\"kind\""), "heavy RESULT failed: {reply}");
+        });
+        scope.spawn(|| {
+            let mut cl = Client::connect(addr);
+            let reply = cl.roundtrip(&format!("RESULT {watched}"));
+            assert!(reply.contains("\"kind\""), "watched RESULT failed: {reply}");
+        });
+    });
+
+    // both RESULTs were collected, so the status map is drained; the
+    // watchers were read-only observers and left nothing behind
+    let metrics = main_cl.roundtrip("METRICS");
+    let entries = metric_value(&metrics, "sasvi_pool_status_entries");
+    assert_eq!(entries, 0.0, "WATCH must not retain pool status entries");
+
+    main_cl.roundtrip("QUIT");
     stop.store(true, Ordering::Relaxed);
     server_thread.join().unwrap();
 }

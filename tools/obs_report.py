@@ -1,0 +1,263 @@
+#!/usr/bin/env python3
+"""Offline per-job timeline reporter for sasvi observability dumps.
+
+Turns the two capture formats the toolchain already produces into a
+human-readable report, stdlib only:
+
+- a span dump: the JSONL file written by ``--trace-json`` (one object per
+  span: name/id/parent/start_us/dur_us/thread), rendered as a text
+  flamegraph built from the span parent ids;
+- an event capture: one JSON object per line as streamed by
+  ``sasvi watch`` / the server's ``WATCH`` verb, or a single ``EVENTS``
+  reply line (the ``{"count": .., "events": [..]}`` envelope is detected
+  and unpacked), rendered as a per-job timeline plus the screening
+  funnel: candidates -> rule-screened -> dynamically dropped -> final
+  support.
+
+Usage:
+  obs_report.py [--trace-json FILE] [--events FILE] [--job N] [--width W]
+  obs_report.py --selftest
+"""
+
+import argparse
+import json
+import sys
+import tempfile
+from pathlib import Path
+
+BAR = "#"
+
+
+def load_jsonl(path):
+    """Parse one JSON object per line, skipping blanks; bad lines are
+    reported to stderr and skipped rather than aborting the report."""
+    out = []
+    for i, line in enumerate(Path(path).read_text().splitlines(), 1):
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            out.append(json.loads(line))
+        except json.JSONDecodeError as exc:
+            print(f"obs-report: {path}:{i}: skipping bad line ({exc})", file=sys.stderr)
+    return out
+
+
+def load_events(path):
+    """Event lines, unpacking an EVENTS reply envelope when present."""
+    rows = load_jsonl(path)
+    out = []
+    for row in rows:
+        if "events" in row and isinstance(row.get("events"), list):
+            for inner in row["events"]:
+                try:
+                    out.append(json.loads(inner))
+                except (TypeError, json.JSONDecodeError) as exc:
+                    print(f"obs-report: bad embedded event ({exc})", file=sys.stderr)
+        elif "type" in row:
+            out.append(row)
+    return out
+
+
+def build_span_tree(spans):
+    """Children grouped by parent id (0 = root), ordered by start time."""
+    children = {}
+    for s in spans:
+        children.setdefault(s.get("parent", 0), []).append(s)
+    for kids in children.values():
+        kids.sort(key=lambda s: (s.get("start_us", 0), s.get("id", 0)))
+    return children
+
+
+def render_flamegraph(spans, width=40):
+    """Indented span tree with duration bars scaled to the longest root."""
+    if not spans:
+        return ["(no spans)"]
+    children = build_span_tree(spans)
+    # spans whose parent id never appears are roots too (truncated dumps)
+    ids = {s.get("id") for s in spans}
+    roots = []
+    for parent, kids in children.items():
+        if parent == 0 or parent not in ids:
+            roots.extend(kids)
+    roots.sort(key=lambda s: (s.get("start_us", 0), s.get("id", 0)))
+    scale = max(s.get("dur_us", 0) for s in roots) or 1
+    name_w = max(len(s.get("name", "?")) for s in spans) + 2
+    lines = []
+
+    def walk(span, depth):
+        dur = span.get("dur_us", 0)
+        bar = BAR * max(1, round(width * dur / scale)) if dur else ""
+        label = "  " * depth + span.get("name", "?")
+        lines.append(f"{label:<{name_w + 8}} {dur:>10}us |{bar}")
+        for kid in children.get(span.get("id"), []):
+            walk(kid, depth + 1)
+
+    for root in roots:
+        walk(root, 0)
+    return lines
+
+
+def screening_funnel(events):
+    """The per-job screening funnel from step + checkpoint events."""
+    steps = [e for e in events if e.get("type") == "step"]
+    ckpts = [e for e in events if e.get("type") == "checkpoint"]
+    if not steps:
+        return None
+    candidates = sum(e.get("kept", 0) + e.get("screened", 0) for e in steps)
+    screened = sum(e.get("screened", 0) for e in steps)
+    kept = sum(e.get("kept", 0) for e in steps)
+    dyn_dropped = sum(e.get("dropped", 0) for e in ckpts)
+    final_nnz = steps[-1].get("nnz", 0)
+    return {
+        "steps": len(steps),
+        "candidates": candidates,
+        "rule_screened": screened,
+        "rule_kept": kept,
+        "dyn_dropped": dyn_dropped,
+        "final_support": final_nnz,
+    }
+
+
+def render_funnel(f):
+    return (
+        f"funnel over {f['steps']} steps: candidates {f['candidates']} -> "
+        f"rule-kept {f['rule_kept']} (screened {f['rule_screened']}) -> "
+        f"dynamically dropped {f['dyn_dropped']} -> "
+        f"final support {f['final_support']}"
+    )
+
+
+def render_timeline(events):
+    """One line per event relative to the job's first timestamp."""
+    t0 = min(e.get("t_us", 0) for e in events)
+    lines = []
+    for e in events:
+        t = e.get("t_us", 0) - t0
+        kind = e.get("type", "?")
+        detail = {
+            k: v
+            for k, v in e.items()
+            if k not in ("seq", "t_us", "job", "type")
+        }
+        body = " ".join(f"{k}={v}" for k, v in detail.items())
+        lines.append(f"  +{t:>8}us  {kind:<12} {body}")
+    return lines
+
+
+def report(spans, events, job=None, width=40, out=sys.stdout):
+    jobs = sorted({e.get("job", 0) for e in events}) if events else []
+    if job is not None:
+        jobs = [j for j in jobs if j == job]
+    for j in jobs:
+        evs = [e for e in events if e.get("job", 0) == j]
+        print(f"== job {j} ({len(evs)} events) ==", file=out)
+        f = screening_funnel(evs)
+        if f:
+            print(render_funnel(f), file=out)
+        warn = [e for e in evs if e.get("type") == "watchdog"]
+        for w in warn:
+            print(f"  WATCHDOG: no progress for {w.get('idle_ms', '?')}ms", file=out)
+        for line in render_timeline(evs):
+            print(line, file=out)
+        print(file=out)
+    if spans:
+        print(f"== span flamegraph ({len(spans)} spans) ==", file=out)
+        for line in render_flamegraph(spans, width=width):
+            print(line, file=out)
+
+
+FIXTURE_SPANS = """\
+{"name":"path_step","id":1,"parent":0,"start_us":0,"dur_us":900,"thread":"ThreadId(2)"}
+{"name":"cd_solve","id":2,"parent":1,"start_us":10,"dur_us":700,"thread":"ThreadId(2)"}
+{"name":"rescreen","id":3,"parent":2,"start_us":200,"dur_us":50,"thread":"ThreadId(2)"}
+{"name":"path_step","id":4,"parent":0,"start_us":950,"dur_us":450,"thread":"ThreadId(2)"}
+"""
+
+FIXTURE_EVENTS = """\
+{"seq":1,"t_us":5,"job":3,"type":"started","tag":"svc-Sasvi"}
+{"seq":2,"t_us":9,"job":3,"type":"shard_start","shard":0,"points":4}
+{"seq":3,"t_us":40,"job":3,"type":"checkpoint","workload":"lasso","gap":1e-06,"width":90,"dropped":30}
+{"seq":4,"t_us":60,"job":3,"type":"step","workload":"lasso","step":0,"lambda":0.9,"kept":120,"screened":480,"nnz":8,"gap":1e-08}
+{"seq":5,"t_us":80,"job":3,"type":"step","workload":"lasso","step":1,"lambda":0.8,"kept":150,"screened":450,"nnz":11,"gap":2e-08}
+{"seq":6,"t_us":85,"job":3,"type":"watchdog","idle_ms":31000}
+{"seq":7,"t_us":99,"job":3,"type":"terminal","ok":true}
+"""
+
+FIXTURE_ENVELOPE = (
+    '{"count": 1, "events": ["{\\"seq\\":8,\\"t_us\\":120,\\"job\\":4,'
+    '\\"type\\":\\"step\\",\\"workload\\":\\"lasso\\",\\"step\\":0,'
+    '\\"lambda\\":0.5,\\"kept\\":10,\\"screened\\":90,\\"nnz\\":3,'
+    '\\"gap\\":1e-09}"]}\n'
+)
+
+
+def selftest():
+    """Write fixtures, run the full report, check the load-bearing output."""
+    import io
+
+    with tempfile.TemporaryDirectory(prefix="sasvi_obs_report_") as d:
+        d = Path(d)
+        (d / "trace.jsonl").write_text(FIXTURE_SPANS)
+        (d / "watch.jsonl").write_text(FIXTURE_EVENTS)
+        (d / "events_reply.json").write_text(FIXTURE_ENVELOPE)
+
+        spans = load_jsonl(d / "trace.jsonl")
+        events = load_events(d / "watch.jsonl")
+        buf = io.StringIO()
+        report(spans, events, out=buf)
+        text = buf.getvalue()
+
+        checks = [
+            # funnel: 120+480 + 150+450 candidates, screened sums, last nnz
+            ("candidates 1200", "funnel candidate total"),
+            ("rule-kept 270 (screened 930)", "funnel rule stage"),
+            ("dynamically dropped 30", "funnel dynamic stage"),
+            ("final support 11", "funnel final support"),
+            ("WATCHDOG: no progress for 31000ms", "watchdog warning surfaced"),
+            ("terminal", "terminal event in timeline"),
+            ("== span flamegraph (4 spans) ==", "span section"),
+            ("path_step", "root span"),
+            ("  cd_solve", "nested child indent"),
+            ("    rescreen", "depth-2 indent"),
+        ]
+        for needle, what in checks:
+            assert needle in text, f"selftest: missing {what}: {needle!r}\n{text}"
+
+        # the flamegraph scales bars to the longest root (900us)
+        lines = text.splitlines()
+        root = next(l for l in lines if l.lstrip().startswith("path_step") and "900us" in l)
+        assert root.count(BAR) == 40, f"selftest: root bar not full width: {root!r}"
+
+        # the EVENTS envelope unpacks to plain events
+        env = load_events(d / "events_reply.json")
+        assert len(env) == 1 and env[0]["job"] == 4, f"selftest: envelope: {env}"
+        # and --job filtering isolates one job
+        buf = io.StringIO()
+        report([], events + env, job=4, out=buf)
+        assert "== job 4" in buf.getvalue() and "== job 3" not in buf.getvalue()
+
+    print("obs_report selftest: ok")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--trace-json", help="JSONL span dump from --trace-json")
+    ap.add_argument("--events", help="event capture (watch stream or EVENTS reply)")
+    ap.add_argument("--job", type=int, help="only report this job id")
+    ap.add_argument("--width", type=int, default=40, help="flamegraph bar width")
+    ap.add_argument("--selftest", action="store_true", help="run the built-in check")
+    args = ap.parse_args()
+    if args.selftest:
+        return selftest()
+    if not args.trace_json and not args.events:
+        ap.error("need --trace-json and/or --events (or --selftest)")
+    spans = load_jsonl(args.trace_json) if args.trace_json else []
+    events = load_events(args.events) if args.events else []
+    report(spans, events, job=args.job, width=args.width)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
