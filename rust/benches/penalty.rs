@@ -1,0 +1,143 @@
+//! Bench: screened vs unscreened path work across the penalty axis.
+//!
+//! Runs the λ-path for every penalty the core supports — ℓ1, elastic net
+//! (α), sparse-group lasso (τ, uniform groups) — with Sasvi screening and
+//! without any rule, on dense and 5%-dense CSC backends, and reports the
+//! screening work cut: `epochs x active-width` solver work of the screened
+//! path over the unscreened one (lower is better). Solutions are checked
+//! to agree before any number is reported.
+//!
+//! The headline keys in `BENCH_penalty.json` are the per-penalty ratios
+//! (`l1_work_ratio`, `en_work_ratio`, `sgl_work_ratio`, work summed over
+//! both backends), tracked by `tools/bench_diff.py --gate`; per-backend
+//! detail keys ride along.
+//!
+//! Acceptance bar (the ISSUE-10 criterion, enforced): screening must
+//! reduce total solver work for every penalty on every backend.
+//!
+//! Env: SASVI_BENCH_DENSITY (default 0.05), SASVI_BENCH_GRID (default 15),
+//! SASVI_BENCH_P (default 4000), SASVI_BENCH_N (default 200),
+//! SASVI_BENCH_ALPHA (default 0.3), SASVI_BENCH_TAU (default 0.5),
+//! SASVI_BENCH_GROUP (default 8).
+
+use std::time::Instant;
+
+use sasvi::coordinator::{run_path_keep_betas, PathOptions, PathPlan};
+use sasvi::data::synthetic::SyntheticSpec;
+use sasvi::linalg::DesignMatrix;
+use sasvi::metrics::Table;
+use sasvi::penalty::{GroupSpec, Penalty};
+use sasvi::screening::RuleKind;
+
+#[path = "common.rs"]
+mod common;
+use common::{env_f64, env_usize, BenchJson};
+
+fn main() {
+    let density = env_f64("SASVI_BENCH_DENSITY", 0.05).clamp(1e-4, 0.99);
+    let grid = env_usize("SASVI_BENCH_GRID", 15).max(2);
+    let p = env_usize("SASVI_BENCH_P", 4_000);
+    let n = env_usize("SASVI_BENCH_N", 200);
+    let alpha = env_f64("SASVI_BENCH_ALPHA", 0.3).max(0.0);
+    let tau = env_f64("SASVI_BENCH_TAU", 0.5).clamp(0.0, 1.0);
+    let group = env_usize("SASVI_BENCH_GROUP", 8).max(1);
+    println!(
+        "== screened vs unscreened work per penalty (n={n}, p={p}, csc \
+         density={density}, grid={grid}, alpha={alpha}, tau={tau}, \
+         group={group}) ==\n"
+    );
+
+    let sparse_ds = SyntheticSpec { n, p, nnz: 100, density, ..Default::default() }
+        .generate(11);
+    assert!(sparse_ds.x.is_sparse(), "bench requires a CSC design");
+    let mut dense_ds = sparse_ds.clone();
+    dense_ds.x = DesignMatrix::from(sparse_ds.x.to_dense());
+    let cases = [("dense", &dense_ds), ("csc", &sparse_ds)];
+
+    let penalties = [
+        Penalty::L1,
+        Penalty::ElasticNet { alpha },
+        Penalty::SparseGroupLasso { groups: GroupSpec::new(group), tau },
+    ];
+
+    let mut table = Table::new(&[
+        "config", "unscreened(s)", "screened(s)", "unscr work", "scr work",
+        "work ratio", "rule drops",
+    ]);
+    let mut json = BenchJson::new("penalty");
+    json.int("n", n as u64)
+        .int("p", p as u64)
+        .int("grid", grid as u64)
+        .num("density", density)
+        .num("alpha", alpha)
+        .num("tau", tau)
+        .int("group", group as u64);
+    let mut all_reduced = true;
+    for pen in penalties {
+        // per-penalty totals across backends feed the headline ratio
+        let mut work_unscr_total = 0u64;
+        let mut work_scr_total = 0u64;
+        for (label, ds) in cases {
+            let plan = PathPlan::linear_spaced(ds, grid, 0.05);
+            let opts = PathOptions { penalty: pen, ..Default::default() };
+            let t0 = Instant::now();
+            let r_unscr = run_path_keep_betas(ds, &plan, RuleKind::None, opts);
+            let t_unscr = t0.elapsed().as_secs_f64();
+            let t1 = Instant::now();
+            let r_scr = run_path_keep_betas(ds, &plan, RuleKind::Sasvi, opts);
+            let t_scr = t1.elapsed().as_secs_f64();
+
+            // correctness first: same path, step by step
+            let a = r_unscr.betas.as_ref().unwrap();
+            let b = r_scr.betas.as_ref().unwrap();
+            for (k, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+                for j in 0..ds.p() {
+                    assert!(
+                        (x[j] - y[j]).abs() < 1e-5,
+                        "{}/{label}: step {k} feature {j} diverged: {} vs {}",
+                        pen.spec(),
+                        x[j],
+                        y[j]
+                    );
+                }
+            }
+
+            let work_unscr = r_unscr.solver_work();
+            let work_scr = r_scr.solver_work();
+            work_unscr_total += work_unscr;
+            work_scr_total += work_scr;
+            let ratio = work_scr as f64 / work_unscr.max(1) as f64;
+            all_reduced &= work_scr < work_unscr;
+            let drops: usize = r_scr.steps.iter().map(|s| s.screened).sum();
+            table.row(vec![
+                format!("{}/{label}", pen.spec()),
+                format!("{t_unscr:.3}"),
+                format!("{t_scr:.3}"),
+                work_unscr.to_string(),
+                work_scr.to_string(),
+                format!("{ratio:.3}"),
+                drops.to_string(),
+            ]);
+            let key = format!("{}_{label}", pen.tag());
+            json.num(&format!("{key}_unscreened_secs"), t_unscr)
+                .num(&format!("{key}_screened_secs"), t_scr)
+                .int(&format!("{key}_unscreened_work"), work_unscr)
+                .int(&format!("{key}_screened_work"), work_scr)
+                .num(&format!("{key}_backend_work_ratio"), ratio)
+                .int(&format!("{key}_rule_drops"), drops as u64);
+        }
+        json.num(
+            &format!("{}_work_ratio", pen.tag()),
+            work_scr_total as f64 / work_unscr_total.max(1) as f64,
+        );
+    }
+    println!("\n{}", table.render());
+    json.flag("work_reduced_everywhere", all_reduced);
+    json.write();
+    assert!(
+        all_reduced,
+        "acceptance: screening must reduce epochs x active-width work vs \
+         the unscreened path for every penalty on every backend"
+    );
+    println!("acceptance: screened work < unscreened work on every penalty/backend — OK");
+}

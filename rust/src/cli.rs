@@ -146,6 +146,15 @@ GLOBAL:  --threads N sets the column-block worker-pool width for any
          solve-logistic, run, table1, fig5, serve jobs); solutions are
          unchanged, only the work shrinks. (--working-set applies to the
          Lasso solvers only.)
+         --penalty l1|en[:a]|sgl[:t[:k]] selects the penalty every Lasso
+         path solves under (default l1, the paper's Lasso). en adds
+         0.5*alpha*||b||^2 (--l2-alpha A overrides; default 0.1); sgl is
+         lambda*(tau*||b||_1 + (1-tau)*sum_g w_g*||b_g||_2) over contiguous
+         groups of K columns (--tau T, --groups K; defaults 0.5, 8).
+         Applies to every Lasso-path command (solve-path, run, serve
+         jobs, metrics); logistic paths are l1-only. Screening stays
+         safe and exact for every penalty, and results stay bit-identical
+         at every thread count.
          --trace-json FILE switches span tracing on and appends one JSONL
          line per solver/path span to FILE, for any command. Observing
          never changes results: outputs stay bit-identical.
@@ -209,6 +218,61 @@ pub fn run(args: &[String]) -> Result<i32> {
         let mut d = crate::solver::working_set::process_default();
         d.grow = flags.usize_or("ws-grow", d.grow)?;
         crate::solver::working_set::set_process_default(d);
+    }
+    // global knob: the penalty every Lasso-path surface solves under.
+    // Selecting is always explicit (--penalty, config `[penalty]`, or the
+    // server's `penalty=` token); --l2-alpha / --tau / --groups retune the
+    // selected penalty's knobs and are rejected when they don't apply —
+    // a knob that silently did nothing would be worse than an error.
+    if let Some(spec) = flags.get("penalty") {
+        use crate::penalty::Penalty;
+        let mut pen = Penalty::parse(spec).with_context(|| {
+            format!("--penalty {spec}: expected l1 | en[:alpha] | sgl[:tau[:groups]]")
+        })?;
+        match &mut pen {
+            Penalty::L1 => {
+                for k in ["l2-alpha", "tau", "groups"] {
+                    if flags.get(k).is_some() {
+                        bail!("--{k} does not apply to --penalty l1");
+                    }
+                }
+            }
+            Penalty::ElasticNet { alpha } => {
+                for k in ["tau", "groups"] {
+                    if flags.get(k).is_some() {
+                        bail!("--{k} applies to --penalty sgl only");
+                    }
+                }
+                *alpha = flags.f64_or("l2-alpha", *alpha)?;
+                if !alpha.is_finite() || *alpha < 0.0 {
+                    bail!("--l2-alpha {alpha}: expected a finite value >= 0");
+                }
+            }
+            Penalty::SparseGroupLasso { groups, tau } => {
+                if flags.get("l2-alpha").is_some() {
+                    bail!("--l2-alpha applies to --penalty en only");
+                }
+                *tau = flags.f64_or("tau", *tau)?;
+                if !(0.0..=1.0).contains(tau) {
+                    bail!("--tau {tau}: expected a value in [0, 1]");
+                }
+                let size = flags.usize_or("groups", groups.size)?;
+                if size == 0 {
+                    bail!("--groups 0: group width must be >= 1");
+                }
+                *groups = crate::penalty::GroupSpec::new(size);
+            }
+        }
+        crate::penalty::set_process_default(pen);
+    } else {
+        for k in ["l2-alpha", "tau", "groups"] {
+            if flags.get(k).is_some() {
+                bail!(
+                    "--{k} requires --penalty (en for --l2-alpha, sgl for \
+                     --tau/--groups)"
+                );
+            }
+        }
     }
     // global knob: span tracing to a JSONL sink (any command; an
     // unopenable path is an error up front, not a silently lost trace)
@@ -281,15 +345,15 @@ impl ProgressPrinter {
     fn render(ev: &crate::obs::events::Event) -> Option<String> {
         use crate::obs::events::EventKind;
         match &ev.kind {
-            EventKind::Step { workload, step, lambda, kept, screened, nnz, gap } => {
+            EventKind::Step { workload, penalty, step, lambda, kept, screened, nnz, gap } => {
                 let rej = *screened as f64 / (kept + screened).max(1) as f64;
                 Some(format!(
-                    "[{workload}] step {step}: lambda={lambda:.5} kept={kept} \
+                    "[{workload}/{penalty}] step {step}: lambda={lambda:.5} kept={kept} \
                      screened={screened} (rejection {rej:.3}) nnz={nnz} gap={gap:.3e}"
                 ))
             }
-            EventKind::Checkpoint { workload, gap, width, dropped } => Some(format!(
-                "[{workload}] checkpoint: gap={gap:.3e} width={width} dropped={dropped}"
+            EventKind::Checkpoint { workload, penalty, gap, width, dropped } => Some(format!(
+                "[{workload}/{penalty}] checkpoint: gap={gap:.3e} width={width} dropped={dropped}"
             )),
             EventKind::WsOuter { outer, width, gap } => Some(format!(
                 "[ws] outer {outer}: width={width} gap={gap:.3e}"
@@ -352,7 +416,11 @@ fn cmd_solve_path(flags: &Flags) -> Result<i32> {
         Some(true) => Some(ProgressPrinter::start()),
         _ => None,
     };
-    let res = run_path(&ds, &plan, rule, PathOptions::from_process_defaults());
+    let opts = PathOptions::from_process_defaults();
+    if !opts.penalty.is_l1() {
+        println!("penalty: {}", opts.penalty);
+    }
+    let res = run_path(&ds, &plan, rule, opts);
     if let Some(p) = progress {
         p.finish();
     }
@@ -753,6 +821,13 @@ fn cmd_run_config(flags: &Flags) -> Result<i32> {
     if flags.get("recheck-every").is_some() {
         dynamic.recheck_every = flags.usize_or("recheck-every", dynamic.recheck_every)?;
     }
+    // same precedence for the `[penalty]` section: an explicit --penalty
+    // already installed the process default in run()
+    if flags.get("penalty").is_none() {
+        crate::penalty::set_process_default(
+            crate::config::PenaltyConfig::from_config(&cfg).penalty()?,
+        );
+    }
     // same precedence for the `[solver]` working-set knobs
     let mut working_set = exp.working_set_options();
     if flags.get("working-set").is_some() {
@@ -995,6 +1070,87 @@ mod tests {
         assert!(crate::screening::dynamic::process_default().enabled);
         crate::screening::dynamic::set_process_default(dyn_before);
         crate::solver::working_set::set_process_default(before);
+    }
+
+    #[test]
+    fn penalty_flag_is_global_and_validated() {
+        let _guard = crate::linalg::par::test_knob_guard();
+        let before = crate::penalty::process_default();
+        let code = run(&s(&[
+            "solve-path", "--preset", "synthetic100", "--scale", "0.01",
+            "--grid", "4", "--rule", "sasvi", "--penalty", "en",
+            "--l2-alpha", "0.3",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+        assert_eq!(
+            crate::penalty::process_default(),
+            crate::penalty::Penalty::ElasticNet { alpha: 0.3 }
+        );
+        let code = run(&s(&[
+            "solve-path", "--preset", "synthetic100", "--scale", "0.01",
+            "--grid", "4", "--rule", "sasvi", "--penalty", "sgl",
+            "--tau", "0.4", "--groups", "16",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+        assert_eq!(
+            crate::penalty::process_default(),
+            crate::penalty::Penalty::SparseGroupLasso {
+                groups: crate::penalty::GroupSpec::new(16),
+                tau: 0.4
+            }
+        );
+        // unknown spec / inapplicable or invalid knobs are errors, not
+        // silent no-ops
+        assert!(run(&s(&["solve-path", "--penalty", "ridge"])).is_err());
+        assert!(run(&s(&["solve-path", "--penalty", "l1", "--l2-alpha", "0.3"])).is_err());
+        assert!(run(&s(&["solve-path", "--penalty", "en", "--tau", "0.4"])).is_err());
+        assert!(run(&s(&["solve-path", "--penalty", "sgl", "--tau", "1.5"])).is_err());
+        assert!(run(&s(&["solve-path", "--penalty", "sgl", "--groups", "0"])).is_err());
+        // knob flags without --penalty are errors too
+        assert!(run(&s(&["solve-path", "--l2-alpha", "0.3"])).is_err());
+        assert!(run(&s(&["solve-path", "--tau", "0.4"])).is_err());
+        crate::penalty::set_process_default(before);
+    }
+
+    #[test]
+    fn run_config_with_penalty_section() {
+        let _guard = crate::linalg::par::test_knob_guard();
+        let before = crate::penalty::process_default();
+        let dir = std::env::temp_dir().join("sasvi_cli_pen_cfg");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("exp.toml");
+        std::fs::write(
+            &path,
+            "[experiment]\ndataset = \"synthetic100\"\nscale = 0.01\n\
+             grid_points = 4\nrules = [\"sasvi\"]\n\
+             [penalty]\nkind = \"en\"\nl2_alpha = 0.2\n",
+        )
+        .unwrap();
+        let code = run(&s(&["run", "--config", path.to_str().unwrap()])).unwrap();
+        assert_eq!(code, 0);
+        assert_eq!(
+            crate::penalty::process_default(),
+            crate::penalty::Penalty::ElasticNet { alpha: 0.2 }
+        );
+        // an explicit CLI --penalty wins over the config section
+        let code = run(&s(&[
+            "run", "--config", path.to_str().unwrap(), "--penalty", "l1",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+        assert_eq!(crate::penalty::process_default(), crate::penalty::Penalty::L1);
+        // a bad section is an error, not a silent l1 fallback
+        std::fs::write(
+            &path,
+            "[experiment]\ndataset = \"synthetic100\"\nscale = 0.01\n\
+             grid_points = 4\nrules = [\"sasvi\"]\n\
+             [penalty]\nkind = \"ridge\"\n",
+        )
+        .unwrap();
+        assert!(run(&s(&["run", "--config", path.to_str().unwrap()])).is_err());
+        crate::penalty::set_process_default(before);
     }
 
     #[test]

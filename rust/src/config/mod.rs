@@ -325,6 +325,93 @@ impl LogisticConfig {
     }
 }
 
+/// The `[penalty]` section: the penalty every Lasso path in the run
+/// solves under (an explicit CLI `--penalty` wins — see the CLI's
+/// precedence rules). `kind` accepts a bare kind (`"l1"`, `"en"`,
+/// `"sgl"`) or a full spec string (`"en:0.3"`); the dedicated knob keys
+/// override the spec's values and are rejected when they don't apply to
+/// the kind — a knob that silently did nothing would be worse than an
+/// error.
+#[derive(Clone, Debug)]
+pub struct PenaltyConfig {
+    /// `penalty.kind`: l1 | en[:alpha] | sgl[:tau[:groups]]
+    pub kind: String,
+    /// `penalty.l2_alpha`: elastic-net ℓ2 strength (kind = "en" only)
+    pub l2_alpha: Option<f64>,
+    /// `penalty.tau`: sparse-group ℓ1-vs-group mix in [0, 1] ("sgl" only)
+    pub tau: Option<f64>,
+    /// `penalty.groups`: contiguous group width >= 1 ("sgl" only)
+    pub groups: Option<usize>,
+}
+
+impl Default for PenaltyConfig {
+    fn default() -> Self {
+        Self { kind: "l1".into(), l2_alpha: None, tau: None, groups: None }
+    }
+}
+
+impl PenaltyConfig {
+    pub fn from_config(c: &Config) -> Self {
+        let d = Self::default();
+        Self {
+            kind: c.get_str("penalty.kind", &d.kind),
+            l2_alpha: c.get("penalty.l2_alpha").and_then(Value::as_f64),
+            tau: c.get("penalty.tau").and_then(Value::as_f64),
+            groups: c
+                .get("penalty.groups")
+                .and_then(Value::as_i64)
+                .map(|v| v.max(0) as usize),
+        }
+    }
+
+    /// Resolve to a [`crate::penalty::Penalty`], validating kind and knobs.
+    pub fn penalty(&self) -> Result<crate::penalty::Penalty> {
+        use crate::penalty::Penalty;
+        let mut pen = Penalty::parse(&self.kind).with_context(|| {
+            format!(
+                "penalty.kind = \"{}\": expected l1 | en[:alpha] | sgl[:tau[:groups]]",
+                self.kind
+            )
+        })?;
+        match &mut pen {
+            Penalty::L1 => {
+                if self.l2_alpha.is_some() || self.tau.is_some() || self.groups.is_some() {
+                    bail!("penalty.l2_alpha/tau/groups do not apply to kind = \"l1\"");
+                }
+            }
+            Penalty::ElasticNet { alpha } => {
+                if self.tau.is_some() || self.groups.is_some() {
+                    bail!("penalty.tau/groups apply to kind = \"sgl\" only");
+                }
+                if let Some(a) = self.l2_alpha {
+                    if !a.is_finite() || a < 0.0 {
+                        bail!("penalty.l2_alpha = {a}: expected a finite value >= 0");
+                    }
+                    *alpha = a;
+                }
+            }
+            Penalty::SparseGroupLasso { groups, tau } => {
+                if self.l2_alpha.is_some() {
+                    bail!("penalty.l2_alpha applies to kind = \"en\" only");
+                }
+                if let Some(t) = self.tau {
+                    if !(0.0..=1.0).contains(&t) {
+                        bail!("penalty.tau = {t}: expected a value in [0, 1]");
+                    }
+                    *tau = t;
+                }
+                if let Some(k) = self.groups {
+                    if k == 0 {
+                        bail!("penalty.groups = 0: group width must be >= 1");
+                    }
+                    *groups = crate::penalty::GroupSpec::new(k);
+                }
+            }
+        }
+        Ok(pen)
+    }
+}
+
 /// The `[observability]` section: process-wide telemetry switches for
 /// `sasvi run --config` (applied before the experiment starts; explicit
 /// CLI flags win, see the CLI's precedence rules).
@@ -540,6 +627,42 @@ trials = 3
         assert!(!d.enabled);
         assert_eq!(d.rule, "sasviq");
         assert!(crate::logistic::LogiRule::parse(&d.rule).is_some());
+    }
+
+    #[test]
+    fn penalty_knobs_parse_and_validate() {
+        use crate::penalty::{GroupSpec, Penalty};
+        // bare kind with dedicated knob keys
+        let c = Config::parse("[penalty]\nkind = \"en\"\nl2_alpha = 0.3\n").unwrap();
+        let p = PenaltyConfig::from_config(&c);
+        assert_eq!(p.penalty().unwrap(), Penalty::ElasticNet { alpha: 0.3 });
+        let c = Config::parse("[penalty]\nkind = \"sgl\"\ntau = 0.4\ngroups = 16\n")
+            .unwrap();
+        let p = PenaltyConfig::from_config(&c);
+        assert_eq!(
+            p.penalty().unwrap(),
+            Penalty::SparseGroupLasso { groups: GroupSpec::new(16), tau: 0.4 }
+        );
+        // a full spec string also works
+        let c = Config::parse("[penalty]\nkind = \"en:0.25\"\n").unwrap();
+        assert_eq!(
+            PenaltyConfig::from_config(&c).penalty().unwrap(),
+            Penalty::ElasticNet { alpha: 0.25 }
+        );
+        // defaults: plain l1
+        let d = PenaltyConfig::from_config(&Config::parse("").unwrap());
+        assert_eq!(d.penalty().unwrap(), Penalty::L1);
+        // inapplicable or invalid knobs are errors, not silent no-ops
+        let c = Config::parse("[penalty]\nkind = \"l1\"\nl2_alpha = 0.3\n").unwrap();
+        assert!(PenaltyConfig::from_config(&c).penalty().is_err());
+        let c = Config::parse("[penalty]\nkind = \"en\"\ntau = 0.4\n").unwrap();
+        assert!(PenaltyConfig::from_config(&c).penalty().is_err());
+        let c = Config::parse("[penalty]\nkind = \"sgl\"\ntau = 1.5\n").unwrap();
+        assert!(PenaltyConfig::from_config(&c).penalty().is_err());
+        let c = Config::parse("[penalty]\nkind = \"sgl\"\ngroups = 0\n").unwrap();
+        assert!(PenaltyConfig::from_config(&c).penalty().is_err());
+        let c = Config::parse("[penalty]\nkind = \"ridge\"\n").unwrap();
+        assert!(PenaltyConfig::from_config(&c).penalty().is_err());
     }
 
     #[test]

@@ -430,6 +430,7 @@ fn run_logistic_segment_impl(
         let gap = trace.events.last().map(|e| e.gap).unwrap_or(f64::NAN);
         crate::obs::events::publish(|| crate::obs::events::EventKind::Step {
             workload: "logistic",
+            penalty: "l1",
             step: steps.len(),
             lambda,
             kept,

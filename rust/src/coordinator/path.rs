@@ -36,12 +36,15 @@
 use std::time::{Duration, Instant};
 
 use crate::data::Dataset;
+use crate::penalty::Penalty;
 use crate::screening::dynamic::{DynamicOptions, DynamicTrace};
 use crate::screening::{RuleKind, ScreenContext, ScreenOutcome};
-use crate::solver::cd::{solve_cd, solve_cd_dynamic, CdOptions};
+use crate::solver::cd::{solve_cd, solve_cd_dynamic, solve_cd_dynamic_en, solve_cd_en, CdOptions};
 use crate::solver::kkt::check_kkt_subset;
+use crate::solver::sgl::solve_sgl;
 use crate::solver::working_set::{
-    solve_working_set_cd, solve_working_set_fista, WorkingSetOptions, WorkingSetTrace,
+    solve_working_set_cd, solve_working_set_cd_en, solve_working_set_fista, WorkingSetOptions,
+    WorkingSetTrace,
 };
 use crate::solver::DualState;
 
@@ -77,6 +80,12 @@ pub struct PathOptions {
     /// [`crate::solver::working_set::process_default`]. Composes with
     /// `dynamic`: inner restricted solves then re-screen mid-solve too.
     pub working_set: WorkingSetOptions,
+    /// the penalty the path solves ([`crate::penalty::Penalty`]); `L1` by
+    /// default, and the ℓ1 code path is byte-for-byte the pre-penalty one.
+    /// Non-ℓ1 paths route through [`run_segment_pen`]: gap-safe sequential
+    /// screening at the carried primal point for any rule other than
+    /// `None`, penalty-native solvers, the same carry/segment contract.
+    pub penalty: Penalty,
 }
 
 impl Default for PathOptions {
@@ -93,6 +102,7 @@ impl Default for PathOptions {
             max_kkt_rounds: 16,
             dynamic: DynamicOptions::off(),
             working_set: WorkingSetOptions::off(),
+            penalty: Penalty::L1,
         }
     }
 }
@@ -103,14 +113,16 @@ impl PathOptions {
         Self { solver: SolverKind::Fista, ..Default::default() }
     }
 
-    /// Defaults plus every process-wide knob set from user input (today:
-    /// the dynamic-screening flag). Commands that build options on behalf
-    /// of a user go through this so a global CLI/server flag is never
-    /// silently ignored; library callers keep the pure `Default`.
+    /// Defaults plus every process-wide knob set from user input (the
+    /// dynamic-screening, working-set, and penalty flags). Commands that
+    /// build options on behalf of a user go through this so a global
+    /// CLI/server flag is never silently ignored; library callers keep the
+    /// pure `Default`.
     pub fn from_process_defaults() -> Self {
         Self {
             dynamic: crate::screening::dynamic::process_default(),
             working_set: crate::solver::working_set::process_default(),
+            penalty: crate::penalty::process_default(),
             ..Default::default()
         }
     }
@@ -187,6 +199,8 @@ impl StepRecord {
 #[derive(Clone, Debug)]
 pub struct PathResult {
     pub rule: RuleKind,
+    /// the penalty this path was solved under (reported by `RESULT`)
+    pub penalty: crate::penalty::Penalty,
     pub dataset: String,
     pub steps: Vec<StepRecord>,
     pub total_time: Duration,
@@ -495,6 +509,7 @@ fn run_path_impl(
     );
     PathResult {
         rule: rule_kind,
+        penalty: opts.penalty,
         dataset: ds.name.clone(),
         steps: seg.steps,
         total_time: start.elapsed(),
@@ -516,6 +531,13 @@ fn run_segment_impl(
     carry: Option<PathCarry>,
     keep_betas: bool,
 ) -> PathSegment {
+    if !opts.penalty.is_l1() {
+        // the ℓ1 loop below stays byte-for-byte the pre-penalty code;
+        // elastic-net / sparse-group-lasso paths have their own runner
+        return run_segment_pen(
+            ds, pre, lambdas, grid_lambda_max, rule_kind, opts, carry, keep_betas,
+        );
+    }
     let ctx = ScreenContext::new(&ds.x, &ds.y, pre);
     let rule = rule_kind.build();
     let p = ds.p();
@@ -699,6 +721,7 @@ fn run_segment_impl(
             .unwrap_or((0, 0, 0));
         crate::obs::events::publish(|| crate::obs::events::EventKind::Step {
             workload: "lasso",
+            penalty: "l1",
             step: steps.len(),
             lambda,
             kept: outcome.kept,
@@ -745,6 +768,285 @@ fn run_segment_impl(
         working_set: ws_traces,
         betas,
         carry: PathCarry { beta, resid, state, prev_ws },
+    }
+}
+
+/// The non-ℓ1 segment runner: elastic net and sparse-group lasso.
+///
+/// Pathwise screening here is the **gap-safe sequential** scheme (Fercoq,
+/// Gramfort & Salmon; Ndiaye et al.): at each grid point the carried
+/// `(beta, resid)` — the previous lambda's solution — feeds the very same
+/// penalty-aware checkpoint the dynamic solvers use
+/// ([`crate::screening::dynamic::rescreen_en`] /
+/// [`crate::screening::dynamic::rescreen_sgl`]), evaluated at the *new*
+/// lambda. The test is safe at any primal point, so every discard is exact
+/// and no KKT correction rounds are needed (`kkt_violations` is always 0);
+/// `RuleKind::None` keeps everything, any other rule selects this scheme.
+/// SGL screens at group granularity (whole groups certified zero).
+///
+/// Solver dispatch: EN runs the native CD/FISTA twins (working-set
+/// supported for EN + CD; other combinations degrade to the dynamic/plain
+/// solver); SGL always runs the block-CD [`solve_sgl`] (one group = one
+/// proximal block). The carry/segment contract matches the ℓ1 runner —
+/// chunked grids chain `(beta, resid, prev_ws)` and reproduce an
+/// unsegmented run bit-for-bit; the carried dual state is a placeholder
+/// (pen-mode screens re-derive the dual point from the residual, and the
+/// shard cache keys on the penalty so carries never cross penalties).
+#[allow(clippy::too_many_arguments)]
+fn run_segment_pen(
+    ds: &Dataset,
+    pre: &crate::data::dataset::PathPrecompute,
+    lambdas: &[f64],
+    grid_lambda_max: f64,
+    rule_kind: RuleKind,
+    opts: &PathOptions,
+    carry: Option<PathCarry>,
+    keep_betas: bool,
+) -> PathSegment {
+    let p = ds.p();
+    let n = ds.n();
+    let pen = opts.penalty;
+    let pen_tag = pen.tag();
+    let (mut beta, mut resid, mut prev_ws) = match carry {
+        Some(c) => (c.beta, c.resid, c.prev_ws),
+        None => (vec![0.0; p], ds.y.clone(), Vec::new()),
+    };
+    let mut xt_r = vec![0.0; p];
+    let mut steps = Vec::with_capacity(lambdas.len());
+    let mut betas =
+        if keep_betas { Some(Vec::with_capacity(lambdas.len())) } else { None };
+    let ws_on = opts.working_set.active()
+        && matches!(pen, Penalty::ElasticNet { .. })
+        && opts.solver == SolverKind::Cd;
+    let mut dyn_traces = if opts.dynamic.active() && !ws_on {
+        Some(Vec::with_capacity(lambdas.len()))
+    } else {
+        None
+    };
+    let mut ws_traces =
+        if ws_on { Some(Vec::with_capacity(lambdas.len())) } else { None };
+    let screen_on = !matches!(rule_kind, RuleKind::None);
+
+    for &lambda in lambdas.iter() {
+        let _sp = crate::obs::trace::span("path_step");
+        crate::obs::metrics::counter_inc("sasvi_path_steps_total");
+        let (outcome, stats, dyn_trace, ws_trace, screen_time, solve_time) = match pen
+        {
+            Penalty::L1 => unreachable!("l1 paths run through run_segment_impl"),
+            Penalty::ElasticNet { alpha } => {
+                // ---- gap-safe sequential screen at the carried point ----
+                let t0 = Instant::now();
+                let (mut active, outcome) = if screen_on && lambda > 0.0 {
+                    let all: Vec<usize> = (0..p).collect();
+                    let rs = crate::screening::dynamic::rescreen_en(
+                        &ds.x, &ds.y, lambda, alpha, &pre.xty, &pre.col_norms_sq,
+                        &all, &beta, &resid, &mut xt_r,
+                    );
+                    for &j in &rs.dropped {
+                        if beta[j] != 0.0 {
+                            // safe: the gap-safe test certifies beta*_j = 0
+                            ds.x.axpy_col(beta[j], j, &mut resid);
+                            beta[j] = 0.0;
+                        }
+                    }
+                    let kept = rs.survivors.len();
+                    (rs.survivors, ScreenOutcome { kept, screened: p - kept })
+                } else {
+                    ((0..p).collect(), ScreenOutcome { kept: p, screened: 0 })
+                };
+                let screen_time = t0.elapsed();
+
+                // ---- solve ----------------------------------------------
+                let t1 = Instant::now();
+                let (stats, dyn_trace, ws_trace) = if ws_on && lambda > 0.0 {
+                    let (stats, trace) = solve_working_set_cd_en(
+                        &ds.x, &ds.y, lambda, alpha, &mut active,
+                        &pre.col_norms_sq, &pre.xty, &mut beta, &mut resid,
+                        &opts.cd, &opts.dynamic, &opts.working_set,
+                        Some(&prev_ws),
+                    );
+                    (stats, None, Some(trace))
+                } else {
+                    match opts.solver {
+                        SolverKind::Cd => {
+                            if opts.dynamic.active() && lambda > 0.0 {
+                                let (stats, trace) = solve_cd_dynamic_en(
+                                    &ds.x, &ds.y, lambda, alpha, &mut active,
+                                    &pre.col_norms_sq, &pre.xty, &mut beta,
+                                    &mut resid, &opts.cd, &opts.dynamic,
+                                );
+                                (stats, Some(trace), None)
+                            } else {
+                                let stats = solve_cd_en(
+                                    &ds.x, &ds.y, lambda, alpha, &active,
+                                    &pre.col_norms_sq, &mut beta, &mut resid,
+                                    &opts.cd,
+                                );
+                                (stats, None, None)
+                            }
+                        }
+                        SolverKind::Fista => {
+                            let mut mask = vec![false; p];
+                            for &j in &active {
+                                mask[j] = true;
+                            }
+                            let beta0 = beta.clone();
+                            let (beta_new, iters, trace) =
+                                crate::solver::solve_fista_en(
+                                    &ds.x, &ds.y, lambda, alpha, &mask, beta0,
+                                    &opts.fista, &opts.dynamic,
+                                );
+                            beta.copy_from_slice(&beta_new);
+                            // rebuild the residual (dynamically dropped
+                            // columns come back as exact zeros)
+                            let mut fit = vec![0.0; n];
+                            ds.x.matvec(&beta, &mut fit);
+                            for i in 0..n {
+                                resid[i] = ds.y[i] - fit[i];
+                            }
+                            if trace.dropped_total() > 0 {
+                                let mut dropped = vec![false; p];
+                                for ev in &trace.events {
+                                    for &j in &ev.dropped {
+                                        dropped[j] = true;
+                                    }
+                                }
+                                active.retain(|&j| !dropped[j]);
+                            }
+                            let gap = crate::solver::cd::restricted_gap_en(
+                                &ds.x, &ds.y, lambda, alpha, &active, &beta,
+                                &resid,
+                            );
+                            let coord_updates = trace.solver_work(iters);
+                            let stats = crate::solver::CdStats {
+                                epochs: iters,
+                                coord_updates,
+                                converged: true,
+                                final_gap: Some(gap),
+                            };
+                            let tr = if opts.dynamic.active() {
+                                Some(trace)
+                            } else {
+                                None
+                            };
+                            (stats, tr, None)
+                        }
+                    }
+                };
+                let solve_time = t1.elapsed();
+                (outcome, stats, dyn_trace, ws_trace, screen_time, solve_time)
+            }
+            Penalty::SparseGroupLasso { groups, tau } => {
+                let ng = groups.n_groups(p);
+                let t0 = Instant::now();
+                let (mut active_groups, outcome) = if screen_on && lambda > 0.0 {
+                    let all_g: Vec<usize> = (0..ng).collect();
+                    let all_f: Vec<usize> = (0..p).collect();
+                    let rs = crate::screening::dynamic::rescreen_sgl(
+                        &ds.x, &ds.y, lambda, tau, groups, &all_g, &all_f,
+                        &pre.col_norms_sq, &beta, &resid, &mut xt_r,
+                    );
+                    for &g in &rs.dropped_groups {
+                        for j in groups.range(g, p) {
+                            if beta[j] != 0.0 {
+                                ds.x.axpy_col(beta[j], j, &mut resid);
+                                beta[j] = 0.0;
+                            }
+                        }
+                    }
+                    let kept: usize = rs
+                        .survivor_groups
+                        .iter()
+                        .map(|&g| groups.range(g, p).len())
+                        .sum();
+                    (rs.survivor_groups, ScreenOutcome { kept, screened: p - kept })
+                } else {
+                    ((0..ng).collect(), ScreenOutcome { kept: p, screened: 0 })
+                };
+                let screen_time = t0.elapsed();
+                let t1 = Instant::now();
+                let (stats, trace) = solve_sgl(
+                    &ds.x, &ds.y, lambda, tau, groups, &mut active_groups,
+                    &pre.col_norms_sq, &mut beta, &mut resid, &opts.cd,
+                    &opts.dynamic,
+                );
+                let solve_time = t1.elapsed();
+                let tr = if opts.dynamic.active() { Some(trace) } else { None };
+                (outcome, stats, tr, None, screen_time, solve_time)
+            }
+        };
+
+        let nnz = beta.iter().filter(|&&b| b != 0.0).count();
+        let (dyn_rechecks, dyn_dropped) = dyn_trace
+            .as_ref()
+            .map(|t: &DynamicTrace| (t.rechecks(), t.distinct_dropped()))
+            .unwrap_or((0, 0));
+        let (ws_outer, ws_final, ws_pruned) = ws_trace
+            .as_ref()
+            .map(|t: &WorkingSetTrace| {
+                (t.outer_iters(), t.final_width(), t.pruned_total())
+            })
+            .unwrap_or((0, 0, 0));
+        crate::obs::events::publish(|| crate::obs::events::EventKind::Step {
+            workload: "lasso",
+            penalty: pen_tag,
+            step: steps.len(),
+            lambda,
+            kept: outcome.kept,
+            screened: outcome.screened,
+            nnz,
+            gap: stats.final_gap.unwrap_or(f64::NAN),
+        });
+        steps.push(StepRecord {
+            lambda,
+            frac: lambda / grid_lambda_max,
+            kept: outcome.kept,
+            screened: outcome.screened,
+            nnz,
+            epochs: stats.epochs,
+            coord_updates: stats.coord_updates,
+            kkt_violations: 0,
+            screen_time,
+            solve_time,
+            stats_time: Duration::default(),
+            gap: stats.final_gap.unwrap_or(f64::NAN),
+            dyn_rechecks,
+            dyn_dropped,
+            ws_outer,
+            ws_final,
+            ws_pruned,
+        });
+        if let Some(ts) = dyn_traces.as_mut() {
+            ts.push(dyn_trace.unwrap_or_else(|| DynamicTrace::new(outcome.kept)));
+        }
+        if let Some(ts) = ws_traces.as_mut() {
+            let tr = ws_trace.unwrap_or_default();
+            prev_ws = tr.final_ws.clone();
+            ts.push(tr);
+        }
+        if let Some(bs) = betas.as_mut() {
+            bs.push(beta.clone());
+        }
+    }
+
+    let last_lambda = lambdas.last().copied().unwrap_or(grid_lambda_max);
+    PathSegment {
+        steps,
+        dynamic: dyn_traces,
+        working_set: ws_traces,
+        betas,
+        carry: PathCarry {
+            beta,
+            resid,
+            // placeholder: pen-mode screens re-derive the dual point from
+            // the carried residual, so no X^T r pass is spent here
+            state: DualState {
+                lambda: last_lambda,
+                theta: Vec::new(),
+                xt_theta: Vec::new(),
+            },
+            prev_ws,
+        },
     }
 }
 
@@ -1150,6 +1452,94 @@ mod tests {
                     assert_eq!(a.ws_outer, b.ws_outer);
                     assert_eq!(a.ws_final, b.ws_final);
                     assert_eq!(a.ws_pruned, b.ws_pruned);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn en_path_screening_matches_unscreened() {
+        let ds = tiny();
+        let plan = PathPlan::linear_spaced(&ds, 15, 0.05);
+        let pen = crate::penalty::Penalty::ElasticNet { alpha: 0.2 };
+        let opts = PathOptions { penalty: pen, ..Default::default() };
+        let base = run_path_keep_betas(&ds, &plan, RuleKind::None, opts);
+        let scr = run_path_keep_betas(&ds, &plan, RuleKind::Sasvi, opts);
+        let screened: usize = scr.steps.iter().map(|s| s.screened).sum();
+        assert!(screened > 0, "gap-safe EN screen discarded nothing");
+        assert_eq!(scr.total_kkt_violations(), 0, "safe screen never corrects");
+        let b0 = base.betas.as_ref().unwrap();
+        let b1 = scr.betas.as_ref().unwrap();
+        for (k, (x, y)) in b0.iter().zip(b1.iter()).enumerate() {
+            for j in 0..ds.p() {
+                assert!(
+                    (x[j] - y[j]).abs() < 1e-5,
+                    "step {k} feature {j}: {} vs {}", x[j], y[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sgl_path_screens_groups_and_matches_unscreened() {
+        let ds = tiny();
+        let plan = PathPlan::linear_spaced(&ds, 12, 0.1);
+        let pen = crate::penalty::Penalty::SparseGroupLasso {
+            groups: crate::penalty::GroupSpec::new(8),
+            tau: 0.5,
+        };
+        let opts = PathOptions { penalty: pen, ..Default::default() };
+        let base = run_path_keep_betas(&ds, &plan, RuleKind::None, opts);
+        let scr = run_path_keep_betas(&ds, &plan, RuleKind::Sasvi, opts);
+        let screened: usize = scr.steps.iter().map(|s| s.screened).sum();
+        assert!(screened > 0, "gap-safe SGL group screen discarded nothing");
+        let b0 = base.betas.as_ref().unwrap();
+        let b1 = scr.betas.as_ref().unwrap();
+        for (k, (x, y)) in b0.iter().zip(b1.iter()).enumerate() {
+            for j in 0..ds.p() {
+                assert!(
+                    (x[j] - y[j]).abs() < 1e-5,
+                    "step {k} feature {j}: {} vs {}", x[j], y[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pen_segmented_run_is_bit_identical_to_full_run() {
+        // the shard-cache contract extends to penalty paths: chunked grids
+        // chaining (beta, resid) carries reproduce the full run bit-for-bit
+        let ds = tiny();
+        let plan = PathPlan::linear_spaced(&ds, 14, 0.05);
+        for pen in [
+            crate::penalty::Penalty::ElasticNet { alpha: 0.3 },
+            crate::penalty::Penalty::SparseGroupLasso {
+                groups: crate::penalty::GroupSpec::new(8),
+                tau: 0.5,
+            },
+        ] {
+            let opts = PathOptions { penalty: pen, ..Default::default() };
+            for rule in [RuleKind::Sasvi, RuleKind::None] {
+                let full = run_path(&ds, &plan, rule, opts);
+                let pre = ds.precompute();
+                let mut carry = None;
+                let mut steps = Vec::new();
+                for chunk in plan.lambdas.chunks(5) {
+                    let seg = run_path_segment(
+                        &ds, &pre, chunk, plan.lambda_max, rule, &opts, carry,
+                    );
+                    steps.extend(seg.steps);
+                    carry = Some(seg.carry);
+                }
+                let carry = carry.unwrap();
+                assert_eq!(full.beta_final, carry.beta, "{pen:?} beta diverged");
+                assert_eq!(full.steps.len(), steps.len());
+                for (a, b) in full.steps.iter().zip(steps.iter()) {
+                    assert_eq!(a.gap.to_bits(), b.gap.to_bits(), "{pen:?} gap");
+                    assert_eq!(a.kept, b.kept);
+                    assert_eq!(a.nnz, b.nnz);
+                    assert_eq!(a.epochs, b.epochs);
+                    assert_eq!(a.coord_updates, b.coord_updates);
                 }
             }
         }

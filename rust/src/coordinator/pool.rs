@@ -492,12 +492,21 @@ fn run_lasso_job(job: &LassoJob, cache: &ShardCache) -> PathResult {
     let ds = &job.dataset;
     let pre_val = ds.precompute();
     let pre = &pre_val;
+    // The penalty is folded in twice on purpose: once via `{:?}` of the
+    // options (incidental — Debug strings are for humans), and once as an
+    // explicit bit-faithful `pen:` component (`l1` | `en:<alpha bits>` |
+    // `sgl:<tau bits>:<layout hash>`). Only the latter is load-bearing:
+    // shards carry warm-start coefficient vectors, and a carry computed
+    // under one penalty is *not* a valid bit-identical continuation under
+    // another, so two jobs differing only in penalty must never share a
+    // shard.
     let base = job.cache_key.as_ref().map(|dk| {
         format!(
-            "L|{dk}|{:?}|{:?}|{:016x}",
+            "L|{dk}|{:?}|{:?}|{:016x}|pen:{}",
             job.rule,
             job.opts,
-            job.plan.lambda_max.to_bits()
+            job.plan.lambda_max.to_bits(),
+            job.opts.penalty.cache_bits()
         )
     });
     if base.is_none() {
@@ -564,6 +573,7 @@ fn run_lasso_job(job: &LassoJob, cache: &ShardCache) -> PathResult {
         steps.iter().map(|s| s.screen_time + s.solve_time + s.stats_time).sum();
     PathResult {
         rule: job.rule,
+        penalty: job.opts.penalty,
         dataset: ds.name.clone(),
         steps,
         total_time,
@@ -1030,6 +1040,72 @@ mod tests {
         assert_eq!(after.misses, before.misses, "second job re-solved shards");
         assert!(after.hits >= 3, "10 points / {SHARD_POINTS} per shard");
         assert_lasso_results_bit_identical(&a, &b);
+    }
+
+    #[test]
+    fn penalty_jobs_never_share_cache_shards() {
+        // Regression for the cache-key/penalty interaction: an ℓ1 job and
+        // an elastic-net (or SGL) job over the *same* dataset, rule, and
+        // λ-grid must miss each other's shards. Before the explicit
+        // `pen:` key component this would have collided whenever the
+        // penalty knobs were not otherwise reflected in the key — and a
+        // warm-start carry solved under one penalty is not a valid
+        // continuation under another.
+        let ds = dataset(23);
+        let pool = JobPool::new(1, 4);
+        let job = |pen: crate::penalty::Penalty| {
+            JobSpec::lasso(
+                Arc::clone(&ds),
+                PathPlan::linear_spaced(&ds, 8, 0.1),
+                RuleKind::Sasvi,
+                PathOptions { penalty: pen, ..PathOptions::default() },
+                "pen",
+            )
+            .with_cache_key("ds23")
+        };
+        let l1 = pool
+            .submit(job(crate::penalty::Penalty::L1))
+            .ok()
+            .and_then(|id| pool.wait(id))
+            .and_then(JobResult::into_lasso)
+            .unwrap();
+        let s0 = pool.cache_stats();
+        assert!(s0.misses > 0 && s0.hits == 0);
+        let en = pool
+            .submit(job(crate::penalty::Penalty::ElasticNet { alpha: 0.3 }))
+            .ok()
+            .and_then(|id| pool.wait(id))
+            .and_then(JobResult::into_lasso)
+            .unwrap();
+        let s1 = pool.cache_stats();
+        assert_eq!(s1.hits, 0, "EN job rode an l1 shard — key collision");
+        assert_eq!(s1.misses, 2 * s0.misses, "EN job must solve its own shards");
+        let sgl = pool
+            .submit(job(crate::penalty::Penalty::SparseGroupLasso {
+                groups: crate::penalty::GroupSpec::new(8),
+                tau: 0.5,
+            }))
+            .ok()
+            .and_then(|id| pool.wait(id))
+            .and_then(JobResult::into_lasso)
+            .unwrap();
+        let s2 = pool.cache_stats();
+        assert_eq!(s2.hits, 0, "SGL job rode a cached shard — key collision");
+        assert_eq!(s2.misses, 3 * s0.misses);
+        // and the answers genuinely differ, so a collision would have been
+        // a wrong result, not merely a stale timing
+        assert_ne!(l1.beta_final, en.beta_final);
+        assert_ne!(en.beta_final, sgl.beta_final);
+        // identical penalty still hits as before
+        let _again = pool
+            .submit(job(crate::penalty::Penalty::ElasticNet { alpha: 0.3 }))
+            .ok()
+            .and_then(|id| pool.wait(id))
+            .and_then(JobResult::into_lasso)
+            .unwrap();
+        let s3 = pool.cache_stats();
+        assert_eq!(s3.misses, s2.misses, "same-penalty job re-solved shards");
+        assert!(s3.hits >= 2, "8 points / {SHARD_POINTS} per shard");
     }
 
     #[test]

@@ -116,6 +116,40 @@
 //! (global flags), config `solver.working_set` / `solver.ws_grow`, server
 //! `PATH ... ws [grow]`.
 //!
+//! ## Penalties
+//!
+//! The separable penalty is a first-class axis: [`penalty::Penalty`] is a
+//! small closed enum — `L1` (the paper's Lasso), `ElasticNet { alpha }`
+//! (objective `0.5||Xb - y||^2 + lambda ||b||_1 + 0.5 alpha ||b||^2`,
+//! equivalent to Lasso on the `[X; sqrt(alpha) I]` augmentation pinned by
+//! the parity tests), and `SparseGroupLasso { groups, tau }`
+//! (`lambda (tau ||b||_1 + (1 - tau) sum_g w_g ||b_g||_2)`, uniform
+//! contiguous groups, `w_g = sqrt(|g|)`) — and the core is generic over
+//! it. Solvers: EN rides the same CD/FISTA/working-set machinery with the
+//! prox and gradient shifted by `alpha`; SGL runs a block coordinate
+//! descent ([`solver::solve_sgl`]) where one group is one column block.
+//! Screening: the dual-feasible point, the fused VI-ball + gap-sphere
+//! test, and the dynamic checkpoints are penalty-aware
+//! ([`screening::dynamic::rescreen_en`] screens features,
+//! [`screening::dynamic::rescreen_sgl`] screens whole groups via the
+//! group soft-threshold norm); pathwise screening for non-ℓ1 penalties is
+//! gap-safe sequential, so every discard is certified at the carried
+//! primal point. The three standing contracts — per-checkpoint safety
+//! against unscreened solves, 1e-8 objective exactness, bit-identical
+//! results at every thread count — extend to every penalty
+//! (`rust/tests/penalty_path.rs`, `rust/tests/determinism.rs`). The ℓ1
+//! code paths are byte-for-byte untouched: non-ℓ1 work dispatches through
+//! separate functions, so the paper-faithful Lasso numerics cannot drift.
+//! Knobs: CLI `--penalty l1|en|sgl` with `--l2-alpha`, `--tau`,
+//! `--groups` (global flags), the `[penalty]` config section, the
+//! server's `PATH ... penalty=<spec>` token (specs `l1`, `en:<alpha>`,
+//! `sgl:<tau>:<group-size>`), and [`coordinator::PathOptions::penalty`].
+//! The penalty is part of the shard-cache key (bit-faithful: alpha bits,
+//! tau bits, group-layout hash), so warm-start carries never cross
+//! penalties; checkpoint and step events carry a `penalty` tag that
+//! `tools/obs_report.py` splits its funnels by, and `benches/penalty.rs`
+//! tracks the screened-vs-unscreened work cut per penalty.
+//!
 //! ## Logistic regression (§6)
 //!
 //! The paper's GLM sketch is a first-class workload: [`logistic`] holds
@@ -245,6 +279,7 @@ pub mod linalg;
 pub mod logistic;
 pub mod metrics;
 pub mod obs;
+pub mod penalty;
 pub mod rng;
 pub mod runtime;
 pub mod screening;

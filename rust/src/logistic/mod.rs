@@ -385,6 +385,7 @@ pub fn logistic_rescreen(
     );
     crate::obs::events::publish(|| crate::obs::events::EventKind::Checkpoint {
         workload: "logistic",
+        penalty: "l1",
         gap,
         width: survivors.len(),
         dropped: dropped.len(),

@@ -99,13 +99,22 @@ pub enum EventKind {
     CacheMiss { key: String },
     /// Shard cache LRU eviction.
     CacheEvict { key: String },
-    /// Dynamic-screening checkpoint (`workload` is `lasso` or `logistic`).
-    Checkpoint { workload: &'static str, gap: f64, width: usize, dropped: usize },
+    /// Dynamic-screening checkpoint (`workload` is `lasso` or `logistic`;
+    /// `penalty` is the [`crate::penalty::Penalty::tag`] of the solve —
+    /// `l1`, `en`, or `sgl` — so offline funnels can split by penalty).
+    Checkpoint {
+        workload: &'static str,
+        penalty: &'static str,
+        gap: f64,
+        width: usize,
+        dropped: usize,
+    },
     /// Working-set outer iteration completed.
     WsOuter { outer: usize, width: usize, gap: f64 },
-    /// One λ-grid step finished.
+    /// One λ-grid step finished (`penalty` as on [`EventKind::Checkpoint`]).
     Step {
         workload: &'static str,
+        penalty: &'static str,
         step: usize,
         lambda: f64,
         kept: usize,
@@ -183,19 +192,21 @@ impl Event {
             EventKind::CacheEvict { key } => {
                 format!("\"cache_evict\",\"key\":\"{}\"", escape(key))
             }
-            EventKind::Checkpoint { workload, gap, width, dropped } => format!(
-                "\"checkpoint\",\"workload\":\"{workload}\",\"gap\":{},\"width\":{width},\"dropped\":{dropped}",
+            EventKind::Checkpoint { workload, penalty, gap, width, dropped } => format!(
+                "\"checkpoint\",\"workload\":\"{workload}\",\"penalty\":\"{penalty}\",\"gap\":{},\"width\":{width},\"dropped\":{dropped}",
                 jf(*gap)
             ),
             EventKind::WsOuter { outer, width, gap } => format!(
                 "\"ws_outer\",\"outer\":{outer},\"width\":{width},\"gap\":{}",
                 jf(*gap)
             ),
-            EventKind::Step { workload, step, lambda, kept, screened, nnz, gap } => format!(
-                "\"step\",\"workload\":\"{workload}\",\"step\":{step},\"lambda\":{},\"kept\":{kept},\"screened\":{screened},\"nnz\":{nnz},\"gap\":{}",
-                jf(*lambda),
-                jf(*gap)
-            ),
+            EventKind::Step { workload, penalty, step, lambda, kept, screened, nnz, gap } => {
+                format!(
+                    "\"step\",\"workload\":\"{workload}\",\"penalty\":\"{penalty}\",\"step\":{step},\"lambda\":{},\"kept\":{kept},\"screened\":{screened},\"nnz\":{nnz},\"gap\":{}",
+                    jf(*lambda),
+                    jf(*gap)
+                )
+            }
             EventKind::Steal { stolen } => format!("\"steal\",\"stolen\":{stolen}"),
             EventKind::Terminal { ok } => format!("\"terminal\",\"ok\":{ok}"),
             EventKind::Watchdog { idle_ms } => {
@@ -646,6 +657,7 @@ mod tests {
         // progress clears the episode; the next sweep flags again
         publish_for_job(job, || EventKind::Checkpoint {
             workload: "lasso",
+            penalty: "l1",
             gap: 1e-8,
             width: 10,
             dropped: 2,
@@ -674,6 +686,7 @@ mod tests {
             job: 3,
             kind: EventKind::Step {
                 workload: "lasso",
+                penalty: "en",
                 step: 2,
                 lambda: 0.5,
                 kept: 10,
@@ -685,6 +698,7 @@ mod tests {
         let j = ev.to_json();
         assert!(j.starts_with("{\"seq\":7,"));
         assert!(j.contains("\"type\":\"step\""));
+        assert!(j.contains("\"penalty\":\"en\""), "penalty tag must render: {j}");
         assert!(j.contains("\"gap\":null"), "NaN must render as null: {j}");
         let quoted = Event {
             seq: 8,

@@ -1,0 +1,492 @@
+//! The penalty abstraction: one small unit — [`Penalty`] — that the
+//! solvers, the dynamic-screening checkpoints, the coordinator, and every
+//! serving surface (CLI / config / server) are generic over.
+//!
+//! Three penalties share the quadratic loss `0.5 ||y - X beta||^2`:
+//!
+//! * [`Penalty::L1`] — the paper's plain Lasso, `lambda ||beta||_1`. The
+//!   ℓ1 code paths are byte-for-byte the pre-penalty implementation, so
+//!   every existing contract (bit-identity across thread counts, safety,
+//!   1e-8 exactness) extends unchanged.
+//! * [`Penalty::ElasticNet`] — `lambda ||beta||_1 + (alpha/2) ||beta||^2`.
+//!   Handled natively on the original data through the augmentation
+//!   identities (`X' = [X; sqrt(alpha) I]`, `y' = [y; 0]`): correlations
+//!   become `x_j^T r - alpha beta_j`, column norms gain `+alpha`, and the
+//!   duality gap gains the augmented residual terms. The native path is
+//!   pinned against the orphaned [`crate::data::elastic_net::augment`]
+//!   reduction by an end-to-end parity test.
+//! * [`Penalty::SparseGroupLasso`] —
+//!   `lambda (tau ||beta||_1 + (1-tau) sum_g w_g ||beta_g||_2)` with
+//!   `w_g = sqrt(|g|)` over contiguous groups of [`GroupSpec::size`]
+//!   columns (one group maps naturally onto one column block of the
+//!   block engine). Dual-feasible scaling uses the per-group ε-norm
+//!   (Ndiaye et al., Gap Safe rules for SGL), and screening happens at
+//!   group granularity: a certified group is dropped whole.
+//!
+//! The dual objective of the least-squares problem is penalty-independent
+//! (`0.5||y||^2 - 0.5 lambda^2 ||theta - y/lambda||^2`); only the
+//! feasibility scaling — `1 / max(lambda, Omega^D(X^T r))` with the
+//! penalty's dual norm `Omega^D` — and the per-feature/per-group screening
+//! test change per penalty. The gap-sphere radius `sqrt(2 gap)/lambda`
+//! is shared by all three.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
+
+/// Default ℓ2 strength for `--penalty en` without an explicit `--l2-alpha`.
+pub const DEFAULT_ALPHA: f64 = 0.1;
+/// Default ℓ1-vs-group mix for `--penalty sgl` without an explicit tau.
+pub const DEFAULT_TAU: f64 = 0.5;
+/// Default contiguous group width for `--penalty sgl` without `--groups`.
+pub const DEFAULT_GROUPS: usize = 8;
+
+/// Contiguous group layout: columns `[g*size, min((g+1)*size, p))` form
+/// group `g` (the last group may be ragged). Uniform contiguous groups
+/// keep the layout `Copy`-cheap and line up with the engine's fixed
+/// column blocks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GroupSpec {
+    /// Columns per group (>= 1).
+    pub size: usize,
+}
+
+impl GroupSpec {
+    pub fn new(size: usize) -> Self {
+        Self { size: size.max(1) }
+    }
+
+    /// Number of groups covering `p` features.
+    pub fn n_groups(&self, p: usize) -> usize {
+        if p == 0 {
+            0
+        } else {
+            (p + self.size - 1) / self.size
+        }
+    }
+
+    /// The column range of group `g` within `p` features.
+    pub fn range(&self, g: usize, p: usize) -> std::ops::Range<usize> {
+        let lo = (g * self.size).min(p);
+        let hi = (lo + self.size).min(p);
+        lo..hi
+    }
+
+    /// The group feature `j` belongs to.
+    pub fn group_of(&self, j: usize) -> usize {
+        j / self.size
+    }
+
+    /// Group weight `w_g = sqrt(|g|)`.
+    pub fn weight(&self, g: usize, p: usize) -> f64 {
+        (self.range(g, p).len() as f64).sqrt()
+    }
+
+    /// FNV-1a hash of the layout (feeds the shard-cache key).
+    pub fn layout_hash(&self) -> u64 {
+        fnv1a_u64(FNV_OFFSET, self.size as u64)
+    }
+}
+
+/// The separable penalties the core is generic over.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Penalty {
+    /// `lambda ||beta||_1` — the paper's Lasso.
+    L1,
+    /// `lambda ||beta||_1 + (alpha/2) ||beta||^2` (alpha is *not* scaled
+    /// by lambda, matching the `[X; sqrt(alpha) I]` augmentation exactly).
+    ElasticNet { alpha: f64 },
+    /// `lambda (tau ||beta||_1 + (1-tau) sum_g w_g ||beta_g||_2)`.
+    SparseGroupLasso { groups: GroupSpec, tau: f64 },
+}
+
+impl Default for Penalty {
+    fn default() -> Self {
+        Penalty::L1
+    }
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv1a_u64(mut h: u64, v: u64) -> u64 {
+    for b in v.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+impl Penalty {
+    /// Short static tag for event payloads and metric labels.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Penalty::L1 => "l1",
+            Penalty::ElasticNet { .. } => "en",
+            Penalty::SparseGroupLasso { .. } => "sgl",
+        }
+    }
+
+    pub fn is_l1(&self) -> bool {
+        matches!(self, Penalty::L1)
+    }
+
+    /// Canonical spec string (`l1`, `en:<alpha>`, `sgl:<tau>:<groups>`),
+    /// accepted back by [`Penalty::parse`].
+    pub fn spec(&self) -> String {
+        match self {
+            Penalty::L1 => "l1".to_string(),
+            Penalty::ElasticNet { alpha } => format!("en:{alpha}"),
+            Penalty::SparseGroupLasso { groups, tau } => {
+                format!("sgl:{tau}:{}", groups.size)
+            }
+        }
+    }
+
+    /// Parse a penalty spec: `l1`, `en[:alpha]`, `sgl[:tau[:groups]]`.
+    pub fn parse(s: &str) -> Option<Penalty> {
+        let mut it = s.split(':');
+        match it.next()? {
+            "l1" | "lasso" => {
+                if it.next().is_some() {
+                    return None;
+                }
+                Some(Penalty::L1)
+            }
+            "en" | "enet" | "elastic-net" => {
+                let alpha = match it.next() {
+                    Some(a) => a.parse::<f64>().ok()?,
+                    None => DEFAULT_ALPHA,
+                };
+                if it.next().is_some() || !alpha.is_finite() || alpha < 0.0 {
+                    return None;
+                }
+                Some(Penalty::ElasticNet { alpha })
+            }
+            "sgl" | "sparse-group" => {
+                let tau = match it.next() {
+                    Some(t) => t.parse::<f64>().ok()?,
+                    None => DEFAULT_TAU,
+                };
+                let size = match it.next() {
+                    Some(g) => g.parse::<usize>().ok()?,
+                    None => DEFAULT_GROUPS,
+                };
+                if it.next().is_some() || !tau.is_finite() || !(0.0..=1.0).contains(&tau) || size == 0 {
+                    return None;
+                }
+                Some(Penalty::SparseGroupLasso { groups: GroupSpec::new(size), tau })
+            }
+            _ => None,
+        }
+    }
+
+    /// Bit-faithful cache-key component: float knobs enter as raw IEEE
+    /// bits and the group layout as an FNV hash, so two jobs with
+    /// different penalties can never share a shard (`Debug` float
+    /// rendering is not bit-faithful; this is).
+    pub fn cache_bits(&self) -> String {
+        match self {
+            Penalty::L1 => "l1".to_string(),
+            Penalty::ElasticNet { alpha } => format!("en:{:016x}", alpha.to_bits()),
+            Penalty::SparseGroupLasso { groups, tau } => {
+                format!("sgl:{:016x}:{:016x}", tau.to_bits(), groups.layout_hash())
+            }
+        }
+    }
+
+    /// The full primal penalty term added to `0.5 ||r||^2`.
+    pub fn primal_penalty(&self, lambda: f64, beta: &[f64]) -> f64 {
+        match self {
+            Penalty::L1 => lambda * beta.iter().map(|b| b.abs()).sum::<f64>(),
+            Penalty::ElasticNet { alpha } => {
+                let l1: f64 = beta.iter().map(|b| b.abs()).sum();
+                let l2sq: f64 = beta.iter().map(|b| b * b).sum();
+                lambda * l1 + 0.5 * alpha * l2sq
+            }
+            Penalty::SparseGroupLasso { groups, tau } => {
+                let p = beta.len();
+                let l1: f64 = beta.iter().map(|b| b.abs()).sum();
+                let mut gsum = 0.0;
+                for g in 0..groups.n_groups(p) {
+                    let r = groups.range(g, p);
+                    let nrm = beta[r.clone()].iter().map(|b| b * b).sum::<f64>().sqrt();
+                    gsum += groups.weight(g, p) * nrm;
+                }
+                lambda * (tau * l1 + (1.0 - tau) * gsum)
+            }
+        }
+    }
+
+    /// The penalty's dual norm `Omega^D(s)` of a full-length correlation
+    /// vector (for elastic net, `s` must already be the augmented
+    /// correlations `X^T r - alpha beta`).
+    pub fn dual_norm(&self, s: &[f64]) -> f64 {
+        match self {
+            Penalty::L1 | Penalty::ElasticNet { .. } => {
+                s.iter().fold(0.0f64, |m, v| m.max(v.abs()))
+            }
+            Penalty::SparseGroupLasso { groups, tau } => {
+                sgl_dual_norm(*groups, *tau, s)
+            }
+        }
+    }
+
+    /// Smallest `lambda` at which `beta = 0` solves the problem:
+    /// `Omega^D(X^T y)` (the ℓ2 term vanishes at zero, so elastic net
+    /// shares the Lasso's `||X^T y||_inf`).
+    pub fn lambda_max(&self, xty: &[f64]) -> f64 {
+        self.dual_norm(xty)
+    }
+}
+
+impl fmt::Display for Penalty {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.spec())
+    }
+}
+
+/// `Omega^D` for sparse-group lasso: the max over groups of the group
+/// ε-norm of `s_g`.
+pub fn sgl_dual_norm(groups: GroupSpec, tau: f64, s: &[f64]) -> f64 {
+    let p = s.len();
+    let mut worst = 0.0f64;
+    let mut buf: Vec<f64> = Vec::with_capacity(groups.size);
+    for g in 0..groups.n_groups(p) {
+        let r = groups.range(g, p);
+        buf.clear();
+        buf.extend(s[r.clone()].iter().map(|v| v.abs()));
+        let w = groups.weight(g, p);
+        worst = worst.max(sgl_group_dual_norm(&mut buf, tau, w));
+    }
+    worst
+}
+
+/// The group ε-norm: the smallest `nu >= 0` with
+/// `||S_{tau * nu}(xi)||_2 <= (1 - tau) * w * nu`, i.e. the value of the
+/// dual norm of `tau ||.||_1 + (1-tau) w ||.||_2` at `xi` (entries passed
+/// as absolute values; sorted in place). Computed by sorting descending
+/// and solving, per active count `k`,
+/// `((1-tau)^2 w^2 - k tau^2) nu^2 + 2 tau S1 nu - S2 = 0`
+/// on the interval where exactly `k` entries exceed `tau * nu`.
+pub fn sgl_group_dual_norm(abs_vals: &mut [f64], tau: f64, w: f64) -> f64 {
+    let m = abs_vals.len();
+    if m == 0 {
+        return 0.0;
+    }
+    if tau >= 1.0 {
+        // pure ℓ1: dual norm is the max magnitude
+        return abs_vals.iter().fold(0.0f64, |a, v| a.max(*v));
+    }
+    if tau <= 0.0 {
+        // pure group ℓ2 with weight w
+        let l2 = abs_vals.iter().map(|v| v * v).sum::<f64>().sqrt();
+        return l2 / w.max(f64::MIN_POSITIVE);
+    }
+    abs_vals.sort_unstable_by(|a, b| b.total_cmp(a));
+    if abs_vals[0] <= 0.0 {
+        return 0.0;
+    }
+    let r = (1.0 - tau) * w;
+    let mut s1 = 0.0f64;
+    let mut s2 = 0.0f64;
+    let mut last = 0.0f64;
+    for k in 1..=m {
+        let a = abs_vals[k - 1];
+        s1 += a;
+        s2 += a * a;
+        // quadratic in nu for exactly-k active entries
+        let qa = r * r - (k as f64) * tau * tau;
+        let qb = 2.0 * tau * s1;
+        let nu = if qa.abs() > 1e-300 {
+            let disc = (qb * qb + 4.0 * qa * s2).max(0.0);
+            (-qb + disc.sqrt()) / (2.0 * qa)
+        } else {
+            s2 / qb
+        };
+        if !nu.is_finite() || nu < 0.0 {
+            continue;
+        }
+        last = nu;
+        let t = tau * nu;
+        let upper_ok = t <= a * (1.0 + 1e-12) + 1e-300;
+        let lower_ok = k == m || t >= abs_vals[k] * (1.0 - 1e-12);
+        if upper_ok && lower_ok {
+            return nu;
+        }
+    }
+    last
+}
+
+// ---------------------------------------------------------------------------
+// Process-wide default (set by CLI flags / the `[penalty]` config section,
+// read by `PathOptions::from_process_defaults`). Encoded in atomics the
+// same way the dynamic/working-set knobs are.
+
+static PEN_KIND: AtomicU8 = AtomicU8::new(0);
+static PEN_ALPHA_BITS: AtomicU64 = AtomicU64::new(0);
+static PEN_TAU_BITS: AtomicU64 = AtomicU64::new(0);
+static PEN_GROUPS: AtomicUsize = AtomicUsize::new(DEFAULT_GROUPS);
+
+/// Install `pen` as the process-wide default penalty.
+pub fn set_process_default(pen: Penalty) {
+    match pen {
+        Penalty::L1 => PEN_KIND.store(0, Ordering::Relaxed),
+        Penalty::ElasticNet { alpha } => {
+            PEN_ALPHA_BITS.store(alpha.to_bits(), Ordering::Relaxed);
+            PEN_KIND.store(1, Ordering::Relaxed);
+        }
+        Penalty::SparseGroupLasso { groups, tau } => {
+            PEN_TAU_BITS.store(tau.to_bits(), Ordering::Relaxed);
+            PEN_GROUPS.store(groups.size, Ordering::Relaxed);
+            PEN_KIND.store(2, Ordering::Relaxed);
+        }
+    }
+}
+
+/// The process-wide default penalty (ℓ1 unless overridden).
+pub fn process_default() -> Penalty {
+    match PEN_KIND.load(Ordering::Relaxed) {
+        1 => Penalty::ElasticNet {
+            alpha: f64::from_bits(PEN_ALPHA_BITS.load(Ordering::Relaxed)),
+        },
+        2 => Penalty::SparseGroupLasso {
+            groups: GroupSpec::new(PEN_GROUPS.load(Ordering::Relaxed)),
+            tau: f64::from_bits(PEN_TAU_BITS.load(Ordering::Relaxed)),
+        },
+        _ => Penalty::L1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parse_roundtrip() {
+        for pen in [
+            Penalty::L1,
+            Penalty::ElasticNet { alpha: 0.25 },
+            Penalty::SparseGroupLasso { groups: GroupSpec::new(8), tau: 0.3 },
+        ] {
+            assert_eq!(Penalty::parse(&pen.spec()), Some(pen), "spec {}", pen.spec());
+        }
+        assert_eq!(Penalty::parse("en"), Some(Penalty::ElasticNet { alpha: DEFAULT_ALPHA }));
+        assert_eq!(
+            Penalty::parse("sgl"),
+            Some(Penalty::SparseGroupLasso {
+                groups: GroupSpec::new(DEFAULT_GROUPS),
+                tau: DEFAULT_TAU
+            })
+        );
+        assert_eq!(Penalty::parse("nope"), None);
+        assert_eq!(Penalty::parse("en:-1"), None);
+        assert_eq!(Penalty::parse("sgl:1.5"), None);
+        assert_eq!(Penalty::parse("sgl:0.5:0"), None);
+        assert_eq!(Penalty::parse("l1:extra"), None);
+    }
+
+    #[test]
+    fn cache_bits_distinguish_penalties_bitwise() {
+        let a = Penalty::ElasticNet { alpha: 0.1 };
+        let b = Penalty::ElasticNet { alpha: 0.1 + 1e-18 };
+        let c = Penalty::ElasticNet { alpha: f64::from_bits(0.1f64.to_bits() + 1) };
+        assert_eq!(a.cache_bits(), b.cache_bits(), "same bits, same key");
+        assert_ne!(a.cache_bits(), c.cache_bits(), "one ulp apart must split");
+        assert_ne!(Penalty::L1.cache_bits(), a.cache_bits());
+        let s1 = Penalty::SparseGroupLasso { groups: GroupSpec::new(4), tau: 0.5 };
+        let s2 = Penalty::SparseGroupLasso { groups: GroupSpec::new(8), tau: 0.5 };
+        assert_ne!(s1.cache_bits(), s2.cache_bits(), "layout hash must split");
+    }
+
+    #[test]
+    fn group_spec_covers_every_feature_once() {
+        let gs = GroupSpec::new(7);
+        let p = 23;
+        let mut seen = vec![0usize; p];
+        for g in 0..gs.n_groups(p) {
+            for j in gs.range(g, p) {
+                assert_eq!(gs.group_of(j), g);
+                seen[j] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "partition must be exact");
+        assert_eq!(gs.range(3, p).len(), 2, "ragged tail group");
+        assert!((gs.weight(3, p) - 2f64.sqrt()).abs() < 1e-15);
+    }
+
+    /// The ε-norm solves its defining equality and matches the closed
+    /// forms at the tau extremes.
+    #[test]
+    fn group_dual_norm_solves_the_defining_equation() {
+        let xs = [0.9, -0.4, 0.1, 0.0, -1.3, 0.7];
+        let w = (xs.len() as f64).sqrt();
+        for tau in [0.0, 0.2, 0.5, 0.8, 1.0] {
+            let mut buf: Vec<f64> = xs.iter().map(|v: &f64| v.abs()).collect();
+            let nu = sgl_group_dual_norm(&mut buf, tau, w);
+            if tau >= 1.0 {
+                assert!((nu - 1.3).abs() < 1e-12);
+                continue;
+            }
+            if tau <= 0.0 {
+                let l2 = xs.iter().map(|v| v * v).sum::<f64>().sqrt();
+                assert!((nu - l2 / w).abs() < 1e-12);
+                continue;
+            }
+            // ||S_{tau nu}(x)||_2 == (1-tau) w nu
+            let lhs = xs
+                .iter()
+                .map(|v| (v.abs() - tau * nu).max(0.0).powi(2))
+                .sum::<f64>()
+                .sqrt();
+            let rhs = (1.0 - tau) * w * nu;
+            assert!(
+                (lhs - rhs).abs() <= 1e-9 * (1.0 + rhs),
+                "tau {tau}: ||S||={lhs} vs (1-tau)w nu={rhs}"
+            );
+        }
+        // all-zero group
+        let mut z = vec![0.0; 4];
+        assert_eq!(sgl_group_dual_norm(&mut z, 0.5, 2.0), 0.0);
+    }
+
+    #[test]
+    fn lambda_max_zeroes_the_solution_threshold() {
+        // at lambda = Omega^D(xty), zero is on the boundary: the dual
+        // norm of xty scaled by 1/lambda is exactly 1
+        let xty = [0.3, -2.0, 0.5, 1.1, -0.2, 0.9];
+        for pen in [
+            Penalty::L1,
+            Penalty::ElasticNet { alpha: 0.4 },
+            Penalty::SparseGroupLasso { groups: GroupSpec::new(3), tau: 0.6 },
+        ] {
+            let lmax = pen.lambda_max(&xty);
+            assert!(lmax > 0.0);
+            let scaled: Vec<f64> = xty.iter().map(|v| v / lmax).collect();
+            let d = pen.dual_norm(&scaled);
+            assert!((d - 1.0).abs() < 1e-9, "{}: dual norm at lambda_max = {d}", pen.tag());
+        }
+    }
+
+    #[test]
+    fn process_default_roundtrips() {
+        let prev = process_default();
+        let pen = Penalty::SparseGroupLasso { groups: GroupSpec::new(16), tau: 0.25 };
+        set_process_default(pen);
+        assert_eq!(process_default(), pen);
+        set_process_default(Penalty::L1);
+        assert_eq!(process_default(), Penalty::L1);
+        set_process_default(prev);
+    }
+
+    #[test]
+    fn primal_penalty_special_cases() {
+        let beta = [1.0, -2.0, 0.0, 3.0];
+        let lam = 0.5;
+        assert!((Penalty::L1.primal_penalty(lam, &beta) - 3.0).abs() < 1e-15);
+        let en = Penalty::ElasticNet { alpha: 2.0 };
+        assert!((en.primal_penalty(lam, &beta) - (3.0 + 14.0)).abs() < 1e-12);
+        // tau = 1 collapses SGL onto plain ℓ1
+        let sgl = Penalty::SparseGroupLasso { groups: GroupSpec::new(2), tau: 1.0 };
+        assert!((sgl.primal_penalty(lam, &beta) - 3.0).abs() < 1e-12);
+    }
+}

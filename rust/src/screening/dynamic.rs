@@ -213,11 +213,217 @@ pub fn rescreen(
     crate::obs::metrics::gauge_set("sasvi_checkpoint_width", survivors.len() as f64);
     crate::obs::events::publish(|| crate::obs::events::EventKind::Checkpoint {
         workload: "lasso",
+        penalty: "l1",
         gap,
         width: survivors.len(),
         dropped: dropped.len(),
     });
     Rescreen { survivors, dropped, gap, infeas }
+}
+
+/// The elastic-net twin of [`rescreen`]: the identical fused VI-ball +
+/// gap-ball test evaluated in the augmented geometry of
+/// `[X; sqrt(alpha) I]` / `[y; 0]` — correlations become
+/// `<x_j, r> - alpha beta_j`, column norms gain `+ alpha`, and the gap /
+/// ball distance run through [`crate::solver`]'s `scaled_dual_gap_en`
+/// (note `<x'_j, y'> = <x_j, y>`: the augmented response tail is zero, so
+/// `xty` is reused untouched). Safety composes exactly as for ℓ1: the
+/// checkpoint certifies `beta*_j = 0` for the problem restricted to
+/// `active`.
+#[allow(clippy::too_many_arguments)]
+pub fn rescreen_en(
+    x: &DesignMatrix,
+    y: &[f64],
+    lambda: f64,
+    alpha: f64,
+    xty: &[f64],
+    col_norms_sq: &[f64],
+    active: &[usize],
+    beta: &[f64],
+    resid: &[f64],
+    xt_r: &mut [f64],
+) -> Rescreen {
+    assert!(lambda > 0.0, "dynamic screening needs lambda > 0");
+    assert_eq!(y.len(), x.nrows());
+    assert_eq!(resid.len(), x.nrows());
+    x.t_matvec_subset(resid, active, xt_r);
+    for &j in active {
+        xt_r[j] -= alpha * beta[j];
+    }
+    let s: &[f64] = xt_r;
+    let infeas = par::max_abs_indexed(active, s);
+    let l1: f64 = active.iter().map(|&j| beta[j].abs()).sum();
+    let l2sq: f64 = active.iter().map(|&j| beta[j] * beta[j]).sum();
+    let (gap, bnorm2, scale) =
+        crate::solver::scaled_dual_gap_en(y, resid, lambda, alpha, infeas, l1, l2sq);
+    let radius = (2.0 * gap.max(0.0)).sqrt() / lambda;
+    let bnorm = bnorm2.sqrt();
+    let thr = 1.0 - SCREEN_EPS;
+
+    let (survivors, dropped) = par::partition_indexed(active, |j| {
+        let xt = s[j] * scale;
+        let xn = (col_norms_sq[j] + alpha).sqrt();
+        let gap_bound = xt.abs() + xn * radius;
+        let xjb = xty[j] / lambda - xt;
+        let up = xt + 0.5 * (xn * bnorm + xjb);
+        let um = -xt + 0.5 * (xn * bnorm - xjb);
+        gap_bound.min(up.max(um)) >= thr
+    });
+    crate::obs::metrics::counter_inc("sasvi_checkpoints_total");
+    crate::obs::metrics::counter_add(
+        "sasvi_checkpoint_dropped_total",
+        dropped.len() as u64,
+    );
+    crate::obs::metrics::observe(
+        "sasvi_checkpoint_gap",
+        gap,
+        crate::obs::metrics::GAP_BUCKETS,
+    );
+    crate::obs::metrics::gauge_set("sasvi_checkpoint_width", survivors.len() as f64);
+    crate::obs::events::publish(|| crate::obs::events::EventKind::Checkpoint {
+        workload: "lasso",
+        penalty: "en",
+        gap,
+        width: survivors.len(),
+        dropped: dropped.len(),
+    });
+    Rescreen { survivors, dropped, gap, infeas }
+}
+
+/// Outcome of one sparse-group-lasso checkpoint: screening happens at
+/// group granularity, so survivors/dropped are **group** ids.
+#[derive(Clone, Debug)]
+pub struct GroupRescreen {
+    pub survivor_groups: Vec<usize>,
+    pub dropped_groups: Vec<usize>,
+    /// restricted duality gap at the ε-norm-scaled dual point
+    pub gap: f64,
+    /// `Omega^D(X_A^T r)` over the active groups (the scaling denominator)
+    pub infeas: f64,
+}
+
+/// Gap-safe group checkpoint for the sparse-group lasso
+/// `0.5||y - X beta||^2 + lambda (tau ||beta||_1
+/// + (1-tau) sum_g w_g ||beta_g||_2)` (Ndiaye et al., Gap Safe rules).
+///
+/// The dual point is the residual scaled by
+/// `1 / max(lambda, Omega^D(X_A^T r))` with the SGL dual norm (per-group
+/// ε-norm); the gap ball radius `sqrt(2 gap)/lambda` is the penalty-
+/// independent strong-concavity bound. Group `g` is discarded when the
+/// bound `u_j = |<x_j, theta>| + ||x_j|| R` on `|<x_j, theta*>|` certifies
+/// a group dual norm below one: `||(u - tau thr)_+||_2 < (1-tau) w_g thr`
+/// (equivalently ε-norm(u) < thr; for `tau = 1` the per-feature ℓ1 test
+/// `max u_j < thr` is used). Group loops run serially in group order, so
+/// decisions are bit-identical at every thread count (the `X_A^T r` pass
+/// itself uses the deterministic block engine).
+///
+/// `active_features` must be exactly the concatenated ranges of
+/// `active_groups` (the caller maintains both); `beta` is supported on the
+/// active features and `resid = y - X beta`.
+#[allow(clippy::too_many_arguments)]
+pub fn rescreen_sgl(
+    x: &DesignMatrix,
+    y: &[f64],
+    lambda: f64,
+    tau: f64,
+    groups: crate::penalty::GroupSpec,
+    active_groups: &[usize],
+    active_features: &[usize],
+    col_norms_sq: &[f64],
+    beta: &[f64],
+    resid: &[f64],
+    xt_r: &mut [f64],
+) -> GroupRescreen {
+    assert!(lambda > 0.0, "dynamic screening needs lambda > 0");
+    assert_eq!(y.len(), x.nrows());
+    assert_eq!(resid.len(), x.nrows());
+    let p = x.ncols();
+    x.t_matvec_subset(resid, active_features, xt_r);
+    let s: &[f64] = xt_r;
+    // SGL dual norm over the active groups (serial, deterministic fold)
+    let mut buf: Vec<f64> = Vec::with_capacity(groups.size);
+    let mut infeas = 0.0f64;
+    for &g in active_groups {
+        let r = groups.range(g, p);
+        buf.clear();
+        buf.extend(s[r].iter().map(|v| v.abs()));
+        let nu = crate::penalty::sgl_group_dual_norm(&mut buf, tau, groups.weight(g, p));
+        infeas = infeas.max(nu);
+    }
+    // primal penalty over the active groups
+    let mut l1 = 0.0f64;
+    let mut gsum = 0.0f64;
+    for &g in active_groups {
+        let r = groups.range(g, p);
+        let mut nrm2 = 0.0;
+        for j in r {
+            l1 += beta[j].abs();
+            nrm2 += beta[j] * beta[j];
+        }
+        gsum += groups.weight(g, p) * nrm2.sqrt();
+    }
+    let denom = lambda.max(infeas);
+    let scale = if denom > 0.0 { 1.0 / denom } else { 0.0 };
+    let mut bnorm2 = 0.0;
+    for (rv, yv) in resid.iter().zip(y.iter()) {
+        let d = rv * scale - yv / lambda;
+        bnorm2 += d * d;
+    }
+    let primal = 0.5 * crate::linalg::ops::nrm2sq(resid)
+        + lambda * (tau * l1 + (1.0 - tau) * gsum);
+    let dual = 0.5 * crate::linalg::ops::nrm2sq(y) - 0.5 * lambda * lambda * bnorm2;
+    let gap = primal - dual;
+    let radius = (2.0 * gap.max(0.0)).sqrt() / lambda;
+    let thr = 1.0 - SCREEN_EPS;
+
+    let mut survivor_groups = Vec::with_capacity(active_groups.len());
+    let mut dropped_groups = Vec::new();
+    let mut dropped_features = 0usize;
+    for &g in active_groups {
+        let r = groups.range(g, p);
+        let keep = if tau >= 1.0 {
+            r.clone().any(|j| {
+                s[j].abs() * scale + col_norms_sq[j].sqrt() * radius >= thr
+            })
+        } else {
+            let mut acc = 0.0f64;
+            for j in r.clone() {
+                let u = s[j].abs() * scale + col_norms_sq[j].sqrt() * radius;
+                let t = (u - tau * thr).max(0.0);
+                acc += t * t;
+            }
+            acc.sqrt() >= (1.0 - tau) * groups.weight(g, p) * thr
+        };
+        if keep {
+            survivor_groups.push(g);
+        } else {
+            dropped_groups.push(g);
+            dropped_features += r.len();
+        }
+    }
+    crate::obs::metrics::counter_inc("sasvi_checkpoints_total");
+    crate::obs::metrics::counter_add(
+        "sasvi_checkpoint_dropped_total",
+        dropped_features as u64,
+    );
+    crate::obs::metrics::observe(
+        "sasvi_checkpoint_gap",
+        gap,
+        crate::obs::metrics::GAP_BUCKETS,
+    );
+    let width: usize = survivor_groups
+        .iter()
+        .map(|&g| groups.range(g, p).len())
+        .sum();
+    crate::obs::metrics::gauge_set("sasvi_checkpoint_width", width as f64);
+    crate::obs::events::publish(|| crate::obs::events::EventKind::Checkpoint {
+        workload: "lasso",
+        penalty: "sgl",
+        gap,
+        width,
+        dropped: dropped_features,
+    });
+    GroupRescreen { survivor_groups, dropped_groups, gap, infeas }
 }
 
 // ---------------------------------------------------------------------------

@@ -6,8 +6,9 @@
 //! ```text
 //! PING
 //! GEN <preset> <seed> <scale> [threads]  -> {"dataset": id, ...}
-//! PATH <dataset-id> <rule> <k> <min_frac> [dynamic|static [recheck] | ws [grow]] [nocache]
-//!                                         -> {"job": id}
+//! PATH <dataset-id> <rule> <k> <min_frac> [dynamic|static [recheck] | ws [grow]]
+//!                          [penalty=<spec>] [nocache]   -> {"job": id}
+//!                          (<spec> = l1 | en[:alpha] | sgl[:tau[:group-size]])
 //! LPATH <preset> <seed> <scale> <rule> [k] [min_frac] [dynamic [recheck] | static] [nocache]
 //!                                         -> {"job": id}
 //! STATUS <job-id>                         -> {"status": "..."}
@@ -50,8 +51,11 @@
 //! in a bounded LRU keyed on the *complete* reply-determining inputs:
 //! workload kind, dataset identity (`preset:seed:scale-bits` — attached
 //! by `GEN` for `PATH` jobs and derived per-request for `LPATH`),
-//! screening rule, every solver/screening knob, and the bitwise λ-grid
-//! prefix. Concurrent clients asking for overlapping grids share solves
+//! screening rule, every solver/screening knob, the penalty (kind plus
+//! its parameters by bit pattern — α for elastic net, τ and the group
+//! layout hash for sparse-group lasso — so warm-start carries never
+//! cross penalties), and the bitwise λ-grid prefix. Concurrent clients
+//! asking for overlapping grids share solves
 //! (in-flight shards are awaited, not recomputed), and cache-hit answers
 //! are **bit-identical** to the miss answers that populated them —
 //! `total_secs` included, because pooled jobs report the sum of per-step
@@ -109,6 +113,16 @@
 //! (`dynamic_dropped` total, `dynamic_rejection` per step) and the
 //! working-set telemetry (`ws_outer` outer-iteration total, `ws_width`
 //! final working-set width per step).
+//!
+//! `PATH` jobs likewise default to the process-wide penalty
+//! ([`crate::penalty::process_default`], e.g. from `serve --penalty`);
+//! a `penalty=<spec>` token anywhere after the positionals overrides it
+//! per job (`penalty=l1`, `penalty=en:0.3`, `penalty=sgl:0.5:8` —
+//! specs as in [`crate::penalty::Penalty::parse`]). The `GEN` reply
+//! reports the default in effect (`penalty`), and the lasso `RESULT`
+//! carries the penalty the job actually solved under, so downstream
+//! tooling can split funnels by penalty. `LPATH` is ℓ1-only (the §6
+//! logistic objective); it rejects a penalty token.
 //!
 //! `LPATH` is the §6 classification workload: it generates the preset,
 //! builds labels via the auto-detecting entry point (binary responses are
@@ -374,17 +388,27 @@ fn handle_conn(stream: TcpStream, state: Arc<ServerState>) -> Result<()> {
         if parts.is_empty() {
             continue;
         }
-        // the trailing `nocache` token is a cross-cutting knob on the job
-        // verbs; strip it before dispatch so the positional matches stay
-        // simple
-        let use_cache = if matches!(parts.first(), Some(&"PATH" | &"LPATH"))
-            && parts.last() == Some(&"nocache")
-        {
-            parts.pop();
-            false
-        } else {
-            true
-        };
+        // trailing `nocache` / `penalty=<spec>` tokens are cross-cutting
+        // knobs on the job verbs; strip them (in either order) before
+        // dispatch so the positional matches stay simple
+        let mut use_cache = true;
+        let mut penalty_spec: Option<&str> = None;
+        if matches!(parts.first(), Some(&"PATH" | &"LPATH")) {
+            loop {
+                let last = parts.last().copied();
+                if last == Some("nocache") {
+                    parts.pop();
+                    use_cache = false;
+                } else if let Some(tok) =
+                    last.and_then(|t| t.strip_prefix("penalty="))
+                {
+                    parts.pop();
+                    penalty_spec = Some(tok);
+                } else {
+                    break;
+                }
+            }
+        }
         let verb = verb_label(parts[0]);
         let started = std::time::Instant::now();
         // WATCH is the one streaming verb: it writes many event lines on
@@ -406,16 +430,28 @@ fn handle_conn(stream: TcpStream, state: Arc<ServerState>) -> Result<()> {
                 cmd_gen(&state, preset, seed, scale, Some(threads))
             }
             ["PATH", ds, rule, k, min_frac] => {
-                cmd_path(&state, ds, rule, k, min_frac, None, None, use_cache)
+                cmd_path(&state, ds, rule, k, min_frac, None, None, use_cache, penalty_spec)
             }
-            ["PATH", ds, rule, k, min_frac, mode] => {
-                cmd_path(&state, ds, rule, k, min_frac, Some(mode), None, use_cache)
-            }
-            ["PATH", ds, rule, k, min_frac, mode, recheck] => {
-                cmd_path(&state, ds, rule, k, min_frac, Some(mode), Some(recheck), use_cache)
-            }
+            ["PATH", ds, rule, k, min_frac, mode] => cmd_path(
+                &state, ds, rule, k, min_frac, Some(mode), None, use_cache, penalty_spec,
+            ),
+            ["PATH", ds, rule, k, min_frac, mode, recheck] => cmd_path(
+                &state,
+                ds,
+                rule,
+                k,
+                min_frac,
+                Some(mode),
+                Some(recheck),
+                use_cache,
+                penalty_spec,
+            ),
             ["STATUS", job] => cmd_status(&state, job),
             ["RESULT", job] => cmd_result(&state, job),
+            // LPATH is the §6 logistic workload — ℓ1-only by construction
+            ["LPATH", ..] if penalty_spec.is_some() => {
+                err_msg("penalty= applies to PATH only (LPATH is l1)")
+            }
             ["LPATH", args @ ..] => cmd_lpath(&state, args, use_cache),
             ["SUREREMOVAL", ds, frac, j] => cmd_sure_removal(&state, ds, frac, j),
             ["METRICS"] => cmd_metrics(),
@@ -544,6 +580,7 @@ fn cmd_gen(
                 "working_set",
                 crate::solver::working_set::process_default().enabled,
             );
+            w.field_str("penalty", &crate::penalty::process_default().spec());
             w.finish()
         }
         Err(e) => err_msg(&format!("generate failed: {e}")),
@@ -567,10 +604,23 @@ fn cmd_path(
     mode: Option<&str>,
     recheck: Option<&str>,
     use_cache: bool,
+    penalty_spec: Option<&str>,
 ) -> String {
     let ds_id: u64 = match ds.parse() {
         Ok(v) => v,
         Err(_) => return err_msg("bad dataset id"),
+    };
+    // per-job penalty override; the process-wide default otherwise
+    let penalty = match penalty_spec {
+        None => crate::penalty::process_default(),
+        Some(spec) => match crate::penalty::Penalty::parse(spec) {
+            Some(p) => p,
+            None => {
+                return err_msg(&format!(
+                    "bad penalty spec {spec} (expected l1 | en[:alpha] | sgl[:tau[:group-size]])"
+                ))
+            }
+        },
     };
     let (dataset, cache_key) = match state.datasets.lock().unwrap().get(&ds_id) {
         Some(e) => (Arc::clone(&e.ds), e.cache_key.clone()),
@@ -627,7 +677,7 @@ fn cmd_path(
         dataset,
         plan,
         rule,
-        PathOptions { dynamic, working_set, ..PathOptions::from_process_defaults() },
+        PathOptions { dynamic, working_set, penalty, ..PathOptions::from_process_defaults() },
         format!("svc-{rule:?}"),
     );
     if use_cache {
@@ -683,6 +733,9 @@ fn lasso_result_json(res: &PathResult) -> String {
     let mut w = JsonWriter::object();
     w.field_str("kind", "lasso");
     w.field_str("rule", res.rule.name());
+    // the full spec, not just the tag: cache-hit replies must be
+    // bit-identical, so the reply pins every penalty parameter
+    w.field_str("penalty", &res.penalty.spec());
     w.field_f64("total_secs", res.total_time.as_secs_f64());
     w.field_u64("steps", res.steps.len() as u64);
     let rej: Vec<f64> = res.steps.iter().map(|s| s.rejection_ratio()).collect();
@@ -1272,6 +1325,57 @@ mod tests {
         );
         assert!(replies[7].contains("\"ws_outer\": 0"), "{}", replies[7]);
         crate::solver::working_set::set_process_default(ws_before);
+        stop.store(true, Ordering::Relaxed);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn penalty_path_jobs_and_reporting() {
+        let _guard = crate::linalg::par::test_knob_guard();
+        let server = Server::bind("127.0.0.1:0", 1).unwrap();
+        let addr = server.local_addr().unwrap();
+        let stop = server.stop_handle();
+        let h = std::thread::spawn(move || server.serve().unwrap());
+        let replies = send(
+            addr,
+            &[
+                "GEN synthetic100 3 0.01",
+                "PATH 1 sasvi 6 0.1 penalty=en:0.3",
+                "RESULT 1",
+                "PATH 1 sasvi 6 0.1 penalty=sgl:0.5:8 nocache",
+                "RESULT 2",
+                "PATH 1 sasvi 6 0.1",
+                "RESULT 3",
+                "PATH 1 sasvi 6 0.1 penalty=ridge",
+                "PATH 1 sasvi 6 0.1 penalty=en:0.3",
+                "RESULT 4",
+                "PATH 1 sasvi 6 0.1 nocache penalty=en:0.3",
+                "RESULT 5",
+                "LPATH synthetic100 3 0.01 sasviq 5 0.2 penalty=en:0.3",
+                "QUIT",
+            ],
+        );
+        // GEN reports the process-wide penalty default in effect
+        assert!(replies[0].contains("\"penalty\": \"l1\""), "{}", replies[0]);
+        // RESULT pins the full spec the job solved under
+        assert!(replies[2].contains("\"kind\": \"lasso\""), "{}", replies[2]);
+        assert!(replies[2].contains("\"penalty\": \"en:0.3\""), "{}", replies[2]);
+        assert!(replies[4].contains("\"penalty\": \"sgl:0.5:8\""), "{}", replies[4]);
+        assert!(replies[6].contains("\"penalty\": \"l1\""), "{}", replies[6]);
+        // the three penalties genuinely solved different problems
+        let after_secs = |s: &String| s[s.find("\"steps\"").unwrap()..].to_string();
+        assert_ne!(after_secs(&replies[2]), after_secs(&replies[6]));
+        assert_ne!(after_secs(&replies[4]), after_secs(&replies[6]));
+        // a bad spec is an error reply, not a silently-l1 job
+        assert!(replies[7].contains("error"), "{}", replies[7]);
+        // a repeated penalty job rides the shard cache bit-identically
+        assert_eq!(replies[9], replies[2], "penalty hit reply != miss reply");
+        // `nocache` and `penalty=` strip in either order; the re-solve
+        // matches the cached answer on every deterministic field
+        assert_eq!(after_secs(&replies[11]), after_secs(&replies[2]));
+        // LPATH is l1-only: a penalty token is rejected up front
+        assert!(replies[12].contains("error"), "{}", replies[12]);
+        assert!(replies[12].contains("penalty"), "{}", replies[12]);
         stop.store(true, Ordering::Relaxed);
         h.join().unwrap();
     }

@@ -293,6 +293,144 @@ pub fn solve_fista_dynamic(
     (out, iters, trace)
 }
 
+/// Masked elastic-net FISTA with optional dynamic screening — the
+/// [`solve_fista_warm`] twin for `0.5||y - X beta||^2 + lambda ||beta||_1
+/// + 0.5 alpha ||beta||^2`. The smooth part gains the ridge gradient
+/// `alpha z` and the Lipschitz constant gains `+ alpha` (the augmentation
+/// `[X; sqrt(alpha) I]` adds exactly `alpha` to `||X||_2^2`).
+///
+/// Unlike [`solve_fista_dynamic`], checkpoints do **not** physically
+/// compact the matrix: discarded features are masked out and zeroed
+/// (momentum + stall detection restart, a standard FISTA restart, so
+/// convergence is preserved). Dropped indices in the trace are therefore
+/// already dataset-global. With `dyn_opts` inactive this is a plain
+/// masked EN-FISTA iteration.
+#[allow(clippy::too_many_arguments)]
+pub fn solve_fista_en(
+    x: &DesignMatrix,
+    y: &[f64],
+    lambda: f64,
+    alpha: f64,
+    mask0: &[bool],
+    beta0: Vec<f64>,
+    opts: &FistaOptions,
+    dyn_opts: &DynamicOptions,
+) -> (Vec<f64>, usize, DynamicTrace) {
+    let _sp = obs::trace::span("fista_solve_en");
+    let n = x.nrows();
+    let p = x.ncols();
+    assert_eq!(mask0.len(), p);
+    assert_eq!(beta0.len(), p);
+    assert_eq!(y.len(), n);
+    let lip = (opts.lipschitz.unwrap_or_else(|| x.spectral_norm_sq(100)) + alpha)
+        .max(f64::MIN_POSITIVE)
+        * 1.001;
+    let every = dyn_opts.recheck_every;
+    let dyn_on = dyn_opts.active() && lambda > 0.0;
+
+    let mut mask: Vec<bool> = mask0.to_vec();
+    let mut active: Vec<usize> = (0..p).filter(|&j| mask[j]).collect();
+    let mut trace = DynamicTrace::new(active.len());
+    let (xty, norms_sq, mut scratch) = if dyn_on {
+        let mut xty = vec![0.0; p];
+        x.t_matvec(y, &mut xty);
+        (xty, x.col_norms_sq(), vec![0.0; p])
+    } else {
+        (Vec::new(), Vec::new(), Vec::new())
+    };
+
+    let mut beta = beta0;
+    for j in 0..p {
+        if !mask[j] {
+            beta[j] = 0.0;
+        }
+    }
+    let mut z = beta.clone();
+    let mut t = 1.0f64;
+    let mut xv = vec![0.0; n];
+    let mut resid = vec![0.0; n];
+    let mut grad = vec![0.0; p];
+    let mut last_obj = f64::INFINITY;
+    let mut stall = 0;
+    let mut iters = 0;
+
+    for it in 0..opts.max_iters {
+        if active.is_empty() {
+            break;
+        }
+        // ---- dynamic checkpoint (mask-based, no compaction) -------------
+        if dyn_on && it % every == 0 {
+            x.matvec(&beta, &mut xv);
+            for (v, yv) in xv.iter_mut().zip(y.iter()) {
+                *v = yv - *v;
+            }
+            resid.copy_from_slice(&xv);
+            let rs = dynamic::rescreen_en(
+                x, y, lambda, alpha, &xty, &norms_sq, &active, &beta, &resid,
+                &mut scratch,
+            );
+            let w = active.len();
+            trace.push_event(it, w, rs.survivors.len(), rs.gap, rs.dropped.clone());
+            if !rs.dropped.is_empty() {
+                for &j in &rs.dropped {
+                    mask[j] = false;
+                    beta[j] = 0.0;
+                    z[j] = 0.0;
+                }
+                active = rs.survivors;
+                // dropped coordinates may have carried warm-start mass
+                t = 1.0;
+                stall = 0;
+                last_obj = f64::INFINITY;
+                if active.is_empty() {
+                    break;
+                }
+            }
+        }
+
+        iters = it + 1;
+        // grad = X^T (X z - y) + alpha z
+        x.matvec(&z, &mut xv);
+        for (v, yv) in xv.iter_mut().zip(y.iter()) {
+            *v -= yv;
+        }
+        x.t_matvec(&xv, &mut grad);
+        let t_next = 0.5 * (1.0 + (1.0 + 4.0 * t * t).sqrt());
+        let mom = (t - 1.0) / t_next;
+        for j in 0..p {
+            let prev = beta[j];
+            let nxt = if mask[j] {
+                let g = grad[j] + alpha * z[j];
+                ops::soft_threshold(z[j] - g / lip, lambda / lip)
+            } else {
+                0.0
+            };
+            z[j] = nxt + mom * (nxt - prev);
+            beta[j] = nxt;
+        }
+        t = t_next;
+
+        x.matvec(&beta, &mut xv);
+        for (v, yv) in xv.iter_mut().zip(y.iter()) {
+            *v = yv - *v;
+        }
+        let obj = 0.5 * ops::nrm2sq(&xv)
+            + lambda * beta.iter().map(|b| b.abs()).sum::<f64>()
+            + 0.5 * alpha * beta.iter().map(|b| b * b).sum::<f64>();
+        if (last_obj - obj).abs() <= opts.tol * (1.0 + obj.abs()) {
+            stall += 1;
+            if stall >= 5 {
+                break;
+            }
+        } else {
+            stall = 0;
+        }
+        last_obj = obj;
+    }
+    record_fista_metrics(iters);
+    (beta, iters, trace)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -410,6 +548,65 @@ mod tests {
         );
         assert!(beta[0].is_finite());
         assert!(trace.rechecks() >= 1);
+    }
+
+    #[test]
+    fn elastic_net_fista_agrees_with_en_cd() {
+        let ds = SyntheticSpec { n: 30, p: 50, nnz: 6, ..Default::default() }
+            .generate(9);
+        let lam = 0.25 * ds.lambda_max();
+        let alpha = 0.3;
+        let mask = vec![true; ds.p()];
+        let opts = FistaOptions { max_iters: 10_000, tol: 1e-14, lipschitz: None };
+        let (beta_f, _, _) = solve_fista_en(
+            &ds.x, &ds.y, lam, alpha, &mask, vec![0.0; ds.p()], &opts,
+            &DynamicOptions::off(),
+        );
+        let active: Vec<usize> = (0..ds.p()).collect();
+        let norms = ds.x.col_norms_sq();
+        let mut beta_c = vec![0.0; ds.p()];
+        let mut resid = ds.y.clone();
+        crate::solver::solve_cd_en(
+            &ds.x, &ds.y, lam, alpha, &active, &norms, &mut beta_c, &mut resid,
+            &CdOptions { tol: 1e-12, gap_tol: 1e-12, max_epochs: 20_000,
+                         ..Default::default() },
+        );
+        for j in 0..ds.p() {
+            assert!(
+                (beta_f[j] - beta_c[j]).abs() < 1e-5,
+                "j={j}: fista={} cd={}", beta_f[j], beta_c[j]
+            );
+        }
+    }
+
+    #[test]
+    fn elastic_net_fista_dynamic_matches_static() {
+        let ds = SyntheticSpec { n: 30, p: 80, nnz: 8, ..Default::default() }
+            .generate(14);
+        let lam = 0.3 * ds.lambda_max();
+        let alpha = 0.2;
+        let mask = vec![true; ds.p()];
+        let opts = FistaOptions { max_iters: 10_000, tol: 1e-14, lipschitz: None };
+        let (beta_s, _, _) = solve_fista_en(
+            &ds.x, &ds.y, lam, alpha, &mask, vec![0.0; ds.p()], &opts,
+            &DynamicOptions::off(),
+        );
+        let (beta_d, _, trace) = solve_fista_en(
+            &ds.x, &ds.y, lam, alpha, &mask, vec![0.0; ds.p()], &opts,
+            &DynamicOptions::enabled_every(4),
+        );
+        assert!(trace.dropped_total() > 0, "dynamic screened nothing");
+        for j in 0..ds.p() {
+            assert!(
+                (beta_s[j] - beta_d[j]).abs() < 1e-6,
+                "j={j}: {} vs {}", beta_s[j], beta_d[j]
+            );
+        }
+        for ev in &trace.events {
+            for &j in &ev.dropped {
+                assert!(beta_s[j].abs() < 1e-8, "dropped {j} has {}", beta_s[j]);
+            }
+        }
     }
 
     #[test]

@@ -16,13 +16,18 @@
 pub mod cd;
 pub mod fista;
 pub mod kkt;
+pub mod sgl;
 pub mod working_set;
 
-pub use cd::{solve_cd, solve_cd_dynamic, CdOptions, CdStats};
-pub use fista::{solve_fista, solve_fista_dynamic, solve_fista_warm, FistaOptions};
+pub use cd::{solve_cd, solve_cd_dynamic, solve_cd_dynamic_en, solve_cd_en, CdOptions, CdStats};
+pub use fista::{
+    solve_fista, solve_fista_dynamic, solve_fista_en, solve_fista_warm, FistaOptions,
+};
 pub use kkt::{check_kkt, KktReport};
+pub use sgl::solve_sgl;
 pub use working_set::{
-    solve_working_set_cd, solve_working_set_fista, WorkingSetOptions, WorkingSetTrace,
+    solve_working_set_cd, solve_working_set_cd_en, solve_working_set_fista, WorkingSetOptions,
+    WorkingSetTrace,
 };
 
 use crate::linalg::{ops, DesignMatrix};
@@ -106,6 +111,48 @@ pub(crate) fn scaled_dual_gap(
     let primal = 0.5 * ops::nrm2sq(resid) + lambda * l1;
     let dual = 0.5 * ops::nrm2sq(y) - 0.5 * lambda * lambda * bnorm2;
     (primal - dual, bnorm2, scale)
+}
+
+/// The elastic-net twin of [`scaled_dual_gap`], derived through the
+/// augmentation identity `X' = [X; sqrt(alpha) I]`, `y' = [y; 0]`: the
+/// augmented residual is `r' = [r; -sqrt(alpha) beta]`, so the augmented
+/// residual norm gains `alpha ||beta||^2`, the primal gains the ridge term
+/// `0.5 alpha ||beta||^2`, and the dual ball distance gains the tail rows
+/// `alpha scale^2 ||beta||^2` (the augmented `y` tail is zero). `infeas`
+/// must already be the augmented infeasibility
+/// `max_j |<x_j, r> - alpha beta_j|` and `beta_l2sq = ||beta||^2` over the
+/// active support.
+pub(crate) fn scaled_dual_gap_en(
+    y: &[f64],
+    resid: &[f64],
+    lambda: f64,
+    alpha: f64,
+    infeas: f64,
+    l1: f64,
+    beta_l2sq: f64,
+) -> (f64, f64, f64) {
+    let denom = lambda.max(infeas);
+    let scale = if denom > 0.0 { 1.0 / denom } else { 0.0 };
+    let mut bnorm2 = 0.0;
+    for (rv, yv) in resid.iter().zip(y.iter()) {
+        let d = rv * scale - yv / lambda;
+        bnorm2 += d * d;
+    }
+    bnorm2 += alpha * scale * scale * beta_l2sq;
+    let primal = 0.5 * ops::nrm2sq(resid) + 0.5 * alpha * beta_l2sq + lambda * l1;
+    let dual = 0.5 * ops::nrm2sq(y) - 0.5 * lambda * lambda * bnorm2;
+    (primal - dual, bnorm2, scale)
+}
+
+/// Primal objective for an arbitrary penalty:
+/// `0.5 ||r||^2 + pen(lambda, beta)`.
+pub fn primal_objective_pen(
+    pen: &crate::penalty::Penalty,
+    resid: &[f64],
+    beta: &[f64],
+    lambda: f64,
+) -> f64 {
+    0.5 * ops::nrm2sq(resid) + pen.primal_penalty(lambda, beta)
 }
 
 /// Duality gap given a residual and a *feasible* dual point theta.

@@ -1,0 +1,454 @@
+//! Sparse-group lasso block coordinate descent.
+//!
+//! Solves `min_beta 0.5 ||y - X beta||^2 + lambda (tau ||beta||_1
+//! + (1 - tau) sum_g w_g ||beta_g||_2)` over the uniform contiguous
+//! group layout of [`crate::penalty::GroupSpec`] (`w_g = sqrt(|g|)`).
+//!
+//! The update is proximal block descent: for group `g` with block
+//! Lipschitz constant `L_g = sum_{j in g} ||x_j||^2`, take the gradient
+//! step `z = beta_g + X_g^T r / L_g` and apply the two-stage prox —
+//! elementwise soft-threshold at `lambda tau / L_g`, then group shrinkage
+//! `max(0, 1 - lambda (1 - tau) w_g / (L_g ||v||_2)) v`. This is the
+//! standard SLEP/blitz-style SGL sweep; the prox is exact because the
+//! ℓ1+group prox composes in that order.
+//!
+//! Dynamic screening plugs in at **group** granularity through
+//! [`dynamic::rescreen_sgl`]: a checkpoint certifies whole groups zero,
+//! their warm-start mass is evicted back into the residual, and later
+//! epochs never visit them — the same compose-with-safety contract as the
+//! ℓ1 checkpoints. All group loops run serially in group order, so the
+//! iterate sequence is bit-identical at every thread count by
+//! construction.
+
+use crate::linalg::{ops, DesignMatrix};
+use crate::obs;
+use crate::penalty::GroupSpec;
+use crate::screening::dynamic::{self, DynamicOptions, DynamicTrace};
+
+use super::{CdOptions, CdStats};
+
+fn record_sgl_metrics(stats: &CdStats) {
+    obs::metrics::counter_inc("sasvi_sgl_solves_total");
+    obs::metrics::counter_add("sasvi_sgl_epochs_total", stats.epochs as u64);
+    obs::metrics::counter_add("sasvi_sgl_updates_total", stats.coord_updates);
+}
+
+/// The feature index list backing a set of active groups: the concatenated
+/// (ascending) column ranges. The path coordinator and the checkpoint both
+/// consume this layout.
+pub fn active_features_of(groups: GroupSpec, active_groups: &[usize], p: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    for &g in active_groups {
+        out.extend(groups.range(g, p));
+    }
+    out
+}
+
+/// One proximal sweep over `active_groups`; returns the max absolute
+/// coefficient change. Updates `beta`/`resid` in place and counts
+/// coordinate updates into `stats`.
+#[allow(clippy::too_many_arguments)]
+fn sgl_sweep(
+    x: &DesignMatrix,
+    lambda: f64,
+    tau: f64,
+    groups: GroupSpec,
+    active_groups: &[usize],
+    col_norms_sq: &[f64],
+    beta: &mut [f64],
+    resid: &mut [f64],
+    stats: &mut CdStats,
+    z: &mut Vec<f64>,
+) -> f64 {
+    let p = x.ncols();
+    let mut max_delta = 0.0f64;
+    for &g in active_groups {
+        let r = groups.range(g, p);
+        let lg: f64 = r.clone().map(|j| col_norms_sq[j]).sum();
+        if lg <= 0.0 {
+            continue;
+        }
+        let w = groups.weight(g, p);
+        // gradient step + elementwise soft-threshold
+        z.clear();
+        let mut vnorm2 = 0.0f64;
+        for j in r.clone() {
+            let zj = beta[j] + x.col_dot(j, resid) / lg;
+            let v = ops::soft_threshold(zj, lambda * tau / lg);
+            vnorm2 += v * v;
+            z.push(v);
+        }
+        // group shrinkage
+        let vnorm = vnorm2.sqrt();
+        let thresh = lambda * (1.0 - tau) * w / lg;
+        let shrink = if vnorm > thresh { 1.0 - thresh / vnorm } else { 0.0 };
+        for (k, j) in r.enumerate() {
+            let new = shrink * z[k];
+            let delta = new - beta[j];
+            stats.coord_updates += 1;
+            if delta != 0.0 {
+                x.axpy_col(-delta, j, resid);
+                beta[j] = new;
+                let ad = delta.abs();
+                if ad > max_delta {
+                    max_delta = ad;
+                }
+            }
+        }
+    }
+    max_delta
+}
+
+/// Restricted SGL duality gap at the ε-norm-scaled dual point (the solver's
+/// stopping certificate; same math as the [`dynamic::rescreen_sgl`]
+/// checkpoint, without the screening pass).
+pub fn restricted_gap_sgl(
+    x: &DesignMatrix,
+    y: &[f64],
+    lambda: f64,
+    tau: f64,
+    groups: GroupSpec,
+    active_groups: &[usize],
+    beta: &[f64],
+    resid: &[f64],
+) -> f64 {
+    let p = x.ncols();
+    let mut buf: Vec<f64> = Vec::with_capacity(groups.size);
+    let mut infeas = 0.0f64;
+    let mut l1 = 0.0f64;
+    let mut gsum = 0.0f64;
+    for &g in active_groups {
+        let r = groups.range(g, p);
+        buf.clear();
+        let mut nrm2 = 0.0f64;
+        for j in r {
+            buf.push(x.col_dot(j, resid).abs());
+            l1 += beta[j].abs();
+            nrm2 += beta[j] * beta[j];
+        }
+        let w = groups.weight(g, p);
+        let nu = crate::penalty::sgl_group_dual_norm(&mut buf, tau, w);
+        infeas = infeas.max(nu);
+        gsum += w * nrm2.sqrt();
+    }
+    let denom = lambda.max(infeas);
+    let scale = if denom > 0.0 { 1.0 / denom } else { 0.0 };
+    let mut bnorm2 = 0.0;
+    for (rv, yv) in resid.iter().zip(y.iter()) {
+        let d = rv * scale - yv / lambda;
+        bnorm2 += d * d;
+    }
+    let primal =
+        0.5 * ops::nrm2sq(resid) + lambda * (tau * l1 + (1.0 - tau) * gsum);
+    let dual = 0.5 * ops::nrm2sq(y) - 0.5 * lambda * lambda * bnorm2;
+    primal - dual
+}
+
+/// One group checkpoint inside [`solve_sgl`]: rescreen the surviving
+/// groups, evict the warm-start mass of every certified group (restoring
+/// the residual exactly), shrink both index lists, and record the event
+/// with feature-granular drops (so the coordinator's funnel accounting is
+/// penalty-agnostic). Returns the gap and whether an eviction staled it.
+#[allow(clippy::too_many_arguments)]
+fn sgl_checkpoint(
+    x: &DesignMatrix,
+    y: &[f64],
+    lambda: f64,
+    tau: f64,
+    groups: GroupSpec,
+    active_groups: &mut Vec<usize>,
+    active_features: &mut Vec<usize>,
+    col_norms_sq: &[f64],
+    beta: &mut [f64],
+    resid: &mut [f64],
+    xt_r: &mut [f64],
+    epoch: usize,
+    trace: &mut DynamicTrace,
+) -> (f64, bool) {
+    let p = x.ncols();
+    let rs = dynamic::rescreen_sgl(
+        x, y, lambda, tau, groups, active_groups, active_features, col_norms_sq,
+        beta, resid, xt_r,
+    );
+    let mut evicted = false;
+    if !rs.dropped_groups.is_empty() {
+        let mut dropped_features = Vec::new();
+        for &g in &rs.dropped_groups {
+            for j in groups.range(g, p) {
+                if beta[j] != 0.0 {
+                    // safe: the checkpoint certifies beta*_g = 0
+                    x.axpy_col(beta[j], j, resid);
+                    beta[j] = 0.0;
+                    evicted = true;
+                }
+                dropped_features.push(j);
+            }
+        }
+        let before = active_features.len();
+        *active_groups = rs.survivor_groups;
+        *active_features = active_features_of(groups, active_groups, p);
+        trace.push_event(epoch, before, active_features.len(), rs.gap, dropped_features);
+    } else {
+        let w = active_features.len();
+        trace.push_event(epoch, w, w, rs.gap, Vec::new());
+    }
+    (rs.gap, evicted)
+}
+
+/// Sparse-group-lasso solve restricted to `active_groups`, with optional
+/// dynamic group screening (the SGL member of the [`super::solve_cd`] /
+/// [`super::solve_cd_en`] family).
+///
+/// Warm-start contract: on entry `resid = y - X beta` with `beta`
+/// supported anywhere; coefficients outside the active groups are left
+/// untouched (their contribution stays in `resid`). `active_groups` is
+/// shrunk in place to the checkpoint survivors. With `dyn_opts` inactive
+/// the iterate sequence is the plain block solver's.
+#[allow(clippy::too_many_arguments)]
+pub fn solve_sgl(
+    x: &DesignMatrix,
+    y: &[f64],
+    lambda: f64,
+    tau: f64,
+    groups: GroupSpec,
+    active_groups: &mut Vec<usize>,
+    col_norms_sq: &[f64],
+    beta: &mut [f64],
+    resid: &mut [f64],
+    opts: &CdOptions,
+    dyn_opts: &DynamicOptions,
+) -> (CdStats, DynamicTrace) {
+    let _sp = obs::trace::span("sgl_solve");
+    let p = x.ncols();
+    let mut stats = CdStats::default();
+    let mut active_features = active_features_of(groups, active_groups, p);
+    let mut trace = DynamicTrace::new(active_features.len());
+    let y_scale = ops::inf_norm(y).max(1.0);
+    let tol = opts.tol * y_scale;
+    let gap_scale = 0.5 * ops::nrm2sq(y) + 1e-12;
+    let every = dyn_opts.recheck_every;
+    let dyn_on = dyn_opts.active() && lambda > 0.0;
+
+    let mut xt_r = if dyn_on { vec![0.0; p] } else { Vec::new() };
+    if dyn_on {
+        // epoch-0 checkpoint: at lambda >= lambda_max this certifies every
+        // group zero before any sweep runs
+        let (gap, evicted) = sgl_checkpoint(
+            x, y, lambda, tau, groups, active_groups, &mut active_features,
+            col_norms_sq, beta, resid, &mut xt_r, 0, &mut trace,
+        );
+        if evicted {
+            stats.final_gap = None;
+        } else {
+            stats.final_gap = Some(gap);
+            if gap <= opts.gap_tol * gap_scale {
+                stats.converged = true;
+                record_sgl_metrics(&stats);
+                return (stats, trace);
+            }
+        }
+    }
+
+    let mut z: Vec<f64> = Vec::with_capacity(groups.size);
+    for epoch in 0..opts.max_epochs {
+        stats.epochs = epoch + 1;
+        let max_delta = sgl_sweep(
+            x, lambda, tau, groups, active_groups, col_norms_sq, beta, resid,
+            &mut stats, &mut z,
+        );
+        if max_delta < tol {
+            stats.converged = true;
+            break;
+        }
+        if dyn_on && (epoch + 1) % every == 0 {
+            let (gap, evicted) = sgl_checkpoint(
+                x, y, lambda, tau, groups, active_groups, &mut active_features,
+                col_norms_sq, beta, resid, &mut xt_r, epoch + 1, &mut trace,
+            );
+            // a post-eviction gap is stale (beta/resid changed after it was
+            // computed): never store or act on it
+            if evicted {
+                stats.final_gap = None;
+            } else {
+                stats.final_gap = Some(gap);
+                if gap <= opts.gap_tol * gap_scale {
+                    stats.converged = true;
+                    break;
+                }
+            }
+        } else if opts.gap_check_every > 0 && (epoch + 1) % opts.gap_check_every == 0 {
+            let gap = restricted_gap_sgl(
+                x, y, lambda, tau, groups, active_groups, beta, resid,
+            );
+            stats.final_gap = Some(gap);
+            if gap <= opts.gap_tol * gap_scale {
+                stats.converged = true;
+                break;
+            }
+        }
+    }
+    if stats.final_gap.is_none() && opts.gap_check_every > 0 {
+        stats.final_gap = Some(restricted_gap_sgl(
+            x, y, lambda, tau, groups, active_groups, beta, resid,
+        ));
+    }
+    record_sgl_metrics(&stats);
+    (stats, trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticSpec;
+    use crate::penalty::Penalty;
+
+    fn tight() -> CdOptions {
+        CdOptions { tol: 1e-12, gap_tol: 1e-12, max_epochs: 50_000, ..Default::default() }
+    }
+
+    fn solve_fresh(
+        ds: &crate::data::Dataset,
+        lambda: f64,
+        tau: f64,
+        groups: GroupSpec,
+        opts: &CdOptions,
+        dyn_opts: &DynamicOptions,
+    ) -> (Vec<f64>, Vec<usize>, CdStats, DynamicTrace) {
+        let p = ds.p();
+        let mut ag: Vec<usize> = (0..groups.n_groups(p)).collect();
+        let norms = ds.x.col_norms_sq();
+        let mut beta = vec![0.0; p];
+        let mut resid = ds.y.clone();
+        let (stats, trace) = solve_sgl(
+            &ds.x, &ds.y, lambda, tau, groups, &mut ag, &norms, &mut beta,
+            &mut resid, opts, dyn_opts,
+        );
+        (beta, ag, stats, trace)
+    }
+
+    #[test]
+    fn satisfies_sgl_stationarity() {
+        let ds = SyntheticSpec { n: 40, p: 64, nnz: 8, ..Default::default() }
+            .generate(31);
+        let groups = GroupSpec::new(8);
+        let tau = 0.5;
+        let pre = ds.precompute();
+        let pen = Penalty::SparseGroupLasso { groups, tau };
+        let lam = 0.3 * pen.lambda_max(&pre.xty);
+        let (beta, _, stats, _) =
+            solve_fresh(&ds, lam, tau, groups, &tight(), &DynamicOptions::off());
+        assert!(stats.converged, "{stats:?}");
+        let p = ds.p();
+        let mut fit = vec![0.0; ds.n()];
+        ds.x.matvec(&beta, &mut fit);
+        let resid: Vec<f64> = ds.y.iter().zip(&fit).map(|(y, f)| y - f).collect();
+        for g in 0..groups.n_groups(p) {
+            let r = groups.range(g, p);
+            let w = groups.weight(g, p);
+            let gnorm: f64 =
+                r.clone().map(|j| beta[j] * beta[j]).sum::<f64>().sqrt();
+            if gnorm == 0.0 {
+                // zero group: || S_{lambda tau}(s_g) ||_2 <= lambda (1-tau) w_g
+                let mut acc = 0.0f64;
+                for j in r {
+                    let s = ds.x.col_dot(j, &resid);
+                    let t = (s.abs() - lam * tau).max(0.0);
+                    acc += t * t;
+                }
+                assert!(
+                    acc.sqrt() <= lam * (1.0 - tau) * w + 1e-6,
+                    "g={g}: {} > {}", acc.sqrt(), lam * (1.0 - tau) * w
+                );
+            } else {
+                for j in r {
+                    let s = ds.x.col_dot(j, &resid);
+                    if beta[j] == 0.0 {
+                        assert!(s.abs() <= lam * tau + 1e-6, "j={j}: |s|={}", s.abs());
+                    } else {
+                        let want = lam * tau * beta[j].signum()
+                            + lam * (1.0 - tau) * w * beta[j] / gnorm;
+                        assert!((s - want).abs() < 1e-6, "j={j}: {s} vs {want}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tau_one_matches_lasso_objective() {
+        let ds = SyntheticSpec { n: 30, p: 48, nnz: 6, ..Default::default() }
+            .generate(12);
+        let groups = GroupSpec::new(6);
+        let lam = 0.3 * ds.lambda_max();
+        let (beta, _, stats, _) =
+            solve_fresh(&ds, lam, 1.0, groups, &tight(), &DynamicOptions::off());
+        assert!(stats.converged);
+        let p = ds.p();
+        let active: Vec<usize> = (0..p).collect();
+        let norms = ds.x.col_norms_sq();
+        let mut beta_l1 = vec![0.0; p];
+        let mut resid_l1 = ds.y.clone();
+        crate::solver::solve_cd(
+            &ds.x, &ds.y, lam, &active, &norms, &mut beta_l1, &mut resid_l1, &tight(),
+        );
+        let obj = |b: &[f64]| {
+            let mut fit = vec![0.0; ds.n()];
+            ds.x.matvec(b, &mut fit);
+            let r: Vec<f64> = ds.y.iter().zip(&fit).map(|(y, f)| y - f).collect();
+            crate::solver::primal_objective(&r, b, lam)
+        };
+        let (o1, o2) = (obj(&beta), obj(&beta_l1));
+        assert!((o1 - o2).abs() <= 1e-8 * (1.0 + o2.abs()), "{o1} vs {o2}");
+    }
+
+    #[test]
+    fn dynamic_matches_static_and_screened_groups_are_zero() {
+        let ds = SyntheticSpec { n: 40, p: 96, nnz: 10, ..Default::default() }
+            .generate(23);
+        let groups = GroupSpec::new(8);
+        let tau = 0.4;
+        let pre = ds.precompute();
+        let pen = Penalty::SparseGroupLasso { groups, tau };
+        let lam = 0.35 * pen.lambda_max(&pre.xty);
+        let (beta_s, _, stats_s, _) =
+            solve_fresh(&ds, lam, tau, groups, &tight(), &DynamicOptions::off());
+        let (beta_d, ag, stats_d, trace) = solve_fresh(
+            &ds, lam, tau, groups, &tight(), &DynamicOptions::enabled_every(3),
+        );
+        assert!(stats_s.converged && stats_d.converged);
+        assert!(trace.rechecks() > 0);
+        for j in 0..ds.p() {
+            assert!(
+                (beta_s[j] - beta_d[j]).abs() < 1e-8,
+                "j={j}: {} vs {}", beta_s[j], beta_d[j]
+            );
+        }
+        // every screened-out group is exactly zero in the dynamic solution
+        for g in 0..groups.n_groups(ds.p()) {
+            if !ag.contains(&g) {
+                for j in groups.range(g, ds.p()) {
+                    assert_eq!(beta_d[j], 0.0, "screened group {g} feature {j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn above_lambda_max_screens_all_groups_at_epoch_zero() {
+        let ds = SyntheticSpec { n: 20, p: 40, nnz: 4, ..Default::default() }
+            .generate(6);
+        let groups = GroupSpec::new(5);
+        let tau = 0.6;
+        let pre = ds.precompute();
+        let pen = Penalty::SparseGroupLasso { groups, tau };
+        let lam = 1.05 * pen.lambda_max(&pre.xty);
+        let (beta, ag, stats, trace) = solve_fresh(
+            &ds, lam, tau, groups, &CdOptions::default(),
+            &DynamicOptions::enabled_every(5),
+        );
+        assert!(ag.is_empty(), "{} surviving groups", ag.len());
+        assert_eq!(trace.events[0].epoch, 0);
+        assert!(stats.converged);
+        assert!(beta.iter().all(|&b| b == 0.0));
+    }
+}

@@ -545,6 +545,236 @@ pub fn solve_working_set_fista(
     )
 }
 
+// ---------------------------------------------------------------------------
+// elastic-net outer/inner driver
+//
+// A deliberate copy of `drive` with the three penalty-touching points
+// swapped (checkpoint -> rescreen_en, violator score -> |<x_j, r> -
+// alpha beta_j|, closing gap -> restricted_gap_en) — the ℓ1 loop above
+// stays byte-for-byte what it was, preserving the bit-identity contract
+// for existing workloads. Note rescreen_en fills `xt_r` with the already-
+// shifted scores, so the expansion filter reads them directly.
+// ---------------------------------------------------------------------------
+
+#[allow(clippy::too_many_arguments)]
+fn drive_en<Inner>(
+    x: &DesignMatrix,
+    y: &[f64],
+    lambda: f64,
+    alpha: f64,
+    active: &mut Vec<usize>,
+    col_norms_sq: &[f64],
+    xty: &[f64],
+    beta: &mut [f64],
+    resid: &mut [f64],
+    gap_tol: f64,
+    seed: Option<&[usize]>,
+    ws_opts: &WorkingSetOptions,
+    mut inner: Inner,
+) -> (CdStats, WorkingSetTrace)
+where
+    Inner: FnMut(&mut Vec<usize>, &mut [f64], &mut [f64]) -> (CdStats, u64),
+{
+    assert!(lambda > 0.0, "working-set solving needs lambda > 0");
+    let p = x.ncols();
+    let mut stats = CdStats::default();
+    let gap_scale = 0.5 * ops::nrm2sq(y) + 1e-12;
+    let tol = gap_tol * gap_scale;
+
+    let mut alive = vec![false; p];
+    for &j in active.iter() {
+        alive[j] = true;
+    }
+    let mut in_ws = vec![false; p];
+    let mut ws: Vec<usize> = Vec::new();
+    for &j in active.iter() {
+        if beta[j] != 0.0 {
+            ws.push(j);
+            in_ws[j] = true;
+        }
+    }
+    if let Some(seed) = seed {
+        for &j in seed {
+            if j < p && alive[j] && !in_ws[j] {
+                ws.push(j);
+                in_ws[j] = true;
+            }
+        }
+    }
+    let mut trace = WorkingSetTrace {
+        initial_active: active.len(),
+        initial_width: ws.len(),
+        events: Vec::new(),
+        final_ws: Vec::new(),
+    };
+    let mut xt_r = vec![0.0; p];
+    let mut stall_rounds = 0usize;
+    let mut exit_gap_fresh = false;
+
+    for outer in 0..ws_opts.max_outer {
+        let _sp = crate::obs::trace::span("ws_outer");
+        crate::obs::metrics::counter_inc("sasvi_ws_outer_iters_total");
+        let rs = dynamic::rescreen_en(
+            x, y, lambda, alpha, xty, col_norms_sq, active, beta, resid, &mut xt_r,
+        );
+        let pruned = rs.dropped;
+        crate::obs::events::publish(|| crate::obs::events::EventKind::WsOuter {
+            outer,
+            width: ws.len(),
+            gap: rs.gap,
+        });
+        let mut evicted = false;
+        if !pruned.is_empty() {
+            for &j in &pruned {
+                alive[j] = false;
+                in_ws[j] = false;
+                if beta[j] != 0.0 {
+                    x.axpy_col(beta[j], j, resid);
+                    beta[j] = 0.0;
+                    evicted = true;
+                }
+            }
+            *active = rs.survivors;
+            ws.retain(|&j| alive[j]);
+        }
+        if !evicted && rs.gap <= tol {
+            stats.converged = true;
+            stats.final_gap = Some(rs.gap);
+            trace.events.push(OuterEvent {
+                outer,
+                width: ws.len(),
+                inner_epochs: 0,
+                work: 0,
+                gap: rs.gap,
+                pruned,
+                added: 0,
+            });
+            break;
+        }
+        stats.final_gap = if evicted { None } else { Some(rs.gap) };
+
+        // xt_r[j] = <x_j, r> - alpha beta_j (filled by the EN checkpoint);
+        // for candidates outside W beta is 0, so this is the plain score
+        let s: &[f64] = &xt_r;
+        let mut viol: Vec<usize> = active
+            .iter()
+            .copied()
+            .filter(|&j| !in_ws[j] && s[j].abs() > lambda)
+            .collect();
+        viol.sort_unstable_by(|&a, &b| {
+            s[b].abs().total_cmp(&s[a].abs()).then_with(|| a.cmp(&b))
+        });
+        let batch = ws.len().max(ws_opts.grow).min(viol.len());
+        for &j in viol.iter().take(batch) {
+            in_ws[j] = true;
+            ws.push(j);
+        }
+        crate::obs::metrics::counter_add("sasvi_ws_expanded_total", batch as u64);
+        crate::obs::metrics::counter_add("sasvi_ws_pruned_total", pruned.len() as u64);
+
+        if batch == 0 && pruned.is_empty() && !evicted {
+            stall_rounds += 1;
+            if stall_rounds >= 2 {
+                trace.events.push(OuterEvent {
+                    outer,
+                    width: ws.len(),
+                    inner_epochs: 0,
+                    work: 0,
+                    gap: rs.gap,
+                    pruned,
+                    added: 0,
+                });
+                exit_gap_fresh = true;
+                break;
+            }
+        } else {
+            stall_rounds = 0;
+        }
+
+        let width = ws.len();
+        let (ist, work) = inner(&mut ws, beta, resid);
+        stats.epochs += ist.epochs;
+        stats.coord_updates += ist.coord_updates;
+        in_ws.fill(false);
+        for &j in ws.iter() {
+            in_ws[j] = true;
+        }
+        trace.events.push(OuterEvent {
+            outer,
+            width,
+            inner_epochs: ist.epochs,
+            work,
+            gap: rs.gap,
+            pruned,
+            added: batch,
+        });
+    }
+
+    if !stats.converged && !exit_gap_fresh {
+        let gap = crate::solver::cd::restricted_gap_en(
+            x, y, lambda, alpha, active, beta, resid,
+        );
+        stats.converged = gap <= tol;
+        stats.final_gap = Some(gap);
+    }
+    trace.final_ws = ws;
+    (stats, trace)
+}
+
+/// Working-set solve for the native elastic net (the [`solve_working_set_cd`]
+/// twin): outer checkpoints run [`dynamic::rescreen_en`]'s augmented fused
+/// test, expansion admits the top `|<x_j, r> - alpha beta_j| > lambda`
+/// violators, and inner solves run [`crate::solver::solve_cd_en`] (with
+/// `dyn_opts` active, its dynamic twin).
+#[allow(clippy::too_many_arguments)]
+pub fn solve_working_set_cd_en(
+    x: &DesignMatrix,
+    y: &[f64],
+    lambda: f64,
+    alpha: f64,
+    active: &mut Vec<usize>,
+    col_norms_sq: &[f64],
+    xty: &[f64],
+    beta: &mut [f64],
+    resid: &mut [f64],
+    cd: &CdOptions,
+    dyn_opts: &DynamicOptions,
+    ws_opts: &WorkingSetOptions,
+    seed: Option<&[usize]>,
+) -> (CdStats, WorkingSetTrace) {
+    let dyn_opts = *dyn_opts;
+    let cd = *cd;
+    drive_en(
+        x,
+        y,
+        lambda,
+        alpha,
+        active,
+        col_norms_sq,
+        xty,
+        beta,
+        resid,
+        cd.gap_tol,
+        seed,
+        ws_opts,
+        |ws, beta, resid| {
+            if dyn_opts.active() {
+                let (st, tr) = crate::solver::cd::solve_cd_dynamic_en(
+                    x, y, lambda, alpha, ws, col_norms_sq, xty, beta, resid, &cd,
+                    &dyn_opts,
+                );
+                let work = tr.solver_work(st.epochs);
+                (st, work)
+            } else {
+                let st = crate::solver::cd::solve_cd_en(
+                    x, y, lambda, alpha, ws, col_norms_sq, beta, resid, &cd,
+                );
+                (st, st.epochs as u64 * ws.len() as u64)
+            }
+        },
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -653,6 +883,47 @@ mod tests {
                 beta_f[j],
                 beta_w[j]
             );
+        }
+    }
+
+    #[test]
+    fn elastic_net_working_set_matches_full_en_solve() {
+        let ds = SyntheticSpec { n: 40, p: 150, nnz: 12, ..Default::default() }
+            .generate(19);
+        let lam = 0.3 * ds.lambda_max();
+        let alpha = 0.25;
+        let pre = ds.precompute();
+        // full EN solve (no working set)
+        let all: Vec<usize> = (0..ds.p()).collect();
+        let mut beta_f = vec![0.0; ds.p()];
+        let mut resid_f = ds.y.clone();
+        crate::solver::solve_cd_en(
+            &ds.x, &ds.y, lam, alpha, &all, &pre.col_norms_sq, &mut beta_f,
+            &mut resid_f, &tight(),
+        );
+        for dyn_opts in [DynamicOptions::off(), DynamicOptions::enabled_every(3)] {
+            let mut active: Vec<usize> = (0..ds.p()).collect();
+            let mut beta = vec![0.0; ds.p()];
+            let mut resid = ds.y.clone();
+            let (stats, trace) = solve_working_set_cd_en(
+                &ds.x, &ds.y, lam, alpha, &mut active, &pre.col_norms_sq, &pre.xty,
+                &mut beta, &mut resid, &tight(), &dyn_opts,
+                &WorkingSetOptions::enabled_with_grow(5), None,
+            );
+            assert!(stats.converged, "{stats:?}");
+            assert!(trace.outer_iters() >= 2, "expansion never ran");
+            for j in 0..ds.p() {
+                assert!(
+                    (beta_f[j] - beta[j]).abs() < 1e-7,
+                    "j={j}: {} vs {}", beta_f[j], beta[j]
+                );
+            }
+            // the residual invariant survived prune/evict/solve rounds
+            let mut fit = vec![0.0; ds.n()];
+            ds.x.matvec(&beta, &mut fit);
+            for i in 0..ds.n() {
+                assert!((resid[i] - (ds.y[i] - fit[i])).abs() < 1e-8, "i={i}");
+            }
         }
     }
 

@@ -812,6 +812,81 @@ fn concurrent_dispatch_battery_bit_identical_to_serial() {
     par::set_threads(before);
 }
 
+/// The penalty-generic determinism contract (ISSUE 10): screened paths
+/// under every penalty — ℓ1, elastic net, sparse-group lasso, dynamic
+/// checkpoints included — are bit-identical at threads 1/2/4/8 on both
+/// storage backends. The penalty-native screens and solvers run their
+/// batched passes through the same block engine as the ℓ1 pipeline, so
+/// the schedule must never reach a result bit.
+#[test]
+fn penalty_paths_bit_identical_across_thread_counts() {
+    use sasvi::penalty::{GroupSpec, Penalty};
+
+    let _guard = THREAD_KNOB.lock().unwrap();
+    let before = par::threads();
+    let sp = SyntheticSpec {
+        n: 50,
+        p: 600,
+        nnz: 20,
+        density: 0.08,
+        ..Default::default()
+    }
+    .generate(37);
+    let mut dn = sp.clone();
+    dn.x = sp.x.to_dense().into();
+    for pen in [
+        Penalty::L1,
+        Penalty::ElasticNet { alpha: 0.3 },
+        Penalty::SparseGroupLasso { groups: GroupSpec::new(8), tau: 0.5 },
+    ] {
+        for ds in [&dn, &sp] {
+            let plan = PathPlan::linear_spaced(ds, 10, 0.2);
+            let opts = PathOptions {
+                dynamic: DynamicOptions::enabled_every(3),
+                penalty: pen,
+                ..Default::default()
+            };
+            par::set_threads(1);
+            let serial = run_path_keep_betas(ds, &plan, RuleKind::Sasvi, opts);
+            for lanes in [2usize, 4, 8] {
+                par::set_threads(lanes);
+                let parallel = run_path_keep_betas(ds, &plan, RuleKind::Sasvi, opts);
+                let a = serial.betas.as_ref().unwrap();
+                let b = parallel.betas.as_ref().unwrap();
+                for (k, (sa, sb)) in a.iter().zip(b.iter()).enumerate() {
+                    assert_bits_eq(
+                        sa,
+                        sb,
+                        &format!(
+                            "{} {} path step {k} lanes {lanes}",
+                            pen.spec(),
+                            ds.x.storage()
+                        ),
+                    );
+                }
+                for (s1, s2) in serial.steps.iter().zip(parallel.steps.iter()) {
+                    assert_eq!(
+                        s1.kept, s2.kept,
+                        "{}: kept diverged at lanes {lanes}",
+                        pen.spec()
+                    );
+                    assert_eq!(
+                        s1.dyn_dropped, s2.dyn_dropped,
+                        "{}: dynamic drops diverged at lanes {lanes}",
+                        pen.spec()
+                    );
+                    assert_eq!(
+                        s1.epochs, s2.epochs,
+                        "{}: epoch count diverged at lanes {lanes}",
+                        pen.spec()
+                    );
+                }
+            }
+        }
+    }
+    par::set_threads(before);
+}
+
 #[test]
 fn full_screened_path_bit_identical_across_thread_counts() {
     let _guard = THREAD_KNOB.lock().unwrap();

@@ -151,6 +151,109 @@ fn dynamic_safety_without_a_pathwise_rule() {
 }
 
 // ---------------------------------------------------------------------------
+// ISSUE 10: the penalty axis. Dynamic checkpoints inside the elastic-net
+// and sparse-group-lasso solvers obey the same per-checkpoint contract:
+// every feature a checkpoint discards is zero in a high-precision
+// unscreened penalty-native solve at that step's λ — and for SGL, drops
+// happen in whole groups, so the WHOLE group is zero (|β_g|_inf < 1e-10).
+// ---------------------------------------------------------------------------
+
+use sasvi::penalty::{GroupSpec, Penalty};
+use sasvi::solver::cd::solve_cd_en;
+use sasvi::solver::sgl::solve_sgl;
+
+/// High-precision unscreened solve under the given penalty.
+fn solve_exact_pen(ds: &Dataset, lam: f64, pen: &Penalty) -> Vec<f64> {
+    let norms = ds.x.col_norms_sq();
+    let mut beta = vec![0.0; ds.p()];
+    let mut resid = ds.y.clone();
+    match pen {
+        Penalty::L1 => return solve_exact(ds, lam),
+        Penalty::ElasticNet { alpha } => {
+            let active: Vec<usize> = (0..ds.p()).collect();
+            solve_cd_en(
+                &ds.x, &ds.y, lam, *alpha, &active, &norms, &mut beta, &mut resid,
+                &tight(),
+            );
+        }
+        Penalty::SparseGroupLasso { groups, tau } => {
+            let mut active_groups: Vec<usize> =
+                (0..groups.n_groups(ds.p())).collect();
+            solve_sgl(
+                &ds.x, &ds.y, lam, *tau, *groups, &mut active_groups, &norms,
+                &mut beta, &mut resid, &tight(), &DynamicOptions::off(),
+            );
+        }
+    }
+    beta
+}
+
+#[test]
+fn dynamic_safety_penalty_axis() {
+    let sgl_groups = GroupSpec::new(8);
+    for pen in [
+        Penalty::ElasticNet { alpha: 0.3 },
+        Penalty::SparseGroupLasso { groups: sgl_groups, tau: 0.5 },
+    ] {
+        let (dn, sp) = backend_pair(15);
+        for ds in [&dn, &sp] {
+            let p = ds.p();
+            let plan = PathPlan::linear_spaced(ds, 10, 0.05);
+            let opts = PathOptions {
+                cd: tight(),
+                dynamic: DynamicOptions::enabled_every(3),
+                penalty: pen,
+                ..Default::default()
+            };
+            let r = run_path_keep_betas(ds, &plan, RuleKind::Sasvi, opts);
+            let traces = r.dynamic.as_ref().expect("dynamic traces must be retained");
+            assert_eq!(traces.len(), plan.len());
+            let mut verified = 0usize;
+            for (step, trace) in plan.lambdas.iter().zip(traces.iter()) {
+                if trace.dropped_total() == 0 {
+                    continue;
+                }
+                let exact = solve_exact_pen(ds, *step, &pen);
+                for (ci, ev) in trace.events.iter().enumerate() {
+                    for &j in &ev.dropped {
+                        assert!(
+                            exact[j].abs() < 1e-10,
+                            "{} ({}): checkpoint {ci} at lam/lmax={:.3} dropped \
+                             feature {j}, but the exact solution has beta_j = {:e}",
+                            pen.spec(),
+                            ds.x.storage(),
+                            step / plan.lambda_max,
+                            exact[j]
+                        );
+                        // SGL drops whole groups: the group stays zero end
+                        // to end, not just the dropped coordinate
+                        if let Penalty::SparseGroupLasso { groups, .. } = &pen {
+                            let g = groups.group_of(j);
+                            let linf = exact[groups.range(g, p)]
+                                .iter()
+                                .fold(0.0f64, |m, b| m.max(b.abs()));
+                            assert!(
+                                linf < 1e-10,
+                                "sgl ({}): dropped feature {j} of group {g} but \
+                                 |beta_g|_inf = {linf:e}",
+                                ds.x.storage()
+                            );
+                        }
+                        verified += 1;
+                    }
+                }
+            }
+            assert!(
+                verified > 0,
+                "{} ({}): no dynamic discards — vacuous",
+                pen.spec(),
+                ds.x.storage()
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // edge cases: degenerate inputs must degrade gracefully, never panic
 // ---------------------------------------------------------------------------
 

@@ -1,0 +1,215 @@
+//! ISSUE 10 acceptance: the penalty-generic path contract.
+//!
+//! `prop_penalty_path_matches_unscreened` sweeps every penalty (ℓ1,
+//! elastic net, sparse-group lasso) over both storage backends (dense and
+//! 5% CSC), both solvers (CD, FISTA) and every in-solver mode (plain,
+//! dynamic re-screening, working-set driving), and checks the standing
+//! contracts extend unchanged:
+//!
+//!   * screened-path objectives match the unscreened path to 1e-8 at
+//!     every grid point (computed with the penalty-generic
+//!     [`sasvi::solver::primal_objective_pen`]),
+//!   * screened and unscreened coefficients agree (so screening never
+//!     zeroed a genuinely active feature),
+//!   * screening is non-vacuous (something was actually discarded),
+//!   * the screened path is bit-identical across thread counts.
+//!
+//! The second test is the elastic-net parity satellite: the native
+//! `Penalty::ElasticNet` path must match the pre-existing
+//! [`sasvi::data::elastic_net::augment`] reduction (Lasso on
+//! `[X; sqrt(alpha) I]`) — objectives to 1e-8 and coefficients
+//! elementwise — on dense and sparse data.
+
+use std::sync::Mutex;
+
+use sasvi::coordinator::{run_path_keep_betas, PathOptions, PathPlan, SolverKind};
+use sasvi::data::synthetic::SyntheticSpec;
+use sasvi::data::Dataset;
+use sasvi::linalg::par;
+use sasvi::penalty::{GroupSpec, Penalty};
+use sasvi::screening::dynamic::DynamicOptions;
+use sasvi::screening::RuleKind;
+use sasvi::solver::cd::CdOptions;
+use sasvi::solver::primal_objective_pen;
+use sasvi::solver::working_set::WorkingSetOptions;
+
+/// Path-running tests retune the process-wide thread knob; serialize them.
+static THREAD_KNOB: Mutex<()> = Mutex::new(());
+
+/// A sparse synthetic problem at 5% density plus its densified twin.
+fn backend_pair(seed: u64) -> (Dataset, Dataset) {
+    let sp = SyntheticSpec {
+        n: 60,
+        p: 200,
+        nnz: 15,
+        density: 0.05,
+        ..Default::default()
+    }
+    .generate(seed);
+    assert!(sp.x.is_sparse());
+    let mut dn = sp.clone();
+    dn.x = sp.x.to_dense().into();
+    (dn, sp)
+}
+
+/// Penalty-generic primal objective of a solution against a dataset.
+fn objective(ds: &Dataset, beta: &[f64], lam: f64, pen: &Penalty) -> f64 {
+    let mut fit = vec![0.0; ds.n()];
+    ds.x.matvec(beta, &mut fit);
+    let resid: Vec<f64> = ds.y.iter().zip(fit.iter()).map(|(y, f)| y - f).collect();
+    primal_objective_pen(pen, &resid, beta, lam)
+}
+
+fn penalties() -> [Penalty; 3] {
+    [
+        Penalty::L1,
+        Penalty::ElasticNet { alpha: 0.3 },
+        Penalty::SparseGroupLasso { groups: GroupSpec::new(8), tau: 0.5 },
+    ]
+}
+
+fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (k, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: index {k}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn prop_penalty_path_matches_unscreened() {
+    let _guard = THREAD_KNOB.lock().unwrap();
+    let before = par::threads();
+    // tight solves so every comparison lands well inside the 1e-8 bar
+    let cd = CdOptions {
+        max_epochs: 30_000,
+        tol: 1e-12,
+        gap_tol: 1e-12,
+        ..Default::default()
+    };
+    let fista = sasvi::solver::FistaOptions { max_iters: 20_000, tol: 1e-13, lipschitz: None };
+    let (dn, sp) = backend_pair(17);
+    for pen in penalties() {
+        for ds in [&dn, &sp] {
+            let plan = PathPlan::linear_spaced(ds, 8, 0.15);
+            for solver in [SolverKind::Cd, SolverKind::Fista] {
+                // unscreened reference: no rule, no in-solver machinery
+                par::set_threads(1);
+                let base_opts = PathOptions { solver, cd, fista, penalty: pen, ..Default::default() };
+                let baseline = run_path_keep_betas(ds, &plan, RuleKind::None, base_opts);
+                let base_betas = baseline.betas.as_ref().unwrap();
+                for (mode, dynamic, working_set) in [
+                    ("plain", DynamicOptions::off(), WorkingSetOptions::off()),
+                    ("dynamic", DynamicOptions::enabled_every(3), WorkingSetOptions::off()),
+                    ("ws", DynamicOptions::off(), WorkingSetOptions::enabled_with_grow(7)),
+                ] {
+                    let opts = PathOptions {
+                        solver,
+                        cd,
+                        fista,
+                        dynamic,
+                        working_set,
+                        penalty: pen,
+                        ..Default::default()
+                    };
+                    let tag = format!(
+                        "{} {solver:?} {mode} {}",
+                        pen.spec(),
+                        ds.x.storage()
+                    );
+                    par::set_threads(1);
+                    let screened = run_path_keep_betas(ds, &plan, RuleKind::Sasvi, opts);
+                    let scr_betas = screened.betas.as_ref().unwrap();
+                    let rule_screened: usize =
+                        screened.steps.iter().map(|s| s.screened).sum();
+                    assert!(rule_screened > 0, "{tag}: screened nothing — vacuous");
+                    for (k, lam) in plan.lambdas.iter().enumerate() {
+                        let os = objective(ds, &scr_betas[k], *lam, &pen);
+                        let ob = objective(ds, &base_betas[k], *lam, &pen);
+                        assert!(
+                            (os - ob).abs() <= 1e-8 * (1.0 + ob.abs()),
+                            "{tag}: step {k} objective {os} vs unscreened {ob}"
+                        );
+                        for j in 0..ds.p() {
+                            // agreement implies zero-safety: a screened-out
+                            // (exactly zero) coefficient must be zero in the
+                            // unscreened optimum too
+                            assert!(
+                                (scr_betas[k][j] - base_betas[k][j]).abs() < 1e-6,
+                                "{tag}: step {k} feature {j}: {} vs {}",
+                                scr_betas[k][j],
+                                base_betas[k][j]
+                            );
+                        }
+                    }
+                    // the screened path is bit-identical across thread counts
+                    for lanes in [4usize] {
+                        par::set_threads(lanes);
+                        let parallel = run_path_keep_betas(ds, &plan, RuleKind::Sasvi, opts);
+                        let pb = parallel.betas.as_ref().unwrap();
+                        for (k, (sa, sb)) in scr_betas.iter().zip(pb.iter()).enumerate() {
+                            assert_bits_eq(sa, sb, &format!("{tag}: step {k} lanes {lanes}"));
+                        }
+                        for (s1, s2) in screened.steps.iter().zip(parallel.steps.iter()) {
+                            assert_eq!(s1.kept, s2.kept, "{tag}: kept diverged");
+                            assert_eq!(s1.epochs, s2.epochs, "{tag}: epochs diverged");
+                        }
+                    }
+                }
+            }
+        }
+    }
+    par::set_threads(before);
+}
+
+/// The EN parity satellite: the native elastic-net path equals the
+/// augmented-Lasso reduction on the same λ-grid. The augmented problem's
+/// Lasso objective equals the original problem's EN objective at the same
+/// coefficients, so objectives compare directly through the EN penalty.
+#[test]
+fn elastic_net_native_path_matches_augmentation() {
+    let _guard = THREAD_KNOB.lock().unwrap();
+    let before = par::threads();
+    par::set_threads(before.max(1));
+    let alpha = 0.35;
+    let pen = Penalty::ElasticNet { alpha };
+    let cd = CdOptions {
+        max_epochs: 30_000,
+        tol: 1e-12,
+        gap_tol: 1e-12,
+        ..Default::default()
+    };
+    let (dn, sp) = backend_pair(29);
+    for ds in [&dn, &sp] {
+        let aug = sasvi::data::elastic_net::augment(ds, alpha);
+        // same grid for both runs: EN and its augmentation share lambda_max
+        let plan = PathPlan::linear_spaced(ds, 10, 0.1);
+        let native_opts = PathOptions { cd, penalty: pen, ..Default::default() };
+        let native = run_path_keep_betas(ds, &plan, RuleKind::Sasvi, native_opts);
+        let aug_opts = PathOptions { cd, ..Default::default() };
+        let reduced = run_path_keep_betas(&aug, &plan, RuleKind::Sasvi, aug_opts);
+        let a = native.betas.as_ref().unwrap();
+        let b = reduced.betas.as_ref().unwrap();
+        for (k, lam) in plan.lambdas.iter().enumerate() {
+            let on = objective(ds, &a[k], *lam, &pen);
+            let or = objective(ds, &b[k], *lam, &pen);
+            assert!(
+                (on - or).abs() <= 1e-8 * (1.0 + or.abs()),
+                "({}) step {k}: native EN objective {on} vs augmented {or}",
+                ds.x.storage()
+            );
+            for j in 0..ds.p() {
+                assert!(
+                    (a[k][j] - b[k][j]).abs() < 1e-6,
+                    "({}) step {k} feature {j}: native {} vs augmented {}",
+                    ds.x.storage(),
+                    a[k][j],
+                    b[k][j]
+                );
+            }
+        }
+        // both pipelines screened for real
+        let native_screened: usize = native.steps.iter().map(|s| s.screened).sum();
+        assert!(native_screened > 0, "native EN screening vacuous");
+    }
+    par::set_threads(before);
+}

@@ -161,3 +161,136 @@ fn strong_rule_safety_after_kkt_correction() {
         }
     }
 }
+
+// ---------------------------------------------------------------------------
+// ISSUE 10: the penalty axis. The pathwise screens for elastic net and
+// sparse-group lasso are the gap-safe sequential tests (`rescreen_en` /
+// `rescreen_sgl`) evaluated at the carried primal point, and their safety
+// contract is the same as the ℓ1 rules': every screened-out feature (for
+// SGL: every feature of a screened-out group) is numerically zero in a
+// high-precision unscreened penalty-native solve at the new λ.
+// ---------------------------------------------------------------------------
+
+use sasvi::penalty::GroupSpec;
+use sasvi::screening::dynamic::{rescreen_en, rescreen_sgl, DynamicOptions};
+use sasvi::solver::cd::solve_cd_en;
+use sasvi::solver::sgl::solve_sgl;
+
+/// High-precision unscreened elastic-net solve; returns (beta, residual).
+fn solve_exact_en(ds: &Dataset, lam: f64, alpha: f64) -> (Vec<f64>, Vec<f64>) {
+    let active: Vec<usize> = (0..ds.p()).collect();
+    let norms = ds.x.col_norms_sq();
+    let mut beta = vec![0.0; ds.p()];
+    let mut resid = ds.y.clone();
+    solve_cd_en(
+        &ds.x, &ds.y, lam, alpha, &active, &norms, &mut beta, &mut resid, &tight(),
+    );
+    (beta, resid)
+}
+
+/// High-precision unscreened sparse-group-lasso solve.
+fn solve_exact_sgl(
+    ds: &Dataset,
+    lam: f64,
+    tau: f64,
+    groups: GroupSpec,
+) -> (Vec<f64>, Vec<f64>) {
+    let mut active_groups: Vec<usize> = (0..groups.n_groups(ds.p())).collect();
+    let norms = ds.x.col_norms_sq();
+    let mut beta = vec![0.0; ds.p()];
+    let mut resid = ds.y.clone();
+    solve_sgl(
+        &ds.x, &ds.y, lam, tau, groups, &mut active_groups, &norms, &mut beta,
+        &mut resid, &tight(), &DynamicOptions::off(),
+    );
+    (beta, resid)
+}
+
+#[test]
+fn elastic_net_pathwise_screen_safety() {
+    let alpha = 0.3;
+    for seed in [5u64, 13] {
+        let (dn, sp) = backend_pair(seed);
+        for ds in [&dn, &sp] {
+            let p = ds.p();
+            let pre = ds.precompute();
+            let all: Vec<usize> = (0..p).collect();
+            let mut xt_r = vec![0.0; p];
+            let fracs: Vec<f64> = (0..9).map(|k| 0.95 - 0.1 * k as f64).collect();
+            let mut total_screened = 0usize;
+            for w in fracs.windows(2) {
+                let lam1 = w[0] * pre.lambda_max;
+                let lam2 = w[1] * pre.lambda_max;
+                let (beta1, resid1) = solve_exact_en(ds, lam1, alpha);
+                let rs = rescreen_en(
+                    &ds.x, &ds.y, lam2, alpha, &pre.xty, &pre.col_norms_sq, &all,
+                    &beta1, &resid1, &mut xt_r,
+                );
+                let (beta2, _) = solve_exact_en(ds, lam2, alpha);
+                for &j in &rs.dropped {
+                    assert!(
+                        beta2[j].abs() < 1e-10,
+                        "en ({}) screened feature {j} at lam2/lmax = {:.2} but the \
+                         reference solution has beta_j = {:e}",
+                        ds.x.storage(),
+                        w[1],
+                        beta2[j]
+                    );
+                }
+                total_screened += rs.dropped.len();
+            }
+            assert!(
+                total_screened > 0,
+                "en ({}) screened nothing along the whole path — vacuous",
+                ds.x.storage()
+            );
+        }
+    }
+}
+
+#[test]
+fn sparse_group_lasso_pathwise_screen_group_zero_safety() {
+    let tau = 0.5;
+    let groups = GroupSpec::new(8);
+    for seed in [6u64, 14] {
+        let (dn, sp) = backend_pair(seed);
+        for ds in [&dn, &sp] {
+            let p = ds.p();
+            let pre = ds.precompute();
+            let all_groups: Vec<usize> = (0..groups.n_groups(p)).collect();
+            let all_feats: Vec<usize> = (0..p).collect();
+            let mut xt_r = vec![0.0; p];
+            let fracs: Vec<f64> = (0..9).map(|k| 0.95 - 0.1 * k as f64).collect();
+            let mut total_screened = 0usize;
+            for w in fracs.windows(2) {
+                let lam1 = w[0] * pre.lambda_max;
+                let lam2 = w[1] * pre.lambda_max;
+                let (beta1, resid1) = solve_exact_sgl(ds, lam1, tau, groups);
+                let rs = rescreen_sgl(
+                    &ds.x, &ds.y, lam2, tau, groups, &all_groups, &all_feats,
+                    &pre.col_norms_sq, &beta1, &resid1, &mut xt_r,
+                );
+                let (beta2, _) = solve_exact_sgl(ds, lam2, tau, groups);
+                for &g in &rs.dropped_groups {
+                    // group-zero safety: the WHOLE screened group is zero
+                    let linf = beta2[groups.range(g, p)]
+                        .iter()
+                        .fold(0.0f64, |m, b| m.max(b.abs()));
+                    assert!(
+                        linf < 1e-10,
+                        "sgl ({}) screened group {g} at lam2/lmax = {:.2} but the \
+                         reference solution has |beta_g|_inf = {linf:e}",
+                        ds.x.storage(),
+                        w[1],
+                    );
+                }
+                total_screened += rs.dropped_groups.len();
+            }
+            assert!(
+                total_screened > 0,
+                "sgl ({}) screened no groups along the whole path — vacuous",
+                ds.x.storage()
+            );
+        }
+    }
+}

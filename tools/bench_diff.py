@@ -43,6 +43,10 @@ TRACKED = [
     ("BENCH_parallel.json", "dense_speedup_at_8", "higher"),
     ("BENCH_working_set.json", "*_ws_over_dyn", "lower"),
     ("BENCH_logistic.json", "*_work_ratio", "lower"),
+    # per-penalty screening work cut (l1 / en / sgl, plus per-backend
+    # detail ratios) — screening must keep paying for itself on every
+    # penalty the core supports
+    ("BENCH_penalty.json", "*_work_ratio", "lower"),
     # event-bus overhead: publish must stay one atomic load when idle and
     # one bounded queue handoff with a subscriber attached
     ("BENCH_obs.json", "publish_0sub_ns", "lower"),

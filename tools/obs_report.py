@@ -12,7 +12,10 @@ human-readable report, stdlib only:
   reply line (the ``{"count": .., "events": [..]}`` envelope is detected
   and unpacked), rendered as a per-job timeline plus the screening
   funnel: candidates -> rule-screened -> dynamically dropped -> final
-  support.
+  support. Step and checkpoint events tagged with a ``penalty`` field
+  (``l1`` / ``en`` / ``sgl``, emitted since the penalty-generic core)
+  additionally get a per-penalty funnel split, so mixed-penalty captures
+  show where each objective's screening work went.
 
 Usage:
   obs_report.py [--trace-json FILE] [--events FILE] [--job N] [--width W]
@@ -119,9 +122,26 @@ def screening_funnel(events):
     }
 
 
-def render_funnel(f):
+def penalty_funnels(events):
+    """Per-penalty funnel split keyed by the `penalty` tag on step and
+    checkpoint events; untagged events (pre-penalty captures) contribute
+    only to the overall funnel."""
+    tags = sorted({
+        e["penalty"]
+        for e in events
+        if e.get("type") in ("step", "checkpoint") and "penalty" in e
+    })
+    out = []
+    for tag in tags:
+        f = screening_funnel([e for e in events if e.get("penalty") == tag])
+        if f:
+            out.append((tag, f))
+    return out
+
+
+def render_funnel(f, label="funnel"):
     return (
-        f"funnel over {f['steps']} steps: candidates {f['candidates']} -> "
+        f"{label} over {f['steps']} steps: candidates {f['candidates']} -> "
         f"rule-kept {f['rule_kept']} (screened {f['rule_screened']}) -> "
         f"dynamically dropped {f['dyn_dropped']} -> "
         f"final support {f['final_support']}"
@@ -155,6 +175,8 @@ def report(spans, events, job=None, width=40, out=sys.stdout):
         f = screening_funnel(evs)
         if f:
             print(render_funnel(f), file=out)
+            for tag, pf in penalty_funnels(evs):
+                print("  " + render_funnel(pf, label=f"penalty {tag}"), file=out)
         warn = [e for e in evs if e.get("type") == "watchdog"]
         for w in warn:
             print(f"  WATCHDOG: no progress for {w.get('idle_ms', '?')}ms", file=out)
@@ -177,9 +199,9 @@ FIXTURE_SPANS = """\
 FIXTURE_EVENTS = """\
 {"seq":1,"t_us":5,"job":3,"type":"started","tag":"svc-Sasvi"}
 {"seq":2,"t_us":9,"job":3,"type":"shard_start","shard":0,"points":4}
-{"seq":3,"t_us":40,"job":3,"type":"checkpoint","workload":"lasso","gap":1e-06,"width":90,"dropped":30}
-{"seq":4,"t_us":60,"job":3,"type":"step","workload":"lasso","step":0,"lambda":0.9,"kept":120,"screened":480,"nnz":8,"gap":1e-08}
-{"seq":5,"t_us":80,"job":3,"type":"step","workload":"lasso","step":1,"lambda":0.8,"kept":150,"screened":450,"nnz":11,"gap":2e-08}
+{"seq":3,"t_us":40,"job":3,"type":"checkpoint","workload":"lasso","penalty":"l1","gap":1e-06,"width":90,"dropped":30}
+{"seq":4,"t_us":60,"job":3,"type":"step","workload":"lasso","penalty":"l1","step":0,"lambda":0.9,"kept":120,"screened":480,"nnz":8,"gap":1e-08}
+{"seq":5,"t_us":80,"job":3,"type":"step","workload":"lasso","penalty":"en","step":1,"lambda":0.8,"kept":150,"screened":450,"nnz":11,"gap":2e-08}
 {"seq":6,"t_us":85,"job":3,"type":"watchdog","idle_ms":31000}
 {"seq":7,"t_us":99,"job":3,"type":"terminal","ok":true}
 """
@@ -214,6 +236,14 @@ def selftest():
             ("rule-kept 270 (screened 930)", "funnel rule stage"),
             ("dynamically dropped 30", "funnel dynamic stage"),
             ("final support 11", "funnel final support"),
+            # the penalty split: tagged step/checkpoint events are grouped
+            # into one sub-funnel per penalty tag
+            ("penalty en over 1 steps: candidates 600 -> rule-kept 150 "
+             "(screened 450) -> dynamically dropped 0 -> final support 11",
+             "en funnel split"),
+            ("penalty l1 over 1 steps: candidates 600 -> rule-kept 120 "
+             "(screened 480) -> dynamically dropped 30 -> final support 8",
+             "l1 funnel split"),
             ("WATCHDOG: no progress for 31000ms", "watchdog warning surfaced"),
             ("terminal", "terminal event in timeline"),
             ("== span flamegraph (4 spans) ==", "span section"),
